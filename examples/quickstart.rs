@@ -1,0 +1,49 @@
+//! Quickstart: train FedLite on synthetic federated FEMNIST for a few
+//! rounds and print what moved over the (simulated, metered) network.
+//!
+//! ```bash
+//! make artifacts          # once: AOT-lower the models (python)
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use fedlite::config::RunConfig;
+use fedlite::coordinator::build_trainer;
+use fedlite::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    fedlite::util::logging::init("info");
+
+    // 1. open the AOT artifacts (compiled once by `make artifacts`)
+    let rt = Arc::new(Runtime::open("artifacts")?);
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. configure a run: paper §C.2 FEMNIST preset, 10 rounds,
+    //    q=288/L=8 quantizer (~49x compression), gradient correction on
+    let mut cfg = RunConfig::preset("femnist")?;
+    cfg.rounds = 10;
+    cfg.num_clients = 30;
+    cfg.pq = fedlite::quantizer::PqConfig::new(288, 1, 8);
+    cfg.lambda = 1e-4;
+    cfg.eval_every = 5;
+
+    // 3. train
+    let mut trainer = build_trainer(cfg, rt)?;
+    let log = trainer.run()?;
+
+    // 4. inspect
+    let last = log.last().unwrap();
+    println!("\n-- quickstart summary --");
+    println!("rounds:            {}", log.rounds.len());
+    println!("final train loss:  {:.4}", last.train_loss);
+    println!("eval accuracy:     {:?}", log.best_eval_metric());
+    println!("quantization err:  {:.4} (relative)", last.quant_error);
+    println!(
+        "uplink per round:  {:.1} KB  (raw activations would be {:.1} KB)",
+        last.uplink_bytes as f64 / 1024.0,
+        (10 * 20 * 9216 * 4) as f64 / 1024.0
+    );
+    println!("total uplink:      {:.2} MB", log.total_uplink() as f64 / 1e6);
+    Ok(())
+}

@@ -1,0 +1,128 @@
+"""AOT lowering: every export -> HLO text artifact + artifacts/manifest.json.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids, so text round-trips cleanly. Lowering goes through
+stablehlo -> XlaComputation with ``return_tuple=True``; the rust runtime
+unwraps the tuple via ``Literal::to_tuple``.
+
+Run from ``python/``:  ``python -m compile.aot --out-dir ../artifacts``
+(this is what ``make artifacts`` does). Python never runs again after this;
+the rust binary is self-contained given ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import TaskBuild
+
+# (task, preset) variants built by default. FEMNIST's paper config is
+# already laptop-sized so it has no separate "small"; the SO tasks get both.
+DEFAULT_VARIANTS = [
+    ("femnist", "paper"),
+    ("so_tag", "small"),
+    ("so_tag", "paper"),
+    ("so_nwp", "small"),
+    ("so_nwp", "paper"),
+]
+
+_DTYPE_NAMES = {jnp.float32: "f32", jnp.int32: "s32"}
+
+
+def dtype_name(dt) -> str:
+    for k, v in _DTYPE_NAMES.items():
+        if dt == k:
+            return v
+    raise ValueError(f"unsupported dtype {dt}")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> HLO text via the legacy XlaComputation bridge."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_export(export) -> str:
+    lowered = jax.jit(export.fn).lower(*export.abstract_args())
+    return to_hlo_text(lowered)
+
+
+def build_variant(task: str, preset: str, out_dir: str) -> dict:
+    tb = TaskBuild(task, preset)
+    variant = f"{task}_{preset}"
+    vdir = os.path.join(out_dir, variant)
+    os.makedirs(vdir, exist_ok=True)
+    arts = {}
+    for ex in tb.all_exports():
+        t0 = time.time()
+        text = lower_export(ex)
+        rel = os.path.join(variant, f"{ex.name}.hlo.txt")
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        arts[ex.name] = {
+            "path": rel,
+            "inputs": [
+                {"name": n, "shape": list(s), "dtype": dtype_name(d), "role": r}
+                for (n, s, d, r) in ex.inputs
+            ],
+            "outputs": ex.outputs,
+            "meta": ex.meta or {},
+        }
+        print(f"  {variant}/{ex.name}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)")
+    meta = tb.manifest_meta()
+    meta["artifacts"] = arts
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: path of a sentinel artifact (Makefile dep)")
+    ap.add_argument("--variants", nargs="*", default=None,
+                    help="task:preset pairs, e.g. femnist:paper")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    variants = DEFAULT_VARIANTS
+    if args.variants:
+        variants = [tuple(v.split(":")) for v in args.variants]
+
+    manifest = {
+        "version": 1,
+        "jax_version": jax.__version__,
+        "variants": {},
+    }
+    t0 = time.time()
+    for task, preset in variants:
+        print(f"[aot] building {task}:{preset}")
+        manifest["variants"][f"{task}_{preset}"] = build_variant(
+            task, preset, out_dir)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if args.out:
+        # Makefile sentinel: touch the declared target.
+        with open(args.out, "w") as f:
+            f.write(f"built {len(manifest['variants'])} variants\n")
+    print(f"[aot] done in {time.time() - t0:.1f}s -> {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Pure-jnp reference oracle for the FedLite product quantizer.
+
+This module is the correctness ground truth for the Pallas kernels in
+``pq.py``. Everything here is written with plain ``jax.numpy`` ops (no
+pallas, no custom control flow beyond ``lax.fori_loop``) so that it can be
+checked by eye against Section 4.1 of the paper and unit-tested cheaply.
+
+Notation follows the paper: a mini-batch of activations ``Z`` of shape
+``[B, d]`` is split into ``q`` subvectors of dimension ``d/q`` each,
+subvectors are stacked into ``R`` groups by index, and each group is
+clustered into ``L`` centroids with Lloyd's algorithm (K-means).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def pairwise_sq_dists(points: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Squared euclidean distances between rows of two matrices.
+
+    Args:
+        points: ``[N, D]`` float array.
+        centroids: ``[L, D]`` float array.
+
+    Returns:
+        ``[N, L]`` array with ``out[n, l] = ||points[n] - centroids[l]||^2``.
+
+    Uses the expansion ``||x - c||^2 = ||x||^2 - 2 x.c + ||c||^2`` so the
+    dominant term is a single matmul (MXU-friendly; this is the same
+    formulation the Pallas kernel uses).
+    """
+    x2 = jnp.sum(points * points, axis=1, keepdims=True)  # [N, 1]
+    c2 = jnp.sum(centroids * centroids, axis=1)[None, :]  # [1, L]
+    cross = points @ centroids.T  # [N, L]
+    return x2 - 2.0 * cross + c2
+
+
+def assign(points: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment. Returns ``[N]`` int32 indices."""
+    d = pairwise_sq_dists(points, centroids)
+    return jnp.argmin(d, axis=1).astype(jnp.int32)
+
+
+def update_centroids(
+    points: jax.Array,
+    assignments: jax.Array,
+    centroids: jax.Array,
+    weights: jax.Array | None = None,
+) -> jax.Array:
+    """One Lloyd centroid update.
+
+    Empty clusters keep their previous centroid (standard Lloyd fallback;
+    matches the rust engine and the Pallas kernel). ``weights`` (``[N]``,
+    0.0 or 1.0) masks out padding rows, which the Pallas kernel needs when
+    N is not a multiple of its block size.
+    """
+    l = centroids.shape[0]
+    onehot = (assignments[:, None] == jnp.arange(l)[None, :]).astype(points.dtype)
+    if weights is not None:
+        onehot = onehot * weights[:, None]
+    sums = onehot.T @ points  # [L, D]
+    counts = jnp.sum(onehot, axis=0)[:, None]  # [L, 1]
+    return jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), centroids)
+
+
+def lloyd(
+    points: jax.Array,
+    init_centroids: jax.Array,
+    iters: int,
+    weights: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Run ``iters`` Lloyd iterations; returns (centroids, assignments)."""
+
+    def body(_, c):
+        a = assign(points, c)
+        return update_centroids(points, a, c, weights)
+
+    c = lax.fori_loop(0, iters, body, init_centroids)
+    return c, assign(points, c)
+
+
+def quantize_group(
+    points: jax.Array, init_centroids: jax.Array, iters: int
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize one group of subvectors.
+
+    Returns ``(centroids [L, D], codes [N], quantized [N, D])``.
+    """
+    c, a = lloyd(points, init_centroids, iters)
+    return c, a, c[a]
+
+
+def batch_to_groups(z: jax.Array, q: int, r: int) -> jax.Array:
+    """Reshape activations ``[B, d]`` into grouped subvectors ``[R, Ng, d/q]``.
+
+    Group ``g`` holds subvectors with indices ``[g*q/R, (g+1)*q/R)`` of every
+    example (paper Fig. 2 step ii). ``Ng = B * q / R``.
+    """
+    b, d = z.shape
+    assert d % q == 0 and q % r == 0
+    dsub = d // q
+    per_group = q // r
+    # [B, R, q/R, dsub] -> [R, B, q/R, dsub] -> [R, B*q/R, dsub]
+    sub = z.reshape(b, r, per_group, dsub)
+    return jnp.transpose(sub, (1, 0, 2, 3)).reshape(r, b * per_group, dsub)
+
+
+def groups_to_batch(groups: jax.Array, b: int, q: int) -> jax.Array:
+    """Inverse of :func:`batch_to_groups`: ``[R, Ng, d/q] -> [B, d]``."""
+    r, ng, dsub = groups.shape
+    per_group = ng // b
+    sub = groups.reshape(r, b, per_group, dsub)
+    return jnp.transpose(sub, (1, 0, 2, 3)).reshape(b, r * per_group * dsub)
+
+
+def grouped_pq(
+    z: jax.Array,
+    init_centroids: jax.Array,
+    q: int,
+    r: int,
+    iters: int,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Full FedLite quantizer (paper §4.1), reference implementation.
+
+    Args:
+        z: ``[B, d]`` activations.
+        init_centroids: ``[R, L, d/q]`` initial codebooks.
+        q: number of subvectors per activation vector.
+        r: number of groups sharing a codebook.
+        iters: Lloyd iterations per group.
+
+    Returns:
+        ``(codebooks [R, L, d/q], codes [R, Ng] int32, z_tilde [B, d],
+        qerr)`` where ``qerr = ||Z - Z_tilde||^2`` summed over the batch.
+    """
+    b, _ = z.shape
+    groups = batch_to_groups(z, q, r)  # [R, Ng, dsub]
+
+    def per_group(pts, c0):
+        return quantize_group(pts, c0, iters)
+
+    codebooks, codes, qzs = jax.vmap(per_group)(groups, init_centroids)
+    z_tilde = groups_to_batch(qzs, b, q)
+    qerr = jnp.sum((z - z_tilde) ** 2)
+    return codebooks, codes, z_tilde, qerr
+
+
+def quantization_error(z: jax.Array, z_tilde: jax.Array) -> jax.Array:
+    """Relative quantization error ``||Z - Z~||_F / ||Z||_F`` (Fig. 3 y-axis)."""
+    num = jnp.sqrt(jnp.sum((z - z_tilde) ** 2))
+    den = jnp.sqrt(jnp.sum(z * z)) + 1e-12
+    return num / den

@@ -1,0 +1,311 @@
+"""Task registry: builds every exported (AOT) function for each split model.
+
+For each task/preset this module assembles the five training-path exports
+that the rust coordinator executes via PJRT, plus the Pallas product-
+quantizer exports. All exports are pure functions of explicitly-passed
+arrays (params are separate positional inputs) so they lower to
+self-contained HLO modules:
+
+* ``client_fwd``  — z = u(w_c; x)                       (SplitFed step 1)
+* ``server_step`` — loss/metrics, dh/dz~, server grads  (SplitFed step 2)
+* ``client_bwd``  — gradient correction + VJP to w_c    (FedLite eq. (5))
+* ``full_grad``   — whole-model grads (FedAvg baseline local step)
+* ``full_eval``   — loss/metric sums at eval batch size (no dropout)
+* ``pq_q{q}_L{L}_R{r}`` — grouped-PQ quantizer (Pallas Lloyd loop)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pq as pq_kernels
+from .models import femnist, so_nwp, so_tag
+
+TASKS = {"femnist": femnist, "so_tag": so_tag, "so_nwp": so_nwp}
+
+# Per-task train-time argument names, in artifact input order. Names that
+# contain "mask" are dropout masks: the rust client/server draws them
+# (pre-scaled Bernoulli) per step, and eval replaces them with ones.
+CLIENT_ARGS = {
+    "femnist": ["x", "client_mask"],
+    "so_tag": ["x"],
+    "so_nwp": ["x"],
+}
+SERVER_ARGS = {
+    "femnist": ["y", "server_mask"],
+    "so_tag": ["y"],
+    "so_nwp": ["y"],
+}
+METRIC_NAMES = {
+    "femnist": ["correct"],
+    "so_tag": ["hits_at_5", "positives"],
+    "so_nwp": ["correct_tokens", "valid_tokens"],
+}
+
+# Grouped-PQ artifact geometries compiled per task/preset: (q, L, R, iters).
+# Sweeps beyond these run on the rust-native engine; these cover the
+# headline operating points (FEMNIST q=1152, L=2 is the 490x point) and one
+# moderate point per task for the e2e examples.
+PQ_CONFIGS = {
+    ("femnist", "paper"): [(1152, 2, 1, 8), (288, 32, 1, 8), (288, 8, 1, 8)],
+    ("femnist", "small"): [(1152, 2, 1, 8), (288, 8, 1, 8)],
+    ("so_tag", "paper"): [(500, 10, 1, 8), (250, 40, 1, 8)],
+    ("so_tag", "small"): [(50, 20, 1, 8), (100, 10, 1, 8)],
+    ("so_nwp", "paper"): [(12, 60, 1, 8), (24, 30, 1, 8)],
+    ("so_nwp", "small"): [(12, 30, 1, 8), (6, 60, 1, 8)],
+}
+
+
+@dataclasses.dataclass
+class Export:
+    """One AOT artifact: a jittable fn plus its I/O description."""
+
+    name: str
+    fn: Callable
+    # list of (name, shape, dtype, role); role in {param_client,
+    # param_server, data, cut, grad_cut, hyper}
+    inputs: list
+    outputs: list
+    meta: dict | None = None
+
+    def abstract_args(self):
+        return [jax.ShapeDtypeStruct(s, d) for (_, s, d, _) in self.inputs]
+
+
+def _mask_free(args):
+    return [a for a in args if "mask" not in a]
+
+
+class TaskBuild:
+    """Binds a task module + preset config and produces its exports."""
+
+    def __init__(self, task: str, preset: str):
+        self.task = task
+        self.preset = preset
+        self.mod = TASKS[task]
+        self.cfg = dict(self.mod.PRESETS[preset])
+        self.dims = self.mod.dims(self.cfg)
+        self.wc_specs = self.mod.client_param_specs(self.cfg)
+        self.ws_specs = self.mod.server_param_specs(self.cfg)
+        self.nc = len(self.wc_specs)
+        self.ns = len(self.ws_specs)
+
+    # -- plumbing -----------------------------------------------------------
+
+    def _data_spec(self, name: str, batch: int):
+        return self.mod.data_specs(self.cfg, batch)[name]
+
+    def _param_inputs(self, side: str):
+        specs = self.wc_specs if side == "client" else self.ws_specs
+        role = f"param_{side}"
+        return [(s.name, s.shape, jnp.float32, role) for s in specs]
+
+    def _data_inputs(self, names, batch: int):
+        out = []
+        for n in names:
+            shape, dtype = self._data_spec(n, batch)
+            out.append((n, shape, dtype, "data"))
+        return out
+
+    def _u(self, wc, data: dict, batch: int, train: bool):
+        """Client forward with eval-time masks replaced by ones."""
+        args = []
+        for n in CLIENT_ARGS[self.task]:
+            if "mask" in n and not train:
+                shape, dtype = self._data_spec(n, batch)
+                args.append(jnp.ones(shape, dtype))
+            else:
+                args.append(data[n])
+        return self.mod.client_forward(self.cfg, wc, *args)
+
+    def _h(self, ws, z, data: dict, batch: int, train: bool):
+        args = []
+        for n in SERVER_ARGS[self.task]:
+            if "mask" in n and not train:
+                shape, dtype = self._data_spec(n, batch)
+                args.append(jnp.ones(shape, dtype))
+            else:
+                args.append(data[n])
+        return self.mod.server_loss(self.cfg, ws, z, *args)
+
+    # -- exports ------------------------------------------------------------
+
+    def client_fwd(self) -> Export:
+        b = self.cfg["batch"]
+        cargs = CLIENT_ARGS[self.task]
+
+        def fn(*flat):
+            wc = list(flat[: self.nc])
+            data = dict(zip(cargs, flat[self.nc :]))
+            return (self._u(wc, data, b, train=True),)
+
+        return Export(
+            "client_fwd", fn,
+            self._param_inputs("client") + self._data_inputs(cargs, b),
+            ["z"],
+        )
+
+    def server_step(self) -> Export:
+        b = self.cfg["batch"]
+        sargs = SERVER_ARGS[self.task]
+        cut_shape, _ = self._data_spec("cut", b)
+
+        def fn(*flat):
+            ws = list(flat[: self.ns])
+            z_tilde = flat[self.ns]
+            data = dict(zip(sargs, flat[self.ns + 1 :]))
+
+            def loss_of(ws_, z_):
+                loss, metrics = self._h(ws_, z_, data, b, train=True)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, argnums=(0, 1), has_aux=True
+            )(ws, z_tilde)
+            ws_grads, grad_z = grads
+            return (loss, *metrics, grad_z, *ws_grads)
+
+        return Export(
+            "server_step", fn,
+            self._param_inputs("server")
+            + [("z_tilde", cut_shape, jnp.float32, "cut")]
+            + self._data_inputs(sargs, b),
+            ["loss", *METRIC_NAMES[self.task], "grad_z",
+             *[f"grad_{s.name}" for s in self.ws_specs]],
+        )
+
+    def client_bwd(self) -> Export:
+        """FedLite eq. (5): corrected cotangent then VJP through u."""
+        b = self.cfg["batch"]
+        cargs = CLIENT_ARGS[self.task]
+        cut_shape, _ = self._data_spec("cut", b)
+
+        def fn(*flat):
+            wc = list(flat[: self.nc])
+            k = self.nc + len(cargs)
+            data = dict(zip(cargs, flat[self.nc : k]))
+            z_tilde, grad_z, lam = flat[k], flat[k + 1], flat[k + 2]
+
+            def u_of(wc_):
+                return self._u(wc_, data, b, train=True)
+
+            z, vjp = jax.vjp(u_of, wc)
+            cotangent = grad_z + lam * (z - z_tilde)
+            (wc_grads,) = vjp(cotangent)
+            qerr = jnp.sum((z - z_tilde) ** 2)
+            return (*wc_grads, qerr)
+
+        return Export(
+            "client_bwd", fn,
+            self._param_inputs("client")
+            + self._data_inputs(cargs, b)
+            + [
+                ("z_tilde", cut_shape, jnp.float32, "cut"),
+                ("grad_z", cut_shape, jnp.float32, "grad_cut"),
+                ("lambda", (), jnp.float32, "hyper"),
+            ],
+            [*[f"grad_{s.name}" for s in self.wc_specs], "qerr"],
+        )
+
+    def full_grad(self) -> Export:
+        """Whole-model gradient for the FedAvg baseline's local steps."""
+        b = self.cfg["batch"]
+        cargs, sargs = CLIENT_ARGS[self.task], SERVER_ARGS[self.task]
+
+        def fn(*flat):
+            wc = list(flat[: self.nc])
+            ws = list(flat[self.nc : self.nc + self.ns])
+            k = self.nc + self.ns
+            data = dict(zip(cargs + sargs, flat[k:]))
+
+            def loss_of(wc_, ws_):
+                z = self._u(wc_, data, b, train=True)
+                loss, metrics = self._h(ws_, z, data, b, train=True)
+                return loss, metrics
+
+            (loss, metrics), (gc, gs) = jax.value_and_grad(
+                loss_of, argnums=(0, 1), has_aux=True
+            )(wc, ws)
+            return (loss, *metrics, *gc, *gs)
+
+        return Export(
+            "full_grad", fn,
+            self._param_inputs("client") + self._param_inputs("server")
+            + self._data_inputs(cargs + sargs, b),
+            ["loss", *METRIC_NAMES[self.task],
+             *[f"grad_{s.name}" for s in self.wc_specs],
+             *[f"grad_{s.name}" for s in self.ws_specs]],
+        )
+
+    def full_eval(self) -> Export:
+        """Deterministic eval pass at the eval batch size (masks = ones)."""
+        b = self.cfg["eval_batch"]
+        cargs = _mask_free(CLIENT_ARGS[self.task])
+        sargs = _mask_free(SERVER_ARGS[self.task])
+
+        def fn(*flat):
+            wc = list(flat[: self.nc])
+            ws = list(flat[self.nc : self.nc + self.ns])
+            k = self.nc + self.ns
+            data = dict(zip(cargs + sargs, flat[k:]))
+            z = self._u(wc, data, b, train=False)
+            loss, metrics = self._h(ws, z, data, b, train=False)
+            return (loss, *metrics)
+
+        return Export(
+            "full_eval", fn,
+            self._param_inputs("client") + self._param_inputs("server")
+            + self._data_inputs(cargs + sargs, b),
+            ["loss", *METRIC_NAMES[self.task]],
+        )
+
+    def pq_exports(self):
+        d = self.dims["cut_dim"]
+        act_batch = self.cfg["batch"] * self.dims.get("act_batch_mul", 1)
+        out = []
+        for (q, l, r, iters) in PQ_CONFIGS.get((self.task, self.preset), []):
+            if d % q or q % r:
+                raise ValueError(f"bad pq config q={q} R={r} for d={d}")
+            dsub = d // q
+            ng = act_batch * q // r
+
+            def fn(z, init_c, q=q, r=r, iters=iters):
+                return pq_kernels.grouped_pq(z, init_c, q, r, iters)
+
+            out.append(Export(
+                f"pq_q{q}_L{l}_R{r}", fn,
+                [
+                    ("z", (act_batch, d), jnp.float32, "cut"),
+                    ("init_centroids", (r, l, dsub), jnp.float32, "data"),
+                ],
+                ["codebooks", "codes", "z_tilde", "qerr"],
+                meta=dict(q=q, l=l, r=r, iters=iters, dsub=dsub, ng=ng,
+                          act_batch=act_batch, d=d),
+            ))
+        return out
+
+    def all_exports(self):
+        return [
+            self.client_fwd(), self.server_step(), self.client_bwd(),
+            self.full_grad(), self.full_eval(), *self.pq_exports(),
+        ]
+
+    def manifest_meta(self) -> dict:
+        return {
+            "task": self.task,
+            "preset": self.preset,
+            "config": self.cfg,
+            "cut_dim": self.dims["cut_dim"],
+            "act_batch": self.cfg["batch"] * self.dims.get("act_batch_mul", 1),
+            "client_params": [s.manifest_entry() for s in self.wc_specs],
+            "server_params": [s.manifest_entry() for s in self.ws_specs],
+            "client_param_count": sum(s.size for s in self.wc_specs),
+            "server_param_count": sum(s.size for s in self.ws_specs),
+            "metrics": METRIC_NAMES[self.task],
+            "client_args": CLIENT_ARGS[self.task],
+            "server_args": SERVER_ARGS[self.task],
+        }

@@ -1,0 +1,1 @@
+"""Split-model definitions (Layer 2): FEMNIST CNN, SO Tag MLP, SO NWP LSTM."""

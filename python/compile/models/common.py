@@ -1,0 +1,152 @@
+"""Shared building blocks for the split models.
+
+Parameters are plain lists of arrays (no flax/haiku at build time): every
+exported artifact takes each parameter as a separate positional input, and
+``artifacts/manifest.json`` records the (name, shape, init) of each so the
+rust coordinator can allocate and initialise them without running Python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Description of one trainable parameter, mirrored into the manifest."""
+
+    name: str
+    shape: tuple[int, ...]
+    init: str  # "glorot_uniform" | "uniform" | "zeros" | "orthogonal-ish"
+    scale: float = 1.0  # extra multiplier for "uniform"
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    def manifest_entry(self) -> dict:
+        fan_in, fan_out = _fans(self.shape)
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "init": self.init,
+            "scale": self.scale,
+            "fan_in": fan_in,
+            "fan_out": fan_out,
+        }
+
+
+def _fans(shape: Sequence[int]) -> tuple[int, int]:
+    if len(shape) == 0:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    if len(shape) == 2:
+        return shape[0], shape[1]
+    # conv HWIO: receptive field x in/out channels
+    rf = math.prod(shape[:-2])
+    return shape[-2] * rf, shape[-1] * rf
+
+
+def init_param(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    """Reference initializer (rust re-implements this; tests compare)."""
+    fan_in, fan_out = _fans(spec.shape)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.float32)
+    if spec.init == "glorot_uniform":
+        limit = math.sqrt(6.0 / (fan_in + fan_out))
+        return jax.random.uniform(key, spec.shape, jnp.float32, -limit, limit)
+    if spec.init == "uniform":
+        return jax.random.uniform(
+            key, spec.shape, jnp.float32, -spec.scale, spec.scale
+        )
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(specs: Sequence[ParamSpec], seed: int) -> list[jax.Array]:
+    keys = jax.random.split(jax.random.PRNGKey(seed), max(len(specs), 1))
+    return [init_param(s, k) for s, k in zip(specs, keys)]
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    return x @ w + b
+
+
+def conv2d_valid(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """NHWC x HWIO VALID convolution + bias."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    """2x2 max-pool, stride 2, VALID (NHWC)."""
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-example softmax cross-entropy; ``labels`` int32 ``[N]``."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logz, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+
+def sigmoid_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-example summed sigmoid cross-entropy; ``targets`` multi-hot."""
+    # log(1 + exp(-|x|)) formulation for stability
+    zeros = jnp.zeros_like(logits)
+    relu = jnp.maximum(logits, zeros)
+    per = relu - logits * targets + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.sum(per, axis=-1)
+
+
+def top_k_mask(logits: jax.Array, k: int) -> jax.Array:
+    """0/1 mask of the top-k entries per row, via k unrolled argmax passes.
+
+    ``lax.top_k`` lowers to the ``topk(..., largest=true)`` HLO op that the
+    runtime's XLA 0.5.1 text parser cannot read, so for the small fixed k
+    used by Recall@5 we select iteratively with plain reduce/compare ops.
+    Ties are broken by (value, then lowest index), matching ``jnp.argmax``.
+    """
+    n = logits.shape[-1]
+    masked = logits
+    picked = jnp.zeros_like(logits)
+    neg = jnp.full_like(logits, -jnp.inf)
+    for _ in range(k):
+        idx = jnp.argmax(masked, axis=-1)  # [rows]
+        onehot = jax.nn.one_hot(idx, n, dtype=logits.dtype)
+        picked = picked + onehot
+        masked = jnp.where(onehot > 0, neg, masked)
+    return picked
+
+
+def lstm(
+    x: jax.Array, wx: jax.Array, wh: jax.Array, b: jax.Array
+) -> jax.Array:
+    """Single-layer LSTM over ``x [B, T, E]``; returns hidden states
+    ``[B, T, H]``. Gate order i, f, g, o; zero initial state; forget-gate
+    bias handled by the initializer (b starts at zeros like TF-Keras
+    unit_forget_bias=False used in the FedJAX baseline)."""
+    h_dim = wh.shape[0]
+    b_sz = x.shape[0]
+
+    def step(carry, xt):
+        h, c = carry
+        z = xt @ wx + h @ wh + b
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    h0 = jnp.zeros((b_sz, h_dim), x.dtype)
+    (_, _), hs = lax.scan(step, (h0, h0), jnp.swapaxes(x, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)

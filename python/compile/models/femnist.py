@@ -1,0 +1,87 @@
+"""FEMNIST split CNN (paper §5, model from Reddi et al. 2020).
+
+Client side (the first five layers; 18,816 params = 1.6% of the model):
+    Conv2d(1->32, 3x3) + ReLU -> Conv2d(32->64, 3x3) + ReLU
+    -> MaxPool2d(2) -> Dropout(0.25) -> Flatten          => z in R^9216
+Server side (1,187,774 params):
+    Dense(9216->128) + ReLU -> Dropout(0.5) -> Dense(128->62)
+
+Cut-layer activation dimension d = 12*12*64 = 9216 (28 -> 26 -> 24 -> 12).
+Dropout masks are *inputs* (drawn by the rust client/server and pre-scaled
+by 1/(1-p)) so the AOT artifact stays deterministic; evaluation passes
+all-ones.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec
+
+PRESETS = {
+    "paper": dict(batch=20, eval_batch=100, image=28, classes=62,
+                  conv1=32, conv2=64, hidden=128),
+    "small": dict(batch=20, eval_batch=100, image=28, classes=62,
+                  conv1=32, conv2=64, hidden=128),
+}
+
+
+def dims(cfg: dict) -> dict:
+    side = (cfg["image"] - 4) // 2  # two VALID 3x3 convs then 2x2 pool
+    d = side * side * cfg["conv2"]
+    return dict(cut_dim=d, pool_side=side)
+
+
+def client_param_specs(cfg: dict) -> list[ParamSpec]:
+    return [
+        ParamSpec("conv1_w", (3, 3, 1, cfg["conv1"]), "glorot_uniform"),
+        ParamSpec("conv1_b", (cfg["conv1"],), "zeros"),
+        ParamSpec("conv2_w", (3, 3, cfg["conv1"], cfg["conv2"]), "glorot_uniform"),
+        ParamSpec("conv2_b", (cfg["conv2"],), "zeros"),
+    ]
+
+
+def server_param_specs(cfg: dict) -> list[ParamSpec]:
+    d = dims(cfg)["cut_dim"]
+    return [
+        ParamSpec("dense1_w", (d, cfg["hidden"]), "glorot_uniform"),
+        ParamSpec("dense1_b", (cfg["hidden"],), "zeros"),
+        ParamSpec("dense2_w", (cfg["hidden"], cfg["classes"]), "glorot_uniform"),
+        ParamSpec("dense2_b", (cfg["classes"],), "zeros"),
+    ]
+
+
+def data_specs(cfg: dict, batch: int) -> dict:
+    d = dims(cfg)["cut_dim"]
+    return {
+        "x": ((batch, cfg["image"], cfg["image"], 1), jnp.float32),
+        "y": ((batch,), jnp.int32),
+        "client_mask": ((batch, d), jnp.float32),
+        "server_mask": ((batch, cfg["hidden"]), jnp.float32),
+        "cut": ((batch, d), jnp.float32),
+    }
+
+
+def client_forward(cfg: dict, wc: list, x: jax.Array, mask: jax.Array) -> jax.Array:
+    """u(w_c; x): activations at the cut layer, ``[B, 9216]``."""
+    c1w, c1b, c2w, c2b = wc
+    h = jax.nn.relu(common.conv2d_valid(x, c1w, c1b))
+    h = jax.nn.relu(common.conv2d_valid(h, c2w, c2b))
+    h = common.maxpool2(h)
+    z = h.reshape(h.shape[0], -1)
+    return z * mask  # dropout(0.25), mask pre-scaled by 1/(1-p)
+
+
+def server_loss(
+    cfg: dict, ws: list, z: jax.Array, y: jax.Array, mask: jax.Array
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """h(w_s; z): mean CE loss + (correct-count,) metric."""
+    d1w, d1b, d2w, d2b = ws
+    h = jax.nn.relu(common.dense(z, d1w, d1b))
+    h = h * mask  # dropout(0.5)
+    logits = common.dense(h, d2w, d2b)
+    loss = jnp.mean(common.softmax_xent(logits, y))
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return loss, (correct,)

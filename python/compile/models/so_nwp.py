@@ -1,0 +1,83 @@
+"""StackOverflow next-word prediction (SO NWP) split model (paper §5, §C.2).
+
+    client: Embedding(V x 96) -> LSTM(H) -> Dense(H -> 96)   => z in R^96/token
+    server: Dense(96 -> V), softmax cross-entropy over non-pad tokens.
+
+The cut-layer dimension is d = 96 *per token*; with per-client batch B and
+sequence length T the quantizer sees an effective activation batch of
+``B*T`` (paper: 128 * 30 = 3840). Token id 0 is padding and is masked out
+of the loss and the accuracy metric; ids 1/2/3 are BOS/EOS/OOV.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec
+
+PRESETS = {
+    "paper": dict(batch=128, eval_batch=128, vocab=10004, embed=96,
+                  lstm=670, proj=96, seq=30),
+    "small": dict(batch=16, eval_batch=32, vocab=2004, embed=96,
+                  lstm=128, proj=96, seq=20),
+}
+
+PAD_ID = 0
+
+
+def dims(cfg: dict) -> dict:
+    return dict(cut_dim=cfg["proj"], act_batch_mul=cfg["seq"])
+
+
+def client_param_specs(cfg: dict) -> list[ParamSpec]:
+    return [
+        ParamSpec("embed", (cfg["vocab"], cfg["embed"]), "uniform", scale=0.05),
+        ParamSpec("lstm_wx", (cfg["embed"], 4 * cfg["lstm"]), "glorot_uniform"),
+        ParamSpec("lstm_wh", (cfg["lstm"], 4 * cfg["lstm"]), "glorot_uniform"),
+        ParamSpec("lstm_b", (4 * cfg["lstm"],), "zeros"),
+        ParamSpec("proj_w", (cfg["lstm"], cfg["proj"]), "glorot_uniform"),
+        ParamSpec("proj_b", (cfg["proj"],), "zeros"),
+    ]
+
+
+def server_param_specs(cfg: dict) -> list[ParamSpec]:
+    return [
+        ParamSpec("out_w", (cfg["proj"], cfg["vocab"]), "glorot_uniform"),
+        ParamSpec("out_b", (cfg["vocab"],), "zeros"),
+    ]
+
+
+def data_specs(cfg: dict, batch: int) -> dict:
+    return {
+        "x": ((batch, cfg["seq"]), jnp.int32),
+        "y": ((batch, cfg["seq"]), jnp.int32),
+        "cut": ((batch * cfg["seq"], cfg["proj"]), jnp.float32),
+    }
+
+
+def client_forward(cfg: dict, wc: list, x: jax.Array) -> jax.Array:
+    """u(w_c; x): per-token cut activations, ``[B*T, 96]``."""
+    embed, wx, wh, b, pw, pb = wc
+    e = embed[x]  # [B, T, E]
+    h = common.lstm(e, wx, wh, b)  # [B, T, H]
+    z = common.dense(h, pw, pb)  # [B, T, 96]
+    return z.reshape(-1, cfg["proj"])
+
+
+def server_loss(
+    cfg: dict, ws: list, z: jax.Array, y: jax.Array
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Masked mean CE + (correct-tokens, valid-tokens)."""
+    w, b = ws
+    logits = common.dense(z, w, b)  # [B*T, V]
+    labels = y.reshape(-1)
+    mask = (labels != PAD_ID).astype(jnp.float32)
+    ce = common.softmax_xent(logits, labels)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(ce * mask) / denom
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=1) == labels).astype(jnp.float32) * mask
+    )
+    return loss, (correct, jnp.sum(mask))

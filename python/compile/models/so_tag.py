@@ -1,0 +1,69 @@
+"""StackOverflow tag prediction (SO Tag) split model (paper §5, §C.2).
+
+One dense layer on each side:
+    client: Dense(vocab -> hidden) + ReLU       => z in R^hidden (d = 2000)
+    server: Dense(hidden -> tags), sigmoid cross-entropy, Recall@5.
+
+Paper sizes: vocab=5000, hidden=2000, tags=1000, B=100; client holds 83%
+of the parameters — an adversarial regime for split learning that the paper
+includes to show the method still helps on language tasks.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import common
+from .common import ParamSpec
+
+PRESETS = {
+    "paper": dict(batch=100, eval_batch=100, vocab=5000, hidden=2000, tags=1000),
+    "small": dict(batch=50, eval_batch=100, vocab=1000, hidden=400, tags=200),
+}
+
+RECALL_K = 5
+
+
+def dims(cfg: dict) -> dict:
+    return dict(cut_dim=cfg["hidden"])
+
+
+def client_param_specs(cfg: dict) -> list[ParamSpec]:
+    return [
+        ParamSpec("dense_in_w", (cfg["vocab"], cfg["hidden"]), "glorot_uniform"),
+        ParamSpec("dense_in_b", (cfg["hidden"],), "zeros"),
+    ]
+
+
+def server_param_specs(cfg: dict) -> list[ParamSpec]:
+    return [
+        ParamSpec("dense_out_w", (cfg["hidden"], cfg["tags"]), "glorot_uniform"),
+        ParamSpec("dense_out_b", (cfg["tags"],), "zeros"),
+    ]
+
+
+def data_specs(cfg: dict, batch: int) -> dict:
+    return {
+        "x": ((batch, cfg["vocab"]), jnp.float32),  # normalized bag-of-words
+        "y": ((batch, cfg["tags"]), jnp.float32),  # multi-hot tags
+        "cut": ((batch, cfg["hidden"]), jnp.float32),
+    }
+
+
+def client_forward(cfg: dict, wc: list, x: jax.Array) -> jax.Array:
+    w, b = wc
+    return jax.nn.relu(common.dense(x, w, b))
+
+
+def server_loss(
+    cfg: dict, ws: list, z: jax.Array, y: jax.Array
+) -> tuple[jax.Array, tuple[jax.Array, ...]]:
+    """Mean sigmoid-CE + (hits-in-top-5, total-positives) for Recall@5."""
+    w, b = ws
+    logits = common.dense(z, w, b)
+    loss = jnp.mean(common.sigmoid_xent(logits, y))
+    top_mask = common.top_k_mask(logits, RECALL_K)
+    hits = jnp.sum(y * top_mask)
+    positives = jnp.sum(y)
+    return loss, (hits, positives)

@@ -1,0 +1,101 @@
+"""AOT pipeline sanity: manifest consistency and HLO text invariants.
+
+Skipped when ``artifacts/`` hasn't been built (``make artifacts`` runs
+before pytest in the Makefile, so in CI these always run).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_expected_variants(manifest):
+    assert "femnist_paper" in manifest["variants"]
+    assert "so_nwp_small" in manifest["variants"]
+    assert "so_tag_small" in manifest["variants"]
+
+
+def test_all_artifact_files_exist(manifest):
+    for vname, v in manifest["variants"].items():
+        for aname, art in v["artifacts"].items():
+            path = os.path.join(ART, art["path"])
+            assert os.path.exists(path), f"{vname}/{aname} missing"
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{vname}/{aname} not HLO text"
+
+
+def test_core_exports_present(manifest):
+    need = {"client_fwd", "server_step", "client_bwd", "full_grad", "full_eval"}
+    for vname, v in manifest["variants"].items():
+        assert need <= set(v["artifacts"]), vname
+
+
+def test_input_roles_and_order(manifest):
+    """Param inputs come first and match the recorded param specs."""
+    for v in manifest["variants"].values():
+        art = v["artifacts"]["client_fwd"]
+        nc = len(v["client_params"])
+        for spec, inp in zip(v["client_params"], art["inputs"][:nc]):
+            assert inp["name"] == spec["name"]
+            assert inp["shape"] == spec["shape"]
+            assert inp["role"] == "param_client"
+        assert all(i["role"] != "param_client" for i in art["inputs"][nc:])
+
+
+def test_cut_shapes_consistent(manifest):
+    for v in manifest["variants"].values():
+        d = v["cut_dim"]
+        nact = v["act_batch"]
+        step = v["artifacts"]["server_step"]
+        zt = [i for i in step["inputs"] if i["name"] == "z_tilde"][0]
+        assert zt["shape"] == [nact, d]
+        bwd = v["artifacts"]["client_bwd"]
+        gz = [i for i in bwd["inputs"] if i["name"] == "grad_z"][0]
+        assert gz["shape"] == [nact, d]
+
+
+def test_pq_artifact_geometry(manifest):
+    for v in manifest["variants"].values():
+        for name, art in v["artifacts"].items():
+            if not name.startswith("pq_"):
+                continue
+            m = art["meta"]
+            assert m["d"] == m["q"] * m["dsub"]
+            assert m["ng"] == m["act_batch"] * m["q"] // m["r"]
+            z = art["inputs"][0]
+            assert z["shape"] == [m["act_batch"], m["d"]]
+            c0 = art["inputs"][1]
+            assert c0["shape"] == [m["r"], m["l"], m["dsub"]]
+
+
+def test_no_unparseable_ops(manifest):
+    """Ops known to break XLA 0.5.1's HLO text parser must not appear."""
+    banned = (" topk(", " ragged-dot(", " composite(")
+    for v in manifest["variants"].values():
+        for aname, art in v["artifacts"].items():
+            text = open(os.path.join(ART, art["path"])).read()
+            for op in banned:
+                assert op not in text, f"{aname} contains {op.strip()}"
+
+
+def test_init_specs_complete(manifest):
+    for v in manifest["variants"].values():
+        for spec in v["client_params"] + v["server_params"]:
+            assert spec["init"] in ("glorot_uniform", "uniform", "zeros")
+            assert spec["fan_in"] >= 1 and spec["fan_out"] >= 1

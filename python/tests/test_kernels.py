@@ -1,0 +1,209 @@
+"""L1 correctness: Pallas PQ kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps the kernel geometry (N, D, L, R, block size) and asserts
+bit-level agreement of assignments plus allclose centroids/quantized
+outputs. These tests are the core correctness signal for the quantizer
+that the AOT artifacts embed.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pq, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+def pick_init(points, l, rng):
+    """Initial centroids = L distinct random rows (mirrors the rust engine)."""
+    n = points.shape[-2]
+    idx = rng.choice(n, size=l, replace=False)
+    return points[..., idx, :]
+
+
+# ---------------------------------------------------------------------------
+# assignment kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 200),
+    d=st.integers(1, 24),
+    l=st.integers(1, 12),
+    block=st.sampled_from([8, 16, 64, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_assign_matches_ref(n, d, l, block, seed):
+    rng = np.random.default_rng(seed)
+    pts = rand(rng, n, d)
+    cents = rand(rng, l, d)
+    got = pq.assign(pts, cents, block_n=block)
+    want = ref.assign(pts, cents)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_assign_prefers_exact_match():
+    # A point equal to a centroid must map to it.
+    rng = np.random.default_rng(0)
+    cents = rand(rng, 5, 7)
+    got = pq.assign(cents, cents)
+    np.testing.assert_array_equal(np.asarray(got), np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# Lloyd iterations
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(1, 3),
+    n=st.integers(4, 100),
+    d=st.integers(1, 16),
+    l=st.integers(1, 4),
+    iters=st.integers(0, 6),
+    block=st.sampled_from([8, 32, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lloyd_matches_ref(r, n, d, l, iters, block, seed):
+    rng = np.random.default_rng(seed)
+    pts = rand(rng, r, n, d)
+    c0 = pick_init(pts, min(l, n), rng)
+    cp, ap = pq.lloyd(pts, c0, iters, block_n=block)
+    for g in range(r):
+        cr, ar = ref.lloyd(pts[g], c0[g], iters)
+        np.testing.assert_allclose(np.asarray(cp[g]), np.asarray(cr),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ap[g]), np.asarray(ar))
+
+
+def test_lloyd_error_nonincreasing():
+    """Lloyd's algorithm must not increase the quantization error."""
+    rng = np.random.default_rng(3)
+    pts = rand(rng, 1, 300, 6)
+    c = pick_init(pts, 8, rng)
+    prev = None
+    for it in range(6):
+        cc, aa = pq.lloyd(pts, c, it, block_n=64)
+        quant = cc[0][aa[0]]
+        err = float(jnp.sum((pts[0] - quant) ** 2))
+        if prev is not None:
+            assert err <= prev + 1e-4, f"iter {it}: {err} > {prev}"
+        prev = err
+
+
+def test_empty_cluster_keeps_centroid():
+    # Two well-separated blobs, one far-away centroid that captures nothing.
+    pts = jnp.asarray(np.concatenate([
+        np.random.default_rng(0).normal(0.0, 0.1, size=(20, 3)),
+        np.random.default_rng(1).normal(5.0, 0.1, size=(20, 3)),
+    ]).astype(np.float32))[None]
+    far = jnp.asarray(np.array([[0.05, 0.0, 0.0],
+                                [5.0, 5.0, 5.0],
+                                [1e3, 1e3, 1e3]], np.float32))[None]
+    c, a = pq.lloyd(pts, far, 3, block_n=16)
+    np.testing.assert_allclose(np.asarray(c[0, 2]), [1e3, 1e3, 1e3])
+    assert not np.any(np.asarray(a) == 2)
+
+
+# ---------------------------------------------------------------------------
+# full grouped quantizer
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 8),
+    dsub=st.integers(1, 8),
+    q=st.sampled_from([2, 4, 8]),
+    r_idx=st.integers(0, 2),
+    l=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_grouped_pq_matches_ref(b, dsub, q, r_idx, l, seed):
+    rs = [r for r in (1, 2, 4, 8) if q % r == 0]
+    r = rs[min(r_idx, len(rs) - 1)]
+    d = q * dsub
+    rng = np.random.default_rng(seed)
+    z = rand(rng, b, d)
+    c0 = rand(rng, r, l, dsub)
+    out_p = pq.grouped_pq(z, c0, q, r, 4, block_n=32)
+    out_r = ref.grouped_pq(z, c0, q, r, 4)
+    for got, want in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_pq_zero_error_when_l_covers_points():
+    """If every subvector is one of L identical patterns, qerr -> ~0."""
+    rng = np.random.default_rng(7)
+    patterns = rng.normal(size=(2, 4)).astype(np.float32)
+    codes = rng.integers(0, 2, size=(6, 8))
+    z = jnp.asarray(patterns[codes].reshape(6, 32))
+    c0 = jnp.asarray(patterns[None])  # exact init
+    _, _, z_tilde, qerr = pq.grouped_pq(z, c0, q=8, r=1, iters=2)
+    assert float(qerr) < 1e-8
+    np.testing.assert_allclose(np.asarray(z_tilde), np.asarray(z), atol=1e-6)
+
+
+def test_codes_in_range():
+    rng = np.random.default_rng(11)
+    z = rand(rng, 5, 24)
+    c0 = rand(rng, 2, 3, 4)
+    _, codes, _, _ = pq.grouped_pq(z, c0, q=6, r=2, iters=3)
+    codes = np.asarray(codes)
+    assert codes.dtype == np.int32
+    assert codes.min() >= 0 and codes.max() < 3
+
+
+# ---------------------------------------------------------------------------
+# reshape helpers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    dsub=st.integers(1, 6),
+    q=st.sampled_from([1, 2, 4, 6, 12]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_group_reshape_roundtrip(b, dsub, q, seed):
+    rng = np.random.default_rng(seed)
+    z = rand(rng, b, q * dsub)
+    for r in (x for x in (1, 2, 3, 4, 6, 12) if q % x == 0):
+        g = ref.batch_to_groups(z, q, r)
+        assert g.shape == (r, b * q // r, dsub)
+        back = ref.groups_to_batch(g, b, q)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(z))
+
+
+def test_grouping_layout_matches_paper():
+    """Group g must hold subvector indices [g*q/R, (g+1)*q/R) of each example."""
+    b, q, dsub, r = 2, 4, 1, 2
+    # z[j, s] = 10*j + s  (one scalar per subvector)
+    z = jnp.asarray(np.array(
+        [[10 * j + s for s in range(q * dsub)] for j in range(b)], np.float32))
+    g = np.asarray(ref.batch_to_groups(z, q, r))[:, :, 0]
+    # group 0: subvectors 0,1 of each example; group 1: subvectors 2,3
+    assert set(g[0].tolist()) == {0, 1, 10, 11}
+    assert set(g[1].tolist()) == {2, 3, 12, 13}
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_quantization_error_scale_invariant_zero():
+    rng = np.random.default_rng(5)
+    z = rand(rng, 4, 10)
+    assert float(ref.quantization_error(z, z)) == pytest.approx(0.0, abs=1e-6)
+    # error of all-zero quantization is exactly 1
+    zero = jnp.zeros_like(z)
+    assert float(ref.quantization_error(z, zero)) == pytest.approx(1.0, rel=1e-5)

@@ -1,0 +1,264 @@
+"""L2 correctness: split models, gradient correction, export plumbing.
+
+The decisive tests here verify the split-training algebra end to end in
+pure JAX before anything is AOT-exported:
+
+* with no quantization (z~ = z) and lambda = 0, the SplitFed decomposition
+  client_bwd(server_step(client_fwd(x))) must equal the monolithic
+  jax.grad of the full model — i.e. SplitFed == mini-batch SGD (paper §3);
+* with quantization, client_bwd must equal the gradient of the surrogate
+  loss (6) — the paper's Appendix A identity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as model_lib
+from compile.model import TaskBuild
+from compile.models import common, femnist
+
+jax.config.update("jax_platform_name", "cpu")
+
+SMALL_VARIANTS = [("femnist", "small"), ("so_tag", "small"), ("so_nwp", "small")]
+
+
+def random_inputs(specs, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for (name, shape, dtype, role) in specs:
+        if dtype == jnp.int32:
+            hi = 4 if name in ("x", "y") else 2
+            out.append(jnp.asarray(rng.integers(1, hi, size=shape, dtype=np.int32)))
+        elif "mask" in name:
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name == "y":
+            out.append(jnp.asarray((rng.random(shape) < 0.02).astype(np.float32)))
+        elif name == "lambda":
+            out.append(jnp.asarray(0.0, jnp.float32))
+        else:
+            out.append(jnp.asarray(rng.normal(size=shape).astype(np.float32)))
+    return out
+
+
+def labels_for(tb, rng):
+    name = tb.task
+    b = tb.cfg["batch"]
+    if name == "femnist":
+        return jnp.asarray(rng.integers(0, tb.cfg["classes"], size=(b,), dtype=np.int32))
+    if name == "so_tag":
+        return jnp.asarray((rng.random((b, tb.cfg["tags"])) < 0.02).astype(np.float32))
+    return jnp.asarray(rng.integers(0, tb.cfg["vocab"], size=(b, tb.cfg["seq"]), dtype=np.int32))
+
+
+def x_for(tb, rng):
+    b = tb.cfg["batch"]
+    if tb.task == "femnist":
+        return jnp.asarray(rng.random((b, 28, 28, 1)).astype(np.float32))
+    if tb.task == "so_tag":
+        return jnp.asarray(rng.random((b, tb.cfg["vocab"])).astype(np.float32))
+    return jnp.asarray(rng.integers(1, tb.cfg["vocab"], size=(b, tb.cfg["seq"]), dtype=np.int32))
+
+
+# ---------------------------------------------------------------------------
+# paper-exact parameter counts
+# ---------------------------------------------------------------------------
+
+def test_femnist_param_counts_match_paper():
+    tb = TaskBuild("femnist", "paper")
+    meta = tb.manifest_meta()
+    assert meta["client_param_count"] == 18_816  # §C.2: 18,816 x 64 bits
+    assert meta["server_param_count"] == 1_187_774  # §C.2: 1,187,774 x 64 bits
+    assert meta["cut_dim"] == 9216  # d = 9216
+    # client holds ~1.6% of the model (paper §5)
+    frac = meta["client_param_count"] / (
+        meta["client_param_count"] + meta["server_param_count"])
+    assert 0.015 < frac < 0.017
+
+
+def test_so_nwp_paper_server_size():
+    tb = TaskBuild("so_nwp", "paper")
+    meta = tb.manifest_meta()
+    assert meta["server_param_count"] == 970_388  # §C.2 exactly
+    assert meta["cut_dim"] == 96
+
+
+def test_so_tag_paper_sizes():
+    tb = TaskBuild("so_tag", "paper")
+    meta = tb.manifest_meta()
+    assert meta["client_param_count"] == 5000 * 2000 + 2000
+    assert meta["server_param_count"] == 2000 * 1000 + 1000
+    assert meta["cut_dim"] == 2000
+
+
+# ---------------------------------------------------------------------------
+# split == monolithic when quantization is off
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("task,preset", SMALL_VARIANTS)
+def test_split_equals_monolithic_grad(task, preset):
+    """client_fwd -> server_step -> client_bwd (z~=z, lambda=0) == jax.grad."""
+    tb = TaskBuild(task, preset)
+    rng = np.random.default_rng(42)
+    wc = [jnp.asarray(rng.normal(scale=0.1, size=s.shape).astype(np.float32))
+          for s in tb.wc_specs]
+    ws = [jnp.asarray(rng.normal(scale=0.1, size=s.shape).astype(np.float32))
+          for s in tb.ws_specs]
+    x = x_for(tb, rng)
+    y = labels_for(tb, rng)
+    b = tb.cfg["batch"]
+    masks = {n: jnp.ones(tb.mod.data_specs(tb.cfg, b)[n][0], jnp.float32)
+             for n in model_lib.CLIENT_ARGS[task] + model_lib.SERVER_ARGS[task]
+             if "mask" in n}
+    cdata = [x if n == "x" else masks[n] for n in model_lib.CLIENT_ARGS[task]]
+    sdata = [y if n == "y" else masks[n] for n in model_lib.SERVER_ARGS[task]]
+
+    # split path
+    (z,) = tb.client_fwd().fn(*wc, *cdata)
+    out = tb.server_step().fn(*ws, z, *sdata)
+    nmetrics = len(model_lib.METRIC_NAMES[task])
+    loss_split = out[0]
+    grad_z = out[1 + nmetrics]
+    ws_grads = out[2 + nmetrics:]
+    bwd = tb.client_bwd().fn(*wc, *cdata, z, grad_z, jnp.asarray(0.0))
+    wc_grads, qerr = bwd[:-1], bwd[-1]
+    assert float(qerr) == pytest.approx(0.0, abs=1e-9)
+
+    # monolithic path
+    out_full = tb.full_grad().fn(*wc, *ws, *cdata, *sdata)
+    loss_full = out_full[0]
+    gc_full = out_full[1 + nmetrics: 1 + nmetrics + tb.nc]
+    gs_full = out_full[1 + nmetrics + tb.nc:]
+
+    np.testing.assert_allclose(float(loss_split), float(loss_full), rtol=1e-5)
+    for g1, g2 in zip(wc_grads, gc_full):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=2e-4, atol=2e-6)
+    for g1, g2 in zip(ws_grads, gs_full):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=2e-4, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# gradient correction == surrogate-loss gradient (paper Appendix A)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lam", [0.0, 1e-3, 0.5])
+def test_correction_is_surrogate_gradient(lam):
+    tb = TaskBuild("so_tag", "small")
+    rng = np.random.default_rng(1)
+    wc = [jnp.asarray(rng.normal(scale=0.1, size=s.shape).astype(np.float32))
+          for s in tb.wc_specs]
+    x = x_for(tb, rng)
+    b = tb.cfg["batch"]
+    cut_shape = tb.mod.data_specs(tb.cfg, b)["cut"][0]
+    z_tilde = jnp.asarray(rng.normal(size=cut_shape).astype(np.float32))
+    grad_z = jnp.asarray(rng.normal(size=cut_shape).astype(np.float32))
+
+    bwd = tb.client_bwd().fn(*wc, x, z_tilde, grad_z, jnp.asarray(lam, jnp.float32))
+    wc_grads = bwd[:-1]
+
+    # surrogate s(w_c) = <grad_z, z> + (lam/2)||z - z~||^2 has the same
+    # gradient as eq. (5): grad_z + lam (z - z~) back-propagated through u.
+    def surrogate(wc_):
+        z = tb.mod.client_forward(tb.cfg, wc_, x)
+        return jnp.sum(grad_z * z) + 0.5 * lam * jnp.sum((z - z_tilde) ** 2)
+
+    want = jax.grad(surrogate)(wc)
+    for g1, g2 in zip(wc_grads, want):
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=2e-4, atol=2e-6)
+
+
+def test_correction_reduces_qerr_direction():
+    """A gradient step along the correction term must shrink ||z - z~||."""
+    tb = TaskBuild("so_tag", "small")
+    rng = np.random.default_rng(2)
+    wc = [jnp.asarray(rng.normal(scale=0.1, size=s.shape).astype(np.float32))
+          for s in tb.wc_specs]
+    x = x_for(tb, rng)
+    z = tb.mod.client_forward(tb.cfg, wc, x)
+    z_tilde = z * 0.9  # pretend quantization shrank the activations
+    zero_grad = jnp.zeros_like(z)
+    lam = 1.0
+    bwd = tb.client_bwd().fn(*wc, x, z_tilde, zero_grad, jnp.asarray(lam))
+    wc_new = [w - 1e-4 * g for w, g in zip(wc, bwd[:-1])]
+    z_new = tb.mod.client_forward(tb.cfg, wc_new, x)
+    before = float(jnp.sum((z - z_tilde) ** 2))
+    after = float(jnp.sum((z_new - z_tilde) ** 2))
+    assert after < before
+
+
+# ---------------------------------------------------------------------------
+# shapes / metric plumbing of every export
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("task,preset", SMALL_VARIANTS)
+def test_exports_run_and_shapes(task, preset):
+    tb = TaskBuild(task, preset)
+    for ex in [tb.client_fwd(), tb.server_step(), tb.client_bwd(),
+               tb.full_grad(), tb.full_eval()]:
+        args = random_inputs(ex.inputs, seed=7)
+        outs = ex.fn(*args)
+        assert len(outs) == len(ex.outputs), ex.name
+        for o in outs:
+            assert bool(jnp.all(jnp.isfinite(o))), ex.name
+
+
+@pytest.mark.parametrize("task,preset", SMALL_VARIANTS)
+def test_pq_exports_match_kernel(task, preset):
+    tb = TaskBuild(task, preset)
+    for ex in tb.pq_exports():
+        args = random_inputs(ex.inputs, seed=3)
+        cb, codes, z_tilde, qerr = ex.fn(*args)
+        m = ex.meta
+        assert cb.shape == (m["r"], m["l"], m["dsub"])
+        assert codes.shape == (m["r"], m["ng"])
+        assert z_tilde.shape == (m["act_batch"], m["d"])
+        assert float(qerr) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+def test_top_k_mask_matches_lax_top_k():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(17, 23)).astype(np.float32))
+    mask = common.top_k_mask(logits, 5)
+    _, idx = jax.lax.top_k(logits, 5)
+    want = np.zeros(logits.shape, np.float32)
+    for i, row in enumerate(np.asarray(idx)):
+        want[i, row] = 1.0
+    np.testing.assert_array_equal(np.asarray(mask), want)
+
+
+def test_lstm_shapes_and_determinism():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 5, 8)).astype(np.float32))
+    wx = jnp.asarray(rng.normal(scale=0.1, size=(8, 16)).astype(np.float32))
+    wh = jnp.asarray(rng.normal(scale=0.1, size=(4, 16)).astype(np.float32))
+    b = jnp.zeros((16,), jnp.float32)
+    h1 = common.lstm(x, wx, wh, b)
+    h2 = common.lstm(x, wx, wh, b)
+    assert h1.shape == (3, 5, 4)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    assert bool(jnp.all(jnp.abs(h1) <= 1.0))  # tanh-bounded
+
+
+def test_femnist_cut_dim_formula():
+    cfg = femnist.PRESETS["paper"]
+    assert femnist.dims(cfg)["cut_dim"] == 12 * 12 * 64 == 9216
+
+
+def test_softmax_xent_matches_manual():
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 9)).astype(np.float32))
+    y = jnp.asarray([0, 3, 8, 2], dtype=jnp.int32)
+    got = common.softmax_xent(logits, y)
+    probs = jax.nn.softmax(logits, axis=-1)
+    want = -jnp.log(probs[jnp.arange(4), y])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

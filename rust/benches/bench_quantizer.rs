@@ -1,0 +1,80 @@
+//! Bench: the L3 quantizer hot path (Figure 3's configurations).
+//!
+//! Measures native grouped-PQ throughput on FEMNIST-shaped activations
+//! (d=9216, B=20) across the paper's operating points, plus codeword
+//! packing and wire encode/decode. This is the §Perf baseline for the
+//! coordinator-side hot loop: in a FedLite round the quantizer runs once
+//! per client.
+
+use fedlite::comm::message::Message;
+use fedlite::quantizer::packing;
+use fedlite::quantizer::pq::{GroupedPq, PqConfig};
+use fedlite::util::bench::Bench;
+use fedlite::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("quantizer");
+    let (batch, d) = (20usize, 9216usize);
+    let mut rng = Rng::new(0);
+    let z: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
+    let work = (batch * d * 4) as f64;
+
+    // the paper's headline + representative sweep points (q, R, L, iters)
+    for (q, r, l) in [
+        (1152usize, 1usize, 2usize), // 490x point
+        (288, 1, 8),
+        (288, 1, 32),
+        (4608, 1, 8),
+        (4608, 384, 8), // grouped, many codebooks
+        (288, 288, 8),  // vanilla PQ
+        (1, 1, 8),      // K-means over whole vectors
+    ] {
+        let pq = GroupedPq::new(PqConfig::new(q, r, l).with_iters(8), d).unwrap();
+        let mut qrng = Rng::new(42);
+        b.case(
+            &format!("quantize q={q} R={r} L={l} iters=8"),
+            1,
+            5,
+            work,
+            || {
+                let out = pq.quantize(&z, batch, &mut qrng);
+                std::hint::black_box(out.sq_error);
+            },
+        );
+    }
+
+    // Lloyd iteration scaling at the headline config
+    for iters in [1usize, 4, 8, 16] {
+        let pq = GroupedPq::new(PqConfig::new(1152, 1, 2).with_iters(iters), d).unwrap();
+        let mut qrng = Rng::new(42);
+        b.case(&format!("quantize q=1152 L=2 iters={iters}"), 1, 5, work, || {
+            std::hint::black_box(pq.quantize(&z, batch, &mut qrng).sq_error);
+        });
+    }
+
+    // packing + wire
+    let pq = GroupedPq::new(PqConfig::new(1152, 1, 2).with_iters(2), d).unwrap();
+    let mut qrng = Rng::new(7);
+    let out = pq.quantize(&z, batch, &mut qrng);
+    b.case("pack codes (23040 @ 1 bit)", 10, 100, out.codes.len() as f64 * 4.0, || {
+        std::hint::black_box(packing::pack(&out.codes, 2));
+    });
+    let packed = packing::pack(&out.codes, 2);
+    b.case("unpack codes", 10, 100, out.codes.len() as f64 * 4.0, || {
+        std::hint::black_box(packing::unpack(&packed, out.codes.len(), 2).unwrap());
+    });
+    let msg = Message::from_pq(&out.config, batch, d, &out.codebooks, &out.codes);
+    b.case("wire encode quantized upload", 10, 200, msg.wire_len() as f64, || {
+        std::hint::black_box(msg.encode(0, 0));
+    });
+    let bytes = msg.encode(0, 0);
+    b.case("wire decode quantized upload", 10, 200, bytes.len() as f64, || {
+        std::hint::black_box(Message::decode(&bytes).unwrap());
+    });
+    let raw = Message::ActivationUpload { z: z.clone(), b: batch, d };
+    b.case("wire encode raw activations (SplitFed)", 5, 50, work, || {
+        std::hint::black_box(raw.encode(0, 0));
+    });
+
+    b.finish();
+}

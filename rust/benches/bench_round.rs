@@ -1,0 +1,113 @@
+//! Bench: end-to-end round latency per algorithm + per-stage breakdown.
+//!
+//! Regenerates the *measured* side of Table 1 (bytes are exact; times are
+//! this machine's CPU-PJRT simulation) and provides the §Perf L3 round
+//! profile: client_fwd / quantize / server_step / client_bwd, isolated.
+//! Skips gracefully when artifacts are missing.
+
+use std::sync::Arc;
+
+use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
+use fedlite::coordinator::client::{assemble, draw_masks, InputSources};
+use fedlite::coordinator::quantize::QuantizeBackend;
+use fedlite::coordinator::{build_dataset, build_trainer};
+use fedlite::data::Array;
+use fedlite::runtime::Runtime;
+use fedlite::util::bench::Bench;
+use fedlite::util::rng::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_round: artifacts not built, skipping (run `make artifacts`)");
+        return;
+    }
+    let rt = Arc::new(Runtime::open("artifacts").expect("runtime"));
+    let mut b = Bench::new("round");
+
+    // whole rounds, each algorithm (FEMNIST paper config, 4 clients/round)
+    for algo in [Algorithm::FedLite, Algorithm::SplitFed, Algorithm::FedAvg] {
+        let mut cfg = RunConfig::preset("femnist").unwrap();
+        cfg.algorithm = algo;
+        cfg.rounds = 1;
+        cfg.num_clients = 10;
+        cfg.clients_per_round = 4;
+        cfg.eval_every = 0;
+        let rt2 = Arc::clone(&rt);
+        b.case(&format!("one round femnist/{} S=4", algo.name()), 1, 3, 0.0, move || {
+            let mut t = build_trainer(cfg.clone(), Arc::clone(&rt2)).unwrap();
+            std::hint::black_box(t.run().unwrap());
+        });
+    }
+
+    // stage breakdown at the headline FedLite config
+    let variant = "femnist_paper";
+    let spec = rt.manifest.variant(variant).unwrap().spec.clone();
+    let rng = Rng::new(0);
+    let wc = spec.client.init_tensors(&mut rng.fork(1));
+    let ws = spec.server.init_tensors(&mut rng.fork(2));
+    let cfg = RunConfig::preset("femnist").unwrap();
+    let data = build_dataset(&cfg).unwrap();
+    let batch = data.train_batch(0, spec.batch, &mut rng.fork(3));
+    let fwd = rt.manifest.artifact(variant, "client_fwd").unwrap().clone();
+    let step = rt.manifest.artifact(variant, "server_step").unwrap().clone();
+    let bwd = rt.manifest.artifact(variant, "client_bwd").unwrap().clone();
+    let masks = draw_masks(&[&fwd, &step, &bwd], 0.25, 0.5, &mut rng.fork(4));
+
+    let src = InputSources {
+        wc: Some(&wc), batch: Some(&batch), masks: Some(&masks), ..Default::default()
+    };
+    let fwd_inputs = assemble(&fwd, &src).unwrap();
+    rt.run(variant, "client_fwd", &fwd_inputs).unwrap(); // compile warmup
+    b.case("stage: client_fwd (PJRT)", 2, 10, 0.0, || {
+        std::hint::black_box(rt.run(variant, "client_fwd", &fwd_inputs).unwrap());
+    });
+    let z_arr = rt.run(variant, "client_fwd", &fwd_inputs).unwrap().remove(0);
+    let z = z_arr.as_f32().unwrap().to_vec();
+
+    for engine in [QuantizerEngine::Native, QuantizerEngine::Pjrt] {
+        let qb = QuantizeBackend::new(engine, cfg.pq, spec.cut_dim, Arc::clone(&rt), variant)
+            .unwrap();
+        let mut qrng = Rng::new(5);
+        // warmup compiles the artifact on the pjrt path
+        qb.quantize(&z, spec.act_batch, &mut qrng).unwrap();
+        b.case(
+            &format!("stage: quantize q=1152 L=2 ({})", qb.engine_name()),
+            1,
+            5,
+            (z.len() * 4) as f64,
+            || {
+                std::hint::black_box(qb.quantize(&z, spec.act_batch, &mut qrng).unwrap());
+            },
+        );
+    }
+
+    let qb = QuantizeBackend::new(
+        QuantizerEngine::Native, cfg.pq, spec.cut_dim, Arc::clone(&rt), variant,
+    ).unwrap();
+    let out = qb.quantize(&z, spec.act_batch, &mut Rng::new(6)).unwrap();
+    let z_tilde = Array::f32(&[spec.act_batch, spec.cut_dim], out.z_tilde.clone());
+    let src = InputSources {
+        ws: Some(&ws), batch: Some(&batch), masks: Some(&masks),
+        z_tilde: Some(&z_tilde), ..Default::default()
+    };
+    let step_inputs = assemble(&step, &src).unwrap();
+    rt.run(variant, "server_step", &step_inputs).unwrap();
+    b.case("stage: server_step (PJRT)", 2, 10, 0.0, || {
+        std::hint::black_box(rt.run(variant, "server_step", &step_inputs).unwrap());
+    });
+    let outs = rt.run(variant, "server_step", &step_inputs).unwrap();
+    let grad_z = outs[2].clone(); // loss, correct, grad_z, ...
+
+    let src = InputSources {
+        wc: Some(&wc), batch: Some(&batch), masks: Some(&masks),
+        z_tilde: Some(&z_tilde), grad_z: Some(&grad_z), lambda: Some(1e-4),
+        ..Default::default()
+    };
+    let bwd_inputs = assemble(&bwd, &src).unwrap();
+    rt.run(variant, "client_bwd", &bwd_inputs).unwrap();
+    b.case("stage: client_bwd (PJRT, incl. correction)", 2, 10, 0.0, || {
+        std::hint::black_box(rt.run(variant, "client_bwd", &bwd_inputs).unwrap());
+    });
+
+    b.finish();
+}

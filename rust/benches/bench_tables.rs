@@ -1,0 +1,60 @@
+//! Bench: regenerate the cost numbers behind Table 1 and the compression
+//! sweeps behind Figures 3/5c, measuring the analytic model's agreement
+//! with the byte-exact wire encoder across the whole (q, R, L) grid.
+
+use fedlite::comm::message::Message;
+use fedlite::models::analytics::{self, TaskCosts};
+use fedlite::quantizer::cost::CostModel;
+use fedlite::quantizer::pq::{GroupedPq, PqConfig};
+use fedlite::util::bench::Bench;
+use fedlite::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("tables");
+
+    // Table 1 analytic rows for all three tasks (cheap; timing the model
+    // itself is trivial — the value is the printed reproduction)
+    for (task, costs) in [
+        ("femnist", analytics::femnist_costs()),
+        ("so_tag", analytics::so_tag_costs()),
+        ("so_nwp", analytics::so_nwp_costs()),
+    ] {
+        let rows = analytics::table1(&costs, 4, Some((1152.min(costs.d), 1, 2)));
+        println!("table1[{task}]:");
+        for r in &rows {
+            println!(
+                "  {:<22} {:<10} comm={:>14.1}",
+                r.algorithm, r.batch, r.communication
+            );
+        }
+        let _ = rows;
+    }
+
+    // model-vs-wire agreement across the fig3 grid (this is the check that
+    // the paper's formula and our bytes never drift)
+    let cm32 = CostModel::new(32);
+    let (batch, d) = (20usize, 9216usize);
+    let mut rng = Rng::new(1);
+    let z: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
+    let mut worst: f64 = 0.0;
+    b.case("fig3 grid: quantize+encode (18 configs)", 0, 1, 0.0, || {
+        for (q, r) in [(1usize, 1usize), (288, 288), (288, 1), (1152, 1152), (1152, 1),
+                       (4608, 4608), (4608, 1152), (4608, 384), (4608, 1)] {
+            for l in [2usize, 8] {
+                let pq = GroupedPq::new(PqConfig::new(q, r, l).with_iters(1), d).unwrap();
+                let mut qr = Rng::new(3);
+                let out = pq.quantize(&z, batch, &mut qr);
+                let msg = Message::from_pq(&out.config, batch, d, &out.codebooks, &out.codes);
+                let wire_bits = (msg.wire_len() * 8) as f64;
+                let model_bits = cm32.fedlite_bits(batch, d, q, r, l);
+                let rel = (wire_bits - model_bits).abs() / model_bits;
+                worst = worst.max(rel);
+            }
+        }
+    });
+    println!("worst wire-vs-model relative gap: {:.3} (headers + bit padding)", worst);
+    assert!(worst < 0.35, "wire format drifted from the paper model");
+    let costs_check: TaskCosts = analytics::femnist_costs();
+    assert_eq!(costs_check.wc, 18_816);
+    b.finish();
+}

@@ -1,0 +1,14 @@
+// Dev tool: load an HLO text file, compile on PJRT CPU, print I/O shapes.
+use anyhow::Result;
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    for path in std::env::args().skip(1) {
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        match client.compile(&comp) {
+            Ok(_) => println!("{path}: compile OK"),
+            Err(e) => println!("{path}: COMPILE FAILED: {e}"),
+        }
+    }
+    Ok(())
+}

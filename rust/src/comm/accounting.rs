@@ -1,0 +1,151 @@
+//! Byte meters: per-direction, per-round communication accounting.
+//!
+//! Every message that crosses a [`crate::comm::channel::Link`] is counted
+//! here. Figure 6's x-axis (cumulative communication) and the measured
+//! columns of Table 1 read these meters; they are thread-safe because
+//! client workers run on the pool.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Transfer direction relative to the server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// client -> server (the scarce resource in FL).
+    Uplink,
+    /// server -> client.
+    Downlink,
+}
+
+/// Byte totals for one round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RoundBytes {
+    pub up: u64,
+    pub down: u64,
+    pub up_msgs: u64,
+    pub down_msgs: u64,
+}
+
+impl RoundBytes {
+    pub fn total(&self) -> u64 {
+        self.up + self.down
+    }
+}
+
+/// Thread-safe cumulative + per-round byte meter.
+#[derive(Debug, Default)]
+pub struct ByteMeter {
+    up: AtomicU64,
+    down: AtomicU64,
+    up_msgs: AtomicU64,
+    down_msgs: AtomicU64,
+    rounds: Mutex<Vec<RoundBytes>>,
+    round_start: Mutex<RoundBytes>,
+}
+
+impl ByteMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&self, dir: Direction, bytes: usize) {
+        match dir {
+            Direction::Uplink => {
+                self.up.fetch_add(bytes as u64, Ordering::Relaxed);
+                self.up_msgs.fetch_add(1, Ordering::Relaxed);
+            }
+            Direction::Downlink => {
+                self.down.fetch_add(bytes as u64, Ordering::Relaxed);
+                self.down_msgs.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Snapshot of cumulative totals.
+    pub fn totals(&self) -> RoundBytes {
+        RoundBytes {
+            up: self.up.load(Ordering::Relaxed),
+            down: self.down.load(Ordering::Relaxed),
+            up_msgs: self.up_msgs.load(Ordering::Relaxed),
+            down_msgs: self.down_msgs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Mark the start of a round (call before the round's transfers).
+    pub fn begin_round(&self) {
+        *self.round_start.lock().unwrap() = self.totals();
+    }
+
+    /// Close the round; returns and archives this round's delta.
+    pub fn end_round(&self) -> RoundBytes {
+        let start = *self.round_start.lock().unwrap();
+        let now = self.totals();
+        let delta = RoundBytes {
+            up: now.up - start.up,
+            down: now.down - start.down,
+            up_msgs: now.up_msgs - start.up_msgs,
+            down_msgs: now.down_msgs - start.down_msgs,
+        };
+        self.rounds.lock().unwrap().push(delta);
+        delta
+    }
+
+    pub fn per_round(&self) -> Vec<RoundBytes> {
+        self.rounds.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn records_per_direction() {
+        let m = ByteMeter::new();
+        m.record(Direction::Uplink, 100);
+        m.record(Direction::Uplink, 50);
+        m.record(Direction::Downlink, 7);
+        let t = m.totals();
+        assert_eq!(t.up, 150);
+        assert_eq!(t.down, 7);
+        assert_eq!(t.up_msgs, 2);
+        assert_eq!(t.down_msgs, 1);
+        assert_eq!(t.total(), 157);
+    }
+
+    #[test]
+    fn round_deltas() {
+        let m = ByteMeter::new();
+        m.begin_round();
+        m.record(Direction::Uplink, 10);
+        let r1 = m.end_round();
+        assert_eq!(r1.up, 10);
+        m.begin_round();
+        m.record(Direction::Uplink, 5);
+        m.record(Direction::Downlink, 2);
+        let r2 = m.end_round();
+        assert_eq!((r2.up, r2.down), (5, 2));
+        assert_eq!(m.per_round(), vec![r1, r2]);
+        assert_eq!(m.totals().up, 15);
+    }
+
+    #[test]
+    fn thread_safe_counting() {
+        let m = Arc::new(ByteMeter::new());
+        let mut handles = vec![];
+        for _ in 0..8 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.record(Direction::Uplink, 3);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.totals().up, 24_000);
+        assert_eq!(m.totals().up_msgs, 8_000);
+    }
+}

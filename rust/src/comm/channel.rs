@@ -1,0 +1,111 @@
+//! Simulated point-to-point links with a bandwidth/latency time model.
+//!
+//! The simulation is functionally synchronous (messages arrive when sent)
+//! but each transfer charges simulated wall-clock time
+//! `latency + bytes / bandwidth` to the link, so experiments can report
+//! estimated round times for asymmetric mobile up-links (the paper's
+//! motivation: up-link is the bottleneck). Byte counts flow to the shared
+//! [`super::ByteMeter`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::comm::accounting::{ByteMeter, Direction};
+use crate::comm::message::Message;
+
+/// Link parameters. Defaults model a mobile client: 5 Mbps up, 20 Mbps
+/// down, 50 ms latency.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    pub bandwidth_bps: f64,
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    pub fn mobile_uplink() -> Self {
+        LinkSpec { bandwidth_bps: 5e6, latency_s: 0.05 }
+    }
+
+    pub fn mobile_downlink() -> Self {
+        LinkSpec { bandwidth_bps: 20e6, latency_s: 0.05 }
+    }
+
+    /// Simulated seconds to move `bytes` over this link.
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_s + (bytes as f64 * 8.0) / self.bandwidth_bps
+    }
+}
+
+/// One direction of a client <-> server connection.
+pub struct Link {
+    spec: LinkSpec,
+    direction: Direction,
+    meter: Arc<ByteMeter>,
+    /// Accumulated simulated busy time, in microseconds.
+    busy_us: AtomicU64,
+}
+
+impl Link {
+    pub fn new(spec: LinkSpec, direction: Direction, meter: Arc<ByteMeter>) -> Self {
+        Link { spec, direction, meter, busy_us: AtomicU64::new(0) }
+    }
+
+    /// "Transmit" a message: meter the bytes, charge simulated time, and
+    /// hand back the serialized form (the receiver decodes it — the bytes
+    /// really do round-trip through the wire format).
+    pub fn send(&self, msg: &Message, round: u32, client: u32) -> Vec<u8> {
+        let bytes = msg.encode(round, client);
+        self.meter.record(self.direction, bytes.len());
+        let t = self.spec.transfer_time(bytes.len());
+        self.busy_us
+            .fetch_add((t * 1e6) as u64, Ordering::Relaxed);
+        bytes
+    }
+
+    /// Total simulated seconds this link has been busy.
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn spec(&self) -> LinkSpec {
+        self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_model() {
+        let s = LinkSpec { bandwidth_bps: 8e6, latency_s: 0.01 };
+        // 1 MB = 8e6 bits -> 1 s + latency
+        assert!((s.transfer_time(1_000_000) - 1.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn send_meters_and_charges_time() {
+        let meter = Arc::new(ByteMeter::new());
+        let link = Link::new(
+            LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 },
+            Direction::Uplink,
+            Arc::clone(&meter),
+        );
+        let msg = Message::GradDownload { grad: vec![0.0; 250], b: 1, d: 250 };
+        let bytes = link.send(&msg, 1, 2);
+        assert_eq!(meter.totals().up, bytes.len() as u64);
+        let expect = bytes.len() as f64 * 8.0 / 1e6;
+        assert!((link.busy_seconds() - expect).abs() < 1e-3);
+        // the serialized bytes decode to the original message
+        let (back, round, client) = Message::decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!((round, client), (1, 2));
+    }
+
+    #[test]
+    fn uplink_slower_than_downlink_default() {
+        let up = LinkSpec::mobile_uplink();
+        let down = LinkSpec::mobile_downlink();
+        assert!(up.transfer_time(1 << 20) > down.transfer_time(1 << 20));
+    }
+}

@@ -1,0 +1,18 @@
+//! Communication substrate: wire format, byte accounting, simulated links.
+//!
+//! Everything a client "sends" in the simulation is actually serialized to
+//! bytes ([`message`]), metered ([`accounting`]), and pushed through a
+//! bandwidth/latency-modelled link ([`channel`]) of a star topology
+//! ([`network`]). This is what makes the reported communication costs
+//! byte-accurate rather than formula-only: Figure 6's x-axis integrates
+//! these meters.
+
+pub mod accounting;
+pub mod channel;
+pub mod message;
+pub mod network;
+
+pub use accounting::{ByteMeter, Direction, RoundBytes};
+pub use channel::{Link, LinkSpec};
+pub use message::Message;
+pub use network::StarNetwork;

@@ -1,0 +1,124 @@
+//! Star topology: one server, M clients, each with an up- and down-link.
+//!
+//! The coordinator sends every protocol message through here so that all
+//! traffic is serialized, metered, and time-modelled uniformly. Estimated
+//! round wall-clock uses the slowest selected client (synchronous FL).
+
+use std::sync::Arc;
+
+use crate::comm::accounting::{ByteMeter, Direction, RoundBytes};
+use crate::comm::channel::{Link, LinkSpec};
+use crate::comm::message::Message;
+
+/// The simulated star network.
+pub struct StarNetwork {
+    uplinks: Vec<Link>,
+    downlinks: Vec<Link>,
+    pub meter: Arc<ByteMeter>,
+}
+
+impl StarNetwork {
+    pub fn new(clients: usize, up: LinkSpec, down: LinkSpec) -> Self {
+        let meter = Arc::new(ByteMeter::new());
+        let uplinks = (0..clients)
+            .map(|_| Link::new(up, Direction::Uplink, Arc::clone(&meter)))
+            .collect();
+        let downlinks = (0..clients)
+            .map(|_| Link::new(down, Direction::Downlink, Arc::clone(&meter)))
+            .collect();
+        StarNetwork { uplinks, downlinks, meter }
+    }
+
+    pub fn with_defaults(clients: usize) -> Self {
+        Self::new(clients, LinkSpec::mobile_uplink(), LinkSpec::mobile_downlink())
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.uplinks.len()
+    }
+
+    /// Client -> server transfer. Returns decoded message (round-tripped
+    /// through the wire bytes) and its wire size.
+    pub fn upload(
+        &self,
+        client: usize,
+        round: u32,
+        msg: &Message,
+    ) -> anyhow::Result<(Message, usize)> {
+        let bytes = self.uplinks[client].send(msg, round, client as u32);
+        let n = bytes.len();
+        let (decoded, _, _) = Message::decode(&bytes)?;
+        Ok((decoded, n))
+    }
+
+    /// Server -> client transfer.
+    pub fn download(
+        &self,
+        client: usize,
+        round: u32,
+        msg: &Message,
+    ) -> anyhow::Result<(Message, usize)> {
+        let bytes = self.downlinks[client].send(msg, round, client as u32);
+        let n = bytes.len();
+        let (decoded, _, _) = Message::decode(&bytes)?;
+        Ok((decoded, n))
+    }
+
+    /// Simulated transfer seconds for a synchronous round over `selected`
+    /// clients: max over clients of (their up+down busy time this call).
+    pub fn estimate_round_time(&self, per_client_bytes: &[(usize, usize)]) -> f64 {
+        per_client_bytes
+            .iter()
+            .map(|&(up_bytes, down_bytes)| {
+                self.uplinks[0].spec().transfer_time(up_bytes)
+                    + self.downlinks[0].spec().transfer_time(down_bytes)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    pub fn begin_round(&self) {
+        self.meter.begin_round();
+    }
+
+    pub fn end_round(&self) -> RoundBytes {
+        self.meter.end_round()
+    }
+
+    pub fn totals(&self) -> RoundBytes {
+        self.meter.totals()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upload_download_metered_separately() {
+        let net = StarNetwork::with_defaults(3);
+        net.begin_round();
+        let up_msg = Message::ActivationUpload { z: vec![0.0; 100], b: 1, d: 100 };
+        let down_msg = Message::GradDownload { grad: vec![0.0; 100], b: 1, d: 100 };
+        let (_, up_n) = net.upload(0, 0, &up_msg).unwrap();
+        let (_, down_n) = net.download(0, 0, &down_msg).unwrap();
+        let rb = net.end_round();
+        assert_eq!(rb.up, up_n as u64);
+        assert_eq!(rb.down, down_n as u64);
+    }
+
+    #[test]
+    fn round_time_is_slowest_client() {
+        let net = StarNetwork::with_defaults(2);
+        let t = net.estimate_round_time(&[(1000, 1000), (1_000_000, 1000)]);
+        let slow = net.estimate_round_time(&[(1_000_000, 1000)]);
+        assert!((t - slow).abs() < 1e-12);
+    }
+
+    #[test]
+    fn messages_survive_the_wire() {
+        let net = StarNetwork::with_defaults(1);
+        let msg = Message::ClientGrads { grads: vec![vec![1.5, -2.0]] };
+        let (decoded, _) = net.upload(0, 5, &msg).unwrap();
+        assert_eq!(decoded, msg);
+    }
+}

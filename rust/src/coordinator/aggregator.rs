@@ -1,0 +1,153 @@
+//! Weighted aggregation of client contributions (paper §3 step 4).
+//!
+//! `Δw = Σ_{i∈S} p_i g_i / Σ_{i∈S} p_i` — the same weighted mean used for
+//! client-side gradients in SplitFed/FedLite and for model deltas in
+//! FedAvg.
+
+use crate::tensor::TensorList;
+
+/// Online weighted-mean accumulator over tensor lists.
+pub struct WeightedAggregator {
+    acc: Option<TensorList>,
+    total_weight: f64,
+}
+
+impl WeightedAggregator {
+    pub fn new() -> Self {
+        WeightedAggregator { acc: None, total_weight: 0.0 }
+    }
+
+    /// Add one client's contribution with weight `p_i > 0`.
+    pub fn add(&mut self, contribution: &TensorList, weight: f64) {
+        assert!(weight > 0.0, "non-positive aggregation weight");
+        match &mut self.acc {
+            None => {
+                let mut first = contribution.clone();
+                first.scale(weight as f32);
+                self.acc = Some(first);
+            }
+            Some(acc) => acc.axpy(weight as f32, contribution),
+        }
+        self.total_weight += weight;
+    }
+
+    pub fn count_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Normalized weighted mean; `None` if nothing was added.
+    pub fn finish(self) -> Option<TensorList> {
+        let mut acc = self.acc?;
+        acc.scale((1.0 / self.total_weight) as f32);
+        Some(acc)
+    }
+}
+
+impl Default for WeightedAggregator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Weighted mean of scalars with the same normalization (losses/metrics).
+pub struct ScalarAggregator {
+    sum: f64,
+    weight: f64,
+}
+
+impl ScalarAggregator {
+    pub fn new() -> Self {
+        ScalarAggregator { sum: 0.0, weight: 0.0 }
+    }
+
+    pub fn add(&mut self, v: f64, weight: f64) {
+        self.sum += v * weight;
+        self.weight += weight;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.weight > 0.0 {
+            self.sum / self.weight
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Default for ScalarAggregator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tl(vals: &[f32]) -> TensorList {
+        TensorList::new(
+            vec!["t".into()],
+            vec![Tensor::from_vec(&[vals.len()], vals.to_vec())],
+        )
+    }
+
+    #[test]
+    fn weighted_mean_exact() {
+        let mut agg = WeightedAggregator::new();
+        agg.add(&tl(&[1.0, 0.0]), 1.0);
+        agg.add(&tl(&[4.0, 3.0]), 3.0);
+        let out = agg.finish().unwrap();
+        // (1*1 + 4*3)/4 = 3.25 ; (0*1 + 3*3)/4 = 2.25
+        assert_eq!(out.tensors[0].data(), &[3.25, 2.25]);
+    }
+
+    #[test]
+    fn single_contribution_is_identity() {
+        let mut agg = WeightedAggregator::new();
+        agg.add(&tl(&[2.0, -1.0]), 0.123);
+        let out = agg.finish().unwrap();
+        let d = out.tensors[0].data();
+        assert!((d[0] - 2.0).abs() < 1e-6 && (d[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_returns_none() {
+        assert!(WeightedAggregator::new().finish().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-positive")]
+    fn zero_weight_rejected() {
+        let mut agg = WeightedAggregator::new();
+        agg.add(&tl(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn scalar_aggregator_mean() {
+        let mut s = ScalarAggregator::new();
+        s.add(2.0, 1.0);
+        s.add(6.0, 1.0);
+        assert_eq!(s.mean(), 4.0);
+        assert_eq!(ScalarAggregator::new().mean(), 0.0);
+    }
+
+    #[test]
+    fn order_invariance() {
+        let parts: [(&[f32], f64); 3] =
+            [(&[1.0, 2.0], 0.2), (&[3.0, 4.0], 0.5), (&[5.0, 6.0], 0.3)];
+        let mut a = WeightedAggregator::new();
+        for (v, w) in parts {
+            a.add(&tl(v), w);
+        }
+        let mut b = WeightedAggregator::new();
+        for (v, w) in parts.iter().rev() {
+            b.add(&tl(v), *w);
+        }
+        let ra = a.finish().unwrap();
+        let rb = b.finish().unwrap();
+        for (x, y) in ra.tensors[0].data().iter().zip(rb.tensors[0].data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Binary checkpoints for model parameters + JSON config sidecar.
+//!
+//! Format: `FLCK` magic, version u32, tensor count u32, then per tensor:
+//! name (u32 len + utf8), rank u32, dims u32..., f32 data (LE). The
+//! config sidecar (`<path>.config.json`) lets a run resume with the exact
+//! settings that produced the checkpoint.
+
+use std::fs::{self, File};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::config::RunConfig;
+use crate::tensor::{Tensor, TensorList};
+use crate::util::json;
+
+const MAGIC: &[u8; 4] = b"FLCK";
+const VERSION: u32 = 1;
+
+/// Save client+server parameter lists.
+pub fn save(
+    path: impl AsRef<Path>,
+    wc: &TensorList,
+    ws: &TensorList,
+    cfg: Option<&RunConfig>,
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    for (label, tl) in [("client", wc), ("server", ws)] {
+        w.write_all(&(tl.len() as u32).to_le_bytes())?;
+        for (name, t) in tl.names.iter().zip(&tl.tensors) {
+            let full = format!("{label}/{name}");
+            w.write_all(&(full.len() as u32).to_le_bytes())?;
+            w.write_all(full.as_bytes())?;
+            w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                w.write_all(&(d as u32).to_le_bytes())?;
+            }
+            for &v in t.data() {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    w.flush()?;
+    if let Some(cfg) = cfg {
+        fs::write(
+            path.with_extension("config.json"),
+            cfg.to_json().to_string_pretty(),
+        )?;
+    }
+    Ok(())
+}
+
+/// Load client+server parameter lists.
+pub fn load(path: impl AsRef<Path>) -> anyhow::Result<(TensorList, TensorList)> {
+    let mut r = BufReader::new(File::open(path.as_ref())?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a fedlite checkpoint");
+    anyhow::ensure!(read_u32(&mut r)? == VERSION, "unsupported version");
+    let mut sides = Vec::new();
+    for label in ["client", "server"] {
+        let n = read_u32(&mut r)? as usize;
+        let mut names = Vec::with_capacity(n);
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            let mut name_buf = vec![0u8; name_len];
+            r.read_exact(&mut name_buf)?;
+            let full = String::from_utf8(name_buf)?;
+            let name = full
+                .strip_prefix(&format!("{label}/"))
+                .ok_or_else(|| anyhow::anyhow!("checkpoint side mismatch: {full}"))?
+                .to_string();
+            let rank = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0f32; numel];
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            for (v, c) in data.iter_mut().zip(buf.chunks_exact(4)) {
+                *v = f32::from_le_bytes(c.try_into().unwrap());
+            }
+            names.push(name);
+            tensors.push(Tensor::from_vec(&shape, data));
+        }
+        sides.push(TensorList::new(names, tensors));
+    }
+    let server = sides.pop().unwrap();
+    let client = sides.pop().unwrap();
+    Ok((client, server))
+}
+
+/// Load the config sidecar if present.
+pub fn load_config(path: impl AsRef<Path>) -> anyhow::Result<Option<RunConfig>> {
+    let p = path.as_ref().with_extension("config.json");
+    if !p.exists() {
+        return Ok(None);
+    }
+    let v = json::parse(&fs::read_to_string(p)?)?;
+    Ok(Some(RunConfig::from_json(&v)?))
+}
+
+fn read_u32(r: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_params() -> (TensorList, TensorList) {
+        let mut rng = Rng::new(0);
+        let wc = TensorList::new(
+            vec!["conv_w".into(), "conv_b".into()],
+            vec![
+                Tensor::from_vec(&[2, 3], rng.normal_vec(6, 0.0, 1.0)),
+                Tensor::from_vec(&[3], rng.normal_vec(3, 0.0, 1.0)),
+            ],
+        );
+        let ws = TensorList::new(
+            vec!["dense_w".into()],
+            vec![Tensor::from_vec(&[3, 4], rng.normal_vec(12, 0.0, 1.0))],
+        );
+        (wc, ws)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fedlite-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let (wc, ws) = sample_params();
+        let p = tmp("a.ckpt");
+        save(&p, &wc, &ws, None).unwrap();
+        let (wc2, ws2) = load(&p).unwrap();
+        assert_eq!(wc2.names, wc.names);
+        for (a, b) in wc2.tensors.iter().zip(&wc.tensors) {
+            assert_eq!(a.data(), b.data());
+            assert_eq!(a.shape(), b.shape());
+        }
+        assert_eq!(ws2.tensors[0].data(), ws.tensors[0].data());
+    }
+
+    #[test]
+    fn config_sidecar_roundtrip() {
+        let (wc, ws) = sample_params();
+        let p = tmp("b.ckpt");
+        let mut cfg = RunConfig::preset("femnist").unwrap();
+        cfg.rounds = 77;
+        save(&p, &wc, &ws, Some(&cfg)).unwrap();
+        let back = load_config(&p).unwrap().unwrap();
+        assert_eq!(back.rounds, 77);
+        assert_eq!(back.task, "femnist");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("c.ckpt");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        assert!(load(&p).is_err());
+    }
+}

@@ -1,0 +1,192 @@
+//! Artifact input assembly.
+//!
+//! Artifacts declare their inputs (name/shape/dtype/role) in the manifest;
+//! nothing about input order is hard-coded here. [`assemble`] walks the
+//! declared list and pulls each slot from the round's [`InputSources`]:
+//! model parameters, the data batch, dropout masks (drawn once per
+//! client-step and *reused* between `client_fwd` and `client_bwd`, which
+//! recomputes the forward pass), the quantized activations, the returned
+//! gradient, and λ.
+
+use std::collections::HashMap;
+
+use crate::data::{Array, Batch};
+use crate::runtime::artifact::ArtifactMeta;
+use crate::tensor::TensorList;
+use crate::util::rng::Rng;
+
+/// Everything an artifact invocation may need.
+#[derive(Default)]
+pub struct InputSources<'a> {
+    pub wc: Option<&'a TensorList>,
+    pub ws: Option<&'a TensorList>,
+    pub batch: Option<&'a Batch>,
+    /// Pre-drawn dropout masks by input name.
+    pub masks: Option<&'a HashMap<String, Array>>,
+    pub z_tilde: Option<&'a Array>,
+    pub grad_z: Option<&'a Array>,
+    pub lambda: Option<f32>,
+}
+
+/// Draw the dropout masks an artifact set needs, once per client-step.
+///
+/// Mask inputs are recognized by name (`*mask*`); the probability is
+/// chosen by the `client`/`server` prefix. Values are pre-scaled
+/// (`1/(1-p)` or `0`), so eval passes ones.
+pub fn draw_masks(
+    metas: &[&ArtifactMeta],
+    p_client: f64,
+    p_server: f64,
+    rng: &mut Rng,
+) -> HashMap<String, Array> {
+    let mut out = HashMap::new();
+    for meta in metas {
+        for spec in &meta.inputs {
+            if !spec.name.contains("mask") || out.contains_key(&spec.name) {
+                continue;
+            }
+            let p = if spec.name.starts_with("server") { p_server } else { p_client };
+            let n: usize = spec.shape.iter().product();
+            let mut data = vec![0.0f32; n];
+            rng.dropout_mask(p, &mut data);
+            out.insert(spec.name.clone(), Array::f32(&spec.shape, data));
+        }
+    }
+    out
+}
+
+/// Build the positional input list for one artifact invocation.
+pub fn assemble(meta: &ArtifactMeta, src: &InputSources) -> anyhow::Result<Vec<Array>> {
+    let mut out = Vec::with_capacity(meta.inputs.len());
+    let mut next_wc = 0usize;
+    let mut next_ws = 0usize;
+    for spec in &meta.inputs {
+        let arr: Array = match spec.role.as_str() {
+            "param_client" => {
+                let wc = src
+                    .wc
+                    .ok_or_else(|| anyhow::anyhow!("{}: needs client params", meta.name))?;
+                let t = &wc.tensors[next_wc];
+                next_wc += 1;
+                Array::f32(t.shape(), t.data().to_vec())
+            }
+            "param_server" => {
+                let ws = src
+                    .ws
+                    .ok_or_else(|| anyhow::anyhow!("{}: needs server params", meta.name))?;
+                let t = &ws.tensors[next_ws];
+                next_ws += 1;
+                Array::f32(t.shape(), t.data().to_vec())
+            }
+            "cut" => src
+                .z_tilde
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("{}: needs z_tilde", meta.name))?,
+            "grad_cut" => src
+                .grad_z
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("{}: needs grad_z", meta.name))?,
+            "hyper" => Array::f32(
+                &[],
+                vec![src
+                    .lambda
+                    .ok_or_else(|| anyhow::anyhow!("{}: needs lambda", meta.name))?],
+            ),
+            "data" => match spec.name.as_str() {
+                "x" => src
+                    .batch
+                    .map(|b| b.x.clone())
+                    .ok_or_else(|| anyhow::anyhow!("{}: needs batch x", meta.name))?,
+                "y" => src
+                    .batch
+                    .map(|b| b.y.clone())
+                    .ok_or_else(|| anyhow::anyhow!("{}: needs batch y", meta.name))?,
+                name if name.contains("mask") => src
+                    .masks
+                    .and_then(|m| m.get(name))
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("{}: mask '{name}' not drawn", meta.name))?,
+                other => anyhow::bail!("{}: unknown data input '{other}'", meta.name),
+            },
+            role => anyhow::bail!("{}: unknown input role '{role}'", meta.name),
+        };
+        out.push(arr);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::IoSpec;
+    use crate::tensor::Tensor;
+
+    fn meta() -> ArtifactMeta {
+        ArtifactMeta {
+            name: "client_bwd".into(),
+            path: "p".into(),
+            inputs: vec![
+                IoSpec { name: "w".into(), shape: vec![2, 2], dtype: "f32".into(), role: "param_client".into() },
+                IoSpec { name: "x".into(), shape: vec![1, 2], dtype: "f32".into(), role: "data".into() },
+                IoSpec { name: "client_mask".into(), shape: vec![1, 4], dtype: "f32".into(), role: "data".into() },
+                IoSpec { name: "z_tilde".into(), shape: vec![1, 4], dtype: "f32".into(), role: "cut".into() },
+                IoSpec { name: "grad_z".into(), shape: vec![1, 4], dtype: "f32".into(), role: "grad_cut".into() },
+                IoSpec { name: "lambda".into(), shape: vec![], dtype: "f32".into(), role: "hyper".into() },
+            ],
+            outputs: vec!["g".into()],
+            meta: crate::util::json::Value::Null,
+        }
+    }
+
+    #[test]
+    fn assembles_in_manifest_order() {
+        let wc = TensorList::new(
+            vec!["w".into()],
+            vec![Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.])],
+        );
+        let batch = Batch {
+            x: Array::f32(&[1, 2], vec![5., 6.]),
+            y: Array::i32(&[1], vec![0]),
+        };
+        let m = meta();
+        let mut rng = Rng::new(0);
+        let masks = draw_masks(&[&m], 0.0, 0.0, &mut rng);
+        let zt = Array::f32(&[1, 4], vec![0.0; 4]);
+        let gz = Array::f32(&[1, 4], vec![1.0; 4]);
+        let src = InputSources {
+            wc: Some(&wc),
+            batch: Some(&batch),
+            masks: Some(&masks),
+            z_tilde: Some(&zt),
+            grad_z: Some(&gz),
+            lambda: Some(0.5),
+            ..Default::default()
+        };
+        let inputs = assemble(&m, &src).unwrap();
+        assert_eq!(inputs.len(), 6);
+        assert_eq!(inputs[0].as_f32().unwrap(), &[1., 2., 3., 4.]);
+        assert_eq!(inputs[1].as_f32().unwrap(), &[5., 6.]);
+        // p=0 dropout -> all ones
+        assert_eq!(inputs[2].as_f32().unwrap(), &[1.0; 4]);
+        assert_eq!(inputs[5].shape(), &[] as &[usize]);
+        assert_eq!(inputs[5].as_f32().unwrap(), &[0.5]);
+    }
+
+    #[test]
+    fn missing_source_is_an_error() {
+        let m = meta();
+        let src = InputSources::default();
+        let err = assemble(&m, &src).unwrap_err().to_string();
+        assert!(err.contains("client params"), "{err}");
+    }
+
+    #[test]
+    fn draw_masks_dedupes_and_scales() {
+        let m = meta();
+        let mut rng = Rng::new(1);
+        let masks = draw_masks(&[&m, &m], 0.5, 0.0, &mut rng);
+        assert_eq!(masks.len(), 1);
+        let v = masks["client_mask"].as_f32().unwrap();
+        assert!(v.iter().all(|&x| x == 0.0 || (x - 2.0).abs() < 1e-6));
+    }
+}

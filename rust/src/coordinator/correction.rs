@@ -1,0 +1,84 @@
+//! Gradient correction (paper §4.2, eq. (5)) — host-side reference.
+//!
+//! The correction itself is baked into the `client_bwd` artifact (the
+//! cotangent `∂h/∂z~ + λ(z − z~)` is formed inside the lowered graph);
+//! this module provides the same computation on the host for tests,
+//! ablations, and the native-quantizer fast path diagnostics.
+
+/// Corrected cotangent: `grad_z_tilde + lambda * (z - z_tilde)`.
+pub fn corrected_cotangent(
+    grad_z_tilde: &[f32],
+    z: &[f32],
+    z_tilde: &[f32],
+    lambda: f32,
+) -> Vec<f32> {
+    assert_eq!(grad_z_tilde.len(), z.len());
+    assert_eq!(z.len(), z_tilde.len());
+    grad_z_tilde
+        .iter()
+        .zip(z.iter().zip(z_tilde))
+        .map(|(&g, (&zi, &zt))| g + lambda * (zi - zt))
+        .collect()
+}
+
+/// The surrogate-loss value whose gradient eq. (5) is (paper eq. (6)),
+/// up to the z-independent constant: `<grad, z> + (λ/2)||z - z~||²`.
+pub fn surrogate_loss(grad_z_tilde: &[f32], z: &[f32], z_tilde: &[f32], lambda: f32) -> f64 {
+    let inner: f64 = grad_z_tilde
+        .iter()
+        .zip(z)
+        .map(|(&g, &zi)| (g as f64) * (zi as f64))
+        .sum();
+    let qerr: f64 = z
+        .iter()
+        .zip(z_tilde)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    inner + 0.5 * lambda as f64 * qerr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lambda_zero_passes_gradient_through() {
+        let g = vec![1.0, -2.0, 3.0];
+        let z = vec![0.5, 0.5, 0.5];
+        let zt = vec![0.0, 1.0, 0.5];
+        assert_eq!(corrected_cotangent(&g, &z, &zt, 0.0), g);
+    }
+
+    #[test]
+    fn correction_points_toward_quantized() {
+        // with zero server gradient, the correction drives z toward z~
+        let g = vec![0.0; 3];
+        let z = vec![1.0, 2.0, 3.0];
+        let zt = vec![0.0, 0.0, 0.0];
+        let c = corrected_cotangent(&g, &z, &zt, 0.1);
+        // gradient DESCENT step z -= eta*c moves z toward z~
+        for (ci, (zi, zti)) in c.iter().zip(z.iter().zip(&zt)) {
+            assert_eq!(*ci, 0.1 * (zi - zti));
+        }
+    }
+
+    #[test]
+    fn matches_finite_difference_of_surrogate() {
+        let g = vec![0.3, -0.7];
+        let zt = vec![1.0, -1.0];
+        let z = vec![0.2, 0.4];
+        let lam = 0.05;
+        let c = corrected_cotangent(&g, &z, &zt, lam);
+        let eps = 1e-4f32;
+        for k in 0..2 {
+            let mut zp = z.clone();
+            zp[k] += eps;
+            let mut zm = z.clone();
+            zm[k] -= eps;
+            let fd = (surrogate_loss(&g, &zp, &zt, lam)
+                - surrogate_loss(&g, &zm, &zt, lam))
+                / (2.0 * eps as f64);
+            assert!((fd - c[k] as f64).abs() < 1e-3, "k={k}: {fd} vs {}", c[k]);
+        }
+    }
+}

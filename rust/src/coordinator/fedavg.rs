@@ -1,0 +1,259 @@
+//! FedAvg baseline (McMahan et al., 2017) over the same substrate.
+//!
+//! Each selected client receives the whole model (downlink |w|), runs `H`
+//! local SGD steps using the `full_grad` artifact, and uploads its model
+//! delta (uplink |w|). The server applies the weighted-mean delta. This is
+//! the comparison line of Table 1 and Figure 6: more client compute and
+//! memory, |w| per round instead of activations.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::message::{self, Message};
+use crate::comm::StarNetwork;
+use crate::config::RunConfig;
+use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
+use crate::coordinator::client::{assemble, draw_masks, InputSources};
+use crate::coordinator::sampler::ClientSampler;
+use crate::coordinator::split::{arrays_to_tensors, open_logs, scalar, write_round};
+use crate::coordinator::Trainer;
+use crate::data::FederatedDataset;
+use crate::metrics::{RoundRecord, RunLog, TaskMetric};
+use crate::models::ModelSpec;
+use crate::optim::Optimizer;
+use crate::runtime::Runtime;
+use crate::tensor::TensorList;
+use crate::util::logging::{CsvWriter, JsonlWriter};
+use crate::util::rng::Rng;
+
+pub struct FedAvgTrainer {
+    cfg: RunConfig,
+    rt: Arc<Runtime>,
+    data: Arc<dyn FederatedDataset>,
+    spec: ModelSpec,
+    wc: TensorList,
+    ws: TensorList,
+    /// Server optimizer applied to the aggregated pseudo-gradient
+    /// (delta); plain SGD with lr=1.0 recovers vanilla FedAvg.
+    opt: Box<dyn Optimizer>,
+    net: StarNetwork,
+    sampler: ClientSampler,
+    metric: TaskMetric,
+    rng: Rng,
+    csv: Option<CsvWriter>,
+    jsonl: Option<JsonlWriter>,
+}
+
+impl FedAvgTrainer {
+    pub fn new(
+        cfg: RunConfig,
+        rt: Arc<Runtime>,
+        data: Arc<dyn FederatedDataset>,
+    ) -> anyhow::Result<Self> {
+        let variant = cfg.variant();
+        let spec = rt.manifest.variant(&variant)?.spec.clone();
+        let rng = Rng::new(cfg.seed);
+        let wc = spec.client.init_tensors(&mut rng.fork(1));
+        let ws = spec.server.init_tensors(&mut rng.fork(2));
+        let (csv, jsonl) = open_logs(&cfg)?;
+        Ok(FedAvgTrainer {
+            sampler: ClientSampler::uniform(cfg.num_clients, cfg.clients_per_round),
+            net: StarNetwork::with_defaults(cfg.num_clients),
+            opt: crate::optim::build("sgd", 1.0)?,
+            metric: TaskMetric::for_task(&cfg.task),
+            spec,
+            wc,
+            ws,
+            rng,
+            data,
+            rt,
+            cfg,
+            csv,
+            jsonl,
+        })
+    }
+
+    /// Concatenated (client+server) parameter list as one TensorList.
+    fn full_params(&self) -> TensorList {
+        let mut names = self.wc.names.clone();
+        names.extend(self.ws.names.clone());
+        let mut tensors = self.wc.tensors.clone();
+        tensors.extend(self.ws.tensors.clone());
+        TensorList::new(names, tensors)
+    }
+
+    fn split_back(&mut self, full: TensorList) {
+        let nc = self.wc.len();
+        let (ct, st) = full.tensors.split_at(nc);
+        self.wc = TensorList::new(self.wc.names.clone(), ct.to_vec());
+        self.ws = TensorList::new(self.ws.names.clone(), st.to_vec());
+    }
+
+    pub fn evaluate(&mut self, batches: usize) -> anyhow::Result<(f64, f64)> {
+        let variant = self.cfg.variant();
+        let meta = self.rt.manifest.artifact(&variant, "full_eval")?.clone();
+        let mut loss = ScalarAggregator::new();
+        let mut sums = vec![0.0f64; self.spec.metrics.len()];
+        let mut examples = 0.0f64;
+        let mut rng = self.rng.fork(0xE7A1);
+        for _ in 0..batches {
+            let batch = self.data.eval_batch(self.spec.eval_batch, &mut rng);
+            let src = InputSources {
+                wc: Some(&self.wc),
+                ws: Some(&self.ws),
+                batch: Some(&batch),
+                ..Default::default()
+            };
+            let outs = self.rt.run(&variant, "full_eval", &assemble(&meta, &src)?)?;
+            loss.add(scalar(&outs[0])? as f64, 1.0);
+            for (k, s) in sums.iter_mut().enumerate() {
+                *s += scalar(&outs[1 + k])? as f64;
+            }
+            examples += self.spec.eval_batch as f64;
+        }
+        Ok((loss.mean(), self.metric.value(&sums, examples)))
+    }
+
+    fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
+        let t0 = Instant::now();
+        let variant = self.cfg.variant();
+        let grad_meta = self.rt.manifest.artifact(&variant, "full_grad")?.clone();
+        let nmetrics = self.spec.metrics.len();
+
+        self.net.begin_round();
+        let cohort = self.sampler.sample(&mut self.rng.fork(round as u64), &[]);
+        let global = self.full_params();
+        let payload = message::tensors_to_payload(&global);
+        let shapes: Vec<Vec<usize>> =
+            global.tensors.iter().map(|t| t.shape().to_vec()).collect();
+
+        let mut delta_agg = WeightedAggregator::new();
+        let mut loss_agg = ScalarAggregator::new();
+        let mut metric_sums = vec![0.0f64; nmetrics];
+        let mut examples = 0.0f64;
+        let mut per_client_bytes = Vec::new();
+
+        for &ci in &cohort {
+            let mut crng = self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xFEDA);
+            let mut up = 0usize;
+            let mut down = 0usize;
+
+            // broadcast whole model (downlink |w|)
+            let bc = Message::ModelBroadcast { params: payload.clone() };
+            let (decoded, n) = self.net.download(ci, round as u32, &bc)?;
+            down += n;
+            let mut local = match decoded {
+                Message::ModelBroadcast { params } => {
+                    message::payload_to_tensors(&params, &shapes, &global.names)
+                }
+                _ => anyhow::bail!("wrong broadcast"),
+            };
+
+            // H local SGD steps
+            for step in 0..self.cfg.local_steps {
+                let batch = self.data.train_batch(ci, self.spec.batch, &mut crng);
+                let masks = draw_masks(
+                    &[&grad_meta],
+                    self.cfg.dropout_client,
+                    self.cfg.dropout_server,
+                    &mut crng,
+                );
+                let nc = self.wc.len();
+                let (lc, ls) = local.tensors.split_at(nc);
+                let lwc = TensorList::new(self.wc.names.clone(), lc.to_vec());
+                let lws = TensorList::new(self.ws.names.clone(), ls.to_vec());
+                let src = InputSources {
+                    wc: Some(&lwc),
+                    ws: Some(&lws),
+                    batch: Some(&batch),
+                    masks: Some(&masks),
+                    ..Default::default()
+                };
+                let outs = self.rt.run(&variant, "full_grad", &assemble(&grad_meta, &src)?)?;
+                if step == 0 {
+                    let w = self.data.client_weight(ci).max(1e-12);
+                    loss_agg.add(scalar(&outs[0])? as f64, w);
+                    for k in 0..nmetrics {
+                        metric_sums[k] += scalar(&outs[1 + k])? as f64;
+                    }
+                    examples += self.spec.batch as f64;
+                }
+                let grads = arrays_to_tensors(&outs[1 + nmetrics..], &global)?;
+                local.axpy(-self.cfg.client_lr, &grads);
+            }
+
+            // upload model delta (uplink |w|)
+            let mut delta = global.clone();
+            delta.axpy(-1.0, &local); // delta = global - local = lr * sum grads
+            let up_msg = Message::ClientGrads { grads: message::tensors_to_payload(&delta) };
+            let (decoded, n) = self.net.upload(ci, round as u32, &up_msg)?;
+            up += n;
+            let delta_wire = match decoded {
+                Message::ClientGrads { grads } => {
+                    message::payload_to_tensors(&grads, &shapes, &global.names)
+                }
+                _ => anyhow::bail!("wrong upload"),
+            };
+            delta_agg.add(&delta_wire, self.data.client_weight(ci).max(1e-12));
+            per_client_bytes.push((up, down));
+        }
+
+        // pseudo-gradient step: w <- w - 1.0 * mean(delta)
+        let mut full = global;
+        if let Some(delta) = delta_agg.finish() {
+            self.opt.step(&mut full, &delta);
+        }
+        anyhow::ensure!(full.is_finite(), "parameters diverged at round {round}");
+        self.split_back(full);
+
+        let rb = self.net.end_round();
+        let mut rec = RoundRecord {
+            round,
+            train_loss: loss_agg.mean(),
+            train_metric: self.metric.value(&metric_sums, examples),
+            quant_error: 0.0,
+            uplink_bytes: rb.up,
+            downlink_bytes: rb.down,
+            cumulative_uplink: self.net.totals().up,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            sim_comm_seconds: self.net.estimate_round_time(&per_client_bytes),
+            ..Default::default()
+        };
+        if self.cfg.eval_every > 0
+            && (round % self.cfg.eval_every == self.cfg.eval_every - 1 || round == 0)
+        {
+            let (el, em) = self.evaluate(self.cfg.eval_batches)?;
+            rec.eval_loss = Some(el);
+            rec.eval_metric = Some(em);
+        }
+        Ok(rec)
+    }
+}
+
+impl Trainer for FedAvgTrainer {
+    fn run(&mut self) -> anyhow::Result<RunLog> {
+        let mut log = RunLog::default();
+        for round in 0..self.cfg.rounds {
+            let rec = self.round(round)?;
+            if round == 0 || (round + 1) % 10 == 0 {
+                log::info!(
+                    "fedavg {} r{:>4}: loss={:.4} metric={:.4} upKB={:.1}",
+                    self.cfg.task,
+                    round,
+                    rec.train_loss,
+                    rec.train_metric,
+                    rec.uplink_bytes as f64 / 1024.0,
+                );
+            }
+            write_round(&mut self.csv, &mut self.jsonl, &rec)?;
+            log.push(rec);
+        }
+        if let Some(c) = &mut self.csv {
+            c.flush()?;
+        }
+        if let Some(j) = &mut self.jsonl {
+            j.flush()?;
+        }
+        Ok(log)
+    }
+}

@@ -1,0 +1,77 @@
+//! The Layer-3 coordinator: federated round state machines.
+//!
+//! Three algorithms share the substrate:
+//!
+//! * [`split::SplitTrainer`] — SplitFed (paper §3) and FedLite (paper §4):
+//!   the four-step round (client forward → server update → client backward
+//!   → client-side model sync), with FedLite inserting the PQ quantization
+//!   layer ([`quantize`]) into step 1 and the gradient correction
+//!   (eq. (5)) into step 3.
+//! * [`fedavg::FedAvgTrainer`] — the whole-model baseline with H local
+//!   steps.
+//!
+//! All model math executes through PJRT artifacts; all transfers go
+//! through the metered [`crate::comm::StarNetwork`].
+
+pub mod aggregator;
+pub mod checkpoint;
+pub mod client;
+pub mod correction;
+pub mod fedavg;
+pub mod quantize;
+pub mod sampler;
+pub mod split;
+
+use std::sync::Arc;
+
+use crate::config::{Algorithm, RunConfig};
+use crate::data::FederatedDataset;
+use crate::data::{femnist::SyntheticFemnist, so_nwp, so_tag};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+
+/// Common trainer interface.
+pub trait Trainer {
+    /// Run the configured number of rounds, returning the round log.
+    fn run(&mut self) -> anyhow::Result<RunLog>;
+}
+
+/// Build the dataset a config asks for.
+pub fn build_dataset(cfg: &RunConfig) -> anyhow::Result<Arc<dyn FederatedDataset>> {
+    Ok(match cfg.task.as_str() {
+        "femnist" => Arc::new(SyntheticFemnist::new(cfg.seed, cfg.num_clients, cfg.alpha)),
+        "so_tag" => {
+            let c = if cfg.preset == "paper" {
+                so_tag::SoTagConfig::paper()
+            } else {
+                so_tag::SoTagConfig::small()
+            };
+            Arc::new(so_tag::SyntheticSoTag::new(cfg.seed, cfg.num_clients, c))
+        }
+        "so_nwp" => {
+            let c = if cfg.preset == "paper" {
+                so_nwp::SoNwpConfig::paper()
+            } else {
+                so_nwp::SoNwpConfig::small()
+            };
+            Arc::new(so_nwp::SyntheticSoNwp::new(cfg.seed, cfg.num_clients, c))
+        }
+        other => anyhow::bail!("unknown task '{other}'"),
+    })
+}
+
+/// Build the trainer for a config (entry point used by the CLI and the
+/// experiment drivers).
+pub fn build_trainer(
+    cfg: RunConfig,
+    rt: Arc<Runtime>,
+) -> anyhow::Result<Box<dyn Trainer>> {
+    cfg.validate()?;
+    let data = build_dataset(&cfg)?;
+    Ok(match cfg.algorithm {
+        Algorithm::FedAvg => Box::new(fedavg::FedAvgTrainer::new(cfg, rt, data)?),
+        Algorithm::FedLite | Algorithm::SplitFed => {
+            Box::new(split::SplitTrainer::new(cfg, rt, data)?)
+        }
+    })
+}

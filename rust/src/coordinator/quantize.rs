@@ -1,0 +1,149 @@
+//! Quantization backend selection: native rust engine vs the Pallas/PJRT
+//! artifact (the L1 kernel on the hot path).
+//!
+//! Both backends implement the same contract — given the cut activations
+//! `z [act_batch, d]`, produce `(codebooks, codes, z_tilde, sq_error)` —
+//! and both feed the same wire format. Integration tests cross-check them
+//! on identical inputs; the artifact path receives its initial centroids
+//! from the same RandomRows rule the native engine uses.
+
+use std::sync::Arc;
+
+use crate::config::QuantizerEngine;
+use crate::data::Array;
+use crate::quantizer::pq::{GroupedPq, PqConfig, PqOutput};
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+/// A quantization backend bound to a task variant + PQ config.
+pub struct QuantizeBackend {
+    pub config: PqConfig,
+    pub d: usize,
+    engine: Engine,
+}
+
+enum Engine {
+    Native(GroupedPq),
+    Pjrt { rt: Arc<Runtime>, variant: String, artifact: String, gather: GroupedPq },
+}
+
+impl QuantizeBackend {
+    pub fn new(
+        engine: QuantizerEngine,
+        config: PqConfig,
+        d: usize,
+        rt: Arc<Runtime>,
+        variant: &str,
+    ) -> anyhow::Result<Self> {
+        let native = GroupedPq::new(config, d)?;
+        let engine = match engine {
+            QuantizerEngine::Native => Engine::Native(native),
+            QuantizerEngine::Pjrt => {
+                let v = rt.manifest.variant(variant)?;
+                let meta = v.find_pq(config.q, config.l, config.r).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no PJRT quantizer artifact for q={} L={} R={} in '{variant}' \
+                         (available: {:?}); use --quantizer native or add the config \
+                         to PQ_CONFIGS in python/compile/model.py",
+                        config.q,
+                        config.l,
+                        config.r,
+                        v.pq_artifacts()
+                    )
+                })?;
+                let artifact = meta.name.clone();
+                Engine::Pjrt { rt, variant: variant.to_string(), artifact, gather: native }
+            }
+        };
+        Ok(QuantizeBackend { config, d, engine })
+    }
+
+    /// Which engine is active (for logs/benches).
+    pub fn engine_name(&self) -> &'static str {
+        match self.engine {
+            Engine::Native(_) => "native",
+            Engine::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Quantize one activation batch.
+    pub fn quantize(&self, z: &[f32], b: usize, rng: &mut Rng) -> anyhow::Result<PqOutput> {
+        match &self.engine {
+            Engine::Native(pq) => Ok(pq.quantize(z, b, rng)),
+            Engine::Pjrt { rt, variant, artifact, gather } => {
+                let c = self.config;
+                let dsub = c.dsub(self.d);
+                // RandomRows init per group, computed host-side exactly
+                // like the native engine's init.
+                let ng = c.group_size(b);
+                let mut init = Vec::with_capacity(c.r * c.l * dsub);
+                let mut buf = Vec::new();
+                for g in 0..c.r {
+                    gather.gather_group(z, b, g, &mut buf);
+                    let idx = if ng >= c.l {
+                        rng.choose_k(ng, c.l)
+                    } else {
+                        (0..c.l).map(|i| i % ng).collect()
+                    };
+                    for i in idx {
+                        init.extend_from_slice(&buf[i * dsub..(i + 1) * dsub]);
+                    }
+                }
+                let outs = rt.run(
+                    variant,
+                    artifact,
+                    &[
+                        Array::f32(&[b, self.d], z.to_vec()),
+                        Array::f32(&[c.r, c.l, dsub], init),
+                    ],
+                )?;
+                let codebooks = outs[0]
+                    .as_f32()
+                    .ok_or_else(|| anyhow::anyhow!("codebooks dtype"))?
+                    .to_vec();
+                let codes: Vec<u32> = outs[1]
+                    .as_i32()
+                    .ok_or_else(|| anyhow::anyhow!("codes dtype"))?
+                    .iter()
+                    .map(|&x| x as u32)
+                    .collect();
+                let z_tilde = outs[2]
+                    .as_f32()
+                    .ok_or_else(|| anyhow::anyhow!("z_tilde dtype"))?
+                    .to_vec();
+                let sq_error = outs[3]
+                    .as_f32()
+                    .and_then(|v| v.first().copied())
+                    .unwrap_or(0.0) as f64;
+                Ok(PqOutput {
+                    codebooks,
+                    codes,
+                    z_tilde,
+                    sq_error,
+                    config: c,
+                    b,
+                    d: self.d,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The native path is covered in quantizer::pq; PJRT cross-checks live
+    // in rust/tests/ (they need built artifacts). Here: config wiring.
+    #[test]
+    fn native_backend_smoke() {
+        let rt_unused: Option<Arc<Runtime>> = None;
+        let _ = rt_unused; // Runtime not needed for native
+        let cfg = PqConfig::new(4, 1, 2);
+        let pq = GroupedPq::new(cfg, 16).unwrap();
+        let mut rng = Rng::new(0);
+        let z: Vec<f32> = (0..64).map(|i| (i % 7) as f32).collect();
+        let out = pq.quantize(&z, 4, &mut rng);
+        assert_eq!(out.z_tilde.len(), 64);
+    }
+}

@@ -1,0 +1,90 @@
+//! Per-round client sampling.
+//!
+//! The paper samples a random subset S of clients each iteration
+//! (stateless clients, §4.1 "Why not reuse the codebooks"). Uniform
+//! without-replacement sampling is the default; weighted sampling by
+//! dataset size is available for ablations.
+
+use crate::util::rng::Rng;
+
+/// Sampling strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    UniformWithoutReplacement,
+    /// Probability proportional to client weight (with replacement).
+    WeightedWithReplacement,
+}
+
+pub struct ClientSampler {
+    population: usize,
+    per_round: usize,
+    strategy: Strategy,
+}
+
+impl ClientSampler {
+    pub fn uniform(population: usize, per_round: usize) -> Self {
+        assert!(per_round <= population);
+        ClientSampler { population, per_round, strategy: Strategy::UniformWithoutReplacement }
+    }
+
+    pub fn weighted(population: usize, per_round: usize) -> Self {
+        ClientSampler { population, per_round, strategy: Strategy::WeightedWithReplacement }
+    }
+
+    /// Sample the round's cohort. `weights` are the p_i (only used by the
+    /// weighted strategy).
+    pub fn sample(&self, rng: &mut Rng, weights: &[f64]) -> Vec<usize> {
+        match self.strategy {
+            Strategy::UniformWithoutReplacement => {
+                rng.choose_k(self.population, self.per_round)
+            }
+            Strategy::WeightedWithReplacement => (0..self.per_round)
+                .map(|_| rng.categorical(weights))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_distinct_and_in_range() {
+        let s = ClientSampler::uniform(50, 10);
+        let mut rng = Rng::new(0);
+        for _ in 0..20 {
+            let mut c = s.sample(&mut rng, &[]);
+            assert_eq!(c.len(), 10);
+            assert!(c.iter().all(|&i| i < 50));
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), 10);
+        }
+    }
+
+    #[test]
+    fn uniform_covers_population() {
+        let s = ClientSampler::uniform(20, 5);
+        let mut rng = Rng::new(1);
+        let mut seen = vec![false; 20];
+        for _ in 0..200 {
+            for i in s.sample(&mut rng, &[]) {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_clients() {
+        let s = ClientSampler::weighted(3, 1);
+        let w = vec![0.9, 0.05, 0.05];
+        let mut rng = Rng::new(2);
+        let mut counts = [0usize; 3];
+        for _ in 0..1000 {
+            counts[s.sample(&mut rng, &w)[0]] += 1;
+        }
+        assert!(counts[0] > 700, "{counts:?}");
+    }
+}

@@ -1,0 +1,429 @@
+//! The SplitFed / FedLite round state machine (paper §3 + §4).
+//!
+//! Per round:
+//! 1. sample a cohort; broadcast the client-side model (downlink);
+//! 2. **client forward** — `client_fwd` artifact per client;
+//! 3. **FedLite only**: quantize the activations (native or Pallas/PJRT
+//!    backend), serialize codebook+codewords through the metered wire, and
+//!    let the *server-side reconstruction from the decoded bytes* be the
+//!    `z~` that trains the server (the bytes really round-trip);
+//! 4. **server update** — `server_step` artifact: loss, metrics, `∂h/∂z~`,
+//!    server grads; weighted-aggregate server grads (p_i over cohort);
+//! 5. **client backward** — send `∂h/∂z~` down (metered), run `client_bwd`
+//!    (gradient correction eq. (5) happens inside the artifact);
+//! 6. **client-side model sync** — upload client grads (metered),
+//!    weighted-aggregate, one optimizer step on each side.
+//!
+//! Labels are *not* metered (the paper's cost model excludes them; in the
+//! vertical-FL deployment the server owns labels — see DESIGN.md).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::comm::message::{self, Message};
+use crate::comm::StarNetwork;
+use crate::config::{Algorithm, RunConfig};
+use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
+use crate::coordinator::client::{assemble, draw_masks, InputSources};
+use crate::coordinator::quantize::QuantizeBackend;
+use crate::coordinator::sampler::ClientSampler;
+use crate::coordinator::Trainer;
+use crate::data::{Array, FederatedDataset};
+use crate::metrics::{RoundRecord, RunLog, TaskMetric};
+use crate::models::ModelSpec;
+use crate::optim::Optimizer;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorList};
+use crate::util::logging::{CsvWriter, JsonlWriter};
+use crate::util::rng::Rng;
+
+/// Split-learning trainer (SplitFed when `quantizer` is None).
+pub struct SplitTrainer {
+    cfg: RunConfig,
+    rt: Arc<Runtime>,
+    data: Arc<dyn FederatedDataset>,
+    spec: ModelSpec,
+    wc: TensorList,
+    ws: TensorList,
+    opt_c: Box<dyn Optimizer>,
+    opt_s: Box<dyn Optimizer>,
+    net: StarNetwork,
+    sampler: ClientSampler,
+    quantizer: Option<QuantizeBackend>,
+    metric: TaskMetric,
+    rng: Rng,
+    csv: Option<CsvWriter>,
+    jsonl: Option<JsonlWriter>,
+}
+
+impl SplitTrainer {
+    pub fn new(
+        cfg: RunConfig,
+        rt: Arc<Runtime>,
+        data: Arc<dyn FederatedDataset>,
+    ) -> anyhow::Result<Self> {
+        let variant = cfg.variant();
+        let spec = rt.manifest.variant(&variant)?.spec.clone();
+        let rng = Rng::new(cfg.seed);
+        let wc = spec.client.init_tensors(&mut rng.fork(1));
+        let ws = spec.server.init_tensors(&mut rng.fork(2));
+        let quantizer = match cfg.algorithm {
+            Algorithm::FedLite => Some(QuantizeBackend::new(
+                cfg.quantizer,
+                cfg.pq,
+                spec.cut_dim,
+                Arc::clone(&rt),
+                &variant,
+            )?),
+            _ => None,
+        };
+        let (csv, jsonl) = open_logs(&cfg)?;
+        Ok(SplitTrainer {
+            sampler: ClientSampler::uniform(cfg.num_clients, cfg.clients_per_round),
+            net: StarNetwork::with_defaults(cfg.num_clients),
+            opt_c: crate::optim::build(&cfg.optimizer, cfg.client_lr)?,
+            opt_s: crate::optim::build(&cfg.optimizer, cfg.server_lr)?,
+            metric: TaskMetric::for_task(&cfg.task),
+            quantizer,
+            spec,
+            wc,
+            ws,
+            rng,
+            data,
+            rt,
+            cfg,
+            csv,
+            jsonl,
+        })
+    }
+
+    pub fn params(&self) -> (&TensorList, &TensorList) {
+        (&self.wc, &self.ws)
+    }
+
+    pub fn set_params(&mut self, wc: TensorList, ws: TensorList) {
+        self.wc = wc;
+        self.ws = ws;
+    }
+
+    /// Evaluate the current model on `batches` held-out batches.
+    pub fn evaluate(&mut self, batches: usize) -> anyhow::Result<(f64, f64)> {
+        let variant = self.cfg.variant();
+        let meta = self.rt.manifest.artifact(&variant, "full_eval")?.clone();
+        let mut loss = ScalarAggregator::new();
+        let mut sums = vec![0.0f64; self.spec.metrics.len()];
+        let mut examples = 0.0f64;
+        let mut rng = self.rng.fork(0xE7A1);
+        for _ in 0..batches {
+            let batch = self.data.eval_batch(self.spec.eval_batch, &mut rng);
+            let src = InputSources {
+                wc: Some(&self.wc),
+                ws: Some(&self.ws),
+                batch: Some(&batch),
+                ..Default::default()
+            };
+            let inputs = assemble(&meta, &src)?;
+            let outs = self.rt.run(&variant, "full_eval", &inputs)?;
+            loss.add(scalar(&outs[0])? as f64, 1.0);
+            for (k, s) in sums.iter_mut().enumerate() {
+                *s += scalar(&outs[1 + k])? as f64;
+            }
+            examples += self.spec.eval_batch as f64;
+            if self.cfg.task == "so_nwp" {
+                // token metrics carry their own denominator
+            }
+        }
+        Ok((loss.mean(), self.metric.value(&sums, examples)))
+    }
+
+    /// One full round; returns the round record.
+    fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
+        let t0 = Instant::now();
+        let variant = self.cfg.variant();
+        let fwd_meta = self.rt.manifest.artifact(&variant, "client_fwd")?.clone();
+        let step_meta = self.rt.manifest.artifact(&variant, "server_step")?.clone();
+        let bwd_meta = self.rt.manifest.artifact(&variant, "client_bwd")?.clone();
+        let nmetrics = self.spec.metrics.len();
+
+        self.net.begin_round();
+        let cohort = self.sampler.sample(&mut self.rng.fork(round as u64), &[]);
+
+        let mut ws_agg = WeightedAggregator::new();
+        let mut wc_agg = WeightedAggregator::new();
+        let mut loss_agg = ScalarAggregator::new();
+        let mut qerr_agg = ScalarAggregator::new();
+        let mut metric_sums = vec![0.0f64; nmetrics];
+        let mut examples = 0.0f64;
+        let mut per_client_bytes: Vec<(usize, usize)> = Vec::new();
+
+        let wc_payload = message::tensors_to_payload(&self.wc);
+
+        for (slot, &ci) in cohort.iter().enumerate() {
+            let mut crng = self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xC11E);
+            let mut up_bytes = 0usize;
+            let mut down_bytes = 0usize;
+
+            // 0. model broadcast (downlink)
+            let bc = Message::ModelBroadcast { params: wc_payload.clone() };
+            let (_, n) = self.net.download(ci, round as u32, &bc)?;
+            down_bytes += n;
+
+            // 1. client forward
+            let batch = self.data.train_batch(ci, self.spec.batch, &mut crng);
+            let masks = draw_masks(
+                &[&fwd_meta, &step_meta, &bwd_meta],
+                self.cfg.dropout_client,
+                self.cfg.dropout_server,
+                &mut crng,
+            );
+            let src = InputSources {
+                wc: Some(&self.wc),
+                batch: Some(&batch),
+                masks: Some(&masks),
+                ..Default::default()
+            };
+            let z_arr = self
+                .rt
+                .run(&variant, "client_fwd", &assemble(&fwd_meta, &src)?)?
+                .remove(0);
+            let z = z_arr
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("z dtype"))?
+                .to_vec();
+            let act_b = self.spec.act_batch;
+            let d = self.spec.cut_dim;
+
+            // 2. upload: quantized (FedLite) or raw (SplitFed); the server
+            //    trains on what came off the wire.
+            let (z_tilde_server, quant_rel_err) = match &self.quantizer {
+                Some(qz) => {
+                    let out = qz.quantize(&z, act_b, &mut crng)?;
+                    let msg =
+                        Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
+                    let (decoded, n) = self.net.upload(ci, round as u32, &msg)?;
+                    up_bytes += n;
+                    let codes = decoded.unpack_codes()?;
+                    let cbs = match &decoded {
+                        Message::QuantizedUpload { codebooks, .. } => codebooks.clone(),
+                        _ => anyhow::bail!("wrong upload variant"),
+                    };
+                    let native = crate::quantizer::GroupedPq::new(qz.config, d)?;
+                    let rec = native.reconstruct(&cbs, &codes, act_b);
+                    debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
+                    (rec, out.relative_error(&z))
+                }
+                None => {
+                    let msg = Message::ActivationUpload { z: z.clone(), b: act_b, d };
+                    let (decoded, n) = self.net.upload(ci, round as u32, &msg)?;
+                    up_bytes += n;
+                    match decoded {
+                        Message::ActivationUpload { z, .. } => (z, 0.0),
+                        _ => anyhow::bail!("wrong upload variant"),
+                    }
+                }
+            };
+            let z_tilde = Array::f32(&[act_b, d], z_tilde_server);
+
+            // 3. server update
+            let src = InputSources {
+                ws: Some(&self.ws),
+                batch: Some(&batch),
+                masks: Some(&masks),
+                z_tilde: Some(&z_tilde),
+                ..Default::default()
+            };
+            let outs = self.rt.run(&variant, "server_step", &assemble(&step_meta, &src)?)?;
+            let weight = self.data.client_weight(ci).max(1e-12);
+            loss_agg.add(scalar(&outs[0])? as f64, weight);
+            for k in 0..nmetrics {
+                metric_sums[k] += scalar(&outs[1 + k])? as f64;
+            }
+            examples += self.spec.batch as f64;
+            let grad_z = outs[1 + nmetrics].clone();
+            let ws_grads = arrays_to_tensors(&outs[2 + nmetrics..], &self.ws)?;
+            ws_agg.add(&ws_grads, weight);
+            qerr_agg.add(quant_rel_err, 1.0);
+
+            // 4. gradient download
+            let gz_vec = grad_z
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("grad_z dtype"))?
+                .to_vec();
+            let gmsg = Message::GradDownload { grad: gz_vec, b: act_b, d };
+            let (decoded, n) = self.net.download(ci, round as u32, &gmsg)?;
+            down_bytes += n;
+            let grad_wire = match decoded {
+                Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
+                _ => anyhow::bail!("wrong download variant"),
+            };
+
+            // 5. client backward (gradient correction inside the artifact)
+            let src = InputSources {
+                wc: Some(&self.wc),
+                batch: Some(&batch),
+                masks: Some(&masks),
+                z_tilde: Some(&z_tilde),
+                grad_z: Some(&grad_wire),
+                lambda: Some(if self.quantizer.is_some() { self.cfg.lambda } else { 0.0 }),
+                ..Default::default()
+            };
+            let bwd = self.rt.run(&variant, "client_bwd", &assemble(&bwd_meta, &src)?)?;
+            let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
+
+            // 6. client-side grad sync (uplink)
+            let cmsg = Message::ClientGrads { grads: message::tensors_to_payload(&wc_grads) };
+            let (decoded, n) = self.net.upload(ci, round as u32, &cmsg)?;
+            up_bytes += n;
+            let synced = match decoded {
+                Message::ClientGrads { grads } => message::payload_to_tensors(
+                    &grads,
+                    &self.wc.tensors.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>(),
+                    &self.wc.names,
+                ),
+                _ => anyhow::bail!("wrong sync variant"),
+            };
+            wc_agg.add(&synced, weight);
+            per_client_bytes.push((up_bytes, down_bytes));
+            let _ = slot;
+        }
+
+        // optimizer steps on the aggregated gradients
+        if let Some(g) = ws_agg.finish() {
+            self.opt_s.step(&mut self.ws, &g);
+        }
+        if let Some(g) = wc_agg.finish() {
+            self.opt_c.step(&mut self.wc, &g);
+        }
+        anyhow::ensure!(self.wc.is_finite() && self.ws.is_finite(),
+            "parameters diverged (NaN/Inf) at round {round}");
+
+        let rb = self.net.end_round();
+        let mut rec = RoundRecord {
+            round,
+            train_loss: loss_agg.mean(),
+            train_metric: self.metric.value(&metric_sums, examples),
+            quant_error: qerr_agg.mean(),
+            uplink_bytes: rb.up,
+            downlink_bytes: rb.down,
+            cumulative_uplink: self.net.totals().up,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            sim_comm_seconds: self.net.estimate_round_time(&per_client_bytes),
+            ..Default::default()
+        };
+        if self.cfg.eval_every > 0
+            && (round % self.cfg.eval_every == self.cfg.eval_every - 1 || round == 0)
+        {
+            let (el, em) = self.evaluate(self.cfg.eval_batches)?;
+            rec.eval_loss = Some(el);
+            rec.eval_metric = Some(em);
+        }
+        Ok(rec)
+    }
+}
+
+impl Trainer for SplitTrainer {
+    fn run(&mut self) -> anyhow::Result<RunLog> {
+        let mut log = RunLog::default();
+        let algo = self.cfg.algorithm.name();
+        for round in 0..self.cfg.rounds {
+            let rec = self.round(round)?;
+            if round == 0 || (round + 1) % 10 == 0 {
+                log::info!(
+                    "{algo} {} r{:>4}: loss={:.4} metric={:.4} upKB={:.1} qerr={:.3}",
+                    self.cfg.task,
+                    round,
+                    rec.train_loss,
+                    rec.train_metric,
+                    rec.uplink_bytes as f64 / 1024.0,
+                    rec.quant_error,
+                );
+            }
+            write_round(&mut self.csv, &mut self.jsonl, &rec)?;
+            log.push(rec);
+        }
+        if let Some(c) = &mut self.csv {
+            c.flush()?;
+        }
+        if let Some(j) = &mut self.jsonl {
+            j.flush()?;
+        }
+        Ok(log)
+    }
+}
+
+// -- shared helpers (also used by fedavg.rs) ---------------------------------
+
+pub fn scalar(a: &Array) -> anyhow::Result<f32> {
+    a.as_f32()
+        .and_then(|v| v.first().copied())
+        .ok_or_else(|| anyhow::anyhow!("expected f32 scalar output"))
+}
+
+/// Convert artifact gradient outputs into a TensorList shaped like `like`.
+pub fn arrays_to_tensors(arrs: &[Array], like: &TensorList) -> anyhow::Result<TensorList> {
+    anyhow::ensure!(
+        arrs.len() == like.len(),
+        "got {} grads, expected {}",
+        arrs.len(),
+        like.len()
+    );
+    let tensors = arrs
+        .iter()
+        .zip(&like.tensors)
+        .map(|(a, t)| {
+            let data = a
+                .as_f32()
+                .ok_or_else(|| anyhow::anyhow!("gradient not f32"))?;
+            anyhow::ensure!(a.shape() == t.shape(), "grad shape mismatch");
+            Ok(Tensor::from_vec(t.shape(), data.to_vec()))
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    Ok(TensorList::new(like.names.clone(), tensors))
+}
+
+pub(crate) fn open_logs(
+    cfg: &RunConfig,
+) -> anyhow::Result<(Option<CsvWriter>, Option<JsonlWriter>)> {
+    if cfg.out_dir.is_empty() {
+        return Ok((None, None));
+    }
+    let base = format!(
+        "{}/{}_{}_{}", cfg.out_dir, cfg.task, cfg.algorithm.name(), cfg.seed
+    );
+    let csv = CsvWriter::create(
+        format!("{base}.csv"),
+        &[
+            "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
+            "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
+            "wall_seconds", "sim_comm_seconds",
+        ],
+    )?;
+    let jsonl = JsonlWriter::create(format!("{base}.jsonl"))?;
+    Ok((Some(csv), Some(jsonl)))
+}
+
+pub(crate) fn write_round(
+    csv: &mut Option<CsvWriter>,
+    jsonl: &mut Option<JsonlWriter>,
+    rec: &RoundRecord,
+) -> anyhow::Result<()> {
+    if let Some(c) = csv {
+        c.row(&[
+            rec.round.to_string(),
+            format!("{:.6}", rec.train_loss),
+            format!("{:.6}", rec.train_metric),
+            rec.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            rec.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            format!("{:.6}", rec.quant_error),
+            rec.uplink_bytes.to_string(),
+            rec.downlink_bytes.to_string(),
+            rec.cumulative_uplink.to_string(),
+            format!("{:.4}", rec.wall_seconds),
+            format!("{:.4}", rec.sim_comm_seconds),
+        ])?;
+    }
+    if let Some(j) = jsonl {
+        j.record(&rec.to_json())?;
+    }
+    Ok(())
+}

@@ -1,0 +1,297 @@
+//! Synthetic FEMNIST: procedural 28x28 glyphs, 62 classes, writer styles.
+//!
+//! Each class has a deterministic prototype glyph built from 3–6 strokes.
+//! Each client ("writer") gets (a) a Dirichlet label distribution (label
+//! skew) and (b) a persistent style — affine jitter (shift/rotate/scale),
+//! stroke thickness, and ink intensity — so activations cluster by class
+//! *and* shift by writer, the structure the paper's quantizer exploits.
+//! Per-example noise is added on top.
+
+use crate::data::{partition, Array, Batch, FederatedDataset};
+use crate::util::rng::Rng;
+
+pub const IMAGE: usize = 28;
+pub const CLASSES: usize = 62;
+
+/// One stroke of a glyph prototype: a line segment in unit coordinates.
+#[derive(Clone, Copy, Debug)]
+struct Stroke {
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+}
+
+/// Persistent per-writer rendering style.
+#[derive(Clone, Copy, Debug)]
+struct WriterStyle {
+    dx: f32,
+    dy: f32,
+    rot: f32,
+    scale: f32,
+    thickness: f32,
+    intensity: f32,
+}
+
+/// The synthetic federated FEMNIST generator.
+pub struct SyntheticFemnist {
+    seed: u64,
+    clients: usize,
+    glyphs: Vec<Vec<Stroke>>,
+    styles: Vec<WriterStyle>,
+    label_dist: Vec<Vec<f64>>,
+    weights: Vec<f64>,
+}
+
+impl SyntheticFemnist {
+    /// `alpha` controls label skew (paper-style non-IID: ~0.3).
+    pub fn new(seed: u64, clients: usize, alpha: f64) -> Self {
+        let root = Rng::new(seed);
+        // class prototypes (shared by all writers)
+        let glyphs = (0..CLASSES)
+            .map(|c| {
+                let mut r = root.fork(1000 + c as u64);
+                let strokes = 3 + r.below(4);
+                (0..strokes)
+                    .map(|_| Stroke {
+                        x0: r.uniform_in(0.15, 0.85) as f32,
+                        y0: r.uniform_in(0.15, 0.85) as f32,
+                        x1: r.uniform_in(0.15, 0.85) as f32,
+                        y1: r.uniform_in(0.15, 0.85) as f32,
+                    })
+                    .collect()
+            })
+            .collect();
+        let styles = (0..clients)
+            .map(|i| {
+                let mut r = root.fork(2000 + i as u64);
+                WriterStyle {
+                    dx: r.uniform_in(-0.08, 0.08) as f32,
+                    dy: r.uniform_in(-0.08, 0.08) as f32,
+                    rot: r.uniform_in(-0.25, 0.25) as f32,
+                    scale: r.uniform_in(0.85, 1.15) as f32,
+                    thickness: r.uniform_in(0.035, 0.075) as f32,
+                    intensity: r.uniform_in(0.7, 1.0) as f32,
+                }
+            })
+            .collect();
+        let mut r = root.fork(3000);
+        let label_dist = partition::dirichlet_label_skew(clients, CLASSES, alpha, &mut r);
+        let mut rs = root.fork(4000);
+        let sizes = partition::zipf_client_sizes(clients, 120, 1.1, 10, &mut rs);
+        let weights = partition::weights_from_sizes(&sizes);
+        SyntheticFemnist { seed, clients, glyphs, styles, label_dist, weights }
+    }
+
+    /// Render one example of `class` with `style` + per-example jitter.
+    fn render(&self, class: usize, style: &WriterStyle, rng: &mut Rng, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), IMAGE * IMAGE);
+        out.iter_mut().for_each(|p| *p = 0.0);
+        let jx = style.dx + rng.normal_ms(0.0, 0.02) as f32;
+        let jy = style.dy + rng.normal_ms(0.0, 0.02) as f32;
+        let rot = style.rot + rng.normal_ms(0.0, 0.05) as f32;
+        let scale = style.scale * (1.0 + rng.normal_ms(0.0, 0.03) as f32);
+        let (sin, cos) = rot.sin_cos();
+        let th = style.thickness;
+        let ink = style.intensity * (1.0 + rng.normal_ms(0.0, 0.05) as f32);
+
+        for s in &self.glyphs[class] {
+            // transform endpoints around the glyph center (0.5, 0.5)
+            let tf = |x: f32, y: f32| -> (f32, f32) {
+                let (cx, cy) = (x - 0.5, y - 0.5);
+                let rx = cx * cos - cy * sin;
+                let ry = cx * sin + cy * cos;
+                (0.5 + scale * rx + jx, 0.5 + scale * ry + jy)
+            };
+            let (x0, y0) = tf(s.x0, s.y0);
+            let (x1, y1) = tf(s.x1, s.y1);
+            // rasterize: walk the segment, splat a gaussian blob
+            let len = ((x1 - x0).powi(2) + (y1 - y0).powi(2)).sqrt();
+            let steps = ((len / 0.02).ceil() as usize).max(1);
+            for k in 0..=steps {
+                let t = k as f32 / steps as f32;
+                let px = x0 + t * (x1 - x0);
+                let py = y0 + t * (y1 - y0);
+                splat(out, px, py, th, ink);
+            }
+        }
+        // pixel noise
+        for p in out.iter_mut() {
+            *p = (*p + rng.normal_ms(0.0, 0.02) as f32).clamp(0.0, 1.0);
+        }
+    }
+
+    fn batch_from_dist(
+        &self,
+        dist: &[f64],
+        style: &WriterStyle,
+        batch: usize,
+        rng: &mut Rng,
+    ) -> Batch {
+        let mut x = vec![0.0f32; batch * IMAGE * IMAGE];
+        let mut y = vec![0i32; batch];
+        for j in 0..batch {
+            let class = rng.categorical(dist);
+            y[j] = class as i32;
+            let px = &mut x[j * IMAGE * IMAGE..(j + 1) * IMAGE * IMAGE];
+            self.render(class, style, rng, px);
+        }
+        Batch {
+            x: Array::f32(&[batch, IMAGE, IMAGE, 1], x),
+            y: Array::i32(&[batch], y),
+        }
+    }
+}
+
+fn splat(img: &mut [f32], px: f32, py: f32, radius: f32, ink: f32) {
+    let r_pix = (radius * IMAGE as f32).max(0.6);
+    let cx = px * IMAGE as f32;
+    let cy = py * IMAGE as f32;
+    let lo_x = ((cx - 2.0 * r_pix).floor().max(0.0)) as usize;
+    let hi_x = ((cx + 2.0 * r_pix).ceil().min((IMAGE - 1) as f32)) as usize;
+    let lo_y = ((cy - 2.0 * r_pix).floor().max(0.0)) as usize;
+    let hi_y = ((cy + 2.0 * r_pix).ceil().min((IMAGE - 1) as f32)) as usize;
+    if cx < -2.0 * r_pix || cy < -2.0 * r_pix {
+        return;
+    }
+    for yy in lo_y..=hi_y {
+        for xx in lo_x..=hi_x {
+            let d2 = (xx as f32 - cx).powi(2) + (yy as f32 - cy).powi(2);
+            let v = ink * (-d2 / (2.0 * r_pix * r_pix)).exp();
+            let p = &mut img[yy * IMAGE + xx];
+            *p = (*p + v).min(1.0);
+        }
+    }
+}
+
+impl FederatedDataset for SyntheticFemnist {
+    fn name(&self) -> &str {
+        "femnist"
+    }
+
+    fn num_clients(&self) -> usize {
+        self.clients
+    }
+
+    fn client_weight(&self, client: usize) -> f64 {
+        self.weights[client]
+    }
+
+    fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch {
+        self.batch_from_dist(&self.label_dist[client], &self.styles[client], batch, rng)
+    }
+
+    fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        // global mixture: uniform classes, neutral style
+        let uniform = vec![1.0 / CLASSES as f64; CLASSES];
+        let neutral = WriterStyle {
+            dx: 0.0,
+            dy: 0.0,
+            rot: 0.0,
+            scale: 1.0,
+            thickness: 0.055,
+            intensity: 0.85,
+        };
+        let mut r = rng.fork(self.seed ^ 0xEEA1);
+        self.batch_from_dist(&uniform, &neutral, batch, &mut r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SyntheticFemnist {
+        SyntheticFemnist::new(7, 20, 0.3)
+    }
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let d = ds();
+        let mut rng = Rng::new(0);
+        let b = d.train_batch(3, 5, &mut rng);
+        assert_eq!(b.x.shape(), &[5, 28, 28, 1]);
+        assert_eq!(b.y.shape(), &[5]);
+        let xs = b.x.as_f32().unwrap();
+        assert!(xs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let ys = b.y.as_i32().unwrap();
+        assert!(ys.iter().all(|&c| (0..62).contains(&c)));
+    }
+
+    #[test]
+    fn images_have_ink() {
+        let d = ds();
+        let mut rng = Rng::new(1);
+        let b = d.train_batch(0, 4, &mut rng);
+        let xs = b.x.as_f32().unwrap();
+        for j in 0..4 {
+            let img = &xs[j * 784..(j + 1) * 784];
+            let mass: f32 = img.iter().sum();
+            assert!(mass > 10.0, "image {j} nearly blank: {mass}");
+            let maxv = img.iter().fold(0.0f32, |m, &v| m.max(v));
+            assert!(maxv > 0.5);
+        }
+    }
+
+    #[test]
+    fn same_class_same_writer_similar_different_class_different() {
+        let d = ds();
+        let style = d.styles[0];
+        let mut render = |class: usize, seed: u64| {
+            let mut r = Rng::new(seed);
+            let mut img = vec![0.0f32; 784];
+            d.render(class, &style, &mut r, &mut img);
+            img
+        };
+        let a1 = render(5, 10);
+        let a2 = render(5, 11);
+        let b1 = render(40, 10);
+        let d_same: f32 = a1.iter().zip(&a2).map(|(p, q)| (p - q).powi(2)).sum();
+        let d_diff: f32 = a1.iter().zip(&b1).map(|(p, q)| (p - q).powi(2)).sum();
+        assert!(
+            d_same < d_diff,
+            "within-class {d_same} should be < cross-class {d_diff}"
+        );
+    }
+
+    #[test]
+    fn label_skew_differs_across_clients() {
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let mut hist = |c: usize| {
+            let mut h = vec![0usize; 62];
+            for _ in 0..10 {
+                let b = d.train_batch(c, 20, &mut rng);
+                for &y in b.y.as_i32().unwrap() {
+                    h[y as usize] += 1;
+                }
+            }
+            h
+        };
+        let h0 = hist(0);
+        let h1 = hist(1);
+        // non-IID: top class of client 0 differs from client 1 (w.h.p.)
+        let top0 = h0.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        let top1 = h1.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        let conc0 = *h0.iter().max().unwrap() as f64 / 200.0;
+        assert!(conc0 > 0.1, "client 0 not skewed: {conc0}");
+        assert!(top0 != top1 || conc0 < 0.9);
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let d = ds();
+        let s: f64 = (0..d.num_clients()).map(|i| d.client_weight(i)).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_stream() {
+        let d1 = ds();
+        let d2 = ds();
+        let b1 = d1.train_batch(4, 3, &mut Rng::new(42));
+        let b2 = d2.train_batch(4, 3, &mut Rng::new(42));
+        assert_eq!(b1.x.as_f32().unwrap(), b2.x.as_f32().unwrap());
+        assert_eq!(b1.y.as_i32().unwrap(), b2.y.as_i32().unwrap());
+    }
+}

@@ -1,0 +1,98 @@
+//! Synthetic federated datasets (substitutes for the TFF benchmarks).
+//!
+//! The paper trains on TFF FEMNIST / StackOverflow, which are not
+//! available offline; these generators produce statistically analogous
+//! workloads (see DESIGN.md §Substitutions): class/label structure that
+//! makes within-batch activations cluster (what PQ exploits) and
+//! per-client heterogeneity (Dirichlet label skew, client-specific style /
+//! topic mixture / dialect).
+//!
+//! All sampling is deterministic in `(dataset seed, client id, step)`.
+
+pub mod femnist;
+pub mod partition;
+pub mod so_nwp;
+pub mod so_tag;
+
+use crate::util::rng::Rng;
+
+/// A typed dense array crossing the rust <-> PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Array {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Array {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Array {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Array::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Array {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Array::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Array::F32 { shape, .. } | Array::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Array::F32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Array::I32 { data, .. } => Some(data),
+            _ => None,
+        }
+    }
+}
+
+/// One training batch: model input + labels.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Array,
+    pub y: Array,
+}
+
+/// A federated dataset: examples are reachable only through a client id.
+pub trait FederatedDataset: Send + Sync {
+    fn name(&self) -> &str;
+    fn num_clients(&self) -> usize;
+    /// Relative example count of a client (the p_i weights in eq. (1)).
+    fn client_weight(&self, client: usize) -> f64;
+    /// Draw a training batch from one client's local distribution.
+    fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch;
+    /// Draw a held-out evaluation batch from the global mixture.
+    fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn array_shape_checks() {
+        let a = Array::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(a.numel(), 6);
+        assert!(a.as_f32().is_some());
+        assert!(a.as_i32().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn array_shape_mismatch_panics() {
+        let _ = Array::i32(&[2, 2], vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Non-IID partitioning utilities.
+//!
+//! Federated heterogeneity is modelled two ways, matching common FL
+//! simulation practice (Hsu et al. 2019, used by the FedJAX baselines):
+//!
+//! * **label skew** — each client draws a Dirichlet(alpha) distribution
+//!   over classes; small alpha concentrates mass on few classes;
+//! * **quantity skew** — client dataset sizes follow a Zipf-like law, and
+//!   the weights `p_i = n_i / sum n_j` of eq. (1) come from these sizes.
+
+use crate::util::rng::Rng;
+
+/// Per-client label distributions, `clients x classes`, rows sum to 1.
+pub fn dirichlet_label_skew(
+    clients: usize,
+    classes: usize,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Vec<Vec<f64>> {
+    (0..clients)
+        .map(|i| rng.fork(i as u64).dirichlet_sym(alpha, classes))
+        .collect()
+}
+
+/// Zipf-ish client sizes in `[min_size, ...]`; returns absolute counts.
+pub fn zipf_client_sizes(
+    clients: usize,
+    mean_size: usize,
+    skew: f64,
+    min_size: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    // sample raw weights w_i = (rank+1)^-skew of a random permutation,
+    // then scale to hit the requested mean
+    let mut ranks: Vec<usize> = (0..clients).collect();
+    rng.shuffle(&mut ranks);
+    let raw: Vec<f64> = ranks
+        .iter()
+        .map(|&r| ((r + 1) as f64).powf(-skew))
+        .collect();
+    let total_raw: f64 = raw.iter().sum();
+    let total_target = (mean_size * clients) as f64;
+    raw.iter()
+        .map(|w| ((w / total_raw * total_target).round() as usize).max(min_size))
+        .collect()
+}
+
+/// Normalized p_i weights from sizes (eq. (1)).
+pub fn weights_from_sizes(sizes: &[usize]) -> Vec<f64> {
+    let total: usize = sizes.iter().sum();
+    assert!(total > 0);
+    sizes.iter().map(|&n| n as f64 / total as f64).collect()
+}
+
+/// Effective number of classes a distribution spreads over
+/// (`exp(entropy)`), used by tests to verify skew levels.
+pub fn effective_classes(dist: &[f64]) -> f64 {
+    let h: f64 = dist
+        .iter()
+        .filter(|&&p| p > 0.0)
+        .map(|&p| -p * p.ln())
+        .sum();
+    h.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_distributions() {
+        let mut rng = Rng::new(0);
+        let skew = dirichlet_label_skew(50, 62, 0.3, &mut rng);
+        assert_eq!(skew.len(), 50);
+        for row in &skew {
+            assert_eq!(row.len(), 62);
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn small_alpha_concentrates() {
+        let mut rng = Rng::new(1);
+        let skewed = dirichlet_label_skew(100, 62, 0.1, &mut rng);
+        let uniformish = dirichlet_label_skew(100, 62, 100.0, &mut rng);
+        let eff_s: f64 = skewed.iter().map(|r| effective_classes(r)).sum::<f64>() / 100.0;
+        let eff_u: f64 =
+            uniformish.iter().map(|r| effective_classes(r)).sum::<f64>() / 100.0;
+        assert!(eff_s < 15.0, "skewed eff {eff_s}");
+        assert!(eff_u > 50.0, "uniform eff {eff_u}");
+    }
+
+    #[test]
+    fn sizes_positive_and_mean_close() {
+        let mut rng = Rng::new(2);
+        let sizes = zipf_client_sizes(200, 100, 1.2, 5, &mut rng);
+        assert_eq!(sizes.len(), 200);
+        assert!(sizes.iter().all(|&s| s >= 5));
+        let mean = sizes.iter().sum::<usize>() as f64 / 200.0;
+        assert!((mean - 100.0).abs() / 100.0 < 0.5, "mean {mean}");
+        // genuinely skewed: max much larger than median
+        let mut sorted = sizes.clone();
+        sorted.sort_unstable();
+        assert!(sorted[199] > 4 * sorted[100]);
+    }
+
+    #[test]
+    fn weights_normalize() {
+        let w = weights_from_sizes(&[10, 30, 60]);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((w[2] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partition_deterministic_per_seed() {
+        let a = dirichlet_label_skew(10, 5, 0.5, &mut Rng::new(9));
+        let b = dirichlet_label_skew(10, 5, 0.5, &mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,247 @@
+//! Synthetic StackOverflow next-word prediction: client-dialect Markov text.
+//!
+//! Generative story: a global first-order Markov chain over a Zipf-ranked
+//! vocabulary (each token's successors are a deterministic pseudo-random
+//! subset with Zipf weights), plus a per-client "dialect" — a client-
+//! specific permutation bias that re-weights successor choices. Sequences
+//! have variable length (padded with id 0); ids 1/2/3 are BOS/EOS/OOV like
+//! the TFF preprocessing.
+
+use crate::data::{partition, Array, Batch, FederatedDataset};
+use crate::util::rng::Rng;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+
+/// Generator configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SoNwpConfig {
+    /// Total vocabulary including the 4 special ids.
+    pub vocab: usize,
+    pub seq: usize,
+    /// Successors per token in the global chain.
+    pub branch: usize,
+    /// Strength of the client dialect (0 = IID clients).
+    pub dialect: f64,
+}
+
+impl SoNwpConfig {
+    pub fn paper() -> Self {
+        SoNwpConfig { vocab: 10004, seq: 30, branch: 32, dialect: 0.5 }
+    }
+
+    pub fn small() -> Self {
+        SoNwpConfig { vocab: 2004, seq: 20, branch: 16, dialect: 0.5 }
+    }
+}
+
+pub struct SyntheticSoNwp {
+    cfg: SoNwpConfig,
+    clients: usize,
+    seed: u64,
+    /// Per-client dialect offsets into the successor table.
+    dialect_shift: Vec<usize>,
+    weights: Vec<f64>,
+}
+
+impl SyntheticSoNwp {
+    pub fn new(seed: u64, clients: usize, cfg: SoNwpConfig) -> Self {
+        let root = Rng::new(seed);
+        let mut r = root.fork(1);
+        let dialect_shift = (0..clients).map(|_| r.below(cfg.branch)).collect();
+        let mut rs = root.fork(2);
+        let sizes = partition::zipf_client_sizes(clients, 300, 1.2, 20, &mut rs);
+        let weights = partition::weights_from_sizes(&sizes);
+        SyntheticSoNwp { cfg, clients, seed, dialect_shift, weights }
+    }
+
+    /// k-th successor of `token` in the global chain (deterministic hash).
+    #[inline]
+    fn successor(&self, token: usize, k: usize) -> usize {
+        let words = self.cfg.vocab - 4;
+        let mut h = (token as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((k as u64).wrapping_mul(0xBF58476D1CE4E5B9))
+            .wrapping_add(self.seed);
+        h ^= h >> 29;
+        h = h.wrapping_mul(0x94D049BB133111EB);
+        h ^= h >> 32;
+        4 + (h as usize % words)
+    }
+
+    /// Sample the next token given the current one and a dialect shift.
+    fn step(&self, token: usize, shift: usize, rng: &mut Rng) -> usize {
+        // successor rank chosen Zipf-ily; the dialect rotates which
+        // successor a given rank points at, so clients share the support
+        // but prefer different continuations.
+        let rank = rng.zipf(self.cfg.branch, 1.3);
+        let k = if rng.uniform() < self.cfg.dialect {
+            (rank + shift) % self.cfg.branch
+        } else {
+            rank
+        };
+        self.successor(token, k)
+    }
+
+    fn gen_sequence(&self, shift: usize, rng: &mut Rng, x: &mut [i32], y: &mut [i32]) {
+        let t = self.cfg.seq;
+        let words = self.cfg.vocab - 4;
+        // variable length in [seq/2, seq]
+        let len = t / 2 + rng.below(t / 2 + 1);
+        let mut cur = 4 + rng.zipf(words, 1.1); // start token by unigram law
+        x[0] = BOS;
+        y[0] = cur as i32;
+        for i in 1..t {
+            if i < len {
+                let nxt = self.step(cur, shift, rng);
+                x[i] = cur as i32;
+                y[i] = if i == len - 1 { EOS } else { nxt as i32 };
+                cur = nxt;
+            } else {
+                x[i] = PAD;
+                y[i] = PAD;
+            }
+        }
+    }
+
+    fn batch_with_shift(&self, shift: usize, batch: usize, rng: &mut Rng) -> Batch {
+        let t = self.cfg.seq;
+        let mut xs = vec![0i32; batch * t];
+        let mut ys = vec![0i32; batch * t];
+        for j in 0..batch {
+            self.gen_sequence(
+                shift,
+                rng,
+                &mut xs[j * t..(j + 1) * t],
+                &mut ys[j * t..(j + 1) * t],
+            );
+        }
+        Batch {
+            x: Array::i32(&[batch, t], xs),
+            y: Array::i32(&[batch, t], ys),
+        }
+    }
+}
+
+impl FederatedDataset for SyntheticSoNwp {
+    fn name(&self) -> &str {
+        "so_nwp"
+    }
+
+    fn num_clients(&self) -> usize {
+        self.clients
+    }
+
+    fn client_weight(&self, client: usize) -> f64 {
+        self.weights[client]
+    }
+
+    fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch {
+        self.batch_with_shift(self.dialect_shift[client], batch, rng)
+    }
+
+    fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        self.batch_with_shift(0, batch, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SyntheticSoNwp {
+        SyntheticSoNwp::new(5, 25, SoNwpConfig::small())
+    }
+
+    #[test]
+    fn shapes_and_token_ranges() {
+        let d = ds();
+        let mut rng = Rng::new(0);
+        let b = d.train_batch(1, 6, &mut rng);
+        assert_eq!(b.x.shape(), &[6, 20]);
+        assert_eq!(b.y.shape(), &[6, 20]);
+        for &tok in b.x.as_i32().unwrap() {
+            assert!((0..2004).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn starts_with_bos_pads_align() {
+        let d = ds();
+        let mut rng = Rng::new(1);
+        let b = d.train_batch(0, 10, &mut rng);
+        let xs = b.x.as_i32().unwrap();
+        let ys = b.y.as_i32().unwrap();
+        for j in 0..10 {
+            let xr = &xs[j * 20..(j + 1) * 20];
+            let yr = &ys[j * 20..(j + 1) * 20];
+            assert_eq!(xr[0], BOS);
+            for i in 0..20 {
+                assert_eq!(xr[i] == PAD, yr[i] == PAD, "pad misalign at {i}");
+            }
+            // non-pad prefix then pad suffix (no pad holes)
+            let first_pad = xr.iter().position(|&t| t == PAD).unwrap_or(20);
+            assert!(xr[..first_pad].iter().all(|&t| t != PAD));
+            assert!(xr[first_pad..].iter().all(|&t| t == PAD));
+            assert!(first_pad >= 10, "sequence too short: {first_pad}");
+        }
+    }
+
+    #[test]
+    fn y_is_next_token_of_x() {
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let b = d.train_batch(3, 8, &mut rng);
+        let xs = b.x.as_i32().unwrap();
+        let ys = b.y.as_i32().unwrap();
+        for j in 0..8 {
+            let xr = &xs[j * 20..(j + 1) * 20];
+            let yr = &ys[j * 20..(j + 1) * 20];
+            for i in 1..19 {
+                if xr[i + 1] != PAD {
+                    assert_eq!(yr[i], xr[i + 1], "teacher forcing broken at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_is_learnable_not_uniform() {
+        // successors of a fixed token concentrate on `branch` ids
+        let d = ds();
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            seen.insert(d.step(100, 0, &mut rng));
+        }
+        assert!(seen.len() <= 16, "support {} > branch", seen.len());
+        assert!(seen.len() >= 4);
+    }
+
+    #[test]
+    fn dialects_shift_distributions() {
+        let d = ds();
+        let mut count = |shift: usize| {
+            let mut rng = Rng::new(4);
+            let mut hist = std::collections::HashMap::new();
+            for _ in 0..400 {
+                *hist.entry(d.step(50, shift, &mut rng)).or_insert(0usize) += 1;
+            }
+            hist
+        };
+        let h0 = count(0);
+        let h5 = count(5);
+        let top0 = h0.iter().max_by_key(|(_, &v)| v).unwrap().0;
+        let v0 = h0[top0];
+        let v5 = h5.get(top0).copied().unwrap_or(0);
+        assert!(v0 > v5, "dialect shift has no effect: {v0} vs {v5}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let b1 = ds().train_batch(2, 3, &mut Rng::new(9));
+        let b2 = ds().train_batch(2, 3, &mut Rng::new(9));
+        assert_eq!(b1.x.as_i32().unwrap(), b2.x.as_i32().unwrap());
+    }
+}

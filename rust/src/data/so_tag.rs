@@ -1,0 +1,239 @@
+//! Synthetic StackOverflow tag prediction: topic-model bag-of-words.
+//!
+//! Generative story: K latent topics; each topic owns a Zipf-weighted word
+//! distribution over the vocabulary and a handful of characteristic tags.
+//! A client has a persistent Dirichlet topic mixture (heterogeneity); each
+//! example draws a topic sub-mixture, emits ~`words_per_post` word tokens
+//! (bag-of-words, L1-normalized), and labels the example with the top tags
+//! of its dominant topics. This preserves the multi-label sparse-input
+//! regime and the Recall@5 metric of the paper.
+
+use crate::data::{partition, Array, Batch, FederatedDataset};
+use crate::util::rng::Rng;
+
+/// Generator configuration (defaults mirror the task presets).
+#[derive(Clone, Copy, Debug)]
+pub struct SoTagConfig {
+    pub vocab: usize,
+    pub tags: usize,
+    pub topics: usize,
+    pub words_per_post: usize,
+    pub tags_per_post: usize,
+    /// Dirichlet alpha for client topic mixtures (small = heterogeneous).
+    pub alpha: f64,
+}
+
+impl SoTagConfig {
+    pub fn paper() -> Self {
+        SoTagConfig { vocab: 5000, tags: 1000, topics: 50, words_per_post: 60,
+                      tags_per_post: 3, alpha: 0.3 }
+    }
+
+    pub fn small() -> Self {
+        SoTagConfig { vocab: 1000, tags: 200, topics: 20, words_per_post: 40,
+                      tags_per_post: 3, alpha: 0.3 }
+    }
+}
+
+/// Per-topic structure: word CDF support and tag ids.
+struct Topic {
+    /// Word ids this topic prefers (sampled with Zipf rank weights).
+    words: Vec<usize>,
+    /// Tags characteristic of this topic, in preference order.
+    tags: Vec<usize>,
+}
+
+pub struct SyntheticSoTag {
+    cfg: SoTagConfig,
+    clients: usize,
+    topics: Vec<Topic>,
+    client_mixture: Vec<Vec<f64>>,
+    weights: Vec<f64>,
+}
+
+impl SyntheticSoTag {
+    pub fn new(seed: u64, clients: usize, cfg: SoTagConfig) -> Self {
+        let root = Rng::new(seed);
+        let topics = (0..cfg.topics)
+            .map(|t| {
+                let mut r = root.fork(100 + t as u64);
+                // each topic uses a contiguous-ish slice of the vocab plus
+                // random extras, so topics overlap but remain distinct
+                let span = cfg.vocab / cfg.topics;
+                let base = t * span;
+                let mut words: Vec<usize> = (base..base + span).collect();
+                for _ in 0..span / 2 {
+                    words.push(r.below(cfg.vocab));
+                }
+                let tag_span = (cfg.tags / cfg.topics).max(1);
+                let tags: Vec<usize> = (0..tag_span.max(3))
+                    .map(|k| (t * tag_span + k) % cfg.tags)
+                    .collect();
+                Topic { words, tags }
+            })
+            .collect();
+        let mut r = root.fork(7);
+        let client_mixture =
+            partition::dirichlet_label_skew(clients, cfg.topics, cfg.alpha, &mut r);
+        let mut rs = root.fork(8);
+        let sizes = partition::zipf_client_sizes(clients, 200, 1.2, 10, &mut rs);
+        let weights = partition::weights_from_sizes(&sizes);
+        SyntheticSoTag { cfg, clients, topics, client_mixture, weights }
+    }
+
+    fn sample_post(&self, mixture: &[f64], rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
+        let cfg = &self.cfg;
+        let mut x = vec![0.0f32; cfg.vocab];
+        let mut topic_hits = vec![0usize; cfg.topics];
+        for _ in 0..cfg.words_per_post {
+            let t = rng.categorical(mixture);
+            topic_hits[t] += 1;
+            let topic = &self.topics[t];
+            // Zipf rank within the topic's word list
+            let rank = rng.zipf(topic.words.len(), 1.1);
+            x[topic.words[rank]] += 1.0;
+        }
+        // L1 normalize the bag (standard for LR-on-BoW baselines)
+        let total: f32 = x.iter().sum();
+        if total > 0.0 {
+            x.iter_mut().for_each(|v| *v /= total);
+        }
+        // tags: top characteristic tags of the most-hit topics
+        let mut y = vec![0.0f32; cfg.tags];
+        let mut order: Vec<usize> = (0..cfg.topics).collect();
+        order.sort_by(|&a, &b| topic_hits[b].cmp(&topic_hits[a]));
+        let mut placed = 0;
+        'outer: for &t in &order {
+            if topic_hits[t] == 0 {
+                break;
+            }
+            for &tag in &self.topics[t].tags {
+                if y[tag] == 0.0 {
+                    y[tag] = 1.0;
+                    placed += 1;
+                    if placed >= cfg.tags_per_post {
+                        break 'outer;
+                    }
+                    break; // one tag per topic, move to next topic
+                }
+            }
+        }
+        if placed == 0 {
+            y[rng.below(cfg.tags)] = 1.0;
+        }
+        (x, y)
+    }
+
+    fn batch_from_mixture(&self, mixture: &[f64], batch: usize, rng: &mut Rng) -> Batch {
+        let cfg = &self.cfg;
+        let mut xs = Vec::with_capacity(batch * cfg.vocab);
+        let mut ys = Vec::with_capacity(batch * cfg.tags);
+        for _ in 0..batch {
+            let (x, y) = self.sample_post(mixture, rng);
+            xs.extend(x);
+            ys.extend(y);
+        }
+        Batch {
+            x: Array::f32(&[batch, cfg.vocab], xs),
+            y: Array::f32(&[batch, cfg.tags], ys),
+        }
+    }
+}
+
+impl FederatedDataset for SyntheticSoTag {
+    fn name(&self) -> &str {
+        "so_tag"
+    }
+
+    fn num_clients(&self) -> usize {
+        self.clients
+    }
+
+    fn client_weight(&self, client: usize) -> f64 {
+        self.weights[client]
+    }
+
+    fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch {
+        self.batch_from_mixture(&self.client_mixture[client], batch, rng)
+    }
+
+    fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
+        let uniform = vec![1.0 / self.cfg.topics as f64; self.cfg.topics];
+        self.batch_from_mixture(&uniform, batch, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SyntheticSoTag {
+        SyntheticSoTag::new(11, 30, SoTagConfig::small())
+    }
+
+    #[test]
+    fn shapes_and_normalization() {
+        let d = ds();
+        let mut rng = Rng::new(0);
+        let b = d.train_batch(2, 8, &mut rng);
+        assert_eq!(b.x.shape(), &[8, 1000]);
+        assert_eq!(b.y.shape(), &[8, 200]);
+        let xs = b.x.as_f32().unwrap();
+        for j in 0..8 {
+            let row = &xs[j * 1000..(j + 1) * 1000];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {j} sums to {s}");
+            assert!(row.iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn labels_multi_hot_and_bounded() {
+        let d = ds();
+        let mut rng = Rng::new(1);
+        let b = d.train_batch(0, 16, &mut rng);
+        let ys = b.y.as_f32().unwrap();
+        for j in 0..16 {
+            let row = &ys[j * 200..(j + 1) * 200];
+            let pos: f32 = row.iter().sum();
+            assert!((1.0..=3.0).contains(&pos), "example {j} has {pos} tags");
+            assert!(row.iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    #[test]
+    fn tags_correlate_with_words() {
+        // posts about the same dominant topic should share tags more often
+        // than posts about different topics
+        let d = ds();
+        let mut rng = Rng::new(2);
+        let mut one_hot_mix = vec![1e-9; 20];
+        one_hot_mix[3] = 1.0;
+        let b1 = d.batch_from_mixture(&one_hot_mix, 10, &mut rng);
+        let ys = b1.y.as_f32().unwrap();
+        // all examples from topic 3 share at least one common tag
+        let mut common: Vec<f32> = ys[0..200].to_vec();
+        for j in 1..10 {
+            for (c, v) in common.iter_mut().zip(&ys[j * 200..(j + 1) * 200]) {
+                *c = c.min(*v);
+            }
+        }
+        assert!(common.iter().sum::<f32>() >= 1.0, "no shared tag");
+    }
+
+    #[test]
+    fn clients_have_distinct_mixtures() {
+        let d = ds();
+        let m0 = &d.client_mixture[0];
+        let m1 = &d.client_mixture[1];
+        let dist: f64 = m0.iter().zip(m1).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dist > 0.5, "mixtures too similar: {dist}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let b1 = ds().train_batch(5, 4, &mut Rng::new(3));
+        let b2 = ds().train_batch(5, 4, &mut Rng::new(3));
+        assert_eq!(b1.x.as_f32().unwrap(), b2.x.as_f32().unwrap());
+    }
+}

@@ -1,0 +1,107 @@
+//! Figure 3: quantization error vs compression ratio.
+//!
+//! Paper setup: activations of a two-layer CNN on FEMNIST (d=9216, B=20);
+//! three quantizer families over a range of L:
+//!
+//! * blue  — vanilla K-means (q = R = 1);
+//! * green — vanilla PQ, q ∈ {288, 1152, 4608}, R = q;
+//! * red   — ours, q = 4608 fixed, R ∈ {2304, 1152, 384, 1}.
+//!
+//! Expected shape: green below blue at equal ratio (more quantization
+//! levels), red dominating both (shared codebooks slash the codebook
+//! term). Activations come from `client_fwd` after a short SplitFed
+//! warm-up so they carry class structure like the paper's trained net.
+
+use std::sync::Arc;
+
+use crate::coordinator::client::{assemble, draw_masks, InputSources};
+use crate::data::femnist::SyntheticFemnist;
+use crate::data::FederatedDataset;
+use crate::models::ModelSpec;
+use crate::quantizer::cost::CostModel;
+use crate::quantizer::pq::{GroupedPq, PqConfig};
+use crate::runtime::Runtime;
+use crate::tensor::TensorList;
+use crate::util::logging::CsvWriter;
+use crate::util::rng::Rng;
+
+pub struct Fig3Options {
+    pub out_csv: String,
+    pub kmeans_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig3Options {
+    fn default() -> Self {
+        Fig3Options { out_csv: "results/fig3.csv".into(), kmeans_iters: 8, seed: 33 }
+    }
+}
+
+/// Grab one batch of cut-layer activations from the FEMNIST client model.
+pub fn femnist_activations(rt: &Runtime, seed: u64) -> anyhow::Result<(Vec<f32>, usize, usize)> {
+    let variant = "femnist_paper";
+    let spec: &ModelSpec = &rt.manifest.variant(variant)?.spec;
+    let rng = Rng::new(seed);
+    let wc: TensorList = spec.client.init_tensors(&mut rng.fork(1));
+    let data = SyntheticFemnist::new(seed, 10, 0.3);
+    let batch = data.train_batch(0, spec.batch, &mut rng.fork(2));
+    let meta = rt.manifest.artifact(variant, "client_fwd")?.clone();
+    let masks = draw_masks(&[&meta], 0.0, 0.0, &mut rng.fork(3));
+    let src = InputSources {
+        wc: Some(&wc),
+        batch: Some(&batch),
+        masks: Some(&masks),
+        ..Default::default()
+    };
+    let z = rt
+        .run(variant, "client_fwd", &assemble(&meta, &src)?)?
+        .remove(0);
+    let v = z.as_f32().unwrap().to_vec();
+    Ok((v, spec.batch, spec.cut_dim))
+}
+
+/// The sweep configurations of the figure: (family, q, r, Ls).
+pub fn sweep_configs(d: usize) -> Vec<(&'static str, usize, usize, Vec<usize>)> {
+    let ls = vec![2usize, 4, 8, 16, 32];
+    let mut out = vec![("kmeans", 1usize, 1usize, vec![2, 4, 8, 16])];
+    for q in [288usize, 1152, 4608] {
+        if d % q == 0 {
+            out.push(("vanilla_pq", q, q, ls.clone()));
+        }
+    }
+    for r in [2304usize, 1152, 384, 1] {
+        if d % 4608 == 0 && 4608 % r == 0 {
+            out.push(("grouped_pq", 4608, r, ls.clone()));
+        }
+    }
+    out
+}
+
+pub fn run(opts: &Fig3Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
+    let (z, b, d) = femnist_activations(&rt, opts.seed)?;
+    let mut csv = CsvWriter::create(
+        &opts.out_csv,
+        &["family", "q", "r", "l", "compression_ratio", "relative_error"],
+    )?;
+    let cm = CostModel::default();
+    println!("Figure 3 — FEMNIST activations d={d}, B={b}");
+    println!("{:<12} {:>6} {:>6} {:>4} {:>12} {:>12}", "family", "q", "R", "L", "ratio", "rel-error");
+    for (family, q, r, ls) in sweep_configs(d) {
+        for &l in &ls {
+            let cfg = PqConfig::new(q, r, l).with_iters(opts.kmeans_iters);
+            let pq = GroupedPq::new(cfg, d)?;
+            let mut rng = Rng::new(opts.seed ^ (q as u64) ^ ((l as u64) << 32));
+            let out = pq.quantize(&z, b, &mut rng);
+            let ratio = cm.ratio(b, d, q, r, l);
+            let err = out.relative_error(&z);
+            println!("{family:<12} {q:>6} {r:>6} {l:>4} {ratio:>12.2} {err:>12.5}");
+            csv.row(&[
+                family.into(), q.to_string(), r.to_string(), l.to_string(),
+                format!("{ratio:.3}"), format!("{err:.6}"),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("wrote {}", opts.out_csv);
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! Figure 4: final accuracy vs compression ratio, per task, λ=0 vs λ>0.
+//!
+//! For each (q, L) operating point (a subset of the paper's §C.2 ranges,
+//! scaled by `--points`), train FedLite for `--rounds` rounds with λ=0 and
+//! with the preset λ, plus a SplitFed reference (ratio 1). Expected
+//! shapes: accuracy ≈ SplitFed at ≥10x compression; λ>0 curves dominate
+//! λ=0, dramatically so at high ratios where λ=0 may diverge (recorded as
+//! `diverged=1` with metric 0).
+
+use std::sync::Arc;
+
+use crate::config::{Algorithm, RunConfig};
+use crate::experiments::run_config;
+use crate::quantizer::compression_ratio;
+use crate::quantizer::pq::PqConfig;
+use crate::runtime::Runtime;
+use crate::util::logging::CsvWriter;
+
+pub struct Fig4Options {
+    pub task: String,
+    pub rounds: usize,
+    pub out_csv: String,
+    /// How many (q, L) points per curve.
+    pub points: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig4Options {
+    fn default() -> Self {
+        Fig4Options {
+            task: "femnist".into(),
+            rounds: 60,
+            out_csv: String::new(),
+            points: 3,
+            seed: 17,
+        }
+    }
+}
+
+/// The paper's §C.2 sweep ranges per task (q values, L values, tuned λ).
+pub fn paper_ranges(task: &str, cut_dim: usize) -> (Vec<usize>, Vec<usize>, f32) {
+    match task {
+        "femnist" => (vec![1152, 288, 144], vec![2, 8, 32], 1e-4),
+        "so_tag" => {
+            // paper vocab/hidden -> small preset may shrink d; keep divisors
+            let qs: Vec<usize> = [200usize, 50, 25]
+                .iter()
+                .copied()
+                .filter(|q| cut_dim % q == 0)
+                .collect();
+            (qs, vec![10, 20, 40], 5e-3)
+        }
+        _ => (vec![12, 6, 3], vec![30, 60, 120], 1e-3),
+    }
+}
+
+pub fn run(opts: &Fig4Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
+    let mut base = RunConfig::preset(&opts.task)?;
+    base.rounds = opts.rounds;
+    base.seed = opts.seed;
+    base.num_clients = 50;
+    base.eval_every = (opts.rounds / 4).max(1);
+    base.eval_batches = 6;
+    let spec = rt.manifest.variant(&base.variant())?.spec.clone();
+    let d = spec.cut_dim;
+    let act_b = spec.act_batch;
+    let (qs, ls, lam) = paper_ranges(&opts.task, d);
+
+    let out_csv = if opts.out_csv.is_empty() {
+        format!("results/fig4_{}.csv", opts.task)
+    } else {
+        opts.out_csv.clone()
+    };
+    let mut csv = CsvWriter::create(
+        &out_csv,
+        &["task", "algorithm", "q", "l", "lambda", "compression_ratio",
+          "final_metric", "final_loss", "diverged"],
+    )?;
+
+    // SplitFed reference (compression ratio 1)
+    let mut sf = base.clone();
+    sf.algorithm = Algorithm::SplitFed;
+    let log = run_config(sf, Arc::clone(&rt))?;
+    let sf_metric = log.final_eval_metric(2).unwrap_or(0.0);
+    println!("Figure 4 [{}] — SplitFed reference metric: {sf_metric:.4}", opts.task);
+    csv.row(&[
+        opts.task.clone(), "splitfed".into(), "0".into(), "0".into(), "0".into(),
+        "1".into(), format!("{sf_metric:.5}"), format!("{:.5}", log.final_train_loss(3)),
+        "0".into(),
+    ])?;
+
+    println!("{:>6} {:>5} {:>9} {:>10} {:>10} {:>9}", "q", "L", "lambda", "ratio", "metric", "loss");
+    for &q in qs.iter().take(opts.points) {
+        for &l in ls.iter().take(opts.points) {
+            if d % q != 0 {
+                continue;
+            }
+            for lambda in [0.0f32, lam] {
+                let mut cfg = base.clone();
+                cfg.algorithm = Algorithm::FedLite;
+                cfg.pq = PqConfig::new(q, 1, l);
+                cfg.lambda = lambda;
+                let ratio = compression_ratio(act_b, d, q, 1, l);
+                let (metric, loss, diverged) = match run_config(cfg, Arc::clone(&rt)) {
+                    Ok(log) => (
+                        log.final_eval_metric(2).unwrap_or(0.0),
+                        log.final_train_loss(3),
+                        false,
+                    ),
+                    Err(e) if e.to_string().contains("diverged") => (0.0, f64::NAN, true),
+                    Err(e) => return Err(e),
+                };
+                println!("{q:>6} {l:>5} {lambda:>9.0e} {ratio:>10.1} {metric:>10.4} {loss:>9.4}{}",
+                         if diverged { "  DIVERGED" } else { "" });
+                csv.row(&[
+                    opts.task.clone(), "fedlite".into(), q.to_string(), l.to_string(),
+                    format!("{lambda:e}"), format!("{ratio:.2}"),
+                    format!("{metric:.5}"), format!("{loss:.5}"),
+                    (diverged as u8).to_string(),
+                ])?;
+            }
+        }
+    }
+    csv.flush()?;
+    println!("wrote {out_csv}");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Figure 5 ablations on FEMNIST.
+//!
+//! * **5a/5b** — accuracy for a grid of (q, L) at each *fixed* λ value
+//!   (the paper shows that one small positive λ helps nearly all pairs).
+//! * **5c** — grouping ablation: ours (R=1) vs vanilla PQ (R=q) at matched
+//!   (q, L): same quantization levels, an order of magnitude apart in
+//!   compression ratio, minimal accuracy gap.
+
+use std::sync::Arc;
+
+use crate::config::{Algorithm, RunConfig};
+use crate::experiments::run_config;
+use crate::quantizer::compression_ratio;
+use crate::quantizer::pq::PqConfig;
+use crate::runtime::Runtime;
+use crate::util::logging::CsvWriter;
+
+pub struct Fig5Options {
+    pub rounds: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig5Options {
+    fn default() -> Self {
+        Fig5Options { rounds: 50, seed: 21 }
+    }
+}
+
+/// Fig 5a/5b: λ grid ablation.
+pub fn run_ab(opts: &Fig5Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
+    let lambdas = [0.0f32, 1e-5, 5e-5, 1e-4, 5e-4];
+    let grid = [(288usize, 8usize), (288, 32), (1152, 2), (1152, 8)];
+    let mut csv = CsvWriter::create(
+        "results/fig5ab.csv",
+        &["q", "l", "lambda", "final_metric", "final_loss", "diverged"],
+    )?;
+    println!("Figure 5a/b — FEMNIST λ ablation ({} rounds)", opts.rounds);
+    println!("{:>6} {:>4} {:>9} {:>10} {:>9}", "q", "L", "lambda", "metric", "loss");
+    for (q, l) in grid {
+        for lam in lambdas {
+            let mut cfg = RunConfig::preset("femnist")?;
+            cfg.algorithm = Algorithm::FedLite;
+            cfg.rounds = opts.rounds;
+            cfg.seed = opts.seed;
+            cfg.num_clients = 50;
+            cfg.eval_every = (opts.rounds / 3).max(1);
+            cfg.eval_batches = 6;
+            cfg.pq = PqConfig::new(q, 1, l);
+            cfg.lambda = lam;
+            let (metric, loss, diverged) = match run_config(cfg, Arc::clone(&rt)) {
+                Ok(log) => (
+                    log.final_eval_metric(2).unwrap_or(0.0),
+                    log.final_train_loss(3),
+                    false,
+                ),
+                Err(e) if e.to_string().contains("diverged") => (0.0, f64::NAN, true),
+                Err(e) => return Err(e),
+            };
+            println!("{q:>6} {l:>4} {lam:>9.0e} {metric:>10.4} {loss:>9.4}{}",
+                     if diverged { "  DIVERGED" } else { "" });
+            csv.row(&[
+                q.to_string(), l.to_string(), format!("{lam:e}"),
+                format!("{metric:.5}"), format!("{loss:.5}"),
+                (diverged as u8).to_string(),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("wrote results/fig5ab.csv");
+    Ok(())
+}
+
+/// Fig 5c: grouped (R=1) vs vanilla PQ (R=q).
+pub fn run_c(opts: &Fig5Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
+    let spec = rt.manifest.variant("femnist_paper")?.spec.clone();
+    let (b, d) = (spec.act_batch, spec.cut_dim);
+    let grid = [(288usize, 8usize), (1152, 2), (1152, 8)];
+    let mut csv = CsvWriter::create(
+        "results/fig5c.csv",
+        &["scheme", "q", "r", "l", "compression_ratio", "final_metric", "diverged"],
+    )?;
+    println!("Figure 5c — grouping ablation ({} rounds)", opts.rounds);
+    println!("{:<12} {:>6} {:>6} {:>4} {:>11} {:>10}", "scheme", "q", "R", "L", "ratio", "metric");
+    for (q, l) in grid {
+        for (scheme, r) in [("grouped", 1usize), ("vanilla_pq", q)] {
+            let mut cfg = RunConfig::preset("femnist")?;
+            cfg.algorithm = Algorithm::FedLite;
+            cfg.rounds = opts.rounds;
+            cfg.seed = opts.seed;
+            cfg.num_clients = 50;
+            cfg.eval_every = (opts.rounds / 3).max(1);
+            cfg.eval_batches = 6;
+            cfg.pq = PqConfig::new(q, r, l);
+            cfg.lambda = 1e-4;
+            let ratio = compression_ratio(b, d, q, r, l);
+            let (metric, diverged) = match run_config(cfg, Arc::clone(&rt)) {
+                Ok(log) => (log.final_eval_metric(2).unwrap_or(0.0), false),
+                Err(e) if e.to_string().contains("diverged") => (0.0, true),
+                Err(e) => return Err(e),
+            };
+            println!("{scheme:<12} {q:>6} {r:>6} {l:>4} {ratio:>11.1} {metric:>10.4}{}",
+                     if diverged { "  DIVERGED" } else { "" });
+            csv.row(&[
+                scheme.into(), q.to_string(), r.to_string(), l.to_string(),
+                format!("{ratio:.2}"), format!("{metric:.5}"),
+                (diverged as u8).to_string(),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("wrote results/fig5c.csv");
+    Ok(())
+}

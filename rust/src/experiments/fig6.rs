@@ -1,0 +1,60 @@
+//! Figure 6: training curves vs cumulative up-link communication.
+//!
+//! FedAvg (H local steps), SplitFed, and FedLite on FEMNIST, same seed and
+//! round budget; per-round CSVs carry `cumulative_uplink` so the curves
+//! can be plotted against bytes. Expected shape: FedLite reaches any given
+//! metric level with far fewer bytes than SplitFed, which beats FedAvg.
+
+use std::sync::Arc;
+
+use crate::config::{Algorithm, RunConfig};
+use crate::experiments::run_config;
+use crate::runtime::Runtime;
+use crate::util::logging::CsvWriter;
+
+pub struct Fig6Options {
+    pub rounds: usize,
+    pub seed: u64,
+    pub local_steps: usize,
+    pub out_dir: String,
+}
+
+impl Default for Fig6Options {
+    fn default() -> Self {
+        Fig6Options { rounds: 60, seed: 29, local_steps: 4, out_dir: "results/fig6".into() }
+    }
+}
+
+pub fn run(opts: &Fig6Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
+    let mut summary = CsvWriter::create(
+        "results/fig6_summary.csv",
+        &["algorithm", "rounds", "final_metric", "total_uplink_bytes",
+          "bytes_per_round", "sim_comm_seconds_total"],
+    )?;
+    println!("Figure 6 — FEMNIST, {} rounds, seed {}", opts.rounds, opts.seed);
+    println!("{:<10} {:>10} {:>16} {:>14}", "algorithm", "metric", "uplink-total", "bytes/round");
+    for algo in [Algorithm::FedAvg, Algorithm::SplitFed, Algorithm::FedLite] {
+        let mut cfg = RunConfig::preset("femnist")?;
+        cfg.algorithm = algo;
+        cfg.rounds = opts.rounds;
+        cfg.seed = opts.seed;
+        cfg.local_steps = if algo == Algorithm::FedAvg { opts.local_steps } else { 1 };
+        cfg.num_clients = 50;
+        cfg.eval_every = (opts.rounds / 6).max(1);
+        cfg.eval_batches = 6;
+        cfg.out_dir = opts.out_dir.clone();
+        let log = run_config(cfg, Arc::clone(&rt))?;
+        let metric = log.final_eval_metric(2).unwrap_or(0.0);
+        let total_up = log.total_uplink();
+        let per_round = total_up as f64 / opts.rounds as f64;
+        let sim_s: f64 = log.rounds.iter().map(|r| r.sim_comm_seconds).sum();
+        println!("{:<10} {:>10.4} {:>16} {:>14.0}", algo.name(), metric, total_up, per_round);
+        summary.row(&[
+            algo.name().into(), opts.rounds.to_string(), format!("{metric:.5}"),
+            total_up.to_string(), format!("{per_round:.0}"), format!("{sim_s:.2}"),
+        ])?;
+    }
+    summary.flush()?;
+    println!("wrote results/fig6_summary.csv and per-round CSVs under {}/", opts.out_dir);
+    Ok(())
+}

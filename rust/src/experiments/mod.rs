@@ -1,0 +1,34 @@
+//! Experiment drivers: one per table/figure of the paper's evaluation.
+//!
+//! Every driver writes a CSV under `results/` with exactly the series the
+//! paper plots, and prints a readable summary. Absolute numbers differ
+//! from the paper (synthetic data, reduced rounds — see EXPERIMENTS.md);
+//! the *shapes* (who wins, crossovers, correction effects) are the
+//! reproduction target.
+//!
+//! | driver | paper asset |
+//! |---|---|
+//! | [`table1`] | Table 1 (cost model, analytic + measured wire bytes) |
+//! | [`fig3`]   | Fig. 3 (quant error vs compression; K-means / PQ / ours) |
+//! | [`fig4`]   | Fig. 4 (accuracy vs compression, λ=0 vs λ>0) |
+//! | [`fig5`]   | Fig. 5ab (λ ablation grid), Fig. 5c (grouping ablation) |
+//! | [`fig6`]   | Fig. 6 (metric vs cumulative uplink, 3 algorithms) |
+
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table1;
+
+use std::sync::Arc;
+
+use crate::config::RunConfig;
+use crate::coordinator::{build_trainer, Trainer};
+use crate::metrics::RunLog;
+use crate::runtime::Runtime;
+
+/// Run one training config to completion (shared by figure drivers).
+pub fn run_config(cfg: RunConfig, rt: Arc<Runtime>) -> anyhow::Result<RunLog> {
+    let mut t: Box<dyn Trainer> = build_trainer(cfg, rt)?;
+    t.run()
+}

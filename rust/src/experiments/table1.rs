@@ -1,0 +1,91 @@
+//! Table 1: FedAvg vs SplitFed (vs FedLite) compute & communication.
+//!
+//! Two parts: the analytic rows (exactly the paper's formulas, evaluated
+//! for all three task splittings) and — when a runtime is available — a
+//! *measured* column: actual wire bytes from running one round of each
+//! algorithm through the metered network, confirming the model.
+
+use std::sync::Arc;
+
+use crate::config::{Algorithm, RunConfig};
+use crate::experiments::run_config;
+use crate::models::analytics::{self, CostRow, TaskCosts};
+use crate::runtime::Runtime;
+use crate::util::logging::CsvWriter;
+
+pub struct Table1Options {
+    pub h: usize,
+    pub out_csv: String,
+    /// Run one measured round per algorithm on FEMNIST (needs artifacts).
+    pub measure: bool,
+}
+
+impl Default for Table1Options {
+    fn default() -> Self {
+        Table1Options { h: 4, out_csv: "results/table1.csv".into(), measure: true }
+    }
+}
+
+pub fn run(opts: &Table1Options, rt: Option<Arc<Runtime>>) -> anyhow::Result<()> {
+    let tasks: [(&str, TaskCosts, Option<(usize, usize, usize)>); 3] = [
+        ("femnist", analytics::femnist_costs(), Some((1152, 1, 2))),
+        ("so_tag", analytics::so_tag_costs(), Some((500, 1, 10))),
+        ("so_nwp", analytics::so_nwp_costs(), Some((12, 1, 60))),
+    ];
+    let mut csv = CsvWriter::create(
+        &opts.out_csv,
+        &["task", "algorithm", "batch", "total_compute", "client_compute",
+          "communication_scalars", "communication_ratio_vs_fedavg"],
+    )?;
+    println!("Table 1 — per-client per-iteration costs (scalar units, phi=64)");
+    for (task, costs, fedlite) in &tasks {
+        let rows = analytics::table1(costs, opts.h, *fedlite);
+        let fedavg_comm = rows[0].communication;
+        println!("\n[{task}]  |w_c|={} |w_s|={} d={} B={}", costs.wc, costs.ws, costs.d, costs.b);
+        println!("{:<24} {:>10} {:>14} {:>14} {:>16} {:>8}",
+                 "algorithm", "batch", "total-compute", "client-compute", "comm(scalars)", "vs-FA");
+        for CostRow { algorithm, batch, total_compute, client_compute, communication } in &rows {
+            let rel = communication / fedavg_comm;
+            println!("{algorithm:<24} {batch:>10} {total_compute:>14.3e} {client_compute:>14.3e} {communication:>16.1} {rel:>8.4}");
+            csv.row(&[
+                task.to_string(), algorithm.clone(), batch.clone(),
+                format!("{total_compute:.3e}"), format!("{client_compute:.3e}"),
+                format!("{communication:.1}"), format!("{rel:.5}"),
+            ])?;
+        }
+    }
+    csv.flush()?;
+
+    if opts.measure {
+        if let Some(rt) = rt {
+            measured_round(rt)?;
+        } else {
+            println!("\n(measured round skipped: no runtime)");
+        }
+    }
+    Ok(())
+}
+
+/// One measured round per algorithm on FEMNIST: real wire bytes.
+fn measured_round(rt: Arc<Runtime>) -> anyhow::Result<()> {
+    println!("\nMeasured wire bytes, one FEMNIST round, 10 clients (f32 wire):");
+    println!("{:<10} {:>14} {:>14}", "algorithm", "uplink", "downlink");
+    for algo in [Algorithm::FedAvg, Algorithm::SplitFed, Algorithm::FedLite] {
+        let mut cfg = RunConfig::preset("femnist")?;
+        cfg.algorithm = algo;
+        cfg.rounds = 1;
+        cfg.eval_every = 0;
+        cfg.num_clients = 20;
+        cfg.clients_per_round = 10;
+        cfg.pq.iters = 3;
+        let log = run_config(cfg, Arc::clone(&rt))?;
+        let r = log.rounds.last().unwrap();
+        println!(
+            "{:<10} {:>14} {:>14}",
+            algo.name(),
+            r.uplink_bytes,
+            r.downlink_bytes
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! # FedLite — communication-efficient split federated learning
+//!
+//! Rust + JAX + Pallas reproduction of *"FedLite: A Scalable Approach for
+//! Federated Learning on Resource-constrained Clients"* (Wang et al., 2022).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L1 (Pallas)** — the grouped product-quantizer kernels
+//!   (`python/compile/kernels/pq.py`), lowered inside the L2 graphs.
+//! * **L2 (JAX)** — the split models (`client_fwd`, `server_step`,
+//!   `client_bwd`, …) AOT-lowered to HLO text under `artifacts/`.
+//! * **L3 (this crate)** — federated orchestration: client sampling, the
+//!   SplitFed/FedLite/FedAvg round state machines, the PQ compression
+//!   engine, byte-accurate communication accounting, optimizers, metrics,
+//!   and the experiment drivers that regenerate every table and figure of
+//!   the paper.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! models once; afterwards the `fedlite` binary is self-contained.
+//!
+//! ## Crate map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | substrates built in-tree (PRNG, JSON, CLI, thread pool, logging) |
+//! | [`tensor`] | small row-major f32 tensor used by optimizers/aggregation |
+//! | [`quantizer`] | native grouped-PQ engine + bit-packing + cost model |
+//! | [`runtime`] | PJRT artifact loading/execution (the `xla` crate) |
+//! | [`optim`] | SGD / Adam / AdaGrad (paper §C.2 per-task optimizers) |
+//! | [`data`] | synthetic federated datasets (FEMNIST / SO Tag / SO NWP) |
+//! | [`comm`] | wire format, simulated links, byte accounting |
+//! | [`models`] | split-model metadata + Table-1 cost analytics |
+//! | [`coordinator`] | FedLite / SplitFed / FedAvg round loops |
+//! | [`config`] | typed run configuration + presets |
+//! | [`metrics`] | accuracy/recall/loss aggregation and run logs |
+//! | [`experiments`] | drivers for Table 1 and Figures 3–6 |
+
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod quantizer;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use config::RunConfig;

@@ -1,0 +1,311 @@
+//! `fedlite` — the Layer-3 leader binary.
+//!
+//! Subcommands: `train` (one configured run), `exp` (regenerate a paper
+//! table/figure), `inspect` (artifact manifest), `quantize` (PQ demo on
+//! artifact activations). Run `fedlite <cmd> --help` for flags.
+
+use std::sync::Arc;
+
+use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
+use fedlite::coordinator::build_trainer;
+use fedlite::experiments::{fig3, fig4, fig5, fig6, table1};
+use fedlite::quantizer::pq::PqConfig;
+use fedlite::runtime::Runtime;
+use fedlite::util::cli::{Cli, Command, Flag};
+use fedlite::util::logging;
+
+fn cli() -> Cli {
+    Cli {
+        bin: "fedlite",
+        about: "communication-efficient split federated learning (FedLite reproduction)",
+        commands: vec![
+            Command {
+                name: "train",
+                about: "run one federated training job",
+                flags: vec![
+                    Flag::opt("task", "femnist", "femnist | so_tag | so_nwp"),
+                    Flag::opt("algorithm", "fedlite", "fedlite | splitfed | fedavg"),
+                    Flag::opt("rounds", "100", "number of federated rounds"),
+                    Flag::opt("clients", "100", "population size M"),
+                    Flag::opt("clients-per-round", "0", "cohort size S (0 = preset)"),
+                    Flag::opt("local-steps", "1", "FedAvg local steps H"),
+                    Flag::opt("q", "0", "subvectors per activation (0 = preset)"),
+                    Flag::opt("l", "0", "centroids per group (0 = preset)"),
+                    Flag::opt("r", "1", "groups sharing a codebook"),
+                    Flag::opt("kmeans-iters", "8", "Lloyd iterations"),
+                    Flag::opt("lambda", "-1", "gradient-correction strength (-1 = preset)"),
+                    Flag::opt("quantizer", "native", "native | pjrt (Pallas artifact)"),
+                    Flag::opt("lr", "0", "learning rate override (0 = preset)"),
+                    Flag::opt("alpha", "0.3", "Dirichlet non-IID concentration"),
+                    Flag::opt("seed", "17", "root RNG seed"),
+                    Flag::opt("eval-every", "10", "eval period in rounds (0 = never)"),
+                    Flag::opt("artifacts", "artifacts", "artifacts directory"),
+                    Flag::opt("out-dir", "", "write per-round CSV/JSONL here"),
+                    Flag::opt("save", "", "write final model checkpoint here"),
+                    Flag::opt("log", "info", "log level"),
+                ],
+            },
+            Command {
+                name: "exp",
+                about: "regenerate a paper table/figure: table1|fig3|fig4|fig5ab|fig5c|fig6",
+                flags: vec![
+                    Flag::opt("rounds", "0", "training rounds per point (0 = default)"),
+                    Flag::opt("task", "femnist", "task for fig4"),
+                    Flag::opt("points", "3", "points per curve for fig4"),
+                    Flag::opt("seed", "17", "seed"),
+                    Flag::opt("artifacts", "artifacts", "artifacts directory"),
+                    Flag::switch("no-measure", "table1: skip the measured round"),
+                    Flag::opt("log", "info", "log level"),
+                ],
+            },
+            Command {
+                name: "inspect",
+                about: "list artifacts and model specs from the manifest",
+                flags: vec![
+                    Flag::opt("artifacts", "artifacts", "artifacts directory"),
+                    Flag::switch("compile", "compile every artifact (slow)"),
+                    Flag::opt("log", "warn", "log level"),
+                ],
+            },
+            Command {
+                name: "quantize",
+                about: "quantize one batch of FEMNIST activations and report sizes",
+                flags: vec![
+                    Flag::opt("q", "1152", "subvectors"),
+                    Flag::opt("l", "2", "centroids"),
+                    Flag::opt("r", "1", "groups"),
+                    Flag::opt("engine", "native", "native | pjrt"),
+                    Flag::opt("artifacts", "artifacts", "artifacts directory"),
+                    Flag::opt("seed", "33", "seed"),
+                    Flag::opt("log", "warn", "log level"),
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let inv = match cli().parse(&argv) {
+        Ok(inv) => inv,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(if argv.is_empty() { 2 } else { 0 });
+        }
+    };
+    if let Err(e) = dispatch(inv.command, &inv.args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+    logging::init(args.get("log").unwrap_or("info"));
+    match cmd {
+        "train" => cmd_train(args),
+        "exp" => cmd_exp(args),
+        "inspect" => cmd_inspect(args),
+        "quantize" => cmd_quantize(args),
+        other => anyhow::bail!("unhandled command {other}"),
+    }
+}
+
+fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+    let mut cfg = RunConfig::preset(args.str("task")?)?;
+    cfg.algorithm = Algorithm::parse(args.str("algorithm")?)?;
+    cfg.rounds = args.usize("rounds")?;
+    cfg.num_clients = args.usize("clients")?;
+    let s = args.usize("clients-per-round")?;
+    if s > 0 {
+        cfg.clients_per_round = s;
+    }
+    cfg.local_steps = args.usize("local-steps")?;
+    let (q, l, r) = (args.usize("q")?, args.usize("l")?, args.usize("r")?);
+    if q > 0 && l > 0 {
+        cfg.pq = PqConfig::new(q, r.max(1), l);
+    }
+    cfg.pq = cfg.pq.with_iters(args.usize("kmeans-iters")?);
+    let lam = args.f64("lambda")?;
+    if lam >= 0.0 {
+        cfg.lambda = lam as f32;
+    }
+    cfg.quantizer = match args.str("quantizer")? {
+        "pjrt" => QuantizerEngine::Pjrt,
+        _ => QuantizerEngine::Native,
+    };
+    let lr = args.f64("lr")?;
+    if lr > 0.0 {
+        cfg.client_lr = lr as f32;
+        cfg.server_lr = lr as f32;
+    }
+    cfg.alpha = args.f64("alpha")?;
+    cfg.seed = args.u64("seed")?;
+    cfg.eval_every = args.usize("eval-every")?;
+    cfg.artifacts_dir = args.str("artifacts")?.to_string();
+    cfg.out_dir = args.get("out-dir").unwrap_or("").to_string();
+
+    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    log::info!(
+        "platform={} task={} algo={} rounds={} S={}/{} q={} L={} R={} lambda={} quantizer={:?}",
+        rt.platform(), cfg.task, cfg.algorithm.name(), cfg.rounds,
+        cfg.clients_per_round, cfg.num_clients, cfg.pq.q, cfg.pq.l, cfg.pq.r,
+        cfg.lambda, cfg.quantizer
+    );
+    let save = args.get("save").unwrap_or("").to_string();
+    let run_log = if !save.is_empty() && cfg.algorithm != Algorithm::FedAvg {
+        // keep the concrete trainer so the final parameters can be saved
+        let data = fedlite::coordinator::build_dataset(&cfg)?;
+        let cfg_save = cfg.clone();
+        let mut trainer =
+            fedlite::coordinator::split::SplitTrainer::new(cfg, rt, data)?;
+        let log = fedlite::coordinator::Trainer::run(&mut trainer)?;
+        let (wc, ws) = trainer.params();
+        fedlite::coordinator::checkpoint::save(&save, wc, ws, Some(&cfg_save))?;
+        println!("checkpoint written to {save}");
+        log
+    } else {
+        if !save.is_empty() {
+            log::warn!("--save is only supported for split algorithms; ignoring");
+        }
+        let mut trainer = build_trainer(cfg, rt)?;
+        trainer.run()?
+    };
+    if let Some(last) = run_log.last() {
+        println!(
+            "done: rounds={} final_loss={:.4} final_metric={:.4} \
+             best_eval_metric={:?} total_uplink={}B",
+            run_log.rounds.len(),
+            last.train_loss,
+            last.train_metric,
+            run_log.best_eval_metric(),
+            run_log.total_uplink()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_exp(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+    let which = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("usage: fedlite exp <table1|fig3|fig4|fig5ab|fig5c|fig6>"))?
+        .clone();
+    let artifacts = args.str("artifacts")?;
+    let rounds = args.usize("rounds")?;
+    let seed = args.u64("seed")?;
+    std::fs::create_dir_all("results").ok();
+    match which.as_str() {
+        "table1" => {
+            let rt = Runtime::open(artifacts).ok().map(Arc::new);
+            let opts = table1::Table1Options {
+                measure: !args.has("no-measure"),
+                ..Default::default()
+            };
+            table1::run(&opts, rt)
+        }
+        "fig3" => {
+            let rt = Arc::new(Runtime::open(artifacts)?);
+            let opts = fig3::Fig3Options { seed, ..Default::default() };
+            fig3::run(&opts, rt)
+        }
+        "fig4" => {
+            let rt = Arc::new(Runtime::open(artifacts)?);
+            let mut opts = fig4::Fig4Options {
+                task: args.str("task")?.to_string(),
+                points: args.usize("points")?,
+                seed,
+                ..Default::default()
+            };
+            if rounds > 0 {
+                opts.rounds = rounds;
+            }
+            fig4::run(&opts, rt)
+        }
+        "fig5ab" | "fig5c" => {
+            let rt = Arc::new(Runtime::open(artifacts)?);
+            let mut opts = fig5::Fig5Options { seed, ..Default::default() };
+            if rounds > 0 {
+                opts.rounds = rounds;
+            }
+            if which == "fig5ab" {
+                fig5::run_ab(&opts, rt)
+            } else {
+                fig5::run_c(&opts, rt)
+            }
+        }
+        "fig6" => {
+            let rt = Arc::new(Runtime::open(artifacts)?);
+            let mut opts = fig6::Fig6Options { seed, ..Default::default() };
+            if rounds > 0 {
+                opts.rounds = rounds;
+            }
+            fig6::run(&opts, rt)
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn cmd_inspect(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+    let rt = Runtime::open(args.str("artifacts")?)?;
+    println!("platform: {} | jax: {}", rt.platform(), rt.manifest.jax_version);
+    let mut names: Vec<&String> = rt.manifest.variants.keys().collect();
+    names.sort();
+    for vname in names {
+        let v = &rt.manifest.variants[vname];
+        println!(
+            "\n[{vname}] cut_dim={} act_batch={} params: client={} ({:.2}%), server={}",
+            v.spec.cut_dim,
+            v.spec.act_batch,
+            v.spec.client.numel(),
+            100.0 * v.spec.client_fraction(),
+            v.spec.server.numel(),
+        );
+        let mut anames: Vec<&String> = v.artifacts.keys().collect();
+        anames.sort();
+        for a in anames {
+            let art = &v.artifacts[a];
+            println!("  {a:<22} inputs={} outputs={}", art.inputs.len(), art.outputs.len());
+            if args.has("compile") {
+                let t0 = std::time::Instant::now();
+                rt.executable(vname, a)?;
+                println!("    compiled in {:.2}s", t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_quantize(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+    use fedlite::quantizer::cost::CostModel;
+    let rt = Arc::new(Runtime::open(args.str("artifacts")?)?);
+    let seed = args.u64("seed")?;
+    let (z, b, d) = fig3::femnist_activations(&rt, seed)?;
+    let cfg = PqConfig::new(args.usize("q")?, args.usize("r")?, args.usize("l")?);
+    let engine = match args.str("engine")? {
+        "pjrt" => QuantizerEngine::Pjrt,
+        _ => QuantizerEngine::Native,
+    };
+    let backend = fedlite::coordinator::quantize::QuantizeBackend::new(
+        engine, cfg, d, Arc::clone(&rt), "femnist_paper",
+    )?;
+    let mut rng = fedlite::util::rng::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let out = backend.quantize(&z, b, &mut rng)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let cm = CostModel::default();
+    println!(
+        "engine={} q={} R={} L={} | d={d} B={b}\n\
+         relative_error={:.5} kappa={:.4}\n\
+         paper-ratio={:.1}x wire_bytes={} raw_bytes={} wire-ratio={:.1}x\n\
+         quantize_time={:.3}s ({:.1} MB/s)",
+        backend.engine_name(), cfg.q, cfg.r, cfg.l,
+        out.relative_error(&z), out.kappa(&z),
+        cm.ratio(b, d, cfg.q, cfg.r, cfg.l),
+        cm.wire_bytes(b, d, cfg.q, cfg.r, cfg.l),
+        b * d * 4,
+        (b * d * 4) as f64 / cm.wire_bytes(b, d, cfg.q, cfg.r, cfg.l) as f64,
+        dt,
+        (b * d * 4) as f64 / dt / 1e6,
+    );
+    Ok(())
+}

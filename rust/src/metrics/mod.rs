@@ -1,0 +1,234 @@
+//! Metric aggregation and run summaries.
+//!
+//! Each task reports different raw metric sums from its AOT artifacts
+//! (FEMNIST: correct-count; SO Tag: hits@5 + positives; SO NWP:
+//! correct-tokens + valid-tokens); [`TaskMetric`] turns those sums into
+//! the paper's headline numbers. [`RoundRecord`]/[`RunLog`] accumulate the
+//! per-round series that the figures plot.
+
+use crate::util::json::{Object, Value};
+
+/// Converts raw metric sums into the per-task headline metric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskMetric {
+    /// correct / examples.
+    Accuracy,
+    /// hits@5 / positives (StackOverflow tag prediction).
+    RecallAt5,
+    /// correct tokens / valid tokens.
+    TokenAccuracy,
+}
+
+impl TaskMetric {
+    pub fn for_task(task: &str) -> TaskMetric {
+        match task {
+            "so_tag" => TaskMetric::RecallAt5,
+            "so_nwp" => TaskMetric::TokenAccuracy,
+            _ => TaskMetric::Accuracy,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskMetric::Accuracy => "accuracy",
+            TaskMetric::RecallAt5 => "recall_at_5",
+            TaskMetric::TokenAccuracy => "token_accuracy",
+        }
+    }
+
+    /// `sums` are the artifact's raw metric outputs in manifest order;
+    /// `examples` is the number of examples evaluated (used when the
+    /// denominator isn't part of the sums).
+    pub fn value(&self, sums: &[f64], examples: f64) -> f64 {
+        match self {
+            TaskMetric::Accuracy => sums.first().copied().unwrap_or(0.0) / examples.max(1.0),
+            TaskMetric::RecallAt5 | TaskMetric::TokenAccuracy => {
+                let num = sums.first().copied().unwrap_or(0.0);
+                let den = sums.get(1).copied().unwrap_or(0.0);
+                if den > 0.0 {
+                    num / den
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// Everything recorded about one round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub train_loss: f64,
+    pub train_metric: f64,
+    pub eval_loss: Option<f64>,
+    pub eval_metric: Option<f64>,
+    /// Mean relative quantization error across selected clients.
+    pub quant_error: f64,
+    pub uplink_bytes: u64,
+    pub downlink_bytes: u64,
+    pub cumulative_uplink: u64,
+    pub wall_seconds: f64,
+    pub sim_comm_seconds: f64,
+}
+
+impl RoundRecord {
+    pub fn to_json(&self) -> Value {
+        let mut o = Object::new();
+        o.insert("round", Value::from_usize(self.round));
+        o.insert("train_loss", Value::Num(self.train_loss));
+        o.insert("train_metric", Value::Num(self.train_metric));
+        if let Some(l) = self.eval_loss {
+            o.insert("eval_loss", Value::Num(l));
+        }
+        if let Some(m) = self.eval_metric {
+            o.insert("eval_metric", Value::Num(m));
+        }
+        o.insert("quant_error", Value::Num(self.quant_error));
+        o.insert("uplink_bytes", Value::Num(self.uplink_bytes as f64));
+        o.insert("downlink_bytes", Value::Num(self.downlink_bytes as f64));
+        o.insert("cumulative_uplink", Value::Num(self.cumulative_uplink as f64));
+        o.insert("wall_seconds", Value::Num(self.wall_seconds));
+        o.insert("sim_comm_seconds", Value::Num(self.sim_comm_seconds));
+        Value::Obj(o)
+    }
+}
+
+/// The full per-run series plus summary statistics.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    /// Best evaluation metric seen (higher is better).
+    pub fn best_eval_metric(&self) -> Option<f64> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.eval_metric)
+            .fold(None, |m, v| Some(m.map_or(v, |m: f64| m.max(v))))
+    }
+
+    /// Final-k average of eval metric (robust to last-round noise).
+    pub fn final_eval_metric(&self, k: usize) -> Option<f64> {
+        let vals: Vec<f64> = self.rounds.iter().filter_map(|r| r.eval_metric).collect();
+        if vals.is_empty() {
+            return None;
+        }
+        let k = k.min(vals.len()).max(1);
+        Some(vals[vals.len() - k..].iter().sum::<f64>() / k as f64)
+    }
+
+    pub fn total_uplink(&self) -> u64 {
+        self.rounds.last().map(|r| r.cumulative_uplink).unwrap_or(0)
+    }
+
+    /// Mean train loss over the final k rounds.
+    pub fn final_train_loss(&self, k: usize) -> f64 {
+        if self.rounds.is_empty() {
+            return f64::NAN;
+        }
+        let k = k.min(self.rounds.len()).max(1);
+        self.rounds[self.rounds.len() - k..]
+            .iter()
+            .map(|r| r.train_loss)
+            .sum::<f64>()
+            / k as f64
+    }
+}
+
+/// Online mean/min/max accumulator used by per-round stats.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stat {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stat {
+    pub fn add(&mut self, v: f64) {
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_metric_mapping() {
+        assert_eq!(TaskMetric::for_task("femnist"), TaskMetric::Accuracy);
+        assert_eq!(TaskMetric::for_task("so_tag"), TaskMetric::RecallAt5);
+        assert_eq!(TaskMetric::for_task("so_nwp"), TaskMetric::TokenAccuracy);
+    }
+
+    #[test]
+    fn metric_values() {
+        assert_eq!(TaskMetric::Accuracy.value(&[30.0], 100.0), 0.3);
+        assert_eq!(TaskMetric::RecallAt5.value(&[12.0, 48.0], 100.0), 0.25);
+        assert_eq!(TaskMetric::TokenAccuracy.value(&[0.0, 0.0], 10.0), 0.0);
+    }
+
+    #[test]
+    fn run_log_summaries() {
+        let mut log = RunLog::default();
+        for i in 0..10 {
+            log.push(RoundRecord {
+                round: i,
+                train_loss: 10.0 - i as f64,
+                eval_metric: Some(0.1 * i as f64),
+                cumulative_uplink: (i as u64 + 1) * 100,
+                ..Default::default()
+            });
+        }
+        assert_eq!(log.best_eval_metric(), Some(0.9));
+        assert!((log.final_eval_metric(3).unwrap() - 0.8).abs() < 1e-12);
+        assert_eq!(log.total_uplink(), 1000);
+        assert!((log.final_train_loss(2) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stat_accumulates() {
+        let mut s = Stat::default();
+        for v in [1.0, 3.0, 2.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn round_record_json() {
+        let r = RoundRecord { round: 3, train_loss: 1.5, ..Default::default() };
+        let j = r.to_json();
+        assert_eq!(j.get("round").as_usize(), Some(3));
+        assert_eq!(j.get("train_loss").as_f64(), Some(1.5));
+        assert_eq!(j.get("eval_loss").as_f64(), None);
+    }
+}

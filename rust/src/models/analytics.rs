@@ -1,0 +1,170 @@
+//! Table 1 analytics: FedAvg vs SplitFed compute/memory/communication.
+//!
+//! The paper's Table 1 compares, per selected client and per iteration:
+//!
+//! | Algorithm | Batch | Total compute | Client compute | Communication |
+//! |---|---|---|---|---|
+//! | FedAvg    | B/H | O(B·|w|)   | O(B·|w|)     | |w| |
+//! | SplitFed  | B/H | O(B·|w|/H) | O(B·|w_c|/H) | B·d/H + |w_c| |
+//! | SplitFed  | B   | O(B·|w|)   | O(B·|w_c|)   | B·d + |w_c| |
+//!
+//! plus FedLite's row (ours): compute like SplitFed, communication
+//! `compressed(B, d, q, R, L) + |w_c|`. Units: compute in parameter-
+//! touches (the O(·) argument), communication in scalars (× phi bits).
+
+use crate::quantizer::cost::CostModel;
+
+/// Inputs to the cost model for one task.
+#[derive(Clone, Copy, Debug)]
+pub struct TaskCosts {
+    /// Client-side parameter count |w_c|.
+    pub wc: usize,
+    /// Server-side parameter count |w_s|.
+    pub ws: usize,
+    /// Cut-layer activation dimension d.
+    pub d: usize,
+    /// Per-client mini-batch size B (activation rows: B·T for sequences).
+    pub b: usize,
+}
+
+impl TaskCosts {
+    pub fn total(&self) -> usize {
+        self.wc + self.ws
+    }
+}
+
+/// One Table-1 row, in scalar units (multiply by phi for bits).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostRow {
+    pub algorithm: String,
+    pub batch: String,
+    pub total_compute: f64,
+    pub client_compute: f64,
+    /// Up-link scalars per client per iteration.
+    pub communication: f64,
+}
+
+/// Compute all Table-1 rows (+ the FedLite row) for a task.
+///
+/// `h` is FedAvg's number of local steps; the SplitFed rows are reported
+/// both at batch `B/H` (equal-computation comparison) and at batch `B`.
+pub fn table1(costs: &TaskCosts, h: usize, fedlite: Option<(usize, usize, usize)>) -> Vec<CostRow> {
+    let w = costs.total() as f64;
+    let wc = costs.wc as f64;
+    let b = costs.b as f64;
+    let d = costs.d as f64;
+    let hf = h as f64;
+    let mut rows = vec![
+        CostRow {
+            algorithm: "fedavg".into(),
+            batch: format!("B/H={}", costs.b / h.max(1)),
+            total_compute: b * w,
+            client_compute: b * w,
+            communication: w,
+        },
+        CostRow {
+            algorithm: "splitfed".into(),
+            batch: format!("B/H={}", costs.b / h.max(1)),
+            total_compute: b * w / hf,
+            client_compute: b * wc / hf,
+            communication: b * d / hf + wc,
+        },
+        CostRow {
+            algorithm: "splitfed".into(),
+            batch: format!("B={}", costs.b),
+            total_compute: b * w,
+            client_compute: b * wc,
+            communication: b * d + wc,
+        },
+    ];
+    if let Some((q, r, l)) = fedlite {
+        let m = CostModel::default();
+        let compressed_scalars = m.fedlite_bits(costs.b, costs.d, q, r, l) / m.phi as f64;
+        rows.push(CostRow {
+            algorithm: format!("fedlite(q={q},R={r},L={l})"),
+            batch: format!("B={}", costs.b),
+            total_compute: b * w,
+            client_compute: b * wc,
+            communication: compressed_scalars + wc,
+        });
+    }
+    rows
+}
+
+/// The paper's FEMNIST splitting (§C.2).
+pub fn femnist_costs() -> TaskCosts {
+    TaskCosts { wc: 18_816, ws: 1_187_774, d: 9216, b: 20 }
+}
+
+/// The paper's SO Tag splitting (§C.2).
+pub fn so_tag_costs() -> TaskCosts {
+    TaskCosts { wc: 5000 * 2000 + 2000, ws: 2000 * 1000 + 1000, d: 2000, b: 100 }
+}
+
+/// The paper's SO NWP splitting (§C.2); activation rows are B·T.
+pub fn so_nwp_costs() -> TaskCosts {
+    TaskCosts { wc: 3_080_360, ws: 970_388, d: 96, b: 128 * 30 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitfed_always_cheaper_on_client() {
+        for costs in [femnist_costs(), so_tag_costs(), so_nwp_costs()] {
+            let rows = table1(&costs, 4, None);
+            let fedavg = &rows[0];
+            for sf in &rows[1..] {
+                assert!(sf.client_compute < fedavg.client_compute);
+            }
+        }
+    }
+
+    #[test]
+    fn femnist_splitfed_uplink_dominated_by_activations() {
+        // paper: the activation message can be ~10x the client model
+        let c = femnist_costs();
+        let rows = table1(&c, 1, None);
+        let sf = &rows[2];
+        let act = (c.b * c.d) as f64;
+        assert!(act / c.wc as f64 > 9.0);
+        assert!((sf.communication - (act + c.wc as f64)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fedlite_row_beats_both() {
+        let c = femnist_costs();
+        let rows = table1(&c, 1, Some((1152, 1, 2)));
+        let fedavg_comm = rows[0].communication;
+        let splitfed_comm = rows[2].communication;
+        let fedlite_comm = rows[3].communication;
+        assert!(fedlite_comm < splitfed_comm);
+        assert!(fedlite_comm < fedavg_comm);
+        // paper §5: FedLite uplink ~62x below FedAvg on FEMNIST
+        let gain = fedavg_comm / fedlite_comm;
+        assert!((45.0..80.0).contains(&gain), "gain {gain:.1}");
+    }
+
+    #[test]
+    fn equal_compute_row_scales_with_h() {
+        let c = femnist_costs();
+        let r4 = table1(&c, 4, None);
+        let r2 = table1(&c, 2, None);
+        assert!(r4[1].total_compute < r2[1].total_compute);
+        assert!(r4[1].communication < r2[1].communication + c.wc as f64);
+    }
+
+    #[test]
+    fn paper_client_fractions() {
+        let f = femnist_costs();
+        let frac = f.wc as f64 / f.total() as f64;
+        assert!((0.015..0.017).contains(&frac)); // ~1.6%
+        let t = so_tag_costs();
+        let frac_t = t.wc as f64 / t.total() as f64;
+        assert!((0.82..0.84).contains(&frac_t)); // ~83%
+        let n = so_nwp_costs();
+        let frac_n = n.wc as f64 / n.total() as f64;
+        assert!((0.74..0.80).contains(&frac_n)); // paper says 79%
+    }
+}

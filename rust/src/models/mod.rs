@@ -1,0 +1,219 @@
+//! Split-model metadata: parameter specs, initialization, and the Table-1
+//! compute/communication cost analytics.
+//!
+//! The source of truth for shapes is `artifacts/manifest.json` (emitted by
+//! `python/compile/aot.py`); [`ModelSpec`] is its typed view plus the
+//! parameter initializers the coordinator applies (mirroring
+//! `python/compile/models/common.py::init_param`).
+
+pub mod analytics;
+
+use crate::tensor::{Tensor, TensorList};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// One trainable parameter as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub scale: f64,
+    pub fan_in: usize,
+    pub fan_out: usize,
+}
+
+impl ParamSpec {
+    pub fn from_json(v: &Value) -> anyhow::Result<ParamSpec> {
+        Ok(ParamSpec {
+            name: v.get("name").as_str().unwrap_or_default().to_string(),
+            shape: v
+                .get("shape")
+                .as_usize_vec()
+                .ok_or_else(|| anyhow::anyhow!("param spec missing shape"))?,
+            init: v.get("init").as_str().unwrap_or("zeros").to_string(),
+            scale: v.get("scale").as_f64().unwrap_or(1.0),
+            fan_in: v.get("fan_in").as_usize().unwrap_or(1),
+            fan_out: v.get("fan_out").as_usize().unwrap_or(1),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Initialize this parameter (matches the python reference initializer).
+    pub fn init_tensor(&self, rng: &mut Rng) -> Tensor {
+        let n = self.numel();
+        let data = match self.init.as_str() {
+            "zeros" => vec![0.0; n],
+            "glorot_uniform" => {
+                let limit = (6.0 / (self.fan_in + self.fan_out) as f64).sqrt() as f32;
+                rng.uniform_vec(n, -limit, limit)
+            }
+            "uniform" => {
+                let s = self.scale as f32;
+                rng.uniform_vec(n, -s, s)
+            }
+            other => panic!("unknown init '{other}'"),
+        };
+        Tensor::from_vec(&self.shape, data)
+    }
+}
+
+/// One side (client or server) of a split model.
+#[derive(Clone, Debug)]
+pub struct SideSpec {
+    pub params: Vec<ParamSpec>,
+}
+
+impl SideSpec {
+    pub fn from_json(arr: &Value) -> anyhow::Result<SideSpec> {
+        let params = arr
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("param list not an array"))?
+            .iter()
+            .map(ParamSpec::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(SideSpec { params })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Allocate + initialize all parameters of this side.
+    pub fn init_tensors(&self, rng: &mut Rng) -> TensorList {
+        let names = self.params.iter().map(|p| p.name.clone()).collect();
+        let tensors = self
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| p.init_tensor(&mut rng.fork(i as u64 + 1)))
+            .collect();
+        TensorList::new(names, tensors)
+    }
+}
+
+/// Full split-model description for one task variant.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub task: String,
+    pub preset: String,
+    pub cut_dim: usize,
+    /// Rows the quantizer sees per batch (B, or B*T for sequence tasks).
+    pub act_batch: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub client: SideSpec,
+    pub server: SideSpec,
+    pub metrics: Vec<String>,
+    pub client_args: Vec<String>,
+    pub server_args: Vec<String>,
+    pub config: Value,
+}
+
+impl ModelSpec {
+    pub fn from_manifest_variant(v: &Value) -> anyhow::Result<ModelSpec> {
+        let cfg = v.get("config");
+        Ok(ModelSpec {
+            task: v.get("task").as_str().unwrap_or_default().to_string(),
+            preset: v.get("preset").as_str().unwrap_or_default().to_string(),
+            cut_dim: v
+                .get("cut_dim")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("missing cut_dim"))?,
+            act_batch: v
+                .get("act_batch")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("missing act_batch"))?,
+            batch: cfg.get("batch").as_usize().unwrap_or(1),
+            eval_batch: cfg.get("eval_batch").as_usize().unwrap_or(1),
+            client: SideSpec::from_json(v.get("client_params"))?,
+            server: SideSpec::from_json(v.get("server_params"))?,
+            metrics: str_vec(v.get("metrics")),
+            client_args: str_vec(v.get("client_args")),
+            server_args: str_vec(v.get("server_args")),
+            config: cfg.clone(),
+        })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.client.numel() + self.server.numel()
+    }
+
+    /// Fraction of parameters held by clients (paper: 1.6% on FEMNIST).
+    pub fn client_fraction(&self) -> f64 {
+        self.client.numel() as f64 / self.total_params() as f64
+    }
+}
+
+fn str_vec(v: &Value) -> Vec<String> {
+    v.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|x| x.as_str().map(str::to_string))
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn spec_json() -> Value {
+        json::parse(
+            r#"{
+            "name": "dense_w", "shape": [4, 8], "init": "glorot_uniform",
+            "scale": 1.0, "fan_in": 4, "fan_out": 8
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn param_spec_roundtrip() {
+        let p = ParamSpec::from_json(&spec_json()).unwrap();
+        assert_eq!(p.numel(), 32);
+        let mut rng = Rng::new(0);
+        let t = p.init_tensor(&mut rng);
+        assert_eq!(t.shape(), &[4, 8]);
+        let limit = (6.0f64 / 12.0).sqrt() as f32;
+        assert!(t.data().iter().all(|&x| x.abs() <= limit));
+        assert!(t.data().iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn zeros_init() {
+        let v = json::parse(r#"{"name":"b","shape":[5],"init":"zeros","scale":1,"fan_in":5,"fan_out":5}"#).unwrap();
+        let p = ParamSpec::from_json(&v).unwrap();
+        let t = p.init_tensor(&mut Rng::new(1));
+        assert_eq!(t.data(), &[0.0; 5]);
+    }
+
+    #[test]
+    fn uniform_scale_respected() {
+        let v = json::parse(r#"{"name":"e","shape":[100],"init":"uniform","scale":0.05,"fan_in":1,"fan_out":1}"#).unwrap();
+        let p = ParamSpec::from_json(&v).unwrap();
+        let t = p.init_tensor(&mut Rng::new(2));
+        assert!(t.data().iter().all(|&x| x.abs() <= 0.05));
+        assert!(t.max_abs() > 0.01);
+    }
+
+    #[test]
+    fn side_spec_init_deterministic() {
+        let arr = json::parse(
+            r#"[{"name":"w","shape":[3,3],"init":"glorot_uniform","scale":1,"fan_in":3,"fan_out":3},
+                {"name":"b","shape":[3],"init":"zeros","scale":1,"fan_in":3,"fan_out":3}]"#,
+        )
+        .unwrap();
+        let side = SideSpec::from_json(&arr).unwrap();
+        assert_eq!(side.numel(), 12);
+        let t1 = side.init_tensors(&mut Rng::new(7));
+        let t2 = side.init_tensors(&mut Rng::new(7));
+        assert_eq!(t1.tensors[0].data(), t2.tensors[0].data());
+        assert_eq!(t1.names, vec!["w", "b"]);
+    }
+}

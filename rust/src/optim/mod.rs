@@ -1,0 +1,258 @@
+//! Optimizers for the server-side model and the aggregated client model.
+//!
+//! The paper's per-task choices (§C.2): FEMNIST — SGD (lr 10^-1.5),
+//! SO NWP — Adam (lr 0.01), SO Tag — AdaGrad (lr 10^-0.5). Optimizer state
+//! lives on the coordinator (server) in rust; the AOT artifacts only
+//! produce gradients.
+
+use crate::tensor::TensorList;
+
+/// Common interface: apply one update given gradients.
+pub trait Optimizer: Send {
+    fn step(&mut self, params: &mut TensorList, grads: &TensorList);
+    fn learning_rate(&self) -> f32;
+    fn set_learning_rate(&mut self, lr: f32);
+    fn name(&self) -> &'static str;
+}
+
+/// Build the optimizer named in a config (`sgd` | `adam` | `adagrad`).
+pub fn build(name: &str, lr: f32) -> anyhow::Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "sgd" => Box::new(Sgd::new(lr, 0.0)),
+        "sgdm" => Box::new(Sgd::new(lr, 0.9)),
+        "adam" => Box::new(Adam::new(lr)),
+        "adagrad" => Box::new(AdaGrad::new(lr)),
+        other => anyhow::bail!("unknown optimizer '{other}'"),
+    })
+}
+
+/// SGD with optional heavy-ball momentum.
+pub struct Sgd {
+    lr: f32,
+    momentum: f32,
+    velocity: Option<TensorList>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: None }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut TensorList, grads: &TensorList) {
+        if self.momentum == 0.0 {
+            params.axpy(-self.lr, grads);
+            return;
+        }
+        let v = self
+            .velocity
+            .get_or_insert_with(|| grads.zeros_like());
+        v.scale(self.momentum);
+        v.axpy(1.0, grads);
+        params.axpy(-self.lr, v);
+    }
+
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam (Kingma & Ba, 2014) with bias correction.
+pub struct Adam {
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u64,
+    m: Option<TensorList>,
+    v: Option<TensorList>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: None, v: None }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut TensorList, grads: &TensorList) {
+        self.t += 1;
+        let m = self.m.get_or_insert_with(|| grads.zeros_like());
+        let v = self.v.get_or_insert_with(|| grads.zeros_like());
+        let (b1, b2) = (self.beta1, self.beta2);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        let lr_t = self.lr * bc2.sqrt() / bc1;
+        for ((p, g), (mt, vt)) in params
+            .tensors
+            .iter_mut()
+            .zip(&grads.tensors)
+            .zip(m.tensors.iter_mut().zip(v.tensors.iter_mut()))
+        {
+            let gd = g.data();
+            let md = mt.data_mut();
+            let vd = vt.data_mut();
+            let pd = p.data_mut();
+            for i in 0..gd.len() {
+                md[i] = b1 * md[i] + (1.0 - b1) * gd[i];
+                vd[i] = b2 * vd[i] + (1.0 - b2) * gd[i] * gd[i];
+                pd[i] -= lr_t * md[i] / (vd[i].sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+/// AdaGrad (Duchi et al., 2011).
+pub struct AdaGrad {
+    lr: f32,
+    eps: f32,
+    accum: Option<TensorList>,
+}
+
+impl AdaGrad {
+    pub fn new(lr: f32) -> Self {
+        AdaGrad { lr, eps: 1e-7, accum: None }
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn step(&mut self, params: &mut TensorList, grads: &TensorList) {
+        let acc = self.accum.get_or_insert_with(|| grads.zeros_like());
+        for ((p, g), a) in params
+            .tensors
+            .iter_mut()
+            .zip(&grads.tensors)
+            .zip(acc.tensors.iter_mut())
+        {
+            let gd = g.data();
+            let ad = a.data_mut();
+            let pd = p.data_mut();
+            for i in 0..gd.len() {
+                ad[i] += gd[i] * gd[i];
+                pd[i] -= self.lr * gd[i] / (ad[i].sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn quad_problem() -> (TensorList, TensorList) {
+        // f(x) = 0.5 ||x - target||^2; grad = x - target
+        let params = TensorList::new(
+            vec!["x".into()],
+            vec![Tensor::from_vec(&[3], vec![5.0, -3.0, 2.0])],
+        );
+        let target = TensorList::new(
+            vec!["x".into()],
+            vec![Tensor::from_vec(&[3], vec![1.0, 1.0, 1.0])],
+        );
+        (params, target)
+    }
+
+    fn grad_of(params: &TensorList, target: &TensorList) -> TensorList {
+        let mut g = params.clone();
+        g.axpy(-1.0, target);
+        g
+    }
+
+    fn converges(opt: &mut dyn Optimizer, steps: usize) -> f32 {
+        let (mut params, target) = quad_problem();
+        for _ in 0..steps {
+            let g = grad_of(&params, &target);
+            opt.step(&mut params, &g);
+        }
+        let g = grad_of(&params, &target);
+        g.l2_norm()
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        assert!(converges(&mut Sgd::new(0.1, 0.0), 200) < 1e-4);
+    }
+
+    #[test]
+    fn sgd_momentum_converges() {
+        assert!(converges(&mut Sgd::new(0.05, 0.9), 300) < 1e-3);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        assert!(converges(&mut Adam::new(0.1), 500) < 1e-2);
+    }
+
+    #[test]
+    fn adagrad_converges_on_quadratic() {
+        assert!(converges(&mut AdaGrad::new(1.0), 500) < 1e-2);
+    }
+
+    #[test]
+    fn sgd_step_is_exact() {
+        let (mut params, target) = quad_problem();
+        let g = grad_of(&params, &target);
+        Sgd::new(0.5, 0.0).step(&mut params, &g);
+        // x <- x - 0.5 (x - t): 5 -> 3, -3 -> -1, 2 -> 1.5
+        assert_eq!(params.tensors[0].data(), &[3.0, -1.0, 1.5]);
+    }
+
+    #[test]
+    fn adam_first_step_size_is_lr() {
+        // with bias correction the first |update| == lr regardless of grad scale
+        let mut p = TensorList::new(
+            vec!["x".into()],
+            vec![Tensor::from_vec(&[2], vec![0.0, 0.0])],
+        );
+        let g = TensorList::new(
+            vec!["x".into()],
+            vec![Tensor::from_vec(&[2], vec![1000.0, -0.001])],
+        );
+        Adam::new(0.01).step(&mut p, &g);
+        for (x, gsign) in p.tensors[0].data().iter().zip([1.0f32, -1.0]) {
+            assert!((x + gsign * 0.01).abs() < 1e-4, "x={x}");
+        }
+    }
+
+    #[test]
+    fn builder_names() {
+        for name in ["sgd", "sgdm", "adam", "adagrad"] {
+            assert!(build(name, 0.1).is_ok());
+        }
+        assert!(build("lion", 0.1).is_err());
+    }
+}

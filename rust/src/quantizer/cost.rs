@@ -1,0 +1,165 @@
+//! The paper's message-size and compression-ratio accounting (§4.1, §3).
+//!
+//! Original up-link activation payload: `phi * d * B` bits. FedLite
+//! payload: codebook `phi * d * L * R / q` bits + codewords
+//! `B * q * log2(L)` bits. The paper's reported ratios use the *exact*
+//! (possibly fractional) `log2 L` and `phi = 64`; the wire format in
+//! [`crate::comm::message`] uses `ceil(log2 L)` and actual byte counts —
+//! both are exposed here and compared in tests.
+
+use crate::quantizer::packing;
+
+/// Accounting parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Bits per floating-point scalar in the paper's accounting (64).
+    pub phi: usize,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel { phi: 64 }
+    }
+}
+
+impl CostModel {
+    pub fn new(phi: usize) -> Self {
+        CostModel { phi }
+    }
+
+    /// Uncompressed activation upload for one batch, in bits.
+    pub fn raw_activation_bits(&self, b: usize, d: usize) -> f64 {
+        (self.phi * d * b) as f64
+    }
+
+    /// FedLite compressed payload in bits with *exact* `log2 L`
+    /// (paper formula: `phi*d*R*L/q + B*q*log2 L`).
+    pub fn fedlite_bits(&self, b: usize, d: usize, q: usize, r: usize, l: usize) -> f64 {
+        let codebook = self.phi as f64 * d as f64 * r as f64 * l as f64 / q as f64;
+        let codewords = b as f64 * q as f64 * (l as f64).log2().max(0.0);
+        codebook + codewords
+    }
+
+    /// Compression ratio: raw / compressed (paper Figs. 3–5 x-axis).
+    pub fn ratio(&self, b: usize, d: usize, q: usize, r: usize, l: usize) -> f64 {
+        self.raw_activation_bits(b, d) / self.fedlite_bits(b, d, q, r, l)
+    }
+
+    /// Actual wire bytes (f32 codebook entries at 4 bytes + bit-packed
+    /// codewords + header) — what [`crate::comm`] transports.
+    pub fn wire_bytes(&self, b: usize, d: usize, q: usize, r: usize, l: usize) -> usize {
+        let dsub = d / q;
+        let codebook = r * l * dsub * 4;
+        let ng = b * q / r;
+        codebook + r * packing::packed_len(ng, l)
+    }
+
+    // -- per-round per-client up-link totals (Table 1 / Fig. 6) -------------
+
+    /// FedAvg: the whole model every round.
+    pub fn fedavg_uplink_bits(&self, model_params: usize) -> f64 {
+        (self.phi * model_params) as f64
+    }
+
+    /// SplitFed: raw activations + client-side model sync (`B d + |w_c|`).
+    pub fn splitfed_uplink_bits(&self, b: usize, d: usize, wc_params: usize) -> f64 {
+        self.raw_activation_bits(b, d) + (self.phi * wc_params) as f64
+    }
+
+    /// FedLite: compressed activations + client-side model sync.
+    pub fn fedlite_uplink_bits(
+        &self,
+        b: usize,
+        d: usize,
+        q: usize,
+        r: usize,
+        l: usize,
+        wc_params: usize,
+    ) -> f64 {
+        self.fedlite_bits(b, d, q, r, l) + (self.phi * wc_params) as f64
+    }
+}
+
+/// Convenience free functions mirroring the paper's formulas.
+pub fn compressed_bits(phi: usize, b: usize, d: usize, q: usize, r: usize, l: usize) -> f64 {
+    CostModel::new(phi).fedlite_bits(b, d, q, r, l)
+}
+
+pub fn compression_ratio(b: usize, d: usize, q: usize, r: usize, l: usize) -> f64 {
+    CostModel::default().ratio(b, d, q, r, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// FEMNIST headline: d=9216, B=20, q=1152, L=2, R=1 must land near the
+    /// paper's 490x claim.
+    #[test]
+    fn femnist_headline_ratio_matches_paper() {
+        let ratio = compression_ratio(20, 9216, 1152, 1, 2);
+        assert!(
+            (480.0..500.0).contains(&ratio),
+            "expected ~490x, got {ratio:.1}x"
+        );
+    }
+
+    #[test]
+    fn kmeans_limit_matches_formula() {
+        // q = R = 1: ratio = phi d B / (phi d L + B log2 L)
+        let m = CostModel::default();
+        let r = m.ratio(20, 100, 1, 1, 4);
+        let expect = (64.0 * 100.0 * 20.0) / (64.0 * 100.0 * 4.0 + 20.0 * 2.0);
+        assert!((r - expect).abs() < 1e-9);
+        // vanilla K-means with L>=B can never compress
+        assert!(m.ratio(20, 100, 1, 1, 32) < 1.0);
+    }
+
+    #[test]
+    fn grouping_improves_ratio() {
+        // fixing q, decreasing R shrinks the codebook -> larger ratio
+        let m = CostModel::default();
+        let r_grouped = m.ratio(20, 9216, 4608, 1, 8);
+        let r_vanilla = m.ratio(20, 9216, 4608, 4608, 8);
+        assert!(r_grouped > 10.0 * r_vanilla);
+    }
+
+    #[test]
+    fn subvector_division_shrinks_codewords_not_codebook() {
+        let m = CostModel::default();
+        // with R = q (vanilla PQ) codebook bits are phi*d*L regardless of q
+        let b1 = m.fedlite_bits(20, 9216, 1, 1, 8);
+        let b2 = m.fedlite_bits(20, 9216, 288, 288, 8);
+        let codebook = 64.0 * 9216.0 * 8.0;
+        assert!((b1 - (codebook + 20.0 * 3.0)).abs() < 1e-6);
+        assert!((b2 - (codebook + 20.0 * 288.0 * 3.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wire_bytes_close_to_model() {
+        // packed wire bytes should track the f32-variant of the model
+        let m = CostModel::new(32); // wire floats are f32
+        let (b, d, q, r, l) = (20, 9216, 1152, 1, 2);
+        let model_bits = m.fedlite_bits(b, d, q, r, l);
+        let wire = m.wire_bytes(b, d, q, r, l) as f64 * 8.0;
+        let rel = (wire - model_bits).abs() / model_bits;
+        assert!(rel < 0.05, "wire {wire} vs model {model_bits}");
+    }
+
+    #[test]
+    fn uplink_totals_ordering() {
+        // FEMNIST: FedLite << SplitFed < FedAvg (paper Fig. 6 regime)
+        let m = CostModel::default();
+        let (wc, w) = (18_816usize, 1_206_590usize);
+        let fa = m.fedavg_uplink_bits(w);
+        let sf = m.splitfed_uplink_bits(20, 9216, wc);
+        let fl = m.fedlite_uplink_bits(20, 9216, 1152, 1, 2, wc);
+        assert!(fl < sf && sf < fa);
+        // paper §5: FedLite total uplink ~10x smaller than SplitFed
+        let gain = sf / fl;
+        assert!((7.0..14.0).contains(&gain), "gain {gain:.1}");
+        // paper §5: ~62x less than FedAvg
+        let gain_fa = fa / fl;
+        assert!((45.0..80.0).contains(&gain_fa), "gain vs fedavg {gain_fa:.1}");
+    }
+}

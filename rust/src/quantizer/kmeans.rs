@@ -1,0 +1,350 @@
+//! Lloyd's K-means over flat `[n, d]` point buffers.
+//!
+//! Semantics are kept bit-compatible with the Pallas kernel and the jnp
+//! oracle (`python/compile/kernels/ref.py`): squared-euclidean metric,
+//! argmin ties broken toward the lowest centroid index, empty clusters
+//! keep their previous centroid. Initialization is either L distinct
+//! random rows (what the AOT artifacts receive) or k-means++.
+
+use crate::util::rng::Rng;
+
+/// Centroid initialization strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KMeansInit {
+    /// L distinct rows sampled uniformly (matches the PJRT artifact path).
+    RandomRows,
+    /// k-means++ seeding (D² sampling) — better error at equal iterations.
+    PlusPlus,
+}
+
+/// K-means state over points of dimension `d`.
+pub struct KMeans {
+    pub l: usize,
+    pub d: usize,
+    pub iters: usize,
+    pub init: KMeansInit,
+}
+
+impl KMeans {
+    pub fn new(l: usize, d: usize, iters: usize, init: KMeansInit) -> Self {
+        assert!(l >= 1 && d >= 1);
+        KMeans { l, d, iters, init }
+    }
+
+    /// Pick initial centroids from `points` (`n x d`, flat row-major).
+    pub fn init_centroids(&self, points: &[f32], n: usize, rng: &mut Rng) -> Vec<f32> {
+        assert_eq!(points.len(), n * self.d);
+        assert!(n >= 1, "kmeans on empty point set");
+        match self.init {
+            KMeansInit::RandomRows => {
+                // L distinct rows when possible; wrap when n < L.
+                let mut out = Vec::with_capacity(self.l * self.d);
+                let idx = if n >= self.l {
+                    rng.choose_k(n, self.l)
+                } else {
+                    (0..self.l).map(|i| i % n).collect()
+                };
+                for i in idx {
+                    out.extend_from_slice(&points[i * self.d..(i + 1) * self.d]);
+                }
+                out
+            }
+            KMeansInit::PlusPlus => self.plus_plus(points, n, rng),
+        }
+    }
+
+    fn plus_plus(&self, points: &[f32], n: usize, rng: &mut Rng) -> Vec<f32> {
+        let d = self.d;
+        let mut cents = Vec::with_capacity(self.l * d);
+        let first = rng.below(n);
+        cents.extend_from_slice(&points[first * d..(first + 1) * d]);
+        let mut dist2: Vec<f64> = (0..n)
+            .map(|i| sq_dist(&points[i * d..(i + 1) * d], &cents[0..d]) as f64)
+            .collect();
+        for _ in 1..self.l {
+            let total: f64 = dist2.iter().sum();
+            let pick = if total <= 0.0 {
+                rng.below(n)
+            } else {
+                rng.categorical(&dist2)
+            };
+            let start = cents.len();
+            cents.extend_from_slice(&points[pick * d..(pick + 1) * d]);
+            let c = cents[start..start + d].to_vec();
+            for (i, dst) in dist2.iter_mut().enumerate() {
+                let nd = sq_dist(&points[i * d..(i + 1) * d], &c) as f64;
+                if nd < *dst {
+                    *dst = nd;
+                }
+            }
+        }
+        cents
+    }
+
+    /// Nearest-centroid assignment; writes codes and returns total error.
+    pub fn assign(
+        &self,
+        points: &[f32],
+        n: usize,
+        centroids: &[f32],
+        codes: &mut [u32],
+    ) -> f64 {
+        let xnorms = point_norms(points, n, self.d);
+        self.assign_with_norms(points, &xnorms, n, centroids, codes)
+    }
+
+    /// Assignment with pre-computed `||x||^2` per point. `run_from` hoists
+    /// the norm computation out of the Lloyd loop (§Perf: the points never
+    /// change across iterations, only the centroids do).
+    pub fn assign_with_norms(
+        &self,
+        points: &[f32],
+        xnorms: &[f32],
+        n: usize,
+        centroids: &[f32],
+        codes: &mut [u32],
+    ) -> f64 {
+        assert_eq!(centroids.len(), self.l * self.d);
+        assert_eq!(codes.len(), n);
+        let d = self.d;
+        // ||c||^2 precomputed once per pass.
+        let cnorm: Vec<f32> = (0..self.l)
+            .map(|j| dot(&centroids[j * d..(j + 1) * d], &centroids[j * d..(j + 1) * d]))
+            .collect();
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let x = &points[i * d..(i + 1) * d];
+            let xn = xnorms[i];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for j in 0..self.l {
+                let c = &centroids[j * d..(j + 1) * d];
+                let dist = xn - 2.0 * dot(x, c) + cnorm[j];
+                if dist < best_d {
+                    best_d = dist;
+                    best = j;
+                }
+            }
+            codes[i] = best as u32;
+            total += best_d.max(0.0) as f64;
+        }
+        total
+    }
+
+    /// Lloyd centroid update; empty clusters keep the previous centroid.
+    pub fn update(
+        &self,
+        points: &[f32],
+        n: usize,
+        codes: &[u32],
+        centroids: &mut [f32],
+    ) {
+        let d = self.d;
+        let mut sums = vec![0.0f64; self.l * d];
+        let mut counts = vec![0usize; self.l];
+        for i in 0..n {
+            let j = codes[i] as usize;
+            counts[j] += 1;
+            let x = &points[i * d..(i + 1) * d];
+            let s = &mut sums[j * d..(j + 1) * d];
+            for (sv, xv) in s.iter_mut().zip(x) {
+                *sv += *xv as f64;
+            }
+        }
+        for j in 0..self.l {
+            if counts[j] > 0 {
+                let inv = 1.0 / counts[j] as f64;
+                for k in 0..d {
+                    centroids[j * d + k] = (sums[j * d + k] * inv) as f32;
+                }
+            }
+        }
+    }
+
+    /// Full run: init + `iters` Lloyd iterations + final assignment.
+    /// Returns `(centroids, codes, final_sq_error)`.
+    pub fn run(
+        &self,
+        points: &[f32],
+        n: usize,
+        rng: &mut Rng,
+    ) -> (Vec<f32>, Vec<u32>, f64) {
+        let mut centroids = self.init_centroids(points, n, rng);
+        self.run_from(points, n, &mut centroids)
+            .map_with(centroids)
+    }
+
+    /// Lloyd iterations from given initial centroids (mutated in place).
+    /// Returns `(codes, final_sq_error)`.
+    pub fn run_from(
+        &self,
+        points: &[f32],
+        n: usize,
+        centroids: &mut Vec<f32>,
+    ) -> RunOut {
+        let mut codes = vec![0u32; n];
+        // §Perf: point norms are loop-invariant across Lloyd iterations.
+        let xnorms = point_norms(points, n, self.d);
+        for _ in 0..self.iters {
+            self.assign_with_norms(points, &xnorms, n, centroids, &mut codes);
+            self.update(points, n, &codes, centroids);
+        }
+        let err = self.assign_with_norms(points, &xnorms, n, centroids, &mut codes);
+        RunOut { codes, err }
+    }
+}
+
+/// Output of `run_from`.
+pub struct RunOut {
+    pub codes: Vec<u32>,
+    pub err: f64,
+}
+
+impl RunOut {
+    fn map_with(self, centroids: Vec<f32>) -> (Vec<f32>, Vec<u32>, f64) {
+        (centroids, self.codes, self.err)
+    }
+}
+
+fn point_norms(points: &[f32], n: usize, d: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| dot(&points[i * d..(i + 1) * d], &points[i * d..(i + 1) * d]))
+        .collect()
+}
+
+/// 4-lane unrolled dot product — the assignment inner loop is dominated by
+/// short dots (dsub 8–32); independent partial sums let the compiler keep
+/// four accumulators live instead of a serial FP dependency chain (§Perf).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_points(rng: &mut Rng, centers: &[[f32; 2]], per: usize, std: f32) -> Vec<f32> {
+        let mut out = Vec::new();
+        for c in centers {
+            for _ in 0..per {
+                out.push(c[0] + rng.normal() as f32 * std);
+                out.push(c[1] + rng.normal() as f32 * std);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(0);
+        let centers = [[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let pts = blob_points(&mut rng, &centers, 50, 0.2);
+        let km = KMeans::new(3, 2, 10, KMeansInit::PlusPlus);
+        let (cents, codes, err) = km.run(&pts, 150, &mut rng);
+        assert!(err / 150.0 < 0.3, "per-point err {}", err / 150.0);
+        // each blob maps to exactly one cluster
+        for blob in 0..3 {
+            let c0 = codes[blob * 50];
+            assert!(codes[blob * 50..(blob + 1) * 50].iter().all(|&c| c == c0));
+        }
+        // centroids near true centers (in some order)
+        for c in &centers {
+            let best = (0..3)
+                .map(|j| sq_dist(&cents[j * 2..j * 2 + 2], c))
+                .fold(f32::INFINITY, f32::min);
+            assert!(best < 0.1, "center {c:?} off by {best}");
+        }
+    }
+
+    #[test]
+    fn error_nonincreasing_over_iters() {
+        let mut rng = Rng::new(1);
+        let pts: Vec<f32> = (0..600).map(|_| rng.normal() as f32).collect();
+        let mut prev = f64::INFINITY;
+        for iters in 0..6 {
+            let mut r = Rng::new(7); // same init each time
+            let km = KMeans::new(8, 3, iters, KMeansInit::RandomRows);
+            let (_, _, err) = km.run(&pts, 200, &mut r);
+            assert!(err <= prev + 1e-6, "iters={iters}: {err} > {prev}");
+            prev = err;
+        }
+    }
+
+    #[test]
+    fn empty_cluster_keeps_centroid() {
+        // 2 tight blobs + one far-away init centroid that captures nothing
+        let pts = vec![0.0, 0.0, 0.1, 0.0, 5.0, 5.0, 5.1, 5.0];
+        let km = KMeans::new(3, 2, 4, KMeansInit::RandomRows);
+        let mut cents = vec![0.0, 0.0, 5.0, 5.0, 1e3, 1e3];
+        let out = km.run_from(&pts, 4, &mut cents);
+        assert_eq!(&cents[4..6], &[1e3, 1e3]);
+        assert!(out.codes.iter().all(|&c| c != 2));
+    }
+
+    #[test]
+    fn exact_match_assigns_self() {
+        let pts = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let km = KMeans::new(3, 2, 0, KMeansInit::RandomRows);
+        let mut codes = vec![0u32; 3];
+        let err = km.assign(&pts, 3, &pts.clone(), &mut codes);
+        assert_eq!(codes, vec![0, 1, 2]);
+        assert!(err.abs() < 1e-9);
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_index() {
+        // two identical centroids: argmin must pick index 0
+        let pts = vec![1.0f32, 1.0];
+        let cents = vec![1.0f32, 1.0, 1.0, 1.0];
+        let km = KMeans::new(2, 2, 0, KMeansInit::RandomRows);
+        let mut codes = vec![9u32; 1];
+        km.assign(&pts, 1, &cents, &mut codes);
+        assert_eq!(codes[0], 0);
+    }
+
+    #[test]
+    fn more_clusters_than_points_wraps() {
+        let pts = vec![1.0f32, 2.0, 3.0, 4.0];
+        let km = KMeans::new(4, 2, 2, KMeansInit::RandomRows);
+        let mut rng = Rng::new(3);
+        let (cents, codes, err) = km.run(&pts, 2, &mut rng);
+        assert_eq!(cents.len(), 8);
+        assert_eq!(codes.len(), 2);
+        assert!(err < 1e-9); // 2 points, >=2 distinct centroids -> exact
+    }
+
+    #[test]
+    fn l_equals_one_gives_mean() {
+        let pts = vec![0.0f32, 0.0, 2.0, 0.0, 4.0, 6.0];
+        let km = KMeans::new(1, 2, 3, KMeansInit::RandomRows);
+        let mut rng = Rng::new(5);
+        let (cents, _, _) = km.run(&pts, 3, &mut rng);
+        assert!((cents[0] - 2.0).abs() < 1e-6);
+        assert!((cents[1] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,24 @@
+//! The FedLite grouped product quantizer (paper §4.1), native engine.
+//!
+//! Two interchangeable implementations exist in the system:
+//!
+//! * this **native rust engine** — used for arbitrary `(q, L, R)` sweeps
+//!   (Figures 3, 4, 5) and on the hot path when `quantizer = "native"`;
+//! * the **Pallas/PJRT artifacts** (`artifacts/*/pq_q*_L*_R*.hlo.txt`) —
+//!   the L1 kernels, used when `quantizer = "pjrt"`.
+//!
+//! Integration tests cross-validate the two paths on identical inputs.
+//!
+//! Submodules: [`kmeans`] (Lloyd + k-means++ init), [`pq`] (subvector
+//! split/grouping + end-to-end quantize), [`packing`] (log2(L)-bit
+//! codeword packing for the wire), [`cost`] (the paper's message-size
+//! and compression-ratio model).
+
+pub mod cost;
+pub mod kmeans;
+pub mod packing;
+pub mod pq;
+
+pub use cost::{compressed_bits, compression_ratio, CostModel};
+pub use kmeans::{KMeans, KMeansInit};
+pub use pq::{GroupedPq, PqConfig, PqOutput};

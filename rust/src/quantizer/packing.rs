@@ -1,0 +1,130 @@
+//! Bit-packing of PQ codewords for the wire.
+//!
+//! Each code needs `ceil(log2 L)` bits; the paper's size accounting uses
+//! the exact (possibly fractional) `log2 L` — [`super::cost`] models that —
+//! while the actual transported bytes use this packed form. Codes are
+//! packed little-endian within a contiguous bit stream.
+
+/// Bits needed to store one code for `l` clusters (`ceil(log2 l)`, min 1
+/// bit so the stream is never empty; L = 1 still carries one (zero) bit).
+pub fn bits_per_code(l: usize) -> u32 {
+    debug_assert!(l >= 1);
+    if l <= 1 {
+        1
+    } else {
+        usize::BITS - (l - 1).leading_zeros()
+    }
+}
+
+/// Pack `codes` (each `< l`) into a little-endian bit stream.
+pub fn pack(codes: &[u32], l: usize) -> Vec<u8> {
+    let bits = bits_per_code(l) as usize;
+    let total_bits = codes.len() * bits;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!((c as usize) < l.max(1), "code {c} out of range for L={l}");
+        let mut v = c as u64;
+        let mut remaining = bits;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = remaining.min(8 - off);
+            out[byte] |= ((v & ((1u64 << take) - 1)) as u8) << off;
+            v >>= take;
+            bitpos += take;
+            remaining -= take;
+        }
+    }
+    out
+}
+
+/// Unpack `n` codes from a bit stream produced by [`pack`].
+pub fn unpack(bytes: &[u8], n: usize, l: usize) -> anyhow::Result<Vec<u32>> {
+    let bits = bits_per_code(l) as usize;
+    let need = (n * bits).div_ceil(8);
+    anyhow::ensure!(
+        bytes.len() >= need,
+        "packed stream too short: {} bytes < {} needed",
+        bytes.len(),
+        need
+    );
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let mut v = 0u64;
+        let mut got = 0usize;
+        while got < bits {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (bits - got).min(8 - off);
+            let chunk = (bytes[byte] >> off) as u64 & ((1u64 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            bitpos += take;
+        }
+        anyhow::ensure!((v as usize) < l.max(2).max(l), "decoded code {v} >= L={l}");
+        out.push(v as u32);
+    }
+    Ok(out)
+}
+
+/// Packed size in bytes for `n` codes with `l` clusters.
+pub fn packed_len(n: usize, l: usize) -> usize {
+    (n * bits_per_code(l) as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_per_code_values() {
+        assert_eq!(bits_per_code(1), 1);
+        assert_eq!(bits_per_code(2), 1);
+        assert_eq!(bits_per_code(3), 2);
+        assert_eq!(bits_per_code(4), 2);
+        assert_eq!(bits_per_code(5), 3);
+        assert_eq!(bits_per_code(32), 5);
+        assert_eq!(bits_per_code(33), 6);
+        assert_eq!(bits_per_code(1024), 10);
+    }
+
+    #[test]
+    fn roundtrip_various_l() {
+        let mut rng = Rng::new(0);
+        for &l in &[1usize, 2, 3, 7, 8, 17, 60, 100, 960] {
+            for &n in &[0usize, 1, 5, 64, 1000] {
+                let codes: Vec<u32> =
+                    (0..n).map(|_| rng.below(l.max(1)) as u32).collect();
+                let packed = pack(&codes, l);
+                assert_eq!(packed.len(), packed_len(n, l));
+                let back = unpack(&packed, n, l).unwrap();
+                assert_eq!(back, codes, "L={l} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_compact() {
+        // 8 codes with L=2 -> exactly 1 byte
+        assert_eq!(pack(&[1, 0, 1, 1, 0, 0, 1, 0], 2).len(), 1);
+        // 3 codes with L=32 (5 bits) -> 15 bits -> 2 bytes
+        assert_eq!(pack(&[31, 0, 17], 32).len(), 2);
+    }
+
+    #[test]
+    fn short_stream_rejected() {
+        let packed = pack(&[1, 2, 3], 4);
+        assert!(unpack(&packed[..packed.len() - 1], 3, 4).is_err());
+    }
+
+    #[test]
+    fn cross_byte_boundaries() {
+        // 5-bit codes crossing byte boundaries exercise split writes
+        let codes: Vec<u32> = (0..29).map(|i| (i * 7) % 31).collect();
+        let packed = pack(&codes, 31);
+        assert_eq!(unpack(&packed, 29, 31).unwrap(), codes);
+    }
+}

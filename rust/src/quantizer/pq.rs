@@ -1,0 +1,324 @@
+//! Grouped product quantization of activation batches (paper Fig. 2).
+//!
+//! Given activations `Z [B, d]`: split each row into `q` subvectors of
+//! dim `d/q`, stack subvectors into `R` index-contiguous groups (group `g`
+//! holds subvector indices `[g·q/R, (g+1)·q/R)` of every example), K-means
+//! each group to `L` centroids, emit (codebooks, codes, quantized Z).
+//!
+//! `q = 1` degenerates to vanilla K-means over whole vectors; `R = q`
+//! is vanilla product quantization (per-subvector-position codebooks);
+//! `R = 1` is the paper's preferred configuration.
+
+use crate::quantizer::kmeans::{sq_dist, KMeans, KMeansInit};
+use crate::util::rng::Rng;
+
+/// Quantizer hyper-parameters (paper notation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PqConfig {
+    /// Number of subvectors each activation vector is split into.
+    pub q: usize,
+    /// Number of groups sharing a codebook (1 <= R <= q, R | q).
+    pub r: usize,
+    /// Number of centroids per group.
+    pub l: usize,
+    /// Lloyd iterations.
+    pub iters: usize,
+    /// Centroid init (RandomRows matches the PJRT artifacts).
+    pub init: KMeansInit,
+}
+
+impl PqConfig {
+    pub fn new(q: usize, r: usize, l: usize) -> Self {
+        PqConfig { q, r, l, iters: 8, init: KMeansInit::RandomRows }
+    }
+
+    pub fn with_iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    pub fn with_init(mut self, init: KMeansInit) -> Self {
+        self.init = init;
+        self
+    }
+
+    pub fn validate(&self, d: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.q >= 1 && self.r >= 1 && self.l >= 1, "q,R,L >= 1");
+        anyhow::ensure!(d % self.q == 0, "q={} must divide d={}", self.q, d);
+        anyhow::ensure!(self.q % self.r == 0, "R={} must divide q={}", self.r, self.q);
+        Ok(())
+    }
+
+    pub fn dsub(&self, d: usize) -> usize {
+        d / self.q
+    }
+
+    /// Subvectors per group for an activation batch of `b` rows.
+    pub fn group_size(&self, b: usize) -> usize {
+        b * self.q / self.r
+    }
+}
+
+/// Result of quantizing one activation batch.
+#[derive(Clone, Debug)]
+pub struct PqOutput {
+    /// `[R, L, dsub]` flat codebooks.
+    pub codebooks: Vec<f32>,
+    /// `[R, Ng]` flat cluster assignments.
+    pub codes: Vec<u32>,
+    /// `[B, d]` reconstructed (quantized) activations.
+    pub z_tilde: Vec<f32>,
+    /// Sum of squared quantization error `||Z - Z~||^2`.
+    pub sq_error: f64,
+    pub config: PqConfig,
+    pub b: usize,
+    pub d: usize,
+}
+
+impl PqOutput {
+    /// Relative error `||Z - Z~||_F / ||Z||_F` (Fig. 3 y-axis).
+    pub fn relative_error(&self, z: &[f32]) -> f64 {
+        let zn: f64 = z.iter().map(|&x| (x as f64) * (x as f64)).sum();
+        (self.sq_error / zn.max(1e-24)).sqrt()
+    }
+
+    /// Maximum per-example quantization error `max_j ||z_j - z~_j||`
+    /// (the κ in Theorem 4.1).
+    pub fn kappa(&self, z: &[f32]) -> f64 {
+        let mut kmax = 0.0f64;
+        for j in 0..self.b {
+            let row = &z[j * self.d..(j + 1) * self.d];
+            let qrow = &self.z_tilde[j * self.d..(j + 1) * self.d];
+            kmax = kmax.max(sq_dist(row, qrow) as f64);
+        }
+        kmax.sqrt()
+    }
+}
+
+/// The grouped product quantizer engine.
+pub struct GroupedPq {
+    pub config: PqConfig,
+    pub d: usize,
+}
+
+impl GroupedPq {
+    pub fn new(config: PqConfig, d: usize) -> anyhow::Result<Self> {
+        config.validate(d)?;
+        Ok(GroupedPq { config, d })
+    }
+
+    /// Gather the subvectors of group `g` from `z [b, d]` into a flat
+    /// `[Ng, dsub]` buffer (paper Fig. 2 steps i–ii).
+    pub fn gather_group(&self, z: &[f32], b: usize, g: usize, out: &mut Vec<f32>) {
+        let c = &self.config;
+        let dsub = c.dsub(self.d);
+        let per_group = c.q / c.r;
+        out.clear();
+        out.reserve(b * per_group * dsub);
+        for j in 0..b {
+            let row = &z[j * self.d..(j + 1) * self.d];
+            let start = g * per_group * dsub;
+            out.extend_from_slice(&row[start..start + per_group * dsub]);
+        }
+    }
+
+    /// Scatter quantized group subvectors back into `z_tilde [b, d]`.
+    fn scatter_group(&self, group: &[f32], b: usize, g: usize, z_tilde: &mut [f32]) {
+        let c = &self.config;
+        let dsub = c.dsub(self.d);
+        let per_group = c.q / c.r;
+        let chunk = per_group * dsub;
+        for j in 0..b {
+            let dst = &mut z_tilde[j * self.d + g * chunk..j * self.d + (g + 1) * chunk];
+            dst.copy_from_slice(&group[j * chunk..(j + 1) * chunk]);
+        }
+    }
+
+    /// Quantize one activation batch `z [b, d]`.
+    pub fn quantize(&self, z: &[f32], b: usize, rng: &mut Rng) -> PqOutput {
+        assert_eq!(z.len(), b * self.d, "z len vs b*d");
+        let c = self.config;
+        let dsub = c.dsub(self.d);
+        let ng = c.group_size(b);
+        let km = KMeans::new(c.l, dsub, c.iters, c.init);
+
+        let mut codebooks = Vec::with_capacity(c.r * c.l * dsub);
+        let mut codes = Vec::with_capacity(c.r * ng);
+        let mut z_tilde = vec![0.0f32; b * self.d];
+        let mut sq_error = 0.0f64;
+        let mut group_buf: Vec<f32> = Vec::new();
+        let mut recon = vec![0.0f32; ng * dsub];
+
+        for g in 0..c.r {
+            self.gather_group(z, b, g, &mut group_buf);
+            let mut cents = km.init_centroids(&group_buf, ng, rng);
+            let out = km.run_from(&group_buf, ng, &mut cents);
+            sq_error += out.err;
+            for (i, &code) in out.codes.iter().enumerate() {
+                let src = &cents[code as usize * dsub..(code as usize + 1) * dsub];
+                recon[i * dsub..(i + 1) * dsub].copy_from_slice(src);
+            }
+            self.scatter_group(&recon, b, g, &mut z_tilde);
+            codebooks.extend_from_slice(&cents);
+            codes.extend(out.codes);
+        }
+
+        PqOutput { codebooks, codes, z_tilde, sq_error, config: c, b, d: self.d }
+    }
+
+    /// Reconstruct `z_tilde` from codebooks + codes (server side).
+    pub fn reconstruct(
+        &self,
+        codebooks: &[f32],
+        codes: &[u32],
+        b: usize,
+    ) -> Vec<f32> {
+        let c = self.config;
+        let dsub = c.dsub(self.d);
+        let ng = c.group_size(b);
+        assert_eq!(codebooks.len(), c.r * c.l * dsub);
+        assert_eq!(codes.len(), c.r * ng);
+        let mut z_tilde = vec![0.0f32; b * self.d];
+        let mut recon = vec![0.0f32; ng * dsub];
+        for g in 0..c.r {
+            let cb = &codebooks[g * c.l * dsub..(g + 1) * c.l * dsub];
+            let gc = &codes[g * ng..(g + 1) * ng];
+            for (i, &code) in gc.iter().enumerate() {
+                let src = &cb[code as usize * dsub..(code as usize + 1) * dsub];
+                recon[i * dsub..(i + 1) * dsub].copy_from_slice(src);
+            }
+            self.scatter_group(&recon, b, g, &mut z_tilde);
+        }
+        z_tilde
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randz(rng: &mut Rng, b: usize, d: usize) -> Vec<f32> {
+        (0..b * d).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn roundtrip_reconstruct_matches_quantize() {
+        let mut rng = Rng::new(0);
+        let (b, d) = (6, 24);
+        let z = randz(&mut rng, b, d);
+        let pq = GroupedPq::new(PqConfig::new(8, 2, 3), d).unwrap();
+        let out = pq.quantize(&z, b, &mut rng);
+        let rec = pq.reconstruct(&out.codebooks, &out.codes, b);
+        assert_eq!(rec, out.z_tilde);
+    }
+
+    #[test]
+    fn qerr_matches_z_tilde_distance() {
+        let mut rng = Rng::new(1);
+        let (b, d) = (5, 16);
+        let z = randz(&mut rng, b, d);
+        let pq = GroupedPq::new(PqConfig::new(4, 1, 2), d).unwrap();
+        let out = pq.quantize(&z, b, &mut rng);
+        let direct: f64 = z
+            .iter()
+            .zip(&out.z_tilde)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!((out.sq_error - direct).abs() < 1e-4 * direct.max(1.0));
+    }
+
+    #[test]
+    fn grouping_layout_matches_paper() {
+        // z[j, s] = 10*j + s with dsub=1: group g must contain subvector
+        // indices [g*q/R, (g+1)*q/R) of every example.
+        let (b, d, q, r) = (2, 4, 4, 2);
+        let z: Vec<f32> = (0..b)
+            .flat_map(|j| (0..d).map(move |s| (10 * j + s) as f32))
+            .collect();
+        let pq = GroupedPq::new(PqConfig::new(q, r, 2), d).unwrap();
+        let mut buf = Vec::new();
+        pq.gather_group(&z, b, 0, &mut buf);
+        assert_eq!(buf, vec![0.0, 1.0, 10.0, 11.0]);
+        pq.gather_group(&z, b, 1, &mut buf);
+        assert_eq!(buf, vec![2.0, 3.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn perfect_quantization_when_patterns_repeat() {
+        // Subvectors drawn from exactly L patterns -> zero error.
+        let mut rng = Rng::new(2);
+        let patterns: Vec<Vec<f32>> = (0..2)
+            .map(|_| (0..4).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let (b, q) = (6, 8);
+        let d = q * 4;
+        let mut z = Vec::with_capacity(b * d);
+        for _ in 0..b {
+            for _ in 0..q {
+                z.extend_from_slice(&patterns[rng.below(2)]);
+            }
+        }
+        let pq = GroupedPq::new(PqConfig::new(q, 1, 2).with_iters(12), d).unwrap();
+        let out = pq.quantize(&z, b, &mut rng);
+        assert!(out.sq_error < 1e-6, "err {}", out.sq_error);
+        assert!(out.relative_error(&z) < 1e-4);
+    }
+
+    #[test]
+    fn q1_is_vanilla_kmeans_rows() {
+        let mut rng = Rng::new(3);
+        let (b, d) = (10, 6);
+        let z = randz(&mut rng, b, d);
+        let pq = GroupedPq::new(PqConfig::new(1, 1, 3), d).unwrap();
+        let out = pq.quantize(&z, b, &mut rng);
+        // every reconstructed row must be one of the 3 codebook rows
+        for j in 0..b {
+            let row = &out.z_tilde[j * d..(j + 1) * d];
+            let matched = (0..3).any(|l| {
+                let c = &out.codebooks[l * d..(l + 1) * d];
+                sq_dist(row, c) < 1e-12
+            });
+            assert!(matched, "row {j} not a centroid");
+        }
+    }
+
+    #[test]
+    fn more_clusters_lower_error() {
+        let mut rng = Rng::new(4);
+        let (b, d) = (20, 32);
+        let z = randz(&mut rng, b, d);
+        let mut last = f64::INFINITY;
+        for l in [1usize, 2, 8, 32] {
+            let pq = GroupedPq::new(PqConfig::new(8, 1, l).with_iters(15), d).unwrap();
+            // fixed rng per run for fair comparison
+            let mut r = Rng::new(99);
+            let out = pq.quantize(&z, b, &mut r);
+            assert!(
+                out.sq_error <= last * 1.05,
+                "L={l}: {} vs {}",
+                out.sq_error,
+                last
+            );
+            last = out.sq_error;
+        }
+    }
+
+    #[test]
+    fn kappa_bounds_mean_error() {
+        let mut rng = Rng::new(5);
+        let (b, d) = (8, 16);
+        let z = randz(&mut rng, b, d);
+        let pq = GroupedPq::new(PqConfig::new(4, 1, 2), d).unwrap();
+        let out = pq.quantize(&z, b, &mut rng);
+        let kappa = out.kappa(&z);
+        let mean_sq = out.sq_error / b as f64;
+        assert!(kappa * kappa + 1e-9 >= mean_sq);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(GroupedPq::new(PqConfig::new(5, 1, 2), 16).is_err()); // q !| d
+        assert!(GroupedPq::new(PqConfig::new(4, 3, 2), 16).is_err()); // r !| q
+        assert!(GroupedPq::new(PqConfig::new(4, 2, 2), 16).is_ok());
+    }
+}

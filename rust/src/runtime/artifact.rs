@@ -1,0 +1,301 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The manifest, written by `python/compile/aot.py`, is the single source
+//! of truth for artifact paths, input order/shapes/dtypes/roles, output
+//! names, PQ geometries, and model parameter specs. The coordinator never
+//! hard-codes a shape: everything flows from here.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::data::Array;
+use crate::models::ModelSpec;
+use crate::util::json::{self, Value};
+
+/// One input or output slot of an artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// `f32` or `s32`.
+    pub dtype: String,
+    /// `param_client` | `param_server` | `data` | `cut` | `grad_cut` | `hyper`.
+    pub role: String,
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    /// PQ geometry for quantizer artifacts (q, r, l, iters, ng, dsub...).
+    pub meta: Value,
+}
+
+impl ArtifactMeta {
+    /// Validate a prepared input list against the manifest.
+    pub fn check_inputs(&self, inputs: &[Array]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.inputs.len(),
+            "expected {} inputs, got {}",
+            self.inputs.len(),
+            inputs.len()
+        );
+        for (spec, arr) in self.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                spec.shape == arr.shape(),
+                "input '{}': shape {:?} != manifest {:?}",
+                spec.name,
+                arr.shape(),
+                spec.shape
+            );
+            let dt = match arr {
+                Array::F32 { .. } => "f32",
+                Array::I32 { .. } => "s32",
+            };
+            anyhow::ensure!(
+                dt == spec.dtype,
+                "input '{}': dtype {dt} != manifest {}",
+                spec.name,
+                spec.dtype
+            );
+        }
+        Ok(())
+    }
+
+    /// Index of an output by name.
+    pub fn output_index(&self, name: &str) -> anyhow::Result<usize> {
+        self.outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {} has no output '{name}'", self.name))
+    }
+}
+
+/// One task variant: model spec + its artifacts.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub spec: ModelSpec,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Variant {
+    /// The PQ artifacts available, as (q, l, r) -> artifact name.
+    pub fn pq_artifacts(&self) -> Vec<(usize, usize, usize, String)> {
+        let mut out = Vec::new();
+        for (name, a) in &self.artifacts {
+            if !name.starts_with("pq_") {
+                continue;
+            }
+            let (q, l, r) = (
+                a.meta.get("q").as_usize().unwrap_or(0),
+                a.meta.get("l").as_usize().unwrap_or(0),
+                a.meta.get("r").as_usize().unwrap_or(0),
+            );
+            out.push((q, l, r, name.clone()));
+        }
+        out.sort();
+        out
+    }
+
+    /// Find the quantizer artifact matching a PQ config.
+    pub fn find_pq(&self, q: usize, l: usize, r: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.values().find(|a| {
+            a.name.starts_with("pq_")
+                && a.meta.get("q").as_usize() == Some(q)
+                && a.meta.get("l").as_usize() == Some(l)
+                && a.meta.get("r").as_usize() == Some(r)
+        })
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub variants: HashMap<String, Variant>,
+    pub jax_version: String,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!(
+                "read manifest {}: {e} (run `make artifacts` first)",
+                path.as_ref().display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let v = json::parse(text)?;
+        let mut variants = HashMap::new();
+        let vs = v
+            .get("variants")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing variants"))?;
+        for (vname, vval) in vs.iter() {
+            let spec = ModelSpec::from_manifest_variant(vval)?;
+            let mut artifacts = HashMap::new();
+            if let Some(arts) = vval.get("artifacts").as_obj() {
+                for (aname, aval) in arts.iter() {
+                    artifacts.insert(aname.clone(), parse_artifact(aname, aval)?);
+                }
+            }
+            variants.insert(vname.clone(), Variant { spec, artifacts });
+        }
+        Ok(Manifest {
+            variants,
+            jax_version: v.get("jax_version").as_str().unwrap_or("?").to_string(),
+        })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&Variant> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "variant '{name}' not in manifest (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact(&self, variant: &str, name: &str) -> anyhow::Result<&ArtifactMeta> {
+        self.variant(variant)?.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!("artifact '{name}' not in variant '{variant}'")
+        })
+    }
+}
+
+fn parse_artifact(name: &str, v: &Value) -> anyhow::Result<ArtifactMeta> {
+    let inputs = v
+        .get("inputs")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("artifact {name}: no inputs"))?
+        .iter()
+        .map(|i| {
+            Ok(IoSpec {
+                name: i.get("name").as_str().unwrap_or_default().to_string(),
+                shape: i
+                    .get("shape")
+                    .as_usize_vec()
+                    .ok_or_else(|| anyhow::anyhow!("artifact {name}: bad input shape"))?,
+                dtype: i.get("dtype").as_str().unwrap_or("f32").to_string(),
+                role: i.get("role").as_str().unwrap_or("data").to_string(),
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let outputs = v
+        .get("outputs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|o| o.as_str().map(str::to_string))
+        .collect();
+    Ok(ArtifactMeta {
+        name: name.to_string(),
+        path: v
+            .get("path")
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("artifact {name}: no path"))?
+            .to_string(),
+        inputs,
+        outputs,
+        meta: v.get("meta").clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "jax_version": "0.8.2",
+      "variants": {
+        "toy_small": {
+          "task": "toy", "preset": "small",
+          "config": {"batch": 4, "eval_batch": 8},
+          "cut_dim": 16, "act_batch": 4,
+          "client_params": [
+            {"name": "w", "shape": [2, 16], "init": "glorot_uniform",
+             "scale": 1.0, "fan_in": 2, "fan_out": 16}
+          ],
+          "server_params": [
+            {"name": "v", "shape": [16, 3], "init": "glorot_uniform",
+             "scale": 1.0, "fan_in": 16, "fan_out": 3}
+          ],
+          "client_param_count": 32, "server_param_count": 48,
+          "metrics": ["correct"],
+          "client_args": ["x"], "server_args": ["y"],
+          "artifacts": {
+            "client_fwd": {
+              "path": "toy_small/client_fwd.hlo.txt",
+              "inputs": [
+                {"name": "w", "shape": [2, 16], "dtype": "f32", "role": "param_client"},
+                {"name": "x", "shape": [4, 2], "dtype": "f32", "role": "data"}
+              ],
+              "outputs": ["z"], "meta": {}
+            },
+            "pq_q4_L2_R1": {
+              "path": "toy_small/pq.hlo.txt",
+              "inputs": [
+                {"name": "z", "shape": [4, 16], "dtype": "f32", "role": "cut"},
+                {"name": "init_centroids", "shape": [1, 2, 4], "dtype": "f32", "role": "data"}
+              ],
+              "outputs": ["codebooks", "codes", "z_tilde", "qerr"],
+              "meta": {"q": 4, "l": 2, "r": 1, "iters": 8, "dsub": 4, "ng": 16,
+                       "act_batch": 4, "d": 16}
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.variant("toy_small").unwrap();
+        assert_eq!(v.spec.cut_dim, 16);
+        assert_eq!(v.spec.client.numel(), 32);
+        let a = m.artifact("toy_small", "client_fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].role, "param_client");
+        assert_eq!(a.output_index("z").unwrap(), 0);
+        assert!(a.output_index("nope").is_err());
+        assert!(m.variant("missing").is_err());
+    }
+
+    #[test]
+    fn input_checking() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = m.artifact("toy_small", "client_fwd").unwrap();
+        let good = vec![
+            Array::f32(&[2, 16], vec![0.0; 32]),
+            Array::f32(&[4, 2], vec![0.0; 8]),
+        ];
+        assert!(a.check_inputs(&good).is_ok());
+        let bad_shape = vec![
+            Array::f32(&[2, 16], vec![0.0; 32]),
+            Array::f32(&[4, 3], vec![0.0; 12]),
+        ];
+        assert!(a.check_inputs(&bad_shape).is_err());
+        let bad_dtype = vec![
+            Array::f32(&[2, 16], vec![0.0; 32]),
+            Array::i32(&[4, 2], vec![0; 8]),
+        ];
+        assert!(a.check_inputs(&bad_dtype).is_err());
+        assert!(a.check_inputs(&good[..1]).is_err());
+    }
+
+    #[test]
+    fn pq_lookup() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.variant("toy_small").unwrap();
+        assert!(v.find_pq(4, 2, 1).is_some());
+        assert!(v.find_pq(4, 8, 1).is_none());
+        let list = v.pq_artifacts();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].0, 4);
+    }
+}

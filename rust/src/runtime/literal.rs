@@ -1,0 +1,91 @@
+//! `Array` ⇄ `xla::Literal` conversion.
+//!
+//! Arrays are row-major; XLA literals use the default (major-to-minor
+//! descending) layout, which matches row-major for `vec1().reshape(...)`.
+//! Rank-0 tensors go through `Literal::scalar`.
+
+use crate::data::Array;
+
+/// Convert a typed array into an XLA literal of the same shape/dtype.
+pub fn array_to_literal(a: &Array) -> anyhow::Result<xla::Literal> {
+    let dims: Vec<i64> = a.shape().iter().map(|&d| d as i64).collect();
+    let lit = match a {
+        Array::F32 { data, .. } => {
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            xla::Literal::vec1(data)
+        }
+        Array::I32 { data, .. } => {
+            if dims.is_empty() {
+                return Ok(xla::Literal::scalar(data[0]));
+            }
+            xla::Literal::vec1(data)
+        }
+    };
+    lit.reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape to {dims:?}: {e}"))
+}
+
+/// Convert an XLA literal back into a typed array.
+pub fn literal_to_array(lit: &xla::Literal) -> anyhow::Result<Array> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("literal shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.element_type() {
+        xla::ElementType::F32 => {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("literal f32 data: {e}"))?;
+            Ok(Array::f32(&dims, data))
+        }
+        xla::ElementType::S32 => {
+            let data = lit
+                .to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("literal i32 data: {e}"))?;
+            Ok(Array::i32(&dims, data))
+        }
+        other => anyhow::bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = Array::f32(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let lit = array_to_literal(&a).unwrap();
+        let back = literal_to_array(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f32().unwrap(), a.as_f32().unwrap());
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let a = Array::i32(&[4], vec![-1, 0, 7, 100]);
+        let lit = array_to_literal(&a).unwrap();
+        let back = literal_to_array(&lit).unwrap();
+        assert_eq!(back.as_i32().unwrap(), a.as_i32().unwrap());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let a = Array::f32(&[], vec![2.5]);
+        let lit = array_to_literal(&a).unwrap();
+        let back = literal_to_array(&lit).unwrap();
+        assert_eq!(back.shape(), &[] as &[usize]);
+        assert_eq!(back.as_f32().unwrap(), &[2.5]);
+    }
+
+    #[test]
+    fn rank3_layout_preserved() {
+        let data: Vec<f32> = (0..24).map(|i| i as f32).collect();
+        let a = Array::f32(&[2, 3, 4], data.clone());
+        let lit = array_to_literal(&a).unwrap();
+        let back = literal_to_array(&lit).unwrap();
+        assert_eq!(back.as_f32().unwrap(), &data[..]);
+    }
+}

@@ -1,0 +1,146 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them (Layer 2/1
+//! entry point from rust).
+//!
+//! The flow, adapted from `/opt/xla-example/load_hlo`:
+//! `HloModuleProto::from_text_file` (text, *not* serialized proto — see
+//! `python/compile/aot.py`) → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Compiled executables are cached per
+//! artifact; all lowered functions return tuples (`return_tuple=True`), so
+//! outputs are unwrapped with `Literal::to_tuple`.
+
+pub mod artifact;
+pub mod literal;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::data::Array;
+pub use artifact::{ArtifactMeta, IoSpec, Manifest};
+
+/// The PJRT execution engine: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    root: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// PJRT CPU execute is internally threaded; serialize submissions to
+    /// keep profiles stable (relaxed in the perf pass if beneficial).
+    exec_lock: Mutex<()>,
+}
+
+// xla handles are thread-safe to share behind our own locks.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifacts directory (expects `manifest.json` inside).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(root.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            root,
+            cache: Mutex::new(HashMap::new()),
+            exec_lock: Mutex::new(()),
+        })
+    }
+
+    /// Fetch (compiling + caching on first use) an artifact's executable.
+    pub fn executable(
+        &self,
+        variant: &str,
+        name: &str,
+    ) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{variant}/{name}");
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(e));
+        }
+        let meta = self.manifest.artifact(variant, name)?;
+        let path = self.root.join(&meta.path);
+        log::debug!("compiling artifact {key} from {}", path.display());
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {key}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {key}: {e}"))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Execute an artifact with typed arrays, verifying shapes/dtypes
+    /// against the manifest, and decode all tuple outputs.
+    pub fn run(
+        &self,
+        variant: &str,
+        name: &str,
+        inputs: &[Array],
+    ) -> anyhow::Result<Vec<Array>> {
+        let meta = self.manifest.artifact(variant, name)?.clone();
+        meta.check_inputs(inputs)
+            .map_err(|e| anyhow::anyhow!("{variant}/{name}: {e}"))?;
+        let exe = self.executable(variant, name)?;
+        // Host->device transfer via owned PjRtBuffers + execute_b. The
+        // crate's `execute(Literal)` path leaks every input device buffer
+        // (xla_rs.cc `buffer.release()` without a matching free): at
+        // FEMNIST scale that is ~9 MB per client-step, which OOMs long
+        // runs. Owning the buffers ourselves both fixes the leak and
+        // skips one host-side copy (§Perf).
+        let buffers: Vec<xla::PjRtBuffer> = inputs
+            .iter()
+            .map(|a| {
+                match a {
+                    Array::F32 { shape, data } => {
+                        self.client.buffer_from_host_buffer::<f32>(data, shape, None)
+                    }
+                    Array::I32 { shape, data } => {
+                        self.client.buffer_from_host_buffer::<i32>(data, shape, None)
+                    }
+                }
+                .map_err(|e| anyhow::anyhow!("upload input for {variant}/{name}: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let result = {
+            let _g = self.exec_lock.lock().unwrap();
+            exe.execute_b::<xla::PjRtBuffer>(&buffers)
+                .map_err(|e| anyhow::anyhow!("execute {variant}/{name}: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch {variant}/{name}: {e}"))?
+        };
+        let parts = result
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {variant}/{name}: {e}"))?;
+        anyhow::ensure!(
+            parts.len() == meta.outputs.len(),
+            "{variant}/{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            meta.outputs.len()
+        );
+        parts.iter().map(literal::literal_to_array).collect()
+    }
+
+    /// Warm the cache for a set of artifacts (measures compile time).
+    pub fn precompile(&self, variant: &str, names: &[&str]) -> anyhow::Result<f64> {
+        let t0 = std::time::Instant::now();
+        for n in names {
+            self.executable(variant, n)?;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

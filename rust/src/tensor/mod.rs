@@ -1,0 +1,279 @@
+//! Small row-major `f32` tensor used on the coordinator hot path.
+//!
+//! Heavy model math lives in the AOT artifacts (L2); this type exists for
+//! the L3-side linear algebra — parameter aggregation, optimizer updates,
+//! quantizer buffers — so it optimizes for flat `Vec<f32>` access rather
+//! than generality. Shapes are explicit; element ops check them.
+
+use std::fmt;
+
+/// Row-major dense `f32` tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(n={})", self.shape, self.data.len())
+    }
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} != data len {}", data.len());
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "item() on non-scalar {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- elementwise ---------------------------------------------------------
+
+    fn check_same(&self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "shape mismatch");
+    }
+
+    /// `self += alpha * other` (the aggregation/optimizer workhorse).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        self.check_same(other);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|a| *a = v);
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.check_same(other);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.check_same(other);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Squared L2 distance to another tensor.
+    pub fn sq_dist(&self, other: &Tensor) -> f32 {
+        self.check_same(other);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// 2-D matmul, for tests and tiny host-side checks only.
+    pub fn matmul(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        assert_eq!(other.shape.len(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dim");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let row = &other.data[p * n..(p + 1) * n];
+                let dst = &mut out[i * n..(i + 1) * n];
+                for (d, b) in dst.iter_mut().zip(row) {
+                    *d += a * b;
+                }
+            }
+        }
+        Tensor::from_vec(&[m, n], out)
+    }
+}
+
+/// A named list of tensors: model parameters or gradients for one side.
+#[derive(Clone, Debug, Default)]
+pub struct TensorList {
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl TensorList {
+    pub fn new(names: Vec<String>, tensors: Vec<Tensor>) -> Self {
+        assert_eq!(names.len(), tensors.len());
+        TensorList { names, tensors }
+    }
+
+    pub fn zeros_like(&self) -> TensorList {
+        TensorList {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(t.shape())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// `self += alpha * other`, tensor by tensor.
+    pub fn axpy(&mut self, alpha: f32, other: &TensorList) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.tensors.iter_mut().zip(&other.tensors) {
+            a.axpy(alpha, b);
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.tensors.iter_mut().for_each(|t| t.scale(alpha));
+    }
+
+    pub fn l2_norm(&self) -> f32 {
+        self.tensors
+            .iter()
+            .map(|t| {
+                let n = t.l2_norm();
+                n * n
+            })
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.tensors.iter().all(|t| t.is_finite())
+    }
+
+    /// Total serialized size in bytes at `phi` bits per element.
+    pub fn wire_bits(&self, phi: usize) -> usize {
+        self.numel() * phi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_item() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(Tensor::scalar(2.5).item(), 2.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn axpy_and_norms() {
+        let mut a = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![1., 1., 1.]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data(), &[3., 4., 5.]);
+        assert!((a.l2_norm() - 50f32.sqrt()).abs() < 1e-6);
+        assert_eq!(a.max_abs(), 5.0);
+        assert_eq!(a.sq_dist(&b), 4. + 9. + 16.);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::from_vec(&[2, 2], vec![1., 1., 1., 1.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn tensor_list_ops() {
+        let tl = TensorList::new(
+            vec!["w".into(), "b".into()],
+            vec![Tensor::zeros(&[2, 2]), Tensor::zeros(&[2])],
+        );
+        assert_eq!(tl.numel(), 6);
+        assert_eq!(tl.wire_bits(64), 384);
+        let mut acc = tl.zeros_like();
+        let mut ones = tl.zeros_like();
+        ones.tensors.iter_mut().for_each(|t| t.fill(1.0));
+        acc.axpy(0.5, &ones);
+        assert_eq!(acc.tensors[0].data(), &[0.5; 4]);
+        assert!(acc.is_finite());
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).reshape(&[3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.data()[4], 5.0);
+    }
+}

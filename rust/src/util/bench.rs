@@ -1,0 +1,114 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`]:
+//! warmup, N timed iterations, mean/min/max/p50 reporting, and CSV
+//! persistence under `results/bench/` so §Perf before/after numbers are
+//! reproducible files, not terminal scrollback.
+
+use std::time::Instant;
+
+use crate::util::logging::CsvWriter;
+
+/// One benchmark suite (one `cargo bench` target).
+pub struct Bench {
+    name: String,
+    rows: Vec<(String, Stats, f64)>,
+}
+
+/// Timing statistics over iterations, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        println!("== bench: {name} ==");
+        Bench { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Time `f` for `iters` iterations after `warmup` runs. `work` is an
+    /// optional per-iteration work amount (bytes, elements) used to derive
+    /// a throughput column.
+    pub fn case<F: FnMut()>(&mut self, label: &str, warmup: usize, iters: usize, work: f64, mut f: F) -> Stats {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            iters,
+            mean: samples.iter().sum::<f64>() / iters as f64,
+            min: samples[0],
+            max: samples[iters - 1],
+            p50: samples[iters / 2],
+        };
+        let thr = if work > 0.0 { work / stats.mean } else { 0.0 };
+        println!(
+            "{label:<44} mean={:>9} p50={:>9} min={:>9} {}",
+            fmt_s(stats.mean),
+            fmt_s(stats.p50),
+            fmt_s(stats.min),
+            if work > 0.0 { format!("thr={:.1} MB/s", thr / 1e6) } else { String::new() }
+        );
+        self.rows.push((label.to_string(), stats, thr));
+        stats
+    }
+
+    /// Write the suite's CSV under `results/bench/<name>.csv`.
+    pub fn finish(self) {
+        let path = format!("results/bench/{}.csv", self.name);
+        if let Ok(mut csv) = CsvWriter::create(
+            &path,
+            &["case", "iters", "mean_s", "p50_s", "min_s", "max_s", "throughput_mb_s"],
+        ) {
+            for (label, s, thr) in &self.rows {
+                let _ = csv.row(&[
+                    label.clone(),
+                    s.iters.to_string(),
+                    format!("{:.6e}", s.mean),
+                    format!("{:.6e}", s.p50),
+                    format!("{:.6e}", s.min),
+                    format!("{:.6e}", s.max),
+                    format!("{:.2}", thr / 1e6),
+                ]);
+            }
+            let _ = csv.flush();
+            println!("(wrote {path})");
+        }
+    }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_sane() {
+        let mut b = Bench::new("self-test");
+        let s = b.case("noop", 1, 10, 0.0, || { std::hint::black_box(1 + 1); });
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+        assert!(s.mean > 0.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! Declarative command-line parsing (no `clap` in the offline build).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! repeated flags, and auto-generated `--help`. Intentionally small: the
+//! `fedlite` binary's surface is a handful of experiment/train subcommands.
+
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+pub struct Flag {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+    pub repeated: bool,
+}
+
+impl Flag {
+    pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, default: Some(default), is_switch: false, repeated: false }
+    }
+
+    pub fn req(name: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, default: None, is_switch: false, repeated: false }
+    }
+
+    pub fn switch(name: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, default: None, is_switch: true, repeated: false }
+    }
+
+    pub fn multi(name: &'static str, help: &'static str) -> Flag {
+        Flag { name, help, default: None, is_switch: false, repeated: true }
+    }
+}
+
+/// Parsed flag values for one invocation.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, Vec<String>>,
+    switches: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.values.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn usize(&self, name: &str) -> anyhow::Result<usize> {
+        parse_num(self.get(name), name)
+    }
+
+    pub fn u64(&self, name: &str) -> anyhow::Result<u64> {
+        parse_num(self.get(name), name)
+    }
+
+    pub fn f64(&self, name: &str) -> anyhow::Result<f64> {
+        parse_num(self.get(name), name)
+    }
+
+    pub fn str(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(v: Option<&str>, name: &str) -> anyhow::Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    let s = v.ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))?;
+    s.parse::<T>()
+        .map_err(|e| anyhow::anyhow!("bad value '{s}' for --{name}: {e}"))
+}
+
+/// A subcommand with its flags.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub flags: Vec<Flag>,
+}
+
+/// Top-level CLI: a set of subcommands.
+pub struct Cli {
+    pub bin: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Result of parsing: which subcommand + its args.
+#[derive(Debug)]
+pub struct Invocation {
+    pub command: &'static str,
+    pub args: Args,
+}
+
+impl Cli {
+    /// Parse `argv[1..]`. Returns Err with a usage/help message when the
+    /// input is invalid or `--help` was requested (caller prints + exits).
+    pub fn parse(&self, argv: &[String]) -> Result<Invocation, String> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Err(self.usage());
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name.as_str())
+            .ok_or_else(|| format!("unknown command '{cmd_name}'\n\n{}", self.usage()))?;
+        let mut args = Args::default();
+        // seed defaults
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), vec![d.to_string()]);
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(self.command_usage(cmd));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let flag = cmd
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| {
+                        format!("unknown flag --{name} for '{}'\n\n{}", cmd.name,
+                                self.command_usage(cmd))
+                    })?;
+                if flag.is_switch {
+                    if inline_val.is_some() {
+                        return Err(format!("switch --{name} takes no value"));
+                    }
+                    args.switches.insert(name.to_string(), true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("flag --{name} needs a value"))?
+                        }
+                    };
+                    let slot = args.values.entry(name.to_string()).or_default();
+                    if flag.repeated {
+                        // defaults never apply to repeated flags
+                        slot.push(val);
+                    } else {
+                        *slot = vec![val];
+                    }
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(Invocation { command: cmd.name, args })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [flags]\n\nCOMMANDS:\n",
+                            self.bin, self.about, self.bin);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        s.push_str(&format!("\nRun '{} <command> --help' for flags.", self.bin));
+        s
+    }
+
+    fn command_usage(&self, cmd: &Command) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.bin, cmd.name, cmd.about);
+        for f in &cmd.flags {
+            let kind = if f.is_switch {
+                String::new()
+            } else if let Some(d) = f.default {
+                format!(" <value> (default: {d})")
+            } else if f.repeated {
+                " <value> (repeatable)".to_string()
+            } else {
+                " <value> (required)".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli {
+            bin: "fedlite",
+            about: "test",
+            commands: vec![Command {
+                name: "train",
+                about: "train a model",
+                flags: vec![
+                    Flag::opt("rounds", "100", "number of rounds"),
+                    Flag::req("task", "task name"),
+                    Flag::switch("verbose", "chatty"),
+                    Flag::multi("sweep", "values to sweep"),
+                ],
+            }],
+        }
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let inv = cli().parse(&sv(&["train", "--task", "femnist", "--verbose"])).unwrap();
+        assert_eq!(inv.command, "train");
+        assert_eq!(inv.args.usize("rounds").unwrap(), 100);
+        assert_eq!(inv.args.str("task").unwrap(), "femnist");
+        assert!(inv.args.has("verbose"));
+        assert!(!inv.args.has("other"));
+    }
+
+    #[test]
+    fn equals_syntax_and_override() {
+        let inv = cli().parse(&sv(&["train", "--task=x", "--rounds=7"])).unwrap();
+        assert_eq!(inv.args.usize("rounds").unwrap(), 7);
+        assert_eq!(inv.args.str("task").unwrap(), "x");
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let inv = cli()
+            .parse(&sv(&["train", "--task", "t", "--sweep", "1", "--sweep", "2"]))
+            .unwrap();
+        assert_eq!(inv.args.get_all("sweep"), &["1".to_string(), "2".to_string()]);
+    }
+
+    #[test]
+    fn missing_required_flag_errors_at_access() {
+        let inv = cli().parse(&sv(&["train"])).unwrap();
+        assert!(inv.args.str("task").is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_flag() {
+        assert!(cli().parse(&sv(&["nope"])).is_err());
+        assert!(cli().parse(&sv(&["train", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let msg = cli().parse(&sv(&["--help"])).unwrap_err();
+        assert!(msg.contains("COMMANDS"));
+        let msg = cli().parse(&sv(&["train", "--help"])).unwrap_err();
+        assert!(msg.contains("--rounds"));
+    }
+}

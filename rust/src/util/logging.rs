@@ -1,0 +1,196 @@
+//! Logging + structured run outputs (CSV / JSONL) without external crates.
+//!
+//! `init(level)` installs a stderr logger for the `log` facade; `CsvWriter`
+//! and `JsonlWriter` persist experiment series under `results/` so every
+//! figure can be regenerated from a file on disk.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+use crate::util::json::Value;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the global logger. Level names: error/warn/info/debug/trace.
+pub fn init(level: &str) {
+    let filter = match level {
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    let logger = Box::leak(Box::new(StderrLogger { start: Instant::now() }));
+    if log::set_logger(logger).is_ok() {
+        log::set_max_level(filter);
+    }
+}
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+    pub path: PathBuf,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(&path)?);
+        let escaped: Vec<String> = header.iter().map(|h| escape_cell(h)).collect();
+        writeln!(w, "{}", escaped.join(","))?;
+        Ok(CsvWriter { w, cols: header.len(), path })
+    }
+
+    /// Write one row; panics if the column count differs from the header.
+    pub fn row(&mut self, values: &[String]) -> anyhow::Result<()> {
+        assert_eq!(values.len(), self.cols, "csv row width mismatch");
+        let escaped: Vec<String> = values.iter().map(|v| escape_cell(v)).collect();
+        writeln!(self.w, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: format mixed numeric row.
+    pub fn row_f(&mut self, values: &[f64]) -> anyhow::Result<()> {
+        self.row(&values.iter().map(|v| trim_float(*v)).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+fn escape_cell(v: &str) -> String {
+    if v.contains(',') || v.contains('"') || v.contains('\n') {
+        format!("\"{}\"", v.replace('"', "\"\""))
+    } else {
+        v.to_string()
+    }
+}
+
+/// Compact float formatting for CSV cells.
+pub fn trim_float(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+/// Line-per-record JSON writer (run logs, checkpoint indexes).
+pub struct JsonlWriter {
+    w: BufWriter<File>,
+    pub path: PathBuf,
+}
+
+impl JsonlWriter {
+    pub fn create(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter { w: BufWriter::new(File::create(&path)?), path })
+    }
+
+    pub fn record(&mut self, v: &Value) -> anyhow::Result<()> {
+        writeln!(self.w, "{v}")?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tmpdir() -> PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "fedlite-log-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmpdir().join("t.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b,comma"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        w.row_f(&[0.5, 3.0]).unwrap();
+        w.flush().unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,\"b,comma\"");
+        assert_eq!(lines[1], "1,\"x,y\"");
+        assert_eq!(lines[2], "0.5,3");
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn csv_width_checked() {
+        let p = tmpdir().join("w.csv");
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn jsonl_records() {
+        let p = tmpdir().join("t.jsonl");
+        let mut w = JsonlWriter::create(&p).unwrap();
+        w.record(&json::parse(r#"{"round":1,"loss":2.5}"#).unwrap()).unwrap();
+        w.record(&json::parse(r#"{"round":2,"loss":2.25}"#).unwrap()).unwrap();
+        w.flush().unwrap();
+        let text = fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let v = json::parse(text.lines().nth(1).unwrap()).unwrap();
+        assert_eq!(v.get("loss").as_f64(), Some(2.25));
+    }
+
+    #[test]
+    fn trim_float_formats() {
+        assert_eq!(trim_float(3.0), "3");
+        assert_eq!(trim_float(0.25), "0.25");
+        assert_eq!(trim_float(1.0 / 3.0), "0.333333");
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained substrates: PRNG, JSON, CLI parsing, thread pool, logging.
+//!
+//! The offline build environment ships no `rand`/`serde`/`clap`/`tokio`, so
+//! the coordinator carries its own implementations. Each is deliberately
+//! small, deterministic, and unit-tested — they are load-bearing for
+//! reproducibility (every experiment seed flows through [`rng`]).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod bench;
+pub mod rng;

@@ -1,0 +1,209 @@
+//! Fixed-size worker thread pool (no `tokio`/`rayon` in the offline build).
+//!
+//! Provides `execute` (fire-and-forget), `parallel_map` (ordered results),
+//! and a scoped chunked for-each used by the data generators and the
+//! quantizer sweeps. Client simulation inside a round also fans out here.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple shared-queue thread pool.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("fedlite-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(tx), workers }
+    }
+
+    /// Pool sized to the machine (logical cores, capped).
+    pub fn default_size() -> usize {
+        thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool shut down")
+            .send(Box::new(f))
+            .expect("worker channel closed");
+    }
+
+    /// Apply `f` to each item (items moved in), returning results in input
+    /// order. Blocks until all complete. Panics in jobs poison the result
+    /// slot and are re-raised here.
+    pub fn parallel_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (tx, rx) = mpsc::channel::<(usize, thread::Result<R>)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let tx = tx.clone();
+            let f = Arc::clone(&f);
+            self.execute(move || {
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(i, item)
+                }));
+                let _ = tx.send((i, out));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rx.recv().expect("worker died");
+            match r {
+                Ok(v) => slots[i] = Some(v),
+                Err(p) => std::panic::resume_unwind(p),
+            }
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Chunked parallel for-each over a mutable slice using scoped threads:
+/// splits `data` into `chunks` contiguous pieces and runs `f(chunk_index,
+/// start_offset, chunk)` concurrently. Used by data generators that fill
+/// large buffers.
+pub fn scoped_chunks<T: Send, F>(data: &mut [T], chunks: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    if n == 0 {
+        return;
+    }
+    let chunks = chunks.clamp(1, n);
+    let base = n / chunks;
+    let rem = n % chunks;
+    thread::scope(|s| {
+        let mut rest = data;
+        let mut offset = 0;
+        for i in 0..chunks {
+            let len = base + usize::from(i < rem);
+            let (head, tail) = rest.split_at_mut(len);
+            rest = tail;
+            let f = &f;
+            let start = offset;
+            s.spawn(move || f(i, start, head));
+            offset += len;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..100 {
+            rx.recv().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.parallel_map((0..50).collect(), |_, x: i32| x * x);
+        assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.parallel_map(Vec::<i32>::new(), |_, x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn panics_propagate() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.parallel_map(vec![1, 2, 3], |_, x: i32| {
+            if x == 2 {
+                panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn scoped_chunks_covers_slice() {
+        let mut v = vec![0usize; 103];
+        scoped_chunks(&mut v, 7, |_, start, chunk| {
+            for (k, x) in chunk.iter_mut().enumerate() {
+                *x = start + k;
+            }
+        });
+        assert_eq!(v, (0..103).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scoped_chunks_more_chunks_than_items() {
+        let mut v = vec![0u8; 3];
+        scoped_chunks(&mut v, 10, |_, _, chunk| {
+            for x in chunk.iter_mut() {
+                *x = 1;
+            }
+        });
+        assert_eq!(v, vec![1, 1, 1]);
+    }
+}

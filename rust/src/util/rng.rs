@@ -1,0 +1,353 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! xoshiro256++ seeded through SplitMix64, plus the samplers the simulation
+//! needs: uniform, normal (Box–Muller), Bernoulli, gamma (Marsaglia–Tsang),
+//! Dirichlet, Zipf, categorical, and Fisher–Yates shuffling. Every
+//! component of the system derives its stream from a root seed via
+//! [`Rng::fork`], so runs are reproducible regardless of thread scheduling.
+
+/// xoshiro256++ PRNG (public-domain algorithm by Blackman & Vigna).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal variate from Box–Muller.
+    spare_normal: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    /// Seed deterministically from a single `u64`.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            spare_normal: None,
+        }
+    }
+
+    /// Derive an independent stream for a named sub-component.
+    ///
+    /// Uses a hash of `(next_u64 of a clone, tag)` so that forks are stable
+    /// with respect to the parent's state at fork time and distinct per tag.
+    pub fn fork(&self, tag: u64) -> Rng {
+        let mut base = self.s[0] ^ self.s[2];
+        let mut sm = base ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        base = splitmix64(&mut sm);
+        Rng::new(base ^ splitmix64(&mut sm))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in `[0, n)`. Panics on `n == 0`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        // Lemire-style rejection-free for practical purposes (bias < 2^-64*n)
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(v) = self.spare_normal.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::EPSILON {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.spare_normal = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Normal with given mean and standard deviation.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Gamma(shape k, scale 1) via Marsaglia–Tsang; valid for any k > 0.
+    pub fn gamma(&mut self, k: f64) -> f64 {
+        assert!(k > 0.0);
+        if k < 1.0 {
+            // boost: Gamma(k) = Gamma(k+1) * U^(1/k)
+            let g = self.gamma(k + 1.0);
+            let u = self.uniform().max(f64::MIN_POSITIVE);
+            return g * u.powf(1.0 / k);
+        }
+        let d = k - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.uniform();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha, ..., alpha) over `n` categories.
+    pub fn dirichlet_sym(&mut self, alpha: f64, n: usize) -> Vec<f64> {
+        let mut v: Vec<f64> = (0..n).map(|_| self.gamma(alpha)).collect();
+        let s: f64 = v.iter().sum();
+        if s <= 0.0 {
+            // pathological underflow: fall back to a random one-hot
+            let mut out = vec![0.0; n];
+            out[self.below(n)] = 1.0;
+            return out;
+        }
+        v.iter_mut().for_each(|x| *x /= s);
+        v
+    }
+
+    /// Sample an index from an (unnormalized) non-negative weight vector.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical with zero total weight");
+        let mut t = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-distributed rank in `[0, n)` with exponent `s` (s > 0).
+    ///
+    /// Precomputing the CDF is the caller's job for hot loops; this is the
+    /// simple O(n)-free inverse-CDF approximation adequate for data gen.
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // rejection sampling from the continuous bounding envelope
+        debug_assert!(n >= 1);
+        let n_f = n as f64;
+        loop {
+            let u = self.uniform();
+            // inverse of the integral of x^-s over [1, n+1]
+            let x = if (s - 1.0).abs() < 1e-9 {
+                ((n_f + 1.0).ln() * u).exp()
+            } else {
+                let a = 1.0 - s;
+                ((u * ((n_f + 1.0).powf(a) - 1.0)) + 1.0).powf(1.0 / a)
+            };
+            let k = x.floor();
+            if k >= 1.0 && k <= n_f {
+                // accept with prob proportional to k^-s / envelope
+                let accept = (k.powf(-s)) / (x.powf(-s)).max(f64::MIN_POSITIVE);
+                if self.uniform() < accept.min(1.0) {
+                    return k as usize - 1;
+                }
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
+    pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "choose_k({k}) from {n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Fill a slice with scaled Bernoulli dropout mask values
+    /// (`1/(1-p)` with probability `1-p`, else `0`).
+    pub fn dropout_mask(&mut self, p: f64, out: &mut [f32]) {
+        let scale = if p < 1.0 { 1.0 / (1.0 - p) } else { 0.0 };
+        for v in out.iter_mut() {
+            *v = if self.uniform() >= p { scale as f32 } else { 0.0 };
+        }
+    }
+
+    /// Vector of standard normals as f32 (parameter init, synthetic data).
+    pub fn normal_vec(&mut self, n: usize, mean: f32, std: f32) -> Vec<f32> {
+        (0..n).map(|_| self.normal_ms(mean as f64, std as f64) as f32).collect()
+    }
+
+    /// Vector of uniforms in `[lo, hi)` as f32.
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.uniform_in(lo as f64, hi as f64) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forks_are_independent_and_stable() {
+        let root = Rng::new(7);
+        let mut f1 = root.fork(1);
+        let mut f2 = root.fork(2);
+        let mut f1b = root.fork(1);
+        assert_eq!(f1.next_u64(), f1b.next_u64());
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn below_bounds_and_coverage() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1_000 {
+            seen[r.below(7)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::new(4);
+        for &alpha in &[0.1, 0.5, 1.0, 10.0] {
+            let v = r.dirichlet_sym(alpha, 20);
+            let s: f64 = v.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(v.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(5);
+        for &k in &[0.3, 1.0, 4.5] {
+            let n = 20_000;
+            let m: f64 = (0..n).map(|_| r.gamma(k)).sum::<f64>() / n as f64;
+            assert!((m - k).abs() / k < 0.1, "k={k} mean={m}");
+        }
+    }
+
+    #[test]
+    fn zipf_rank_zero_most_frequent() {
+        let mut r = Rng::new(6);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            counts[r.zipf(10, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[0] > counts[9]);
+    }
+
+    #[test]
+    fn choose_k_distinct() {
+        let mut r = Rng::new(8);
+        for _ in 0..100 {
+            let mut ks = r.choose_k(20, 10);
+            ks.sort_unstable();
+            ks.dedup();
+            assert_eq!(ks.len(), 10);
+        }
+    }
+
+    #[test]
+    fn dropout_mask_scaling() {
+        let mut r = Rng::new(9);
+        let mut m = vec![0.0f32; 100_000];
+        r.dropout_mask(0.25, &mut m);
+        let mean: f64 = m.iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64;
+        assert!((mean - 1.0).abs() < 0.02, "E[mask] should be ~1, got {mean}");
+        assert!(m.iter().all(|&x| x == 0.0 || (x - 4.0 / 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(10);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+}

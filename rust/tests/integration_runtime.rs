@@ -1,0 +1,301 @@
+//! Integration tests over the PJRT runtime + built artifacts.
+//!
+//! These need `make artifacts` to have run (skipped otherwise, mirroring
+//! the python-side `test_aot.py`). They are the cross-layer correctness
+//! signal: rust-side quantizer vs the Pallas artifact, split-vs-monolithic
+//! gradients through real HLO, and the full round loop.
+
+use std::sync::Arc;
+
+use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
+use fedlite::coordinator::client::{assemble, draw_masks, InputSources};
+use fedlite::coordinator::quantize::QuantizeBackend;
+use fedlite::coordinator::{build_dataset, build_trainer};
+use fedlite::data::Array;
+use fedlite::quantizer::pq::{GroupedPq, PqConfig};
+use fedlite::runtime::Runtime;
+use fedlite::util::rng::Rng;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Arc::new(Runtime::open("artifacts").expect("open runtime")))
+}
+
+macro_rules! need_rt {
+    () => {
+        match runtime() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
+}
+
+#[test]
+fn manifest_has_all_task_variants() {
+    let rt = need_rt!();
+    for v in ["femnist_paper", "so_tag_small", "so_nwp_small"] {
+        let var = rt.manifest.variant(v).expect(v);
+        for a in ["client_fwd", "server_step", "client_bwd", "full_grad", "full_eval"] {
+            assert!(var.artifacts.contains_key(a), "{v}/{a} missing");
+        }
+    }
+}
+
+#[test]
+fn femnist_param_counts_match_paper() {
+    let rt = need_rt!();
+    let spec = &rt.manifest.variant("femnist_paper").unwrap().spec;
+    assert_eq!(spec.client.numel(), 18_816);
+    assert_eq!(spec.server.numel(), 1_187_774);
+    assert_eq!(spec.cut_dim, 9216);
+}
+
+/// client_fwd produces finite activations of the manifest shape.
+#[test]
+fn client_fwd_shapes_and_finite() {
+    let rt = need_rt!();
+    let variant = "femnist_paper";
+    let spec = rt.manifest.variant(variant).unwrap().spec.clone();
+    let rng = Rng::new(0);
+    let wc = spec.client.init_tensors(&mut rng.fork(1));
+    let cfg = RunConfig::preset("femnist").unwrap();
+    let data = build_dataset(&cfg).unwrap();
+    let batch = data.train_batch(0, spec.batch, &mut rng.fork(2));
+    let meta = rt.manifest.artifact(variant, "client_fwd").unwrap().clone();
+    let masks = draw_masks(&[&meta], 0.25, 0.5, &mut rng.fork(3));
+    let src = InputSources {
+        wc: Some(&wc),
+        batch: Some(&batch),
+        masks: Some(&masks),
+        ..Default::default()
+    };
+    let z = rt
+        .run(variant, "client_fwd", &assemble(&meta, &src).unwrap())
+        .unwrap()
+        .remove(0);
+    assert_eq!(z.shape(), &[spec.act_batch, spec.cut_dim]);
+    assert!(z.as_f32().unwrap().iter().all(|v| v.is_finite()));
+    // relu output: non-negative before masking (mask >= 0 too)
+    assert!(z.as_f32().unwrap().iter().all(|&v| v >= 0.0));
+}
+
+/// The Pallas/PJRT quantizer artifact agrees with the native engine when
+/// both start from the same initial centroids.
+#[test]
+fn pjrt_quantizer_matches_native() {
+    let rt = need_rt!();
+    let variant = "femnist_paper";
+    let spec = rt.manifest.variant(variant).unwrap().spec.clone();
+    let (b, d) = (spec.act_batch, spec.cut_dim);
+    let cfg = PqConfig::new(288, 1, 8); // must exist in PQ_CONFIGS
+    let mut rng = Rng::new(7);
+    let z: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+
+    // identical init for both paths
+    let native = GroupedPq::new(cfg, d).unwrap();
+    let dsub = cfg.dsub(d);
+    let ng = cfg.group_size(b);
+    let mut buf = Vec::new();
+    native.gather_group(&z, b, 0, &mut buf);
+    let mut init_rng = Rng::new(99);
+    let idx = init_rng.choose_k(ng, cfg.l);
+    let mut init = Vec::new();
+    for i in idx {
+        init.extend_from_slice(&buf[i * dsub..(i + 1) * dsub]);
+    }
+
+    // native path from the same centroids
+    let mut cents = init.clone();
+    let km = fedlite::quantizer::KMeans::new(
+        cfg.l, dsub, cfg.iters, fedlite::quantizer::KMeansInit::RandomRows,
+    );
+    let out = km.run_from(&buf, ng, &mut cents);
+
+    // PJRT path
+    let arts = rt.manifest.variant(variant).unwrap().find_pq(288, 8, 1);
+    let meta = arts.expect("pq_q288_L8_R1 artifact");
+    let outs = rt
+        .run(
+            variant,
+            &meta.name,
+            &[
+                Array::f32(&[b, d], z.clone()),
+                Array::f32(&[1, cfg.l, dsub], init),
+            ],
+        )
+        .unwrap();
+    let pj_codes: Vec<u32> = outs[1]
+        .as_i32()
+        .unwrap()
+        .iter()
+        .map(|&x| x as u32)
+        .collect();
+    assert_eq!(pj_codes, out.codes, "assignments differ");
+    let pj_cents = outs[0].as_f32().unwrap();
+    for (a, b) in pj_cents.iter().zip(&cents) {
+        assert!((a - b).abs() < 1e-3, "centroid {a} vs {b}");
+    }
+    let pj_qerr = outs[3].as_f32().unwrap()[0] as f64;
+    assert!((pj_qerr - out.err).abs() / out.err.max(1.0) < 1e-3);
+}
+
+/// Split path == monolithic gradient through the real artifacts (z~ = z,
+/// lambda = 0): the SplitFed == mini-batch SGD equivalence of paper §3.
+#[test]
+fn split_equals_monolithic_through_artifacts() {
+    let rt = need_rt!();
+    let variant = "so_tag_small";
+    let spec = rt.manifest.variant(variant).unwrap().spec.clone();
+    let rng = Rng::new(3);
+    let wc = spec.client.init_tensors(&mut rng.fork(1));
+    let ws = spec.server.init_tensors(&mut rng.fork(2));
+    let mut cfg = RunConfig::preset("so_tag").unwrap();
+    cfg.num_clients = 5;
+    let data = build_dataset(&cfg).unwrap();
+    let batch = data.train_batch(0, spec.batch, &mut rng.fork(4));
+
+    let fwd = rt.manifest.artifact(variant, "client_fwd").unwrap().clone();
+    let step = rt.manifest.artifact(variant, "server_step").unwrap().clone();
+    let bwd = rt.manifest.artifact(variant, "client_bwd").unwrap().clone();
+    let full = rt.manifest.artifact(variant, "full_grad").unwrap().clone();
+    let masks = std::collections::HashMap::new();
+
+    // split path
+    let src = InputSources {
+        wc: Some(&wc), batch: Some(&batch), masks: Some(&masks),
+        ..Default::default()
+    };
+    let z = rt.run(variant, "client_fwd", &assemble(&fwd, &src).unwrap())
+        .unwrap().remove(0);
+    let src = InputSources {
+        ws: Some(&ws), batch: Some(&batch), masks: Some(&masks),
+        z_tilde: Some(&z), ..Default::default()
+    };
+    let outs = rt.run(variant, "server_step", &assemble(&step, &src).unwrap()).unwrap();
+    let nmetrics = spec.metrics.len();
+    let loss_split = outs[0].as_f32().unwrap()[0];
+    let grad_z = outs[1 + nmetrics].clone();
+    let ws_grads_split: Vec<Vec<f32>> = outs[2 + nmetrics..]
+        .iter().map(|a| a.as_f32().unwrap().to_vec()).collect();
+    let src = InputSources {
+        wc: Some(&wc), batch: Some(&batch), masks: Some(&masks),
+        z_tilde: Some(&z), grad_z: Some(&grad_z), lambda: Some(0.0),
+        ..Default::default()
+    };
+    let bout = rt.run(variant, "client_bwd", &assemble(&bwd, &src).unwrap()).unwrap();
+    let qerr = bout.last().unwrap().as_f32().unwrap()[0];
+    assert!(qerr.abs() < 1e-9, "z~ == z must give zero qerr");
+    let wc_grads_split: Vec<Vec<f32>> = bout[..bout.len() - 1]
+        .iter().map(|a| a.as_f32().unwrap().to_vec()).collect();
+
+    // monolithic path
+    let src = InputSources {
+        wc: Some(&wc), ws: Some(&ws), batch: Some(&batch), masks: Some(&masks),
+        ..Default::default()
+    };
+    let fouts = rt.run(variant, "full_grad", &assemble(&full, &src).unwrap()).unwrap();
+    let loss_full = fouts[0].as_f32().unwrap()[0];
+    assert!((loss_split - loss_full).abs() < 1e-4 * loss_full.abs().max(1.0));
+    let k = 1 + nmetrics;
+    for (i, g) in wc_grads_split.iter().enumerate() {
+        let gf = fouts[k + i].as_f32().unwrap();
+        for (a, b) in g.iter().zip(gf) {
+            assert!((a - b).abs() < 2e-4 + 2e-3 * b.abs(), "wc grad {i}: {a} vs {b}");
+        }
+    }
+    for (i, g) in ws_grads_split.iter().enumerate() {
+        let gf = fouts[k + wc_grads_split.len() + i].as_f32().unwrap();
+        for (a, b) in g.iter().zip(gf) {
+            assert!((a - b).abs() < 2e-4 + 2e-3 * b.abs(), "ws grad {i}: {a} vs {b}");
+        }
+    }
+}
+
+/// Two-round determinism: same seed → bit-identical metrics and bytes.
+#[test]
+fn training_is_deterministic() {
+    let rt = need_rt!();
+    let run = |seed: u64| {
+        let mut cfg = RunConfig::preset("so_tag").unwrap();
+        cfg.rounds = 2;
+        cfg.num_clients = 8;
+        cfg.clients_per_round = 3;
+        cfg.eval_every = 0;
+        cfg.seed = seed;
+        cfg.pq.iters = 2;
+        let mut t = build_trainer(cfg, Arc::clone(&rt)).unwrap();
+        t.run().unwrap()
+    };
+    let a = run(5);
+    let b = run(5);
+    let c = run(6);
+    assert_eq!(a.rounds.len(), 2);
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        assert_eq!(x.train_loss, y.train_loss);
+        assert_eq!(x.uplink_bytes, y.uplink_bytes);
+    }
+    assert_ne!(a.rounds[0].train_loss, c.rounds[0].train_loss);
+}
+
+/// FedLite's uplink must sit far below SplitFed's, which sits below
+/// FedAvg's (Table 1 / Fig. 6 ordering), measured on the real wire.
+#[test]
+fn uplink_ordering_measured() {
+    let rt = need_rt!();
+    let run = |algo: Algorithm| {
+        let mut cfg = RunConfig::preset("femnist").unwrap();
+        cfg.algorithm = algo;
+        cfg.rounds = 1;
+        cfg.num_clients = 10;
+        cfg.clients_per_round = 4;
+        cfg.eval_every = 0;
+        cfg.pq.iters = 2;
+        let mut t = build_trainer(cfg, Arc::clone(&rt)).unwrap();
+        t.run().unwrap().rounds[0].uplink_bytes
+    };
+    let fedlite = run(Algorithm::FedLite);
+    let splitfed = run(Algorithm::SplitFed);
+    let fedavg = run(Algorithm::FedAvg);
+    assert!(fedlite * 5 < splitfed, "fedlite {fedlite} vs splitfed {splitfed}");
+    assert!(splitfed < fedavg, "splitfed {splitfed} vs fedavg {fedavg}");
+    // paper §5: overall uplink ~10x smaller than SplitFed at q=1152, L=2
+    let gain = splitfed as f64 / fedlite as f64;
+    assert!((6.0..16.0).contains(&gain), "gain {gain}");
+}
+
+/// The PJRT quantizer on the hot path trains without error.
+#[test]
+fn pjrt_quantizer_hot_path_round() {
+    let rt = need_rt!();
+    let mut cfg = RunConfig::preset("femnist").unwrap();
+    cfg.quantizer = QuantizerEngine::Pjrt;
+    cfg.rounds = 1;
+    cfg.num_clients = 6;
+    cfg.clients_per_round = 2;
+    cfg.eval_every = 0;
+    let mut t = build_trainer(cfg, Arc::clone(&rt)).unwrap();
+    let log = t.run().unwrap();
+    assert!(log.rounds[0].train_loss.is_finite());
+    assert!(log.rounds[0].quant_error > 0.0);
+}
+
+/// Requesting a PJRT quantizer config that was never AOT-compiled fails
+/// with an actionable error.
+#[test]
+fn missing_pjrt_artifact_is_actionable() {
+    let rt = need_rt!();
+    let err = match QuantizeBackend::new(
+        QuantizerEngine::Pjrt,
+        PqConfig::new(9216, 1, 3), // not in PQ_CONFIGS
+        9216,
+        Arc::clone(&rt),
+        "femnist_paper",
+    ) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected missing-artifact error"),
+    };
+    assert!(err.contains("PQ_CONFIGS"), "{err}");
+}

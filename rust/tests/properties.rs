@@ -1,0 +1,261 @@
+//! Randomized property tests over the coordinator-side invariants.
+//!
+//! `proptest` is unavailable in the offline build, so this file carries a
+//! small in-house property harness: each property runs against `CASES`
+//! randomized inputs drawn from the crate's own deterministic RNG, and a
+//! failure reports the seed that produced it (re-run with that seed to
+//! shrink by hand).
+
+use fedlite::comm::message::Message;
+use fedlite::quantizer::cost::CostModel;
+use fedlite::quantizer::packing;
+use fedlite::quantizer::pq::{GroupedPq, PqConfig};
+use fedlite::tensor::{Tensor, TensorList};
+use fedlite::util::json;
+use fedlite::util::rng::Rng;
+
+const CASES: u64 = 60;
+
+/// Run `f` for CASES random seeds; panic with the offending seed.
+fn forall(name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xFED0 + seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(p) = result {
+            eprintln!("property '{name}' failed at seed {seed}");
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+fn rand_pq_setup(rng: &mut Rng) -> (PqConfig, usize, usize, Vec<f32>) {
+    // random valid (q, r, l, d, b)
+    let dsub = 1 + rng.below(6);
+    let q = [1usize, 2, 4, 6, 12][rng.below(5)];
+    let divisors: Vec<usize> = (1..=q).filter(|r| q % r == 0).collect();
+    let r = divisors[rng.below(divisors.len())];
+    let l = 1 + rng.below(5);
+    let d = q * dsub;
+    let b = 1 + rng.below(10);
+    let z: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+    (PqConfig::new(q, r, l).with_iters(1 + rng.below(5)), b, d, z)
+}
+
+#[test]
+fn prop_quantize_reconstruct_identity() {
+    // reconstruct(codebooks, codes) == z_tilde for every valid config
+    forall("quantize-reconstruct", |rng| {
+        let (cfg, b, d, z) = rand_pq_setup(rng);
+        let pq = GroupedPq::new(cfg, d).unwrap();
+        let out = pq.quantize(&z, b, rng);
+        let rec = pq.reconstruct(&out.codebooks, &out.codes, b);
+        assert_eq!(rec, out.z_tilde);
+    });
+}
+
+#[test]
+fn prop_quantization_never_increases_with_l() {
+    // more centroids, same everything else -> error not (much) larger
+    forall("error-vs-l", |rng| {
+        let dsub = 2 + rng.below(4);
+        let q = 4usize;
+        let d = q * dsub;
+        let b = 4 + rng.below(6);
+        let z: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let mut prev = f64::INFINITY;
+        for l in [1usize, 2, 4, 8] {
+            let pq = GroupedPq::new(PqConfig::new(q, 1, l).with_iters(10), d).unwrap();
+            let mut r = Rng::new(1234); // shared init stream
+            let out = pq.quantize(&z, b, &mut r);
+            assert!(out.sq_error <= prev * 1.10 + 1e-6,
+                    "L={l}: {} > {}", out.sq_error, prev);
+            prev = out.sq_error;
+        }
+    });
+}
+
+#[test]
+fn prop_codes_always_in_range_and_pack_roundtrip() {
+    forall("codes-pack", |rng| {
+        let (cfg, b, d, z) = rand_pq_setup(rng);
+        let pq = GroupedPq::new(cfg, d).unwrap();
+        let out = pq.quantize(&z, b, rng);
+        assert!(out.codes.iter().all(|&c| (c as usize) < cfg.l));
+        let packed = packing::pack(&out.codes, cfg.l);
+        let back = packing::unpack(&packed, out.codes.len(), cfg.l).unwrap();
+        assert_eq!(back, out.codes);
+    });
+}
+
+#[test]
+fn prop_qerr_consistent_with_ztilde() {
+    forall("qerr-consistency", |rng| {
+        let (cfg, b, d, z) = rand_pq_setup(rng);
+        let pq = GroupedPq::new(cfg, d).unwrap();
+        let out = pq.quantize(&z, b, rng);
+        let direct: f64 = z.iter().zip(&out.z_tilde)
+            .map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!((out.sq_error - direct).abs() <= 1e-3 * direct.max(1.0),
+                "{} vs {}", out.sq_error, direct);
+    });
+}
+
+#[test]
+fn prop_compression_ratio_formula_monotonicity() {
+    // paper §4.1: only the codebook term depends on R, so at fixed (q, L)
+    // fewer groups always means a strictly higher compression ratio; and
+    // at fixed (q, R) fewer clusters means a higher ratio.
+    forall("ratio-monotone", |rng| {
+        let m = CostModel::default();
+        let d = 9216;
+        let b = 2 + rng.below(60);
+        let q = [144usize, 288, 1152, 4608][rng.below(4)];
+        let l = 2 + rng.below(30);
+        // fewer clusters -> higher ratio
+        assert!(m.ratio(b, d, q, 1, l) < m.ratio(b, d, q, 1, l.max(3) - 1) + 1e-9);
+        // fewer groups -> strictly higher ratio (grouping benefit)
+        let divisors: Vec<usize> = (2..=q).filter(|r| q % r == 0).collect();
+        let r = divisors[rng.below(divisors.len())];
+        assert!(m.ratio(b, d, q, 1, l) > m.ratio(b, d, q, r, l));
+        // and the decomposition matches the closed form exactly
+        let bits = m.fedlite_bits(b, d, q, r, l);
+        let expect = 64.0 * (d as f64) * (r as f64) * (l as f64) / (q as f64)
+            + (b as f64) * (q as f64) * (l as f64).log2();
+        assert!((bits - expect).abs() < 1e-6 * expect);
+    });
+}
+
+#[test]
+fn prop_message_roundtrip_random() {
+    forall("message-roundtrip", |rng| {
+        let n = rng.below(200);
+        let msg = match rng.below(4) {
+            0 => Message::ActivationUpload {
+                z: rng.normal_vec(n, 0.0, 1.0), b: n.max(1), d: 1,
+            },
+            1 => Message::GradDownload {
+                grad: rng.normal_vec(n, 0.0, 1.0), b: 1, d: n,
+            },
+            2 => Message::ClientGrads {
+                grads: (0..rng.below(5))
+                    .map(|_| {
+                        let len = rng.below(50);
+                        rng.normal_vec(len, 0.0, 1.0)
+                    })
+                    .collect(),
+            },
+            _ => Message::ModelBroadcast {
+                params: (0..rng.below(5))
+                    .map(|_| {
+                        let len = rng.below(50);
+                        rng.normal_vec(len, 0.0, 1.0)
+                    })
+                    .collect(),
+            },
+        };
+        let round = rng.below(1000) as u32;
+        let client = rng.below(1000) as u32;
+        let bytes = msg.encode(round, client);
+        assert_eq!(bytes.len(), msg.wire_len());
+        let (back, r2, c2) = Message::decode(&bytes).unwrap();
+        assert_eq!(back, msg);
+        assert_eq!((r2, c2), (round, client));
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn rand_value(rng: &mut Rng, depth: usize) -> json::Value {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.bernoulli(0.5)),
+            2 => {
+                // round numbers through f64-representable space
+                let v = (rng.normal() * 1e6).round() / 64.0;
+                json::Value::Num(v)
+            }
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect();
+                json::Value::Str(s)
+            }
+            4 => json::Value::Arr(
+                (0..rng.below(4)).map(|_| rand_value(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut o = json::Object::new();
+                for i in 0..rng.below(4) {
+                    o.insert(format!("k{i}"), rand_value(rng, depth - 1));
+                }
+                json::Value::Obj(o)
+            }
+        }
+    }
+    forall("json-roundtrip", |rng| {
+        let v = rand_value(rng, 3);
+        let compact = json::parse(&v.to_string()).unwrap();
+        assert_eq!(compact, v);
+        let pretty = json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(pretty, v);
+    });
+}
+
+#[test]
+fn prop_aggregator_convex_combination() {
+    // the weighted mean lies inside the per-coordinate min/max envelope
+    use fedlite::coordinator::aggregator::WeightedAggregator;
+    forall("aggregator-envelope", |rng| {
+        let n = 1 + rng.below(8);
+        let k = 1 + rng.below(6);
+        let parts: Vec<Vec<f32>> = (0..k).map(|_| rng.normal_vec(n, 0.0, 2.0)).collect();
+        let mut agg = WeightedAggregator::new();
+        for p in &parts {
+            let w = rng.uniform_in(0.01, 2.0);
+            agg.add(
+                &TensorList::new(vec!["x".into()], vec![Tensor::from_vec(&[n], p.clone())]),
+                w,
+            );
+        }
+        let out = agg.finish().unwrap();
+        for j in 0..n {
+            let lo = parts.iter().map(|p| p[j]).fold(f32::INFINITY, f32::min);
+            let hi = parts.iter().map(|p| p[j]).fold(f32::NEG_INFINITY, f32::max);
+            let v = out.tensors[0].data()[j];
+            assert!(v >= lo - 1e-4 && v <= hi + 1e-4, "coord {j}: {v} not in [{lo},{hi}]");
+        }
+    });
+}
+
+#[test]
+fn prop_dropout_mask_mean_preserving() {
+    forall("dropout-mean", |rng| {
+        let p = rng.uniform_in(0.0, 0.8);
+        let mut m = vec![0.0f32; 50_000];
+        rng.dropout_mask(p, &mut m);
+        let mean: f64 = m.iter().map(|&x| x as f64).sum::<f64>() / m.len() as f64;
+        assert!((mean - 1.0).abs() < 0.05, "p={p}: E[mask]={mean}");
+    });
+}
+
+#[test]
+fn prop_wire_bytes_close_to_paper_model() {
+    // the f32 wire size stays within 10% of the phi=32 analytic model
+    forall("wire-vs-model", |rng| {
+        let (cfg, b, d, _z) = rand_pq_setup(rng);
+        if cfg.group_size(b) < cfg.l {
+            return; // degenerate: codebook larger than data
+        }
+        let m = CostModel::new(32);
+        let model_bits = m.fedlite_bits(b, d, cfg.q, cfg.r, cfg.l);
+        let wire_bits = (m.wire_bytes(b, d, cfg.q, cfg.r, cfg.l) * 8) as f64;
+        // wire uses ceil(log2 L) and byte padding: allow one-sided slack
+        assert!(wire_bits + 1e-9 >= model_bits * 0.9,
+                "wire {wire_bits} << model {model_bits}");
+        let ng = cfg.group_size(b) as f64;
+        let slack = model_bits * 1.6 + (cfg.r as f64) * 8.0 + ng + 64.0;
+        assert!(wire_bits <= slack, "wire {wire_bits} >> model {model_bits}");
+    });
+}
