@@ -1,28 +1,73 @@
 //! Bench: end-to-end round latency per algorithm + per-stage breakdown.
 //!
-//! Regenerates the *measured* side of Table 1 (bytes are exact; times are
-//! this machine's CPU-PJRT simulation) and provides the §Perf L3 round
-//! profile: client_fwd / quantize / server_step / client_bwd, isolated.
-//! Skips gracefully when artifacts are missing.
+//! Two sections:
+//!
+//! 1. **Cohort scaling (always runs, native engine)** — one FedLite round
+//!    over a 16-client cohort at `workers = 1` vs `workers = N` (machine
+//!    default). This is the wall-clock trajectory of the parallel cohort
+//!    engine; on a 4+ core machine the parallel case should be ≥ 2×
+//!    faster while producing bit-identical round records (see
+//!    `rust/tests/determinism.rs`).
+//! 2. **PJRT rounds + stage breakdown** — regenerates the *measured* side
+//!    of Table 1 and the §Perf L3 round profile (client_fwd / quantize /
+//!    server_step / client_bwd, isolated). Skips gracefully when
+//!    artifacts are missing.
 
 use std::sync::Arc;
 
 use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
 use fedlite::coordinator::client::{assemble, draw_masks, InputSources};
 use fedlite::coordinator::quantize::QuantizeBackend;
-use fedlite::coordinator::{build_dataset, build_trainer};
+use fedlite::coordinator::{build_dataset, build_trainer, Trainer};
 use fedlite::data::Array;
 use fedlite::runtime::Runtime;
 use fedlite::util::bench::Bench;
+use fedlite::util::pool::ThreadPool;
 use fedlite::util::rng::Rng;
 
+fn cohort_scaling(b: &mut Bench) {
+    let rt = Arc::new(Runtime::native());
+    let auto = ThreadPool::default_size();
+    let mut workers: Vec<usize> = vec![1];
+    if auto > 1 {
+        workers.push(auto);
+    }
+    for w in workers {
+        for algo in [Algorithm::FedLite, Algorithm::FedAvg] {
+            let mut cfg = RunConfig::tiny("femnist").unwrap();
+            cfg.algorithm = algo;
+            cfg.rounds = 2;
+            cfg.num_clients = 16;
+            cfg.clients_per_round = 16;
+            cfg.eval_every = 0;
+            cfg.workers = w;
+            // trainer (dataset gen + param init) built outside the timed
+            // region so the measurement isolates the round loop; each
+            // iteration re-runs `rounds` fresh rounds on the same trainer
+            let mut t = build_trainer(cfg, Arc::clone(&rt)).unwrap();
+            b.case(
+                &format!("2 rounds femnist_tiny/{} S=16 workers={w}", algo.name()),
+                1,
+                5,
+                0.0,
+                move || {
+                    std::hint::black_box(t.run().unwrap());
+                },
+            );
+        }
+    }
+}
+
 fn main() {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        println!("bench_round: artifacts not built, skipping (run `make artifacts`)");
+    let mut b = Bench::new("round");
+    cohort_scaling(&mut b);
+
+    if !cfg!(feature = "pjrt") || !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("bench_round: no pjrt feature or artifacts, skipping the PJRT section");
+        b.finish();
         return;
     }
     let rt = Arc::new(Runtime::open("artifacts").expect("runtime"));
-    let mut b = Bench::new("round");
 
     // whole rounds, each algorithm (FEMNIST paper config, 4 clients/round)
     for algo in [Algorithm::FedLite, Algorithm::SplitFed, Algorithm::FedAvg] {

@@ -30,6 +30,23 @@ impl RoundBytes {
     pub fn total(&self) -> u64 {
         self.up + self.down
     }
+
+    /// One client's transfers as a partial round delta.
+    pub fn client(up: usize, down: usize, up_msgs: u64, down_msgs: u64) -> RoundBytes {
+        RoundBytes { up: up as u64, down: down as u64, up_msgs, down_msgs }
+    }
+
+    /// Fold another partial into this one. The parallel round loop counts
+    /// bytes per client inside the worker unit and merges the partials
+    /// after the barrier in cohort-slot order — sums of the same u64s in
+    /// any order are identical, so round records don't depend on thread
+    /// scheduling.
+    pub fn merge(&mut self, other: &RoundBytes) {
+        self.up += other.up;
+        self.down += other.down;
+        self.up_msgs += other.up_msgs;
+        self.down_msgs += other.down_msgs;
+    }
 }
 
 /// Thread-safe cumulative + per-round byte meter.
@@ -128,6 +145,18 @@ mod tests {
         assert_eq!((r2.up, r2.down), (5, 2));
         assert_eq!(m.per_round(), vec![r1, r2]);
         assert_eq!(m.totals().up, 15);
+    }
+
+    #[test]
+    fn merge_folds_partials() {
+        let mut total = RoundBytes::default();
+        total.merge(&RoundBytes::client(100, 30, 2, 1));
+        total.merge(&RoundBytes::client(7, 0, 1, 0));
+        assert_eq!(total.up, 107);
+        assert_eq!(total.down, 30);
+        assert_eq!(total.up_msgs, 3);
+        assert_eq!(total.down_msgs, 1);
+        assert_eq!(total.total(), 137);
     }
 
     #[test]

@@ -3,6 +3,11 @@
 //! The coordinator sends every protocol message through here so that all
 //! traffic is serialized, metered, and time-modelled uniformly. Estimated
 //! round wall-clock uses the slowest selected client (synchronous FL).
+//!
+//! `upload`/`download` take `&self` and meter through atomics, so the
+//! per-round cohort workers call them concurrently; each worker counts
+//! its own client's bytes and the trainer merges those partials after
+//! the round barrier (see `coordinator::split`).
 
 use std::sync::Arc;
 

@@ -82,6 +82,10 @@ pub struct RunConfig {
     /// Dropout keep handled via masks; probability by task (femnist only).
     pub dropout_client: f64,
     pub dropout_server: f64,
+    /// Worker threads for the per-round cohort fan-out (0 = auto:
+    /// [`crate::util::pool::ThreadPool::default_size`]). `1` recovers the
+    /// serial round loop; results are bit-identical at any value.
+    pub workers: usize,
 }
 
 impl Default for RunConfig {
@@ -108,6 +112,7 @@ impl Default for RunConfig {
             out_dir: String::new(),
             dropout_client: 0.25,
             dropout_server: 0.5,
+            workers: 0,
         }
     }
 }
@@ -161,6 +166,35 @@ impl RunConfig {
         Ok(c)
     }
 
+    /// The CI/smoke preset: the built-in native `femnist_tiny` variant
+    /// (no AOT artifacts or PJRT needed). Tiny cohort defaults and a PQ
+    /// geometry sized to the 32-wide cut layer.
+    pub fn tiny(task: &str) -> anyhow::Result<RunConfig> {
+        anyhow::ensure!(
+            task == "femnist",
+            "the tiny (native) preset only exists for femnist, not '{task}'"
+        );
+        let mut c = RunConfig::preset(task)?;
+        c.preset = "tiny".into();
+        c.pq = PqConfig::new(8, 1, 4).with_iters(4);
+        c.clients_per_round = 4;
+        c.eval_batches = 2;
+        c.dropout_client = 0.0;
+        c.dropout_server = 0.0;
+        c.artifacts_dir = "native".into();
+        Ok(c)
+    }
+
+    /// Cohort worker threads after resolving `0` (auto) to the machine
+    /// default.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers == 0 {
+            crate::util::pool::ThreadPool::default_size()
+        } else {
+            self.workers
+        }
+    }
+
     /// Variant key into the artifact manifest.
     pub fn variant(&self) -> String {
         format!("{}_{}", self.task, self.preset)
@@ -201,6 +235,7 @@ impl RunConfig {
         o.insert("out_dir", Value::Str(self.out_dir.clone()));
         o.insert("dropout_client", Value::Num(self.dropout_client));
         o.insert("dropout_server", Value::Num(self.dropout_server));
+        o.insert("workers", Value::from_usize(self.workers));
         Value::Obj(o)
     }
 
@@ -240,6 +275,7 @@ impl RunConfig {
         c.out_dir = get_s("out_dir", &c.out_dir);
         c.dropout_client = get_f("dropout_client", c.dropout_client);
         c.dropout_server = get_f("dropout_server", c.dropout_server);
+        c.workers = get_us("workers", c.workers);
         Ok(c)
     }
 
@@ -277,15 +313,35 @@ mod tests {
     }
 
     #[test]
+    fn tiny_preset_targets_native_variant() {
+        let c = RunConfig::tiny("femnist").unwrap();
+        assert_eq!(c.variant(), "femnist_tiny");
+        assert_eq!(c.artifacts_dir, "native");
+        assert_eq!(c.pq, PqConfig::new(8, 1, 4).with_iters(4));
+        assert!(c.validate().is_ok());
+        assert!(RunConfig::tiny("so_tag").is_err());
+    }
+
+    #[test]
+    fn workers_resolution() {
+        let mut c = RunConfig::default();
+        assert!(c.resolved_workers() >= 1);
+        c.workers = 3;
+        assert_eq!(c.resolved_workers(), 3);
+    }
+
+    #[test]
     fn json_roundtrip_preserves_fields() {
         let mut c = RunConfig::preset("femnist").unwrap();
         c.rounds = 321;
         c.lambda = 5e-4;
+        c.workers = 6;
         c.algorithm = Algorithm::SplitFed;
         c.quantizer = QuantizerEngine::Pjrt;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.rounds, 321);
+        assert_eq!(back.workers, 6);
         assert!((back.lambda - 5e-4).abs() < 1e-9);
         assert_eq!(back.algorithm, Algorithm::SplitFed);
         assert_eq!(back.quantizer, QuantizerEngine::Pjrt);

@@ -35,6 +35,22 @@ impl WeightedAggregator {
         self.total_weight
     }
 
+    /// Fold another aggregator's partial sums into this one — equivalent
+    /// to replaying all of `other`'s `add` calls after this aggregator's
+    /// own. This is the combinator for sharded reductions (merge
+    /// per-shard partials in a fixed shard order for a deterministic
+    /// result); the round loop itself reduces per-client outputs
+    /// directly in cohort-slot order via `add`.
+    pub fn merge(&mut self, other: WeightedAggregator) {
+        if let Some(o) = other.acc {
+            match &mut self.acc {
+                None => self.acc = Some(o),
+                Some(acc) => acc.axpy(1.0, &o),
+            }
+        }
+        self.total_weight += other.total_weight;
+    }
+
     /// Normalized weighted mean; `None` if nothing was added.
     pub fn finish(self) -> Option<TensorList> {
         let mut acc = self.acc?;
@@ -71,6 +87,13 @@ impl ScalarAggregator {
         } else {
             0.0
         }
+    }
+
+    /// Fold another scalar aggregator's partial sums into this one (see
+    /// [`WeightedAggregator::merge`]).
+    pub fn merge(&mut self, other: ScalarAggregator) {
+        self.sum += other.sum;
+        self.weight += other.weight;
     }
 }
 
@@ -130,6 +153,55 @@ mod tests {
         s.add(6.0, 1.0);
         assert_eq!(s.mean(), 4.0);
         assert_eq!(ScalarAggregator::new().mean(), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_sequential_adds() {
+        // exactly-representable values: merged partials must equal the
+        // sequential reduction bit-for-bit
+        let parts: [(&[f32], f64); 4] =
+            [(&[1.0, 2.0], 1.0), (&[3.0, -4.0], 2.0), (&[0.5, 8.0], 1.0), (&[-2.0, 1.0], 4.0)];
+        let mut seq = WeightedAggregator::new();
+        for (v, w) in parts {
+            seq.add(&tl(v), w);
+        }
+        let mut left = WeightedAggregator::new();
+        left.add(&tl(parts[0].0), parts[0].1);
+        left.add(&tl(parts[1].0), parts[1].1);
+        let mut right = WeightedAggregator::new();
+        right.add(&tl(parts[2].0), parts[2].1);
+        right.add(&tl(parts[3].0), parts[3].1);
+        left.merge(right);
+        assert_eq!(left.count_weight(), 8.0);
+        assert_eq!(
+            seq.finish().unwrap().tensors[0].data(),
+            left.finish().unwrap().tensors[0].data()
+        );
+    }
+
+    #[test]
+    fn merge_with_empty_partials() {
+        let mut a = WeightedAggregator::new();
+        a.merge(WeightedAggregator::new());
+        assert!(a.finish().is_none());
+        let mut b = WeightedAggregator::new();
+        b.add(&tl(&[2.0]), 1.0);
+        let mut empty = WeightedAggregator::new();
+        empty.merge(b);
+        assert_eq!(empty.finish().unwrap().tensors[0].data(), &[2.0]);
+    }
+
+    #[test]
+    fn scalar_merge() {
+        let mut a = ScalarAggregator::new();
+        a.add(2.0, 1.0);
+        let mut b = ScalarAggregator::new();
+        b.add(6.0, 3.0);
+        a.merge(b);
+        assert_eq!(a.mean(), 5.0);
+        let mut c = ScalarAggregator::new();
+        c.merge(ScalarAggregator::new());
+        assert_eq!(c.mean(), 0.0);
     }
 
     #[test]

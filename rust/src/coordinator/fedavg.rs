@@ -5,10 +5,16 @@
 //! delta (uplink |w|). The server applies the weighted-mean delta. This is
 //! the comparison line of Table 1 and Figure 6: more client compute and
 //! memory, |w| per round instead of activations.
+//!
+//! Like the split trainers, the per-client work (broadcast → H local
+//! steps → delta upload) is a self-contained unit fanned across
+//! `cfg.workers` threads, with partials reduced at the barrier in
+//! cohort-slot order — bit-identical at any worker count.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
 use crate::config::RunConfig;
@@ -21,9 +27,10 @@ use crate::data::FederatedDataset;
 use crate::metrics::{RoundRecord, RunLog, TaskMetric};
 use crate::models::ModelSpec;
 use crate::optim::Optimizer;
-use crate::runtime::Runtime;
+use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::TensorList;
 use crate::util::logging::{CsvWriter, JsonlWriter};
+use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
 pub struct FedAvgTrainer {
@@ -42,6 +49,114 @@ pub struct FedAvgTrainer {
     rng: Rng,
     csv: Option<CsvWriter>,
     jsonl: Option<JsonlWriter>,
+}
+
+/// One FedAvg client's round contribution (worker-thread product).
+struct FedAvgClientOutput {
+    weight: f64,
+    loss: f64,
+    metric_sums: Vec<f64>,
+    /// Wire-decoded model delta (global − local after H steps).
+    delta: TensorList,
+    bytes: RoundBytes,
+}
+
+/// Immutable round state shared by the cohort workers.
+struct FedAvgStepCtx<'a> {
+    rt: &'a Runtime,
+    data: &'a dyn FederatedDataset,
+    net: &'a StarNetwork,
+    spec: &'a ModelSpec,
+    variant: &'a str,
+    grad_meta: &'a ArtifactMeta,
+    global: &'a TensorList,
+    /// The round's whole-model broadcast, built once and shared.
+    broadcast: &'a Message,
+    shapes: &'a [Vec<usize>],
+    wc_names: &'a [String],
+    ws_names: &'a [String],
+    /// Number of client-side tensors (split point in `global`).
+    nc: usize,
+    local_steps: usize,
+    client_lr: f32,
+    dropout_client: f64,
+    dropout_server: f64,
+    round: u32,
+}
+
+fn fedavg_client_step(
+    ctx: &FedAvgStepCtx<'_>,
+    ci: usize,
+    crng: &mut Rng,
+) -> anyhow::Result<FedAvgClientOutput> {
+    let nmetrics = ctx.spec.metrics.len();
+    let mut up = 0usize;
+    let mut down = 0usize;
+
+    // broadcast whole model (downlink |w|)
+    let (decoded, n) = ctx.net.download(ci, ctx.round, ctx.broadcast)?;
+    down += n;
+    let mut local = match decoded {
+        Message::ModelBroadcast { params } => {
+            message::payload_to_tensors(&params, ctx.shapes, &ctx.global.names)
+        }
+        _ => anyhow::bail!("wrong broadcast"),
+    };
+
+    // H local SGD steps
+    let mut loss = 0.0f64;
+    let mut metric_sums = vec![0.0f64; nmetrics];
+    for step in 0..ctx.local_steps {
+        let batch = ctx.data.train_batch(ci, ctx.spec.batch, crng);
+        let masks = draw_masks(
+            &[ctx.grad_meta],
+            ctx.dropout_client,
+            ctx.dropout_server,
+            crng,
+        );
+        let (lc, ls) = local.tensors.split_at(ctx.nc);
+        let lwc = TensorList::new(ctx.wc_names.to_vec(), lc.to_vec());
+        let lws = TensorList::new(ctx.ws_names.to_vec(), ls.to_vec());
+        let src = InputSources {
+            wc: Some(&lwc),
+            ws: Some(&lws),
+            batch: Some(&batch),
+            masks: Some(&masks),
+            ..Default::default()
+        };
+        let outs = ctx
+            .rt
+            .run(ctx.variant, "full_grad", &assemble(ctx.grad_meta, &src)?)?;
+        if step == 0 {
+            loss = scalar(&outs[0])? as f64;
+            for (k, s) in metric_sums.iter_mut().enumerate() {
+                *s = scalar(&outs[1 + k])? as f64;
+            }
+        }
+        let grads = arrays_to_tensors(&outs[1 + nmetrics..], ctx.global)?;
+        local.axpy(-ctx.client_lr, &grads);
+    }
+
+    // upload model delta (uplink |w|)
+    let mut delta = ctx.global.clone();
+    delta.axpy(-1.0, &local); // delta = global - local = lr * sum grads
+    let up_msg = Message::ClientGrads { grads: message::tensors_to_payload(&delta) };
+    let (decoded, n) = ctx.net.upload(ci, ctx.round, &up_msg)?;
+    up += n;
+    let delta_wire = match decoded {
+        Message::ClientGrads { grads } => {
+            message::payload_to_tensors(&grads, ctx.shapes, &ctx.global.names)
+        }
+        _ => anyhow::bail!("wrong upload"),
+    };
+
+    Ok(FedAvgClientOutput {
+        weight: ctx.data.client_weight(ci).max(1e-12),
+        loss,
+        metric_sums,
+        delta: delta_wire,
+        bytes: RoundBytes::client(up, down, 1, 1),
+    })
 }
 
 impl FedAvgTrainer {
@@ -123,79 +238,60 @@ impl FedAvgTrainer {
         self.net.begin_round();
         let cohort = self.sampler.sample(&mut self.rng.fork(round as u64), &[]);
         let global = self.full_params();
-        let payload = message::tensors_to_payload(&global);
+        let broadcast =
+            Message::ModelBroadcast { params: message::tensors_to_payload(&global) };
         let shapes: Vec<Vec<usize>> =
             global.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        let tasks: Vec<(usize, Rng)> = cohort
+            .iter()
+            .map(|&ci| {
+                (ci, self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xFEDA))
+            })
+            .collect();
 
+        let ctx = FedAvgStepCtx {
+            rt: &*self.rt,
+            data: self.data.as_ref(),
+            net: &self.net,
+            spec: &self.spec,
+            variant: &variant,
+            grad_meta: &grad_meta,
+            global: &global,
+            broadcast: &broadcast,
+            shapes: &shapes,
+            wc_names: &self.wc.names,
+            ws_names: &self.ws.names,
+            nc: self.wc.len(),
+            local_steps: self.cfg.local_steps,
+            client_lr: self.cfg.client_lr,
+            dropout_client: self.cfg.dropout_client,
+            dropout_server: self.cfg.dropout_server,
+            round: round as u32,
+        };
+        let results = scoped_parallel_map(
+            self.cfg.resolved_workers(),
+            tasks,
+            |_slot, (ci, mut crng)| fedavg_client_step(&ctx, ci, &mut crng),
+        );
+
+        // slot-order reduction (see split.rs: bit-identical at any worker
+        // count)
         let mut delta_agg = WeightedAggregator::new();
         let mut loss_agg = ScalarAggregator::new();
         let mut metric_sums = vec![0.0f64; nmetrics];
         let mut examples = 0.0f64;
-        let mut per_client_bytes = Vec::new();
-
-        for &ci in &cohort {
-            let mut crng = self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xFEDA);
-            let mut up = 0usize;
-            let mut down = 0usize;
-
-            // broadcast whole model (downlink |w|)
-            let bc = Message::ModelBroadcast { params: payload.clone() };
-            let (decoded, n) = self.net.download(ci, round as u32, &bc)?;
-            down += n;
-            let mut local = match decoded {
-                Message::ModelBroadcast { params } => {
-                    message::payload_to_tensors(&params, &shapes, &global.names)
-                }
-                _ => anyhow::bail!("wrong broadcast"),
-            };
-
-            // H local SGD steps
-            for step in 0..self.cfg.local_steps {
-                let batch = self.data.train_batch(ci, self.spec.batch, &mut crng);
-                let masks = draw_masks(
-                    &[&grad_meta],
-                    self.cfg.dropout_client,
-                    self.cfg.dropout_server,
-                    &mut crng,
-                );
-                let nc = self.wc.len();
-                let (lc, ls) = local.tensors.split_at(nc);
-                let lwc = TensorList::new(self.wc.names.clone(), lc.to_vec());
-                let lws = TensorList::new(self.ws.names.clone(), ls.to_vec());
-                let src = InputSources {
-                    wc: Some(&lwc),
-                    ws: Some(&lws),
-                    batch: Some(&batch),
-                    masks: Some(&masks),
-                    ..Default::default()
-                };
-                let outs = self.rt.run(&variant, "full_grad", &assemble(&grad_meta, &src)?)?;
-                if step == 0 {
-                    let w = self.data.client_weight(ci).max(1e-12);
-                    loss_agg.add(scalar(&outs[0])? as f64, w);
-                    for k in 0..nmetrics {
-                        metric_sums[k] += scalar(&outs[1 + k])? as f64;
-                    }
-                    examples += self.spec.batch as f64;
-                }
-                let grads = arrays_to_tensors(&outs[1 + nmetrics..], &global)?;
-                local.axpy(-self.cfg.client_lr, &grads);
+        let mut round_bytes = RoundBytes::default();
+        let mut per_client_bytes = Vec::with_capacity(cohort.len());
+        for result in results {
+            let out = result?;
+            loss_agg.add(out.loss, out.weight);
+            for (k, s) in metric_sums.iter_mut().enumerate() {
+                *s += out.metric_sums[k];
             }
-
-            // upload model delta (uplink |w|)
-            let mut delta = global.clone();
-            delta.axpy(-1.0, &local); // delta = global - local = lr * sum grads
-            let up_msg = Message::ClientGrads { grads: message::tensors_to_payload(&delta) };
-            let (decoded, n) = self.net.upload(ci, round as u32, &up_msg)?;
-            up += n;
-            let delta_wire = match decoded {
-                Message::ClientGrads { grads } => {
-                    message::payload_to_tensors(&grads, &shapes, &global.names)
-                }
-                _ => anyhow::bail!("wrong upload"),
-            };
-            delta_agg.add(&delta_wire, self.data.client_weight(ci).max(1e-12));
-            per_client_bytes.push((up, down));
+            examples += self.spec.batch as f64;
+            delta_agg.add(&out.delta, out.weight);
+            per_client_bytes.push((out.bytes.up as usize, out.bytes.down as usize));
+            round_bytes.merge(&out.bytes);
         }
 
         // pseudo-gradient step: w <- w - 1.0 * mean(delta)
@@ -206,14 +302,15 @@ impl FedAvgTrainer {
         anyhow::ensure!(full.is_finite(), "parameters diverged at round {round}");
         self.split_back(full);
 
-        let rb = self.net.end_round();
+        let meter_delta = self.net.end_round();
+        debug_assert_eq!(meter_delta, round_bytes, "meter vs merged partials");
         let mut rec = RoundRecord {
             round,
             train_loss: loss_agg.mean(),
             train_metric: self.metric.value(&metric_sums, examples),
             quant_error: 0.0,
-            uplink_bytes: rb.up,
-            downlink_bytes: rb.down,
+            uplink_bytes: round_bytes.up,
+            downlink_bytes: round_bytes.down,
             cumulative_uplink: self.net.totals().up,
             wall_seconds: t0.elapsed().as_secs_f64(),
             sim_comm_seconds: self.net.estimate_round_time(&per_client_bytes),

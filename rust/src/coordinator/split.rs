@@ -14,12 +14,23 @@
 //! 6. **client-side model sync** — upload client grads (metered),
 //!    weighted-aggregate, one optimizer step on each side.
 //!
+//! Steps 0–6 for one client are a self-contained unit of work
+//! ([`client_step`] → [`ClientRoundOutput`]) with no shared mutable
+//! state: the cohort fans out across `cfg.workers` threads
+//! ([`crate::util::pool::scoped_parallel_map`]) and the partials are
+//! reduced at the barrier in cohort-slot order. Per-client RNG streams
+//! are forked from `(round, client)` keys and every reduction has a fixed
+//! order, so round records are **bit-identical at any worker count**
+//! (`workers = 1` recovers the serial loop exactly; enforced by
+//! `rust/tests/determinism.rs`).
+//!
 //! Labels are *not* metered (the paper's cost model excludes them; in the
 //! vertical-FL deployment the server owns labels — see DESIGN.md).
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
 use crate::config::{Algorithm, RunConfig};
@@ -32,9 +43,10 @@ use crate::data::{Array, FederatedDataset};
 use crate::metrics::{RoundRecord, RunLog, TaskMetric};
 use crate::models::ModelSpec;
 use crate::optim::Optimizer;
-use crate::runtime::Runtime;
+use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::{Tensor, TensorList};
 use crate::util::logging::{CsvWriter, JsonlWriter};
+use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
 /// Split-learning trainer (SplitFed when `quantizer` is None).
@@ -54,6 +66,198 @@ pub struct SplitTrainer {
     rng: Rng,
     csv: Option<CsvWriter>,
     jsonl: Option<JsonlWriter>,
+}
+
+/// What one client contributes to a round: produced on a worker thread by
+/// [`client_step`], reduced on the coordinator thread in cohort-slot
+/// order.
+pub struct ClientRoundOutput {
+    /// Aggregation weight p_i (dataset share), floored at 1e-12.
+    pub weight: f64,
+    pub loss: f64,
+    /// Raw metric sums in manifest order.
+    pub metric_sums: Vec<f64>,
+    /// Relative quantization error (0 for SplitFed).
+    pub quant_rel_err: f64,
+    pub wc_grads: TensorList,
+    pub ws_grads: TensorList,
+    /// This client's metered transfers (merged after the barrier).
+    pub bytes: RoundBytes,
+}
+
+/// Immutable view of the round state shared (read-only) by the cohort
+/// workers. Everything here is `Sync`; per-client mutability lives in the
+/// worker's own `Rng` and locals.
+struct ClientStepCtx<'a> {
+    rt: &'a Runtime,
+    data: &'a dyn FederatedDataset,
+    net: &'a StarNetwork,
+    quantizer: Option<&'a QuantizeBackend>,
+    spec: &'a ModelSpec,
+    variant: &'a str,
+    fwd: &'a ArtifactMeta,
+    step: &'a ArtifactMeta,
+    bwd: &'a ArtifactMeta,
+    wc: &'a TensorList,
+    ws: &'a TensorList,
+    /// The round's model broadcast, built once and shared: the payload is
+    /// identical for every client, and `StarNetwork::download` only needs
+    /// `&Message`.
+    broadcast: &'a Message,
+    /// Gradient-correction strength (0 when not quantizing).
+    lambda: f32,
+    dropout_client: f64,
+    dropout_server: f64,
+    round: u32,
+}
+
+/// One client's full round pipeline: broadcast → `client_fwd` → quantize →
+/// metered wire round-trip → `server_step` → `client_bwd` → grad upload.
+fn client_step(
+    ctx: &ClientStepCtx<'_>,
+    ci: usize,
+    crng: &mut Rng,
+) -> anyhow::Result<ClientRoundOutput> {
+    let mut up_bytes = 0usize;
+    let mut down_bytes = 0usize;
+    let mut up_msgs = 0u64;
+    let mut down_msgs = 0u64;
+    let act_b = ctx.spec.act_batch;
+    let d = ctx.spec.cut_dim;
+    let nmetrics = ctx.spec.metrics.len();
+
+    // 0. model broadcast (downlink)
+    let (_, n) = ctx.net.download(ci, ctx.round, ctx.broadcast)?;
+    down_bytes += n;
+    down_msgs += 1;
+
+    // 1. client forward
+    let batch = ctx.data.train_batch(ci, ctx.spec.batch, crng);
+    let masks = draw_masks(
+        &[ctx.fwd, ctx.step, ctx.bwd],
+        ctx.dropout_client,
+        ctx.dropout_server,
+        crng,
+    );
+    let src = InputSources {
+        wc: Some(ctx.wc),
+        batch: Some(&batch),
+        masks: Some(&masks),
+        ..Default::default()
+    };
+    let z_arr = ctx
+        .rt
+        .run(ctx.variant, "client_fwd", &assemble(ctx.fwd, &src)?)?
+        .remove(0);
+    let z = z_arr
+        .as_f32()
+        .ok_or_else(|| anyhow::anyhow!("z dtype"))?
+        .to_vec();
+
+    // 2. upload: quantized (FedLite) or raw (SplitFed); the server
+    //    trains on what came off the wire.
+    let (z_tilde_server, quant_rel_err) = match ctx.quantizer {
+        Some(qz) => {
+            let out = qz.quantize(&z, act_b, crng)?;
+            let msg = Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
+            let (decoded, n) = ctx.net.upload(ci, ctx.round, &msg)?;
+            up_bytes += n;
+            up_msgs += 1;
+            let codes = decoded.unpack_codes()?;
+            let cbs = match &decoded {
+                Message::QuantizedUpload { codebooks, .. } => codebooks.clone(),
+                _ => anyhow::bail!("wrong upload variant"),
+            };
+            let native = crate::quantizer::GroupedPq::new(qz.config, d)?;
+            let rec = native.reconstruct(&cbs, &codes, act_b);
+            debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
+            (rec, out.relative_error(&z))
+        }
+        None => {
+            let msg = Message::ActivationUpload { z: z.clone(), b: act_b, d };
+            let (decoded, n) = ctx.net.upload(ci, ctx.round, &msg)?;
+            up_bytes += n;
+            up_msgs += 1;
+            match decoded {
+                Message::ActivationUpload { z, .. } => (z, 0.0),
+                _ => anyhow::bail!("wrong upload variant"),
+            }
+        }
+    };
+    let z_tilde = Array::f32(&[act_b, d], z_tilde_server);
+
+    // 3. server update
+    let src = InputSources {
+        ws: Some(ctx.ws),
+        batch: Some(&batch),
+        masks: Some(&masks),
+        z_tilde: Some(&z_tilde),
+        ..Default::default()
+    };
+    let outs = ctx
+        .rt
+        .run(ctx.variant, "server_step", &assemble(ctx.step, &src)?)?;
+    let weight = ctx.data.client_weight(ci).max(1e-12);
+    let loss = scalar(&outs[0])? as f64;
+    let mut metric_sums = vec![0.0f64; nmetrics];
+    for (k, s) in metric_sums.iter_mut().enumerate() {
+        *s = scalar(&outs[1 + k])? as f64;
+    }
+    let grad_z = outs[1 + nmetrics].clone();
+    let ws_grads = arrays_to_tensors(&outs[2 + nmetrics..], ctx.ws)?;
+
+    // 4. gradient download
+    let gz_vec = grad_z
+        .as_f32()
+        .ok_or_else(|| anyhow::anyhow!("grad_z dtype"))?
+        .to_vec();
+    let gmsg = Message::GradDownload { grad: gz_vec, b: act_b, d };
+    let (decoded, n) = ctx.net.download(ci, ctx.round, &gmsg)?;
+    down_bytes += n;
+    down_msgs += 1;
+    let grad_wire = match decoded {
+        Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
+        _ => anyhow::bail!("wrong download variant"),
+    };
+
+    // 5. client backward (gradient correction inside the artifact)
+    let src = InputSources {
+        wc: Some(ctx.wc),
+        batch: Some(&batch),
+        masks: Some(&masks),
+        z_tilde: Some(&z_tilde),
+        grad_z: Some(&grad_wire),
+        lambda: Some(ctx.lambda),
+        ..Default::default()
+    };
+    let bwd = ctx
+        .rt
+        .run(ctx.variant, "client_bwd", &assemble(ctx.bwd, &src)?)?;
+    let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], ctx.wc)?;
+
+    // 6. client-side grad sync (uplink)
+    let cmsg = Message::ClientGrads { grads: message::tensors_to_payload(&wc_grads) };
+    let (decoded, n) = ctx.net.upload(ci, ctx.round, &cmsg)?;
+    up_bytes += n;
+    up_msgs += 1;
+    let synced = match decoded {
+        Message::ClientGrads { grads } => message::payload_to_tensors(
+            &grads,
+            &ctx.wc.tensors.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>(),
+            &ctx.wc.names,
+        ),
+        _ => anyhow::bail!("wrong sync variant"),
+    };
+
+    Ok(ClientRoundOutput {
+        weight,
+        loss,
+        metric_sums,
+        quant_rel_err,
+        wc_grads: synced,
+        ws_grads,
+        bytes: RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+    })
 }
 
 impl SplitTrainer {
@@ -147,144 +351,67 @@ impl SplitTrainer {
 
         self.net.begin_round();
         let cohort = self.sampler.sample(&mut self.rng.fork(round as u64), &[]);
+        let broadcast =
+            Message::ModelBroadcast { params: message::tensors_to_payload(&self.wc) };
+        // Per-client RNG streams use the same (round, client) fork keys as
+        // the original serial loop; `fork` never advances the root stream,
+        // so hoisting the forks out of the loop is behavior-preserving.
+        let tasks: Vec<(usize, Rng)> = cohort
+            .iter()
+            .map(|&ci| {
+                (ci, self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xC11E))
+            })
+            .collect();
 
+        let ctx = ClientStepCtx {
+            rt: &*self.rt,
+            data: self.data.as_ref(),
+            net: &self.net,
+            quantizer: self.quantizer.as_ref(),
+            spec: &self.spec,
+            variant: &variant,
+            fwd: &fwd_meta,
+            step: &step_meta,
+            bwd: &bwd_meta,
+            wc: &self.wc,
+            ws: &self.ws,
+            broadcast: &broadcast,
+            lambda: if self.quantizer.is_some() { self.cfg.lambda } else { 0.0 },
+            dropout_client: self.cfg.dropout_client,
+            dropout_server: self.cfg.dropout_server,
+            round: round as u32,
+        };
+        // fan the cohort across the worker threads; collection is the
+        // round barrier
+        let results = scoped_parallel_map(
+            self.cfg.resolved_workers(),
+            tasks,
+            |_slot, (ci, mut crng)| client_step(&ctx, ci, &mut crng),
+        );
+
+        // reduce the partials in cohort-slot order: every accumulation
+        // below happens in the same order the serial loop used, so the
+        // records are bit-identical at any worker count
         let mut ws_agg = WeightedAggregator::new();
         let mut wc_agg = WeightedAggregator::new();
         let mut loss_agg = ScalarAggregator::new();
         let mut qerr_agg = ScalarAggregator::new();
         let mut metric_sums = vec![0.0f64; nmetrics];
         let mut examples = 0.0f64;
-        let mut per_client_bytes: Vec<(usize, usize)> = Vec::new();
-
-        let wc_payload = message::tensors_to_payload(&self.wc);
-
-        for (slot, &ci) in cohort.iter().enumerate() {
-            let mut crng = self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xC11E);
-            let mut up_bytes = 0usize;
-            let mut down_bytes = 0usize;
-
-            // 0. model broadcast (downlink)
-            let bc = Message::ModelBroadcast { params: wc_payload.clone() };
-            let (_, n) = self.net.download(ci, round as u32, &bc)?;
-            down_bytes += n;
-
-            // 1. client forward
-            let batch = self.data.train_batch(ci, self.spec.batch, &mut crng);
-            let masks = draw_masks(
-                &[&fwd_meta, &step_meta, &bwd_meta],
-                self.cfg.dropout_client,
-                self.cfg.dropout_server,
-                &mut crng,
-            );
-            let src = InputSources {
-                wc: Some(&self.wc),
-                batch: Some(&batch),
-                masks: Some(&masks),
-                ..Default::default()
-            };
-            let z_arr = self
-                .rt
-                .run(&variant, "client_fwd", &assemble(&fwd_meta, &src)?)?
-                .remove(0);
-            let z = z_arr
-                .as_f32()
-                .ok_or_else(|| anyhow::anyhow!("z dtype"))?
-                .to_vec();
-            let act_b = self.spec.act_batch;
-            let d = self.spec.cut_dim;
-
-            // 2. upload: quantized (FedLite) or raw (SplitFed); the server
-            //    trains on what came off the wire.
-            let (z_tilde_server, quant_rel_err) = match &self.quantizer {
-                Some(qz) => {
-                    let out = qz.quantize(&z, act_b, &mut crng)?;
-                    let msg =
-                        Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
-                    let (decoded, n) = self.net.upload(ci, round as u32, &msg)?;
-                    up_bytes += n;
-                    let codes = decoded.unpack_codes()?;
-                    let cbs = match &decoded {
-                        Message::QuantizedUpload { codebooks, .. } => codebooks.clone(),
-                        _ => anyhow::bail!("wrong upload variant"),
-                    };
-                    let native = crate::quantizer::GroupedPq::new(qz.config, d)?;
-                    let rec = native.reconstruct(&cbs, &codes, act_b);
-                    debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
-                    (rec, out.relative_error(&z))
-                }
-                None => {
-                    let msg = Message::ActivationUpload { z: z.clone(), b: act_b, d };
-                    let (decoded, n) = self.net.upload(ci, round as u32, &msg)?;
-                    up_bytes += n;
-                    match decoded {
-                        Message::ActivationUpload { z, .. } => (z, 0.0),
-                        _ => anyhow::bail!("wrong upload variant"),
-                    }
-                }
-            };
-            let z_tilde = Array::f32(&[act_b, d], z_tilde_server);
-
-            // 3. server update
-            let src = InputSources {
-                ws: Some(&self.ws),
-                batch: Some(&batch),
-                masks: Some(&masks),
-                z_tilde: Some(&z_tilde),
-                ..Default::default()
-            };
-            let outs = self.rt.run(&variant, "server_step", &assemble(&step_meta, &src)?)?;
-            let weight = self.data.client_weight(ci).max(1e-12);
-            loss_agg.add(scalar(&outs[0])? as f64, weight);
-            for k in 0..nmetrics {
-                metric_sums[k] += scalar(&outs[1 + k])? as f64;
+        let mut round_bytes = RoundBytes::default();
+        let mut per_client_bytes: Vec<(usize, usize)> = Vec::with_capacity(cohort.len());
+        for result in results {
+            let out = result?;
+            loss_agg.add(out.loss, out.weight);
+            for (k, s) in metric_sums.iter_mut().enumerate() {
+                *s += out.metric_sums[k];
             }
             examples += self.spec.batch as f64;
-            let grad_z = outs[1 + nmetrics].clone();
-            let ws_grads = arrays_to_tensors(&outs[2 + nmetrics..], &self.ws)?;
-            ws_agg.add(&ws_grads, weight);
-            qerr_agg.add(quant_rel_err, 1.0);
-
-            // 4. gradient download
-            let gz_vec = grad_z
-                .as_f32()
-                .ok_or_else(|| anyhow::anyhow!("grad_z dtype"))?
-                .to_vec();
-            let gmsg = Message::GradDownload { grad: gz_vec, b: act_b, d };
-            let (decoded, n) = self.net.download(ci, round as u32, &gmsg)?;
-            down_bytes += n;
-            let grad_wire = match decoded {
-                Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
-                _ => anyhow::bail!("wrong download variant"),
-            };
-
-            // 5. client backward (gradient correction inside the artifact)
-            let src = InputSources {
-                wc: Some(&self.wc),
-                batch: Some(&batch),
-                masks: Some(&masks),
-                z_tilde: Some(&z_tilde),
-                grad_z: Some(&grad_wire),
-                lambda: Some(if self.quantizer.is_some() { self.cfg.lambda } else { 0.0 }),
-                ..Default::default()
-            };
-            let bwd = self.rt.run(&variant, "client_bwd", &assemble(&bwd_meta, &src)?)?;
-            let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
-
-            // 6. client-side grad sync (uplink)
-            let cmsg = Message::ClientGrads { grads: message::tensors_to_payload(&wc_grads) };
-            let (decoded, n) = self.net.upload(ci, round as u32, &cmsg)?;
-            up_bytes += n;
-            let synced = match decoded {
-                Message::ClientGrads { grads } => message::payload_to_tensors(
-                    &grads,
-                    &self.wc.tensors.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>(),
-                    &self.wc.names,
-                ),
-                _ => anyhow::bail!("wrong sync variant"),
-            };
-            wc_agg.add(&synced, weight);
-            per_client_bytes.push((up_bytes, down_bytes));
-            let _ = slot;
+            ws_agg.add(&out.ws_grads, out.weight);
+            wc_agg.add(&out.wc_grads, out.weight);
+            qerr_agg.add(out.quant_rel_err, 1.0);
+            per_client_bytes.push((out.bytes.up as usize, out.bytes.down as usize));
+            round_bytes.merge(&out.bytes);
         }
 
         // optimizer steps on the aggregated gradients
@@ -297,14 +424,19 @@ impl SplitTrainer {
         anyhow::ensure!(self.wc.is_finite() && self.ws.is_finite(),
             "parameters diverged (NaN/Inf) at round {round}");
 
-        let rb = self.net.end_round();
+        // archive the meter's per-round delta (cumulative totals live
+        // there too); the record reports the slot-order merged partials,
+        // which must agree with the meter while all round traffic flows
+        // through client_step
+        let meter_delta = self.net.end_round();
+        debug_assert_eq!(meter_delta, round_bytes, "meter vs merged partials");
         let mut rec = RoundRecord {
             round,
             train_loss: loss_agg.mean(),
             train_metric: self.metric.value(&metric_sums, examples),
             quant_error: qerr_agg.mean(),
-            uplink_bytes: rb.up,
-            downlink_bytes: rb.down,
+            uplink_bytes: round_bytes.up,
+            downlink_bytes: round_bytes.down,
             cumulative_uplink: self.net.totals().up,
             wall_seconds: t0.elapsed().as_secs_f64(),
             sim_comm_seconds: self.net.estimate_round_time(&per_client_bytes),

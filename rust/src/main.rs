@@ -7,7 +7,7 @@
 use std::sync::Arc;
 
 use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
-use fedlite::coordinator::build_trainer;
+use fedlite::coordinator::{build_trainer, Trainer};
 use fedlite::experiments::{fig3, fig4, fig5, fig6, table1};
 use fedlite::quantizer::pq::PqConfig;
 use fedlite::runtime::Runtime;
@@ -24,7 +24,19 @@ fn cli() -> Cli {
                 about: "run one federated training job",
                 flags: vec![
                     Flag::opt("task", "femnist", "femnist | so_tag | so_nwp"),
+                    Flag::opt(
+                        "preset",
+                        "",
+                        "'' = task default (PJRT artifacts); 'tiny' = built-in \
+                         native femnist variant (no artifacts needed)",
+                    ),
                     Flag::opt("algorithm", "fedlite", "fedlite | splitfed | fedavg"),
+                    Flag::opt(
+                        "workers",
+                        "0",
+                        "cohort worker threads; 0 = one per core, 1 = serial \
+                         (results are bit-identical at any value)",
+                    ),
                     Flag::opt("rounds", "100", "number of federated rounds"),
                     Flag::opt("clients", "100", "population size M"),
                     Flag::opt("clients-per-round", "0", "cohort size S (0 = preset)"),
@@ -32,7 +44,7 @@ fn cli() -> Cli {
                     Flag::opt("q", "0", "subvectors per activation (0 = preset)"),
                     Flag::opt("l", "0", "centroids per group (0 = preset)"),
                     Flag::opt("r", "1", "groups sharing a codebook"),
-                    Flag::opt("kmeans-iters", "8", "Lloyd iterations"),
+                    Flag::opt("kmeans-iters", "0", "Lloyd iterations (0 = preset)"),
                     Flag::opt("lambda", "-1", "gradient-correction strength (-1 = preset)"),
                     Flag::opt("quantizer", "native", "native | pjrt (Pallas artifact)"),
                     Flag::opt("lr", "0", "learning rate override (0 = preset)"),
@@ -111,8 +123,15 @@ fn dispatch(cmd: &str, args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
 }
 
 fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
-    let mut cfg = RunConfig::preset(args.str("task")?)?;
+    let task = args.str("task")?;
+    let preset = args.get("preset").unwrap_or("");
+    let mut cfg = match preset {
+        "" => RunConfig::preset(task)?,
+        "tiny" => RunConfig::tiny(task)?,
+        other => anyhow::bail!("unknown preset '{other}' (try '' or 'tiny')"),
+    };
     cfg.algorithm = Algorithm::parse(args.str("algorithm")?)?;
+    cfg.workers = args.usize("workers")?;
     cfg.rounds = args.usize("rounds")?;
     cfg.num_clients = args.usize("clients")?;
     let s = args.usize("clients-per-round")?;
@@ -124,7 +143,10 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     if q > 0 && l > 0 {
         cfg.pq = PqConfig::new(q, r.max(1), l);
     }
-    cfg.pq = cfg.pq.with_iters(args.usize("kmeans-iters")?);
+    let iters = args.usize("kmeans-iters")?;
+    if iters > 0 {
+        cfg.pq = cfg.pq.with_iters(iters);
+    }
     let lam = args.f64("lambda")?;
     if lam >= 0.0 {
         cfg.lambda = lam as f32;
@@ -141,15 +163,19 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     cfg.alpha = args.f64("alpha")?;
     cfg.seed = args.u64("seed")?;
     cfg.eval_every = args.usize("eval-every")?;
-    cfg.artifacts_dir = args.str("artifacts")?.to_string();
+    // the tiny preset always runs on the built-in native engine
+    if cfg.preset != "tiny" {
+        cfg.artifacts_dir = args.str("artifacts")?.to_string();
+    }
     cfg.out_dir = args.get("out-dir").unwrap_or("").to_string();
 
     let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
     log::info!(
-        "platform={} task={} algo={} rounds={} S={}/{} q={} L={} R={} lambda={} quantizer={:?}",
+        "platform={} task={} algo={} rounds={} S={}/{} workers={} q={} L={} R={} \
+         lambda={} quantizer={:?}",
         rt.platform(), cfg.task, cfg.algorithm.name(), cfg.rounds,
-        cfg.clients_per_round, cfg.num_clients, cfg.pq.q, cfg.pq.l, cfg.pq.r,
-        cfg.lambda, cfg.quantizer
+        cfg.clients_per_round, cfg.num_clients, cfg.resolved_workers(),
+        cfg.pq.q, cfg.pq.l, cfg.pq.r, cfg.lambda, cfg.quantizer
     );
     let save = args.get("save").unwrap_or("").to_string();
     let run_log = if !save.is_empty() && cfg.algorithm != Algorithm::FedAvg {
@@ -266,9 +292,8 @@ fn cmd_inspect(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
             let art = &v.artifacts[a];
             println!("  {a:<22} inputs={} outputs={}", art.inputs.len(), art.outputs.len());
             if args.has("compile") {
-                let t0 = std::time::Instant::now();
-                rt.executable(vname, a)?;
-                println!("    compiled in {:.2}s", t0.elapsed().as_secs_f64());
+                let dt = rt.precompile(vname, &[a.as_str()])?;
+                println!("    compiled in {dt:.2}s");
             }
         }
     }

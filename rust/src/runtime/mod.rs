@@ -1,146 +1,251 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them (Layer 2/1
-//! entry point from rust).
+//! Model-execution runtime behind the coordinator.
 //!
-//! The flow, adapted from `/opt/xla-example/load_hlo`:
-//! `HloModuleProto::from_text_file` (text, *not* serialized proto — see
-//! `python/compile/aot.py`) → `XlaComputation::from_proto` →
-//! `PjRtClient::compile` → `execute`. Compiled executables are cached per
-//! artifact; all lowered functions return tuples (`return_tuple=True`), so
-//! outputs are unwrapped with `Literal::to_tuple`.
+//! Two backends share one [`Runtime`] front:
+//!
+//! * **Native** (always available) — a pure-rust reference engine
+//!   ([`native`]) that executes the built-in `femnist_tiny` split MLP.
+//!   It needs no artifacts directory, which is what lets CI build, test,
+//!   and smoke-train the full round loop from a fresh clone.
+//! * **PJRT** (cargo feature `pjrt`) — loads AOT HLO-text artifacts and
+//!   executes them: `HloModuleProto::from_text_file` (text, *not*
+//!   serialized proto — see `python/compile/aot.py`) →
+//!   `XlaComputation::from_proto` → `PjRtClient::compile` → `execute`.
+//!   Compiled executables are cached per artifact; all lowered functions
+//!   return tuples (`return_tuple=True`), so outputs are unwrapped with
+//!   `Literal::to_tuple`. The vendored `xla` stub satisfies the build;
+//!   executing real artifacts needs the real xla-rs bindings.
+//!
+//! Both backends are `Send + Sync`: `run` takes `&self` and is called
+//! concurrently from the cohort worker threads.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+pub mod native;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::path::Path;
 
 use crate::data::Array;
 pub use artifact::{ArtifactMeta, IoSpec, Manifest};
 
-/// The PJRT execution engine: client + manifest + executable cache.
+/// Special artifacts-dir spelling that selects the native engine.
+pub const NATIVE_ARTIFACTS: &str = "native";
+
+/// The execution engine: backend + manifest (the single source of truth
+/// for artifact shapes, whichever backend provides it).
 pub struct Runtime {
-    client: xla::PjRtClient,
     pub manifest: Manifest,
-    root: PathBuf,
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    /// PJRT CPU execute is internally threaded; serialize submissions to
-    /// keep profiles stable (relaxed in the perf pass if beneficial).
-    exec_lock: Mutex<()>,
+    backend: Backend,
 }
 
-// xla handles are thread-safe to share behind our own locks.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
+enum Backend {
+    Native(native::NativeEngine),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
 
 impl Runtime {
-    /// Open the artifacts directory (expects `manifest.json` inside).
-    pub fn open(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
-        let root = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(root.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime {
-            client,
-            manifest,
-            root,
-            cache: Mutex::new(HashMap::new()),
-            exec_lock: Mutex::new(()),
-        })
+    /// The built-in native engine (no artifacts directory needed).
+    pub fn native() -> Runtime {
+        let engine = native::NativeEngine::new();
+        Runtime { manifest: engine.manifest(), backend: Backend::Native(engine) }
     }
 
-    /// Fetch (compiling + caching on first use) an artifact's executable.
-    pub fn executable(
-        &self,
-        variant: &str,
-        name: &str,
-    ) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
-        let key = format!("{variant}/{name}");
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
-            return Ok(Arc::clone(e));
+    /// Open an artifacts directory (expects `manifest.json` inside), or
+    /// the native engine when `artifacts_dir` is exactly
+    /// [`NATIVE_ARTIFACTS`] (`"native"`). A real directory that happens
+    /// to be named `native` can still be loaded as `"./native"`.
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let root = artifacts_dir.as_ref();
+        if root.to_str() == Some(NATIVE_ARTIFACTS) {
+            return Ok(Runtime::native());
         }
-        let meta = self.manifest.artifact(variant, name)?;
-        let path = self.root.join(&meta.path);
-        log::debug!("compiling artifact {key} from {}", path.display());
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {key}: {e}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {key}: {e}"))?;
-        let exe = Arc::new(exe);
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(key, Arc::clone(&exe));
-        Ok(exe)
+        #[cfg(feature = "pjrt")]
+        {
+            let backend = pjrt::PjrtBackend::open(root)?;
+            let manifest = backend.manifest.clone();
+            Ok(Runtime { manifest, backend: Backend::Pjrt(backend) })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            anyhow::bail!(
+                "artifacts dir '{}' needs the PJRT runtime, but this binary was \
+                 built without the `pjrt` feature; rebuild with \
+                 `--features pjrt` (and the real xla-rs bindings) or use the \
+                 native engine (`--preset tiny` / artifacts dir 'native')",
+                root.display()
+            )
+        }
     }
 
     /// Execute an artifact with typed arrays, verifying shapes/dtypes
-    /// against the manifest, and decode all tuple outputs.
+    /// against the manifest, and decode all outputs.
     pub fn run(
         &self,
         variant: &str,
         name: &str,
         inputs: &[Array],
     ) -> anyhow::Result<Vec<Array>> {
-        let meta = self.manifest.artifact(variant, name)?.clone();
+        let meta = self.manifest.artifact(variant, name)?;
         meta.check_inputs(inputs)
             .map_err(|e| anyhow::anyhow!("{variant}/{name}: {e}"))?;
-        let exe = self.executable(variant, name)?;
-        // Host->device transfer via owned PjRtBuffers + execute_b. The
-        // crate's `execute(Literal)` path leaks every input device buffer
-        // (xla_rs.cc `buffer.release()` without a matching free): at
-        // FEMNIST scale that is ~9 MB per client-step, which OOMs long
-        // runs. Owning the buffers ourselves both fixes the leak and
-        // skips one host-side copy (§Perf).
-        let buffers: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|a| {
-                match a {
-                    Array::F32 { shape, data } => {
-                        self.client.buffer_from_host_buffer::<f32>(data, shape, None)
-                    }
-                    Array::I32 { shape, data } => {
-                        self.client.buffer_from_host_buffer::<i32>(data, shape, None)
-                    }
-                }
-                .map_err(|e| anyhow::anyhow!("upload input for {variant}/{name}: {e}"))
-            })
-            .collect::<anyhow::Result<_>>()?;
-        let result = {
-            let _g = self.exec_lock.lock().unwrap();
-            exe.execute_b::<xla::PjRtBuffer>(&buffers)
-                .map_err(|e| anyhow::anyhow!("execute {variant}/{name}: {e}"))?[0][0]
-                .to_literal_sync()
-                .map_err(|e| anyhow::anyhow!("fetch {variant}/{name}: {e}"))?
+        let outs = match &self.backend {
+            Backend::Native(engine) => engine.run(variant, name, inputs)?,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(backend) => backend.run(variant, name, inputs)?,
         };
-        let parts = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {variant}/{name}: {e}"))?;
         anyhow::ensure!(
-            parts.len() == meta.outputs.len(),
+            outs.len() == meta.outputs.len(),
             "{variant}/{name}: got {} outputs, manifest says {}",
-            parts.len(),
+            outs.len(),
             meta.outputs.len()
         );
-        parts.iter().map(literal::literal_to_array).collect()
+        Ok(outs)
     }
 
-    /// Warm the cache for a set of artifacts (measures compile time).
+    /// Warm the backend for a set of artifacts (measures compile time on
+    /// the PJRT path; validates artifact names on the native path).
     pub fn precompile(&self, variant: &str, names: &[&str]) -> anyhow::Result<f64> {
         let t0 = std::time::Instant::now();
         for n in names {
-            self.executable(variant, n)?;
+            match &self.backend {
+                Backend::Native(_) => {
+                    self.manifest.artifact(variant, n)?;
+                }
+                #[cfg(feature = "pjrt")]
+                Backend::Pjrt(backend) => {
+                    backend.executable(variant, n)?;
+                }
+            }
         }
         Ok(t0.elapsed().as_secs_f64())
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native(_) => "native-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(backend) => backend.platform(),
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    //! The PJRT artifact backend (moved verbatim from the pre-workspace
+    //! `Runtime`; see the module docs above for the execution flow).
+
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
+
+    use crate::data::Array;
+    use crate::runtime::literal;
+    use crate::runtime::Manifest;
+
+    pub struct PjrtBackend {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        root: PathBuf,
+        cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+        /// PJRT CPU execute is internally threaded; serialize submissions
+        /// to keep profiles stable (relaxed in the perf pass if
+        /// beneficial).
+        exec_lock: Mutex<()>,
+    }
+
+    // xla handles are thread-safe to share behind our own locks.
+    unsafe impl Send for PjrtBackend {}
+    unsafe impl Sync for PjrtBackend {}
+
+    impl PjrtBackend {
+        pub fn open(root: &Path) -> anyhow::Result<PjrtBackend> {
+            let root = root.to_path_buf();
+            let manifest = Manifest::load(root.join("manifest.json"))?;
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+            Ok(PjrtBackend {
+                client,
+                manifest,
+                root,
+                cache: Mutex::new(HashMap::new()),
+                exec_lock: Mutex::new(()),
+            })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Fetch (compiling + caching on first use) an artifact's
+        /// executable.
+        pub fn executable(
+            &self,
+            variant: &str,
+            name: &str,
+        ) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+            let key = format!("{variant}/{name}");
+            if let Some(e) = self.cache.lock().unwrap().get(&key) {
+                return Ok(Arc::clone(e));
+            }
+            let meta = self.manifest.artifact(variant, name)?;
+            let path = self.root.join(&meta.path);
+            log::debug!("compiling artifact {key} from {}", path.display());
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow::anyhow!("parse {key}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {key}: {e}"))?;
+            let exe = Arc::new(exe);
+            self.cache.lock().unwrap().insert(key, Arc::clone(&exe));
+            Ok(exe)
+        }
+
+        pub fn run(
+            &self,
+            variant: &str,
+            name: &str,
+            inputs: &[Array],
+        ) -> anyhow::Result<Vec<Array>> {
+            let exe = self.executable(variant, name)?;
+            // Host->device transfer via owned PjRtBuffers + execute_b. The
+            // crate's `execute(Literal)` path leaks every input device
+            // buffer (xla_rs.cc `buffer.release()` without a matching
+            // free): at FEMNIST scale that is ~9 MB per client-step, which
+            // OOMs long runs. Owning the buffers ourselves both fixes the
+            // leak and skips one host-side copy (§Perf).
+            let buffers: Vec<xla::PjRtBuffer> = inputs
+                .iter()
+                .map(|a| {
+                    match a {
+                        Array::F32 { shape, data } => self
+                            .client
+                            .buffer_from_host_buffer::<f32>(data, shape, None),
+                        Array::I32 { shape, data } => self
+                            .client
+                            .buffer_from_host_buffer::<i32>(data, shape, None),
+                    }
+                    .map_err(|e| {
+                        anyhow::anyhow!("upload input for {variant}/{name}: {e}")
+                    })
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let result = {
+                let _g = self.exec_lock.lock().unwrap();
+                exe.execute_b::<xla::PjRtBuffer>(&buffers)
+                    .map_err(|e| anyhow::anyhow!("execute {variant}/{name}: {e}"))?[0][0]
+                    .to_literal_sync()
+                    .map_err(|e| anyhow::anyhow!("fetch {variant}/{name}: {e}"))?
+            };
+            let parts = result
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("untuple {variant}/{name}: {e}"))?;
+            parts.iter().map(literal::literal_to_array).collect()
+        }
     }
 }

@@ -1,0 +1,653 @@
+//! Native reference engine: a pure-rust split MLP (`femnist_tiny`).
+//!
+//! Implements the same artifact contract the PJRT backend serves —
+//! `client_fwd`, `server_step`, `client_bwd`, `full_grad`, `full_eval`
+//! with manifest-declared input order/shapes/roles — for one built-in
+//! variant, so the full round state machines (SplitFed / FedLite /
+//! FedAvg) run from a fresh clone with no Python lowering step and no
+//! XLA toolchain. CI's build/test/smoke jobs and the workers-invariance
+//! determinism tests execute through this engine.
+//!
+//! Model (`femnist_tiny`): client = dense(784→32) + ReLU (the cut layer);
+//! server = dense(32→32) + ReLU + dense(32→62) + softmax cross-entropy,
+//! `correct`-count metric. Gradient correction (paper eq. (5)) is applied
+//! in `client_bwd`: the client loss term λ/2·‖z − z~‖² contributes
+//! λ·(z − z~) to the gradient at the cut. All reductions run in a fixed
+//! sequential order, so outputs are bit-identical regardless of how many
+//! cohort workers call `run` concurrently (`&self`, no shared state).
+
+use std::collections::HashMap;
+
+use crate::data::Array;
+use crate::models::{ModelSpec, ParamSpec, SideSpec};
+use crate::runtime::artifact::{ArtifactMeta, IoSpec, Manifest, Variant};
+use crate::util::json::{Object, Value};
+
+/// The variant key the native engine serves.
+pub const VARIANT: &str = "femnist_tiny";
+
+const IN: usize = 28 * 28; // flattened [28, 28, 1] images
+const CUT: usize = 32; // cut-layer width d
+const HID: usize = 32; // server hidden width
+const CLASSES: usize = 62;
+const BATCH: usize = 8;
+const EVAL_BATCH: usize = 32;
+
+/// Stateless executor for the built-in variant.
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> NativeEngine {
+        NativeEngine
+    }
+
+    /// Synthesize the manifest the artifacts directory would otherwise
+    /// provide. Input order here is the assembly order — it must match
+    /// the indexing in [`NativeEngine::run`].
+    pub fn manifest(&self) -> Manifest {
+        let x = |b: usize| io("x", &[b, 28, 28, 1], "f32", "data");
+        let y = |b: usize| io("y", &[b], "s32", "data");
+        let client_params = || {
+            vec![
+                io("w1", &[IN, CUT], "f32", "param_client"),
+                io("b1", &[CUT], "f32", "param_client"),
+            ]
+        };
+        let server_params = || {
+            vec![
+                io("w2", &[CUT, HID], "f32", "param_server"),
+                io("b2", &[HID], "f32", "param_server"),
+                io("w3", &[HID, CLASSES], "f32", "param_server"),
+                io("b3", &[CLASSES], "f32", "param_server"),
+            ]
+        };
+
+        let mut artifacts = HashMap::new();
+        let mut add = |meta: ArtifactMeta| {
+            artifacts.insert(meta.name.clone(), meta);
+        };
+        let mut inputs = client_params();
+        inputs.push(x(BATCH));
+        add(art("client_fwd", inputs, &["z"]));
+
+        let mut inputs = server_params();
+        inputs.push(y(BATCH));
+        inputs.push(io("z_tilde", &[BATCH, CUT], "f32", "cut"));
+        add(art(
+            "server_step",
+            inputs,
+            &["loss", "correct", "grad_z", "g_w2", "g_b2", "g_w3", "g_b3"],
+        ));
+
+        let mut inputs = client_params();
+        inputs.push(x(BATCH));
+        inputs.push(io("z_tilde", &[BATCH, CUT], "f32", "cut"));
+        inputs.push(io("grad_z", &[BATCH, CUT], "f32", "grad_cut"));
+        inputs.push(io("lambda", &[], "f32", "hyper"));
+        add(art("client_bwd", inputs, &["g_w1", "g_b1", "qerr"]));
+
+        let mut inputs = client_params();
+        inputs.extend(server_params());
+        inputs.push(x(BATCH));
+        inputs.push(y(BATCH));
+        add(art(
+            "full_grad",
+            inputs,
+            &[
+                "loss", "correct", "g_w1", "g_b1", "g_w2", "g_b2", "g_w3", "g_b3",
+            ],
+        ));
+
+        let mut inputs = client_params();
+        inputs.extend(server_params());
+        inputs.push(x(EVAL_BATCH));
+        inputs.push(y(EVAL_BATCH));
+        add(art("full_eval", inputs, &["loss", "correct"]));
+
+        let mut config = Object::new();
+        config.insert("batch", Value::from_usize(BATCH));
+        config.insert("eval_batch", Value::from_usize(EVAL_BATCH));
+        let spec = ModelSpec {
+            task: "femnist".to_string(),
+            preset: "tiny".to_string(),
+            cut_dim: CUT,
+            act_batch: BATCH,
+            batch: BATCH,
+            eval_batch: EVAL_BATCH,
+            client: SideSpec {
+                params: vec![
+                    param("w1", &[IN, CUT], "glorot_uniform", IN, CUT),
+                    param("b1", &[CUT], "zeros", CUT, CUT),
+                ],
+            },
+            server: SideSpec {
+                params: vec![
+                    param("w2", &[CUT, HID], "glorot_uniform", CUT, HID),
+                    param("b2", &[HID], "zeros", HID, HID),
+                    param("w3", &[HID, CLASSES], "glorot_uniform", HID, CLASSES),
+                    param("b3", &[CLASSES], "zeros", HID, CLASSES),
+                ],
+            },
+            metrics: vec!["correct".to_string()],
+            client_args: vec!["x".to_string()],
+            server_args: vec!["y".to_string()],
+            config: Value::Obj(config),
+        };
+
+        let mut variants = HashMap::new();
+        variants.insert(VARIANT.to_string(), Variant { spec, artifacts });
+        Manifest { variants, jax_version: "native".to_string() }
+    }
+
+    /// Execute one artifact. Inputs were already checked against the
+    /// manifest by [`crate::runtime::Runtime::run`].
+    pub fn run(
+        &self,
+        variant: &str,
+        name: &str,
+        inputs: &[Array],
+    ) -> anyhow::Result<Vec<Array>> {
+        anyhow::ensure!(
+            variant == VARIANT,
+            "native engine only serves '{VARIANT}', got '{variant}'"
+        );
+        match name {
+            "client_fwd" => self.client_fwd(inputs),
+            "server_step" => self.server_step(inputs),
+            "client_bwd" => self.client_bwd(inputs),
+            "full_grad" => self.full_grad(inputs),
+            "full_eval" => self.full_eval(inputs),
+            other => anyhow::bail!("native engine has no artifact '{other}'"),
+        }
+    }
+
+    fn client_fwd(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
+        let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
+        let zpre = dense(x, w1, b1, BATCH, IN, CUT);
+        let z = relu(&zpre);
+        Ok(vec![Array::f32(&[BATCH, CUT], z)])
+    }
+
+    fn server_step(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
+        let (w2, b2, w3, b3) = (
+            f32s(&inputs[0])?,
+            f32s(&inputs[1])?,
+            f32s(&inputs[2])?,
+            f32s(&inputs[3])?,
+        );
+        let y = i32s(&inputs[4])?;
+        let zt = f32s(&inputs[5])?;
+        let fwd = server_forward(zt, w2, b2, w3, b3, BATCH);
+        let (loss, glogits, correct) = softmax_ce(&fwd.logits, y, BATCH, CLASSES);
+        let back = server_backward(zt, w2, w3, &fwd, &glogits, BATCH);
+        Ok(vec![
+            Array::f32(&[], vec![loss as f32]),
+            Array::f32(&[], vec![correct as f32]),
+            Array::f32(&[BATCH, CUT], back.grad_z),
+            Array::f32(&[CUT, HID], back.g_w2),
+            Array::f32(&[HID], back.g_b2),
+            Array::f32(&[HID, CLASSES], back.g_w3),
+            Array::f32(&[CLASSES], back.g_b3),
+        ])
+    }
+
+    fn client_bwd(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
+        let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
+        let zt = f32s(&inputs[3])?;
+        let grad_z = f32s(&inputs[4])?;
+        let lambda = f32s(&inputs[5])?[0];
+        let zpre = dense(x, w1, b1, BATCH, IN, CUT);
+        let z = relu(&zpre);
+        // gradient correction (eq. (5)): d/dz [λ/2 ‖z − z~‖²] = λ (z − z~)
+        let mut qerr = 0.0f64;
+        let mut gz = vec![0.0f32; BATCH * CUT];
+        for i in 0..BATCH * CUT {
+            let diff = z[i] - zt[i];
+            qerr += (diff as f64) * (diff as f64);
+            gz[i] = grad_z[i] + lambda * diff;
+        }
+        relu_backward(&mut gz, &zpre);
+        let g_w1 = matmul_at_b(x, &gz, BATCH, IN, CUT);
+        let g_b1 = colsum(&gz, BATCH, CUT);
+        Ok(vec![
+            Array::f32(&[IN, CUT], g_w1),
+            Array::f32(&[CUT], g_b1),
+            Array::f32(&[], vec![qerr as f32]),
+        ])
+    }
+
+    fn full_grad(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
+        let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
+        let (w2, b2, w3, b3) = (
+            f32s(&inputs[2])?,
+            f32s(&inputs[3])?,
+            f32s(&inputs[4])?,
+            f32s(&inputs[5])?,
+        );
+        let x = f32s(&inputs[6])?;
+        let y = i32s(&inputs[7])?;
+        // identical composition to the split path with z~ = z and λ = 0,
+        // so split-vs-monolithic agreement is exact by construction
+        let zpre = dense(x, w1, b1, BATCH, IN, CUT);
+        let z = relu(&zpre);
+        let fwd = server_forward(&z, w2, b2, w3, b3, BATCH);
+        let (loss, glogits, correct) = softmax_ce(&fwd.logits, y, BATCH, CLASSES);
+        let back = server_backward(&z, w2, w3, &fwd, &glogits, BATCH);
+        let mut gz = back.grad_z;
+        relu_backward(&mut gz, &zpre);
+        let g_w1 = matmul_at_b(x, &gz, BATCH, IN, CUT);
+        let g_b1 = colsum(&gz, BATCH, CUT);
+        Ok(vec![
+            Array::f32(&[], vec![loss as f32]),
+            Array::f32(&[], vec![correct as f32]),
+            Array::f32(&[IN, CUT], g_w1),
+            Array::f32(&[CUT], g_b1),
+            Array::f32(&[CUT, HID], back.g_w2),
+            Array::f32(&[HID], back.g_b2),
+            Array::f32(&[HID, CLASSES], back.g_w3),
+            Array::f32(&[CLASSES], back.g_b3),
+        ])
+    }
+
+    fn full_eval(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
+        let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
+        let (w2, b2, w3, b3) = (
+            f32s(&inputs[2])?,
+            f32s(&inputs[3])?,
+            f32s(&inputs[4])?,
+            f32s(&inputs[5])?,
+        );
+        let x = f32s(&inputs[6])?;
+        let y = i32s(&inputs[7])?;
+        let m = EVAL_BATCH;
+        let z = relu(&dense(x, w1, b1, m, IN, CUT));
+        let fwd = server_forward(&z, w2, b2, w3, b3, m);
+        let (loss, _glogits, correct) = softmax_ce(&fwd.logits, y, m, CLASSES);
+        Ok(vec![
+            Array::f32(&[], vec![loss as f32]),
+            Array::f32(&[], vec![correct as f32]),
+        ])
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine::new()
+    }
+}
+
+// -- manifest construction helpers -------------------------------------------
+
+fn io(name: &str, shape: &[usize], dtype: &str, role: &str) -> IoSpec {
+    IoSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        dtype: dtype.to_string(),
+        role: role.to_string(),
+    }
+}
+
+fn art(name: &str, inputs: Vec<IoSpec>, outputs: &[&str]) -> ArtifactMeta {
+    ArtifactMeta {
+        name: name.to_string(),
+        path: format!("native/{name}"),
+        inputs,
+        outputs: outputs.iter().map(|o| o.to_string()).collect(),
+        meta: Value::Null,
+    }
+}
+
+fn param(name: &str, shape: &[usize], init: &str, fan_in: usize, fan_out: usize) -> ParamSpec {
+    ParamSpec {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        init: init.to_string(),
+        scale: 1.0,
+        fan_in,
+        fan_out,
+    }
+}
+
+// -- dense math (fixed reduction order => deterministic) ---------------------
+
+fn f32s(a: &Array) -> anyhow::Result<&[f32]> {
+    a.as_f32().ok_or_else(|| anyhow::anyhow!("expected f32 input"))
+}
+
+fn i32s(a: &Array) -> anyhow::Result<&[i32]> {
+    a.as_i32().ok_or_else(|| anyhow::anyhow!("expected s32 input"))
+}
+
+/// `x [m, k] @ w [k, n] + bias [n]`.
+fn dense(x: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x[i * k..(i + 1) * k];
+        let o = &mut out[i * n..(i + 1) * n];
+        o.copy_from_slice(bias);
+        for (kk, &xv) in row.iter().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for (ov, &wv) in o.iter_mut().zip(wrow) {
+                *ov += xv * wv;
+            }
+        }
+    }
+    out
+}
+
+fn relu(z: &[f32]) -> Vec<f32> {
+    z.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
+}
+
+/// Zero the gradient wherever the pre-activation was non-positive.
+fn relu_backward(grad: &mut [f32], pre: &[f32]) {
+    for (g, &p) in grad.iter_mut().zip(pre) {
+        if p <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// `a^T [k, m] @ g [m, n]` for `a [m, k]` (weight gradients).
+fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let grow = &g[i * n..(i + 1) * n];
+        for (kk, &av) in arow.iter().enumerate() {
+            let o = &mut out[kk * n..(kk + 1) * n];
+            for (ov, &gv) in o.iter_mut().zip(grow) {
+                *ov += av * gv;
+            }
+        }
+    }
+    out
+}
+
+/// `g [m, n] @ w^T [n, k]` for `w [k, n]` (input gradients).
+fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * k];
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        let orow = &mut out[i * k..(i + 1) * k];
+        for (kk, ov) in orow.iter_mut().enumerate() {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            let mut s = 0.0f32;
+            for (gv, wv) in grow.iter().zip(wrow) {
+                s += gv * wv;
+            }
+            *ov = s;
+        }
+    }
+    out
+}
+
+/// Column sums of `g [m, n]` (bias gradients).
+fn colsum(g: &[f32], m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        for (ov, &gv) in out.iter_mut().zip(grow) {
+            *ov += gv;
+        }
+    }
+    out
+}
+
+struct ServerFwd {
+    h1pre: Vec<f32>,
+    h1: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn server_forward(
+    zt: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    w3: &[f32],
+    b3: &[f32],
+    m: usize,
+) -> ServerFwd {
+    let h1pre = dense(zt, w2, b2, m, CUT, HID);
+    let h1 = relu(&h1pre);
+    let logits = dense(&h1, w3, b3, m, HID, CLASSES);
+    ServerFwd { h1pre, h1, logits }
+}
+
+struct ServerBack {
+    g_w2: Vec<f32>,
+    g_b2: Vec<f32>,
+    g_w3: Vec<f32>,
+    g_b3: Vec<f32>,
+    grad_z: Vec<f32>,
+}
+
+fn server_backward(
+    zt: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    fwd: &ServerFwd,
+    glogits: &[f32],
+    m: usize,
+) -> ServerBack {
+    let g_w3 = matmul_at_b(&fwd.h1, glogits, m, HID, CLASSES);
+    let g_b3 = colsum(glogits, m, CLASSES);
+    let mut dh1 = matmul_a_bt(glogits, w3, m, CLASSES, HID);
+    relu_backward(&mut dh1, &fwd.h1pre);
+    let g_w2 = matmul_at_b(zt, &dh1, m, CUT, HID);
+    let g_b2 = colsum(&dh1, m, HID);
+    let grad_z = matmul_a_bt(&dh1, w2, m, HID, CUT);
+    ServerBack { g_w2, g_b2, g_w3, g_b3, grad_z }
+}
+
+/// Mean softmax cross-entropy over the batch. Returns (mean loss,
+/// d(mean loss)/d(logits), correct-prediction count). Ties in the argmax
+/// resolve to the lowest class index (fixed, deterministic).
+fn softmax_ce(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f64, Vec<f32>, f64) {
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut grad = vec![0.0f32; m * c];
+    for i in 0..m {
+        let row = &logits[i * c..(i + 1) * c];
+        let mut maxv = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > maxv {
+                maxv = v;
+                argmax = j;
+            }
+        }
+        let g = &mut grad[i * c..(i + 1) * c];
+        let mut sum = 0.0f32;
+        for (gv, &v) in g.iter_mut().zip(row) {
+            let e = (v - maxv).exp();
+            *gv = e;
+            sum += e;
+        }
+        let yi = y[i] as usize;
+        loss -= (row[yi] - maxv) as f64 - (sum as f64).ln();
+        if argmax == yi {
+            correct += 1.0;
+        }
+        let inv = 1.0 / (sum * m as f32);
+        for gv in g.iter_mut() {
+            *gv *= inv;
+        }
+        g[yi] -= 1.0 / m as f32;
+    }
+    (loss / m as f64, grad, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+    use crate::util::rng::Rng;
+
+    fn rand_inputs(seed: u64) -> (Vec<Array>, Vec<Array>) {
+        // (full_grad inputs, client_fwd inputs) over shared params/batch
+        let rt = Runtime::native();
+        let spec = rt.manifest.variant(VARIANT).unwrap().spec.clone();
+        let rng = Rng::new(seed);
+        let wc = spec.client.init_tensors(&mut rng.fork(1));
+        let ws = spec.server.init_tensors(&mut rng.fork(2));
+        let mut r = rng.fork(3);
+        let x = r.uniform_vec(BATCH * IN, 0.0, 1.0);
+        let y: Vec<i32> = (0..BATCH).map(|_| r.below(CLASSES) as i32).collect();
+        let p = |t: &crate::tensor::Tensor| Array::f32(t.shape(), t.data().to_vec());
+        let mut full: Vec<Array> = wc.tensors.iter().map(&p).collect();
+        full.extend(ws.tensors.iter().map(&p));
+        full.push(Array::f32(&[BATCH, 28, 28, 1], x.clone()));
+        full.push(Array::i32(&[BATCH], y));
+        let mut fwd: Vec<Array> = wc.tensors.iter().map(&p).collect();
+        fwd.push(Array::f32(&[BATCH, 28, 28, 1], x));
+        (full, fwd)
+    }
+
+    #[test]
+    fn manifest_is_complete_and_consistent() {
+        let rt = Runtime::native();
+        let v = rt.manifest.variant(VARIANT).unwrap();
+        for a in ["client_fwd", "server_step", "client_bwd", "full_grad", "full_eval"] {
+            assert!(v.artifacts.contains_key(a), "{a} missing");
+        }
+        assert_eq!(v.spec.cut_dim, CUT);
+        assert_eq!(v.spec.client.numel(), IN * CUT + CUT);
+        assert_eq!(
+            v.spec.server.numel(),
+            CUT * HID + HID + HID * CLASSES + CLASSES
+        );
+        // param_client/param_server input order matches the SideSpec order
+        let fwd = v.artifacts.get("client_fwd").unwrap();
+        assert_eq!(fwd.inputs[0].name, v.spec.client.params[0].name);
+        assert_eq!(fwd.inputs[0].shape, v.spec.client.params[0].shape);
+    }
+
+    #[test]
+    fn split_composition_equals_full_grad_exactly() {
+        let engine = NativeEngine::new();
+        let (full_in, fwd_in) = rand_inputs(11);
+        let full = engine.run(VARIANT, "full_grad", &full_in).unwrap();
+
+        let z = engine
+            .run(VARIANT, "client_fwd", &fwd_in)
+            .unwrap()
+            .remove(0);
+        let step_in = vec![
+            full_in[2].clone(), // w2
+            full_in[3].clone(), // b2
+            full_in[4].clone(), // w3
+            full_in[5].clone(), // b3
+            full_in[7].clone(), // y
+            z.clone(),          // z_tilde = z
+        ];
+        let step = engine.run(VARIANT, "server_step", &step_in).unwrap();
+        let bwd_in = vec![
+            full_in[0].clone(), // w1
+            full_in[1].clone(), // b1
+            full_in[6].clone(), // x
+            z,                  // z_tilde = z
+            step[2].clone(),    // grad_z
+            Array::f32(&[], vec![0.0]), // lambda = 0
+        ];
+        let bwd = engine.run(VARIANT, "client_bwd", &bwd_in).unwrap();
+
+        // z~ == z, λ == 0 → zero correction error and bit-identical grads
+        assert_eq!(bwd[2].as_f32().unwrap()[0], 0.0);
+        assert_eq!(step[0].as_f32().unwrap(), full[0].as_f32().unwrap()); // loss
+        assert_eq!(step[1].as_f32().unwrap(), full[1].as_f32().unwrap()); // correct
+        assert_eq!(bwd[0].as_f32().unwrap(), full[2].as_f32().unwrap()); // g_w1
+        assert_eq!(bwd[1].as_f32().unwrap(), full[3].as_f32().unwrap()); // g_b1
+        for (k, out) in ["g_w2", "g_b2", "g_w3", "g_b3"].iter().enumerate() {
+            assert_eq!(
+                step[3 + k].as_f32().unwrap(),
+                full[4 + k].as_f32().unwrap(),
+                "{out}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let engine = NativeEngine::new();
+        let (full_in, _) = rand_inputs(5);
+        let outs = engine.run(VARIANT, "full_grad", &full_in).unwrap();
+        // probe the max-|grad| coordinate of each parameter tensor
+        for (pi, gi) in [(0usize, 2usize), (1, 3), (2, 4), (3, 5), (4, 6), (5, 7)] {
+            let grads = outs[gi].as_f32().unwrap();
+            let (idx, &g) = grads
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                .unwrap();
+            if g.abs() < 1e-5 {
+                continue; // too flat to measure against f32 loss noise
+            }
+            let eps = 1e-3f32;
+            let probe = |delta: f32| -> f64 {
+                let mut inputs = full_in.clone();
+                if let Array::F32 { data, .. } = &mut inputs[pi] {
+                    data[idx] += delta;
+                }
+                let o = engine.run(VARIANT, "full_grad", &inputs).unwrap();
+                o[0].as_f32().unwrap()[0] as f64
+            };
+            let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+            let rel = (fd - g as f64).abs() / (g.abs() as f64).max(1e-6);
+            // the loss output is f32, so central differences carry
+            // ~1e-4 absolute noise at eps = 1e-3; accept either bound
+            assert!(
+                rel < 0.05 || (fd - g as f64).abs() < 5e-4,
+                "param {pi} idx {idx}: analytic {g} vs fd {fd} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn lambda_correction_shifts_client_gradient() {
+        let engine = NativeEngine::new();
+        let (full_in, fwd_in) = rand_inputs(7);
+        let z = engine
+            .run(VARIANT, "client_fwd", &fwd_in)
+            .unwrap()
+            .remove(0);
+        // perturb z~ away from z so the correction term is non-zero
+        let zt = match &z {
+            Array::F32 { shape, data } => {
+                let mut d = data.clone();
+                for v in d.iter_mut() {
+                    *v += 0.1;
+                }
+                Array::f32(shape, d)
+            }
+            _ => unreachable!(),
+        };
+        let grad_z = Array::f32(&[BATCH, CUT], vec![0.0; BATCH * CUT]);
+        let run = |lambda: f32| {
+            let bwd_in = vec![
+                full_in[0].clone(),
+                full_in[1].clone(),
+                full_in[6].clone(),
+                zt.clone(),
+                grad_z.clone(),
+                Array::f32(&[], vec![lambda]),
+            ];
+            engine.run(VARIANT, "client_bwd", &bwd_in).unwrap()
+        };
+        let with = run(0.5);
+        let without = run(0.0);
+        assert!(with[2].as_f32().unwrap()[0] > 0.0, "qerr must be positive");
+        // λ = 0 with zero grad_z → zero client grads; λ > 0 → non-zero
+        assert!(without[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(with[0].as_f32().unwrap().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn runtime_checks_shapes() {
+        let rt = Runtime::native();
+        let bad = vec![Array::f32(&[2, 2], vec![0.0; 4])];
+        assert!(rt.run(VARIANT, "client_fwd", &bad).is_err());
+        assert!(rt.run("nope", "client_fwd", &bad).is_err());
+        assert!(rt.run(VARIANT, "nope", &bad).is_err());
+    }
+}

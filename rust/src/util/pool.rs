@@ -1,9 +1,14 @@
-//! Fixed-size worker thread pool (no `tokio`/`rayon` in the offline build).
+//! Worker-thread utilities (no `tokio`/`rayon` in the offline build).
 //!
-//! Provides `execute` (fire-and-forget), `parallel_map` (ordered results),
-//! and a scoped chunked for-each used by the data generators and the
-//! quantizer sweeps. Client simulation inside a round also fans out here.
+//! Provides a fixed-size [`ThreadPool`] with `execute` (fire-and-forget)
+//! and `parallel_map` (ordered results over owned, `'static` items),
+//! [`scoped_parallel_map`] (ordered results over *borrowed* state — the
+//! coordinator's per-round cohort fan-out runs through this), and a
+//! scoped chunked for-each used by the data generators and the quantizer
+//! sweeps. `ThreadPool::default_size()` is the resolution of the
+//! `--workers 0` (auto) setting.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -105,6 +110,65 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Ordered parallel map over `items` using up to `workers` scoped threads.
+///
+/// Unlike [`ThreadPool::parallel_map`], the closure may borrow
+/// non-`'static` state (model parameters, the metered network, the
+/// dataset), which is exactly what the per-round client fan-out needs.
+/// Items are claimed from a shared atomic counter, results land in their
+/// input slot, so the output order — and therefore any order-sensitive
+/// reduction performed over it — is independent of thread scheduling.
+/// `workers <= 1` (or fewer than two items) runs inline on the caller's
+/// thread: the serial path spawns nothing and is the exact pre-parallel
+/// behavior.
+///
+/// A panic inside `f` is propagated to the caller after all workers
+/// finish (via `std::thread::scope`). There is deliberately no
+/// error short-circuit: when `R` is a `Result`, every item still runs
+/// and the caller sees the first `Err` during its ordered reduction —
+/// at most one round of extra work on a path that is about to abort.
+///
+/// Trade-off: this spawns fresh scoped threads per call rather than
+/// routing borrowed closures through the persistent [`ThreadPool`]
+/// (whose job queue requires `'static`). At cohort scale the spawn cost
+/// (~tens of µs/thread, once per round) is noise next to a client step;
+/// if profiling ever says otherwise, the fix is a scoped-submit facade
+/// over the pool, not more call sites of this function.
+pub fn scoped_parallel_map<T, R, F>(workers: usize, items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, T) -> R + Sync,
+{
+    let n = items.len();
+    if workers <= 1 || n <= 1 {
+        return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    type Slot<T, R> = Mutex<(Option<T>, Option<R>)>;
+    let slots: Vec<Slot<T, R>> = items
+        .into_iter()
+        .map(|x| Mutex::new((Some(x), None)))
+        .collect();
+    thread::scope(|s| {
+        for _ in 0..workers.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().0.take().expect("item claimed once");
+                let out = f(i, item);
+                slots[i].lock().unwrap().1 = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().1.expect("worker filled slot"))
+        .collect()
+}
+
 /// Chunked parallel for-each over a mutable slice using scoped threads:
 /// splits `data` into `chunks` contiguous pieces and runs `f(chunk_index,
 /// start_offset, chunk)` concurrently. Used by data generators that fill
@@ -180,6 +244,48 @@ mod tests {
         let _ = pool.parallel_map(vec![1, 2, 3], |_, x: i32| {
             if x == 2 {
                 panic!("boom");
+            }
+            x
+        });
+    }
+
+    #[test]
+    fn scoped_map_preserves_order_over_borrowed_state() {
+        // non-'static borrow: the closure reads a local Vec by reference
+        let table: Vec<u64> = (0..200).map(|i| i * 3).collect();
+        let items: Vec<usize> = (0..200).collect();
+        let serial: Vec<u64> = items.iter().map(|&x| table[x] + x as u64).collect();
+        let out = scoped_parallel_map(4, items, |i, x| {
+            assert_eq!(i, x);
+            table[x] + x as u64
+        });
+        assert_eq!(out, serial);
+    }
+
+    #[test]
+    fn scoped_map_workers_one_runs_inline() {
+        let tid = thread::current().id();
+        let out = scoped_parallel_map(1, vec![1, 2, 3], |_, x: i32| {
+            assert_eq!(thread::current().id(), tid);
+            x * 10
+        });
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn scoped_map_empty_and_single() {
+        let out: Vec<i32> = scoped_parallel_map(8, Vec::new(), |_, x| x);
+        assert!(out.is_empty());
+        let out = scoped_parallel_map(8, vec![7], |i, x: i32| x + i as i32);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scoped boom")]
+    fn scoped_map_panics_propagate() {
+        let _ = scoped_parallel_map(3, (0..10).collect::<Vec<i32>>(), |_, x| {
+            if x == 5 {
+                panic!("scoped boom");
             }
             x
         });

@@ -10,13 +10,17 @@ use std::sync::Arc;
 use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
 use fedlite::coordinator::client::{assemble, draw_masks, InputSources};
 use fedlite::coordinator::quantize::QuantizeBackend;
-use fedlite::coordinator::{build_dataset, build_trainer};
+use fedlite::coordinator::{build_dataset, build_trainer, Trainer};
 use fedlite::data::Array;
 use fedlite::quantizer::pq::{GroupedPq, PqConfig};
 use fedlite::runtime::Runtime;
 use fedlite::util::rng::Rng;
 
 fn runtime() -> Option<Arc<Runtime>> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the pjrt feature");
+        return None;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
         return None;

@@ -1,0 +1,277 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! The fedlite `pjrt` feature compiles against this crate so the PJRT
+//! runtime path type-checks and links without the XLA C++ toolchain.
+//! `Literal` is implemented for real (host-side arrays round-trip, so the
+//! conversion layer stays testable); everything that would need a real
+//! PJRT client — `PjRtClient::cpu()`, compilation, execution — returns an
+//! actionable [`Error`] instead. To execute AOT artifacts, replace this
+//! path dependency with the real xla-rs bindings (see the repo README).
+
+use std::fmt;
+
+/// Error type mirroring xla-rs: stringly, `Display`-able, `?`-compatible.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this build (the vendored `xla` stub \
+         is linked); swap rust/vendor/xla for the real xla-rs bindings to \
+         execute AOT artifacts, or run the native engine instead"
+    ))
+}
+
+/// Element types the fedlite artifacts use (plus common extras so callers
+/// can match non-exhaustively without dead arms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Scalar types that can cross the host <-> literal boundary.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal {
+        Literal::F32 { dims, data }
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not f32: {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal {
+        Literal::S32 { dims, data }
+    }
+
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match lit {
+            Literal::S32 { data, .. } => Ok(data.clone()),
+            other => Err(Error(format!("literal is not s32: {other:?}"))),
+        }
+    }
+}
+
+/// Shape of a dense (non-tuple) literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    element_type: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.element_type
+    }
+}
+
+/// Host-side literal. Fully functional (no PJRT needed).
+#[derive(Debug, Clone)]
+pub enum Literal {
+    F32 { dims: Vec<i64>, data: Vec<f32> },
+    S32 { dims: Vec<i64>, data: Vec<i32> },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::wrap(Vec::new(), vec![v])
+    }
+
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        T::wrap(vec![data.len() as i64], data.to_vec())
+    }
+
+    /// Reinterpret with new dimensions of equal element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let out = match self {
+            Literal::F32 { data, .. } => {
+                if data.len() as i64 != n {
+                    return Err(Error(format!(
+                        "reshape {:?} to {dims:?}: element count mismatch",
+                        data.len()
+                    )));
+                }
+                Literal::F32 { dims: dims.to_vec(), data: data.clone() }
+            }
+            Literal::S32 { data, .. } => {
+                if data.len() as i64 != n {
+                    return Err(Error(format!(
+                        "reshape {:?} to {dims:?}: element count mismatch",
+                        data.len()
+                    )));
+                }
+                Literal::S32 { dims: dims.to_vec(), data: data.clone() }
+            }
+            Literal::Tuple(_) => return Err(Error("cannot reshape a tuple".into())),
+        };
+        Ok(out)
+    }
+
+    /// Dense shape; errors on tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self {
+            Literal::F32 { dims, .. } => Ok(ArrayShape {
+                dims: dims.clone(),
+                element_type: ElementType::F32,
+            }),
+            Literal::S32 { dims, .. } => Ok(ArrayShape {
+                dims: dims.clone(),
+                element_type: ElementType::S32,
+            }),
+            Literal::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+        }
+    }
+
+    /// Copy the elements out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// Unwrap a tuple literal into its parts.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(parts) => Ok(parts.clone()),
+            other => Err(Error(format!("literal is not a tuple: {other:?}"))),
+        }
+    }
+}
+
+/// Parsed HLO module (text retained; nothing can compile it here).
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle wrapping a parsed module.
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// Device handle (never constructed by the stub).
+pub struct PjRtDevice;
+
+/// Device buffer handle (never constructed by the stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Loaded executable handle (never constructed by the stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<B>(&self, _args: &[B]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// PJRT client. The stub cannot create one — `cpu()` fails with a message
+/// pointing at the real bindings.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let lit = lit.reshape(&[2, 2]).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.element_type(), ElementType::F32);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+        let t = Literal::Tuple(vec![s.clone()]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+        assert!(t.array_shape().is_err());
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
