@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Strip the wall_seconds column (the only nondeterministic field) from a
+# round-log CSV by header name, for byte-exact determinism diffs in CI.
+set -euo pipefail
+awk -F, 'NR==1 { for (i=1; i<=NF; i++) if ($i=="wall_seconds") skip=i }
+         { out=""; for (i=1; i<=NF; i++) if (i!=skip)
+             out = out (out=="" ? "" : ",") $i; print out }' "$1"

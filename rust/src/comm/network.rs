@@ -72,11 +72,42 @@ impl StarNetwork {
     /// Simulated transfer seconds for a synchronous round over `selected`
     /// clients: max over clients of (their up+down busy time this call).
     pub fn estimate_round_time(&self, per_client_bytes: &[(usize, usize)]) -> f64 {
-        per_client_bytes
+        self.estimate_round_time_with_delays(
+            &per_client_bytes
+                .iter()
+                .map(|&(up, down)| (up, down, 0.0))
+                .collect::<Vec<_>>(),
+            0.0,
+        )
+    }
+
+    /// Round-time estimate with per-client simulated compute delays
+    /// (stragglers). Each entry is `(up_bytes, down_bytes, delay_seconds)`;
+    /// a client's busy time is transfer + delay. The `deadline` is the
+    /// *delay budget* of `coordinator::faults`: a client whose delay
+    /// exceeds it is evicted, so the server only waits `deadline` for it
+    /// (its full busy time doesn't extend the round). Punctual clients
+    /// are waited for in full — transfer time is not counted against the
+    /// budget, keeping this consistent with the eviction predicate. With
+    /// all delays 0 and no deadline this is exactly
+    /// [`StarNetwork::estimate_round_time`].
+    pub fn estimate_round_time_with_delays(
+        &self,
+        per_client: &[(usize, usize, f64)],
+        deadline: f64,
+    ) -> f64 {
+        per_client
             .iter()
-            .map(|&(up_bytes, down_bytes)| {
-                self.uplinks[0].spec().transfer_time(up_bytes)
+            .map(|&(up_bytes, down_bytes, delay)| {
+                let t = self.uplinks[0].spec().transfer_time(up_bytes)
                     + self.downlinks[0].spec().transfer_time(down_bytes)
+                    + delay;
+                if deadline > 0.0 && delay > deadline {
+                    // evicted straggler: the coordinator stopped waiting
+                    t.min(deadline)
+                } else {
+                    t
+                }
             })
             .fold(0.0, f64::max)
     }
@@ -117,6 +148,28 @@ mod tests {
         let t = net.estimate_round_time(&[(1000, 1000), (1_000_000, 1000)]);
         let slow = net.estimate_round_time(&[(1_000_000, 1000)]);
         assert!((t - slow).abs() < 1e-12);
+    }
+
+    #[test]
+    fn delays_and_deadline_shape_round_time() {
+        let net = StarNetwork::with_defaults(2);
+        let base = net.estimate_round_time(&[(1000, 1000)]);
+        // a straggler's delay extends the round...
+        let slow = net.estimate_round_time_with_delays(&[(1000, 1000, 5.0)], 0.0);
+        assert!((slow - (base + 5.0)).abs() < 1e-12);
+        // ...until its delay blows the budget and it gets evicted
+        let capped = net.estimate_round_time_with_delays(&[(1000, 1000, 5.0)], 2.0);
+        assert!((capped - 2.0).abs() < 1e-12);
+        // a punctual client (delay within budget) is waited for in full,
+        // even when its transfer alone outlasts the deadline — transfer
+        // time doesn't count against the delay budget
+        let big = 100_000_000; // ~160 s on the 5 Mbps uplink
+        let waited = net.estimate_round_time_with_delays(&[(big, 1000, 0.0)], 2.0);
+        let plain = net.estimate_round_time(&[(big, 1000)]);
+        assert_eq!(waited.to_bits(), plain.to_bits());
+        // zero delays + no deadline is exactly the plain estimate
+        let same = net.estimate_round_time_with_delays(&[(1000, 1000, 0.0)], 0.0);
+        assert_eq!(same.to_bits(), base.to_bits());
     }
 
     #[test]

@@ -82,6 +82,18 @@ pub struct RunConfig {
     /// Dropout keep handled via masks; probability by task (femnist only).
     pub dropout_client: f64,
     pub dropout_server: f64,
+    /// Per-client, per-round probability of mid-round client failure
+    /// (fault injection; see `coordinator::faults`). 0 = clean runs.
+    pub drop_prob: f64,
+    /// Fraction of clients that straggle each round (simulated compute
+    /// delay). 0 = nobody straggles.
+    pub straggler_frac: f64,
+    /// Simulated per-round deadline in seconds; stragglers past it are
+    /// evicted from the aggregate. 0 = no deadline.
+    pub round_deadline: f64,
+    /// Abort + resample the round when fewer clients survive (bounded by
+    /// `coordinator::engine::MAX_SAMPLING_ATTEMPTS`). 0 = never abort.
+    pub min_survivors: usize,
     /// Worker threads for the per-round cohort fan-out (0 = auto:
     /// [`crate::util::pool::ThreadPool::default_size`]). `1` recovers the
     /// serial round loop; results are bit-identical at any value.
@@ -112,6 +124,10 @@ impl Default for RunConfig {
             out_dir: String::new(),
             dropout_client: 0.25,
             dropout_server: 0.5,
+            drop_prob: 0.0,
+            straggler_frac: 0.0,
+            round_deadline: 0.0,
+            min_survivors: 0,
             workers: 0,
         }
     }
@@ -235,6 +251,10 @@ impl RunConfig {
         o.insert("out_dir", Value::Str(self.out_dir.clone()));
         o.insert("dropout_client", Value::Num(self.dropout_client));
         o.insert("dropout_server", Value::Num(self.dropout_server));
+        o.insert("drop_prob", Value::Num(self.drop_prob));
+        o.insert("straggler_frac", Value::Num(self.straggler_frac));
+        o.insert("round_deadline", Value::Num(self.round_deadline));
+        o.insert("min_survivors", Value::from_usize(self.min_survivors));
         o.insert("workers", Value::from_usize(self.workers));
         Value::Obj(o)
     }
@@ -275,6 +295,10 @@ impl RunConfig {
         c.out_dir = get_s("out_dir", &c.out_dir);
         c.dropout_client = get_f("dropout_client", c.dropout_client);
         c.dropout_server = get_f("dropout_server", c.dropout_server);
+        c.drop_prob = get_f("drop_prob", c.drop_prob);
+        c.straggler_frac = get_f("straggler_frac", c.straggler_frac);
+        c.round_deadline = get_f("round_deadline", c.round_deadline);
+        c.min_survivors = get_us("min_survivors", c.min_survivors);
         c.workers = get_us("workers", c.workers);
         Ok(c)
     }
@@ -289,6 +313,27 @@ impl RunConfig {
         );
         anyhow::ensure!(self.rounds >= 1, "need >= 1 round");
         anyhow::ensure!(self.local_steps >= 1, "need >= 1 local step");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.drop_prob),
+            "drop_prob {} outside [0, 1]",
+            self.drop_prob
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.straggler_frac),
+            "straggler_frac {} outside [0, 1]",
+            self.straggler_frac
+        );
+        anyhow::ensure!(
+            self.round_deadline >= 0.0 && self.round_deadline.is_finite(),
+            "round_deadline {} must be finite and >= 0",
+            self.round_deadline
+        );
+        anyhow::ensure!(
+            self.min_survivors <= self.clients_per_round,
+            "min_survivors {} > clients_per_round {}",
+            self.min_survivors,
+            self.clients_per_round
+        );
         Ok(())
     }
 }
@@ -331,6 +376,27 @@ mod tests {
     }
 
     #[test]
+    fn fault_knob_validation() {
+        let mut c = RunConfig::default();
+        c.drop_prob = 0.3;
+        c.straggler_frac = 0.5;
+        c.round_deadline = 2.0;
+        c.min_survivors = c.clients_per_round;
+        assert!(c.validate().is_ok());
+        c.drop_prob = 1.5;
+        assert!(c.validate().is_err());
+        c.drop_prob = 0.3;
+        c.straggler_frac = -0.1;
+        assert!(c.validate().is_err());
+        c.straggler_frac = 0.5;
+        c.round_deadline = -1.0;
+        assert!(c.validate().is_err());
+        c.round_deadline = 0.0;
+        c.min_survivors = c.clients_per_round + 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
     fn json_roundtrip_preserves_fields() {
         let mut c = RunConfig::preset("femnist").unwrap();
         c.rounds = 321;
@@ -338,10 +404,18 @@ mod tests {
         c.workers = 6;
         c.algorithm = Algorithm::SplitFed;
         c.quantizer = QuantizerEngine::Pjrt;
+        c.drop_prob = 0.25;
+        c.straggler_frac = 0.75;
+        c.round_deadline = 3.5;
+        c.min_survivors = 2;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.rounds, 321);
         assert_eq!(back.workers, 6);
+        assert!((back.drop_prob - 0.25).abs() < 1e-12);
+        assert!((back.straggler_frac - 0.75).abs() < 1e-12);
+        assert!((back.round_deadline - 3.5).abs() < 1e-12);
+        assert_eq!(back.min_survivors, 2);
         assert!((back.lambda - 5e-4).abs() < 1e-9);
         assert_eq!(back.algorithm, Algorithm::SplitFed);
         assert_eq!(back.quantizer, QuantizerEngine::Pjrt);

@@ -1,8 +1,13 @@
 //! Weighted aggregation of client contributions (paper §3 step 4).
 //!
-//! `Δw = Σ_{i∈S} p_i g_i / Σ_{i∈S} p_i` — the same weighted mean used for
-//! client-side gradients in SplitFed/FedLite and for model deltas in
-//! FedAvg.
+//! `Δw = Σ_{i∈S'} p_i g_i / Σ_{i∈S'} p_i` — the same weighted mean used
+//! for client-side gradients in SplitFed/FedLite and for model deltas in
+//! FedAvg. With fault injection, `S'` is the *surviving* subset of the
+//! sampled cohort `S`: dropped/evicted clients are never `add`ed, and
+//! [`WeightedAggregator::finish`] dividing by the accumulated weight *is*
+//! the renormalization of the `p_i` over survivors. [`SurvivorSet`]
+//! tracks the sampled-vs-survived bookkeeping and exposes the
+//! renormalized weights for assertions and logs.
 
 use crate::tensor::TensorList;
 
@@ -62,6 +67,59 @@ impl WeightedAggregator {
 impl Default for WeightedAggregator {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Sampled-vs-survived bookkeeping for one round attempt.
+///
+/// The trainers record every cohort slot exactly once — `survivor(p_i)`
+/// or `dropped()` in cohort-slot order — and read back the counts for the
+/// round record plus the renormalized survivor weights
+/// `p_i / Σ_{j∈survivors} p_j` (which sum to 1 whenever anyone survived;
+/// asserted in `rust/tests/faults.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct SurvivorSet {
+    weights: Vec<f64>,
+    sampled: usize,
+}
+
+impl SurvivorSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a surviving client with aggregation weight `p_i > 0`.
+    pub fn survivor(&mut self, weight: f64) {
+        assert!(weight > 0.0, "non-positive survivor weight");
+        self.weights.push(weight);
+        self.sampled += 1;
+    }
+
+    /// Record a client that dropped out or was evicted.
+    pub fn dropped(&mut self) {
+        self.sampled += 1;
+    }
+
+    pub fn sampled(&self) -> usize {
+        self.sampled
+    }
+
+    pub fn survived(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().sum()
+    }
+
+    /// Survivor weights renormalized over the surviving cohort; empty when
+    /// nobody survived.
+    pub fn normalized(&self) -> Vec<f64> {
+        let total = self.total_weight();
+        if total <= 0.0 {
+            return Vec::new();
+        }
+        self.weights.iter().map(|w| w / total).collect()
     }
 }
 
@@ -202,6 +260,57 @@ mod tests {
         let mut c = ScalarAggregator::new();
         c.merge(ScalarAggregator::new());
         assert_eq!(c.mean(), 0.0);
+    }
+
+    #[test]
+    fn survivor_set_counts_and_normalization() {
+        let mut s = SurvivorSet::new();
+        s.survivor(0.2);
+        s.dropped();
+        s.survivor(0.6);
+        s.dropped();
+        assert_eq!(s.sampled(), 4);
+        assert_eq!(s.survived(), 2);
+        assert!((s.total_weight() - 0.8).abs() < 1e-12);
+        let norm = s.normalized();
+        assert!((norm.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!((norm[0] - 0.25).abs() < 1e-12);
+        assert!((norm[1] - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn survivor_set_nobody_survived() {
+        let mut s = SurvivorSet::new();
+        s.dropped();
+        s.dropped();
+        assert_eq!(s.sampled(), 2);
+        assert_eq!(s.survived(), 0);
+        assert!(s.normalized().is_empty());
+    }
+
+    #[test]
+    fn survivor_normalization_matches_aggregator_mean() {
+        // aggregating survivors through WeightedAggregator equals the
+        // explicit renormalized-weight combination
+        let parts: [(&[f32], f64); 3] =
+            [(&[1.0, 2.0], 0.5), (&[3.0, -1.0], 0.25), (&[0.0, 4.0], 0.75)];
+        let mut agg = WeightedAggregator::new();
+        let mut set = SurvivorSet::new();
+        set.dropped(); // a dropped client contributes to neither
+        for (v, w) in parts {
+            agg.add(&tl(v), w);
+            set.survivor(w);
+        }
+        let out = agg.finish().unwrap();
+        let norm = set.normalized();
+        for j in 0..2 {
+            let manual: f64 = parts
+                .iter()
+                .zip(&norm)
+                .map(|((v, _), p)| v[j] as f64 * p)
+                .sum();
+            assert!((out.tensors[0].data()[j] as f64 - manual).abs() < 1e-6);
+        }
     }
 
     #[test]

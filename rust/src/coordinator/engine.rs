@@ -1,0 +1,188 @@
+//! Tick-based round phase driver shared by the trainers.
+//!
+//! Every federated round is an explicit state machine (in the style of the
+//! Psyche coordinator's `RunState`/`tick` loop):
+//!
+//! ```text
+//! Sampling → Broadcast → ClientCompute → Aggregate → Commit
+//!     ▲                                      │
+//!     └────────── resample (too few ─────────┘
+//!                 survivors, attempt += 1)
+//! ```
+//!
+//! The driver owns only the phase/attempt bookkeeping; the trainers own
+//! the per-phase work. `Aggregate` may rewind to `Sampling` when the
+//! surviving cohort is smaller than `min_survivors` — each rewind is a new
+//! *attempt* with fresh sampling and fault-schedule RNG keys. The attempt
+//! budget is bounded so a pathological fault config degrades (commit with
+//! whatever survived, possibly nobody, and no optimizer step) instead of
+//! livelocking.
+//!
+//! All RNG keys are pure functions of `(round, attempt, client)` — never
+//! of wall-clock or thread identity — so the engine stays bit-identical at
+//! any `--workers` count (see `rust/tests/determinism.rs`).
+
+/// The phases of one federated round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundPhase {
+    /// Pick the round's cohort and draw its fault schedules.
+    Sampling,
+    /// Build the model broadcast shared by the cohort.
+    Broadcast,
+    /// Fan the cohort across the worker threads (the round barrier).
+    ClientCompute,
+    /// Reduce partials in cohort-slot order; decide survive/resample.
+    Aggregate,
+    /// Step the optimizers on the survivor aggregate and emit the record.
+    Commit,
+}
+
+/// Upper bound on sampling attempts per round before the round commits
+/// degraded (fewer survivors than `min_survivors`, no optimizer step when
+/// nobody survived). Bounds the resample loop deterministically.
+pub const MAX_SAMPLING_ATTEMPTS: u32 = 16;
+
+/// Phase/attempt bookkeeping for one round.
+#[derive(Debug)]
+pub struct RoundDriver {
+    phase: RoundPhase,
+    attempt: u32,
+    max_attempts: u32,
+}
+
+impl RoundDriver {
+    pub fn new() -> Self {
+        Self::with_max_attempts(MAX_SAMPLING_ATTEMPTS)
+    }
+
+    pub fn with_max_attempts(max_attempts: u32) -> Self {
+        RoundDriver {
+            phase: RoundPhase::Sampling,
+            attempt: 1,
+            max_attempts: max_attempts.max(1),
+        }
+    }
+
+    pub fn phase(&self) -> RoundPhase {
+        self.phase
+    }
+
+    /// 1-based sampling attempt (1 = the round committed first try).
+    pub fn attempt(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Advance to the next phase in order; `Commit` is terminal.
+    pub fn advance(&mut self) {
+        self.phase = match self.phase {
+            RoundPhase::Sampling => RoundPhase::Broadcast,
+            RoundPhase::Broadcast => RoundPhase::ClientCompute,
+            RoundPhase::ClientCompute => RoundPhase::Aggregate,
+            RoundPhase::Aggregate | RoundPhase::Commit => RoundPhase::Commit,
+        };
+    }
+
+    /// Called from `Aggregate` when the surviving cohort is too small.
+    /// Rewinds to `Sampling` with the next attempt and returns `true`
+    /// while budget remains; returns `false` once the attempt budget is
+    /// exhausted (caller proceeds to a degraded `Commit`).
+    pub fn resample(&mut self) -> bool {
+        debug_assert_eq!(self.phase, RoundPhase::Aggregate, "resample outside Aggregate");
+        if self.attempt >= self.max_attempts {
+            return false;
+        }
+        self.attempt += 1;
+        self.phase = RoundPhase::Sampling;
+        true
+    }
+}
+
+impl Default for RoundDriver {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Fork key for the round's cohort sampling. Attempt 1 must reproduce the
+/// pre-fault engine exactly (`fork(round)`), so clean configs stay
+/// bit-identical to historical logs; later attempts mix the attempt in.
+pub fn sample_key(round: u64, attempt: u32) -> u64 {
+    if attempt <= 1 {
+        round
+    } else {
+        round ^ ((attempt as u64) << 48) ^ 0x5EED_0A17
+    }
+}
+
+/// Fork key for one client's round work stream. `tag` distinguishes the
+/// trainers (split: `0xC11E`, fedavg: `0xFEDA` — unchanged from the serial
+/// engine); attempt 1 reproduces the historical key exactly.
+pub fn client_stream_key(tag: u64, round: u64, client: usize, attempt: u32) -> u64 {
+    ((round << 20) ^ (client as u64) ^ tag) ^ (((attempt as u64) - 1) << 52)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_advance_in_order() {
+        let mut d = RoundDriver::new();
+        assert_eq!(d.phase(), RoundPhase::Sampling);
+        assert_eq!(d.attempt(), 1);
+        for want in [
+            RoundPhase::Broadcast,
+            RoundPhase::ClientCompute,
+            RoundPhase::Aggregate,
+            RoundPhase::Commit,
+        ] {
+            d.advance();
+            assert_eq!(d.phase(), want);
+        }
+        d.advance(); // Commit is terminal
+        assert_eq!(d.phase(), RoundPhase::Commit);
+    }
+
+    #[test]
+    fn resample_rewinds_until_budget_exhausted() {
+        let mut d = RoundDriver::with_max_attempts(3);
+        for expected_attempt in [2u32, 3] {
+            for _ in 0..3 {
+                d.advance(); // to Aggregate
+            }
+            assert!(d.resample());
+            assert_eq!(d.phase(), RoundPhase::Sampling);
+            assert_eq!(d.attempt(), expected_attempt);
+        }
+        for _ in 0..3 {
+            d.advance();
+        }
+        assert!(!d.resample(), "budget of 3 attempts is spent");
+        assert_eq!(d.attempt(), 3);
+        assert_eq!(d.phase(), RoundPhase::Aggregate);
+    }
+
+    #[test]
+    fn first_attempt_keys_match_legacy_engine() {
+        // bit-identity of clean runs depends on these exact values
+        assert_eq!(sample_key(7, 1), 7);
+        assert_eq!(
+            client_stream_key(0xC11E, 3, 5, 1),
+            ((3u64 << 20) ^ 5) ^ 0xC11E
+        );
+        assert_eq!(
+            client_stream_key(0xFEDA, 3, 5, 1),
+            ((3u64 << 20) ^ 5) ^ 0xFEDA
+        );
+    }
+
+    #[test]
+    fn later_attempts_get_distinct_keys() {
+        assert_ne!(sample_key(7, 1), sample_key(7, 2));
+        assert_ne!(sample_key(7, 2), sample_key(7, 3));
+        assert_ne!(
+            client_stream_key(0xC11E, 3, 5, 1),
+            client_stream_key(0xC11E, 3, 5, 2)
+        );
+    }
+}

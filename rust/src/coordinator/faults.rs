@@ -1,0 +1,298 @@
+//! Deterministic fault injection for the round engine.
+//!
+//! FedLite targets resource-constrained edge clients, where mid-round
+//! failure is the *expected* condition, not the exception. This layer
+//! turns the happy-path reproduction into a failure-scenario simulator:
+//!
+//! * **Mid-round dropout** (`drop_prob`): a sampled client vanishes after
+//!   `client_fwd` (before uploading activations), after its
+//!   quantize-upload, or right before the client-grad upload. Bytes the
+//!   client sent before failing stay on the meters; its gradients never
+//!   reach the aggregate.
+//! * **Stragglers** (`straggler_frac` + `round_deadline`): a straggling
+//!   client draws a simulated compute delay. With a deadline configured,
+//!   clients whose delay exceeds it are *evicted*: every protocol message
+//!   still crosses the (metered) wire — the work arrives — but too late,
+//!   and the coordinator discards the contribution.
+//! * **Partial cohorts** (`min_survivors`): when fewer clients survive
+//!   than the floor, the round aborts and resamples (a fresh attempt with
+//!   fresh fault schedules) without advancing the optimizer; see
+//!   [`crate::coordinator::engine::RoundDriver::resample`].
+//!
+//! Every draw comes from an [`Rng`] stream forked from a pure
+//! `(round, attempt, client)` key — never wall-clock, never thread
+//! identity — so fault schedules are bit-identical at any `--workers`
+//! count, and a clean config (`drop_prob = straggler_frac = 0`) draws
+//! nothing at all and reproduces historical logs exactly.
+//!
+//! FedAvg note: FedAvg has no activation upload, so its only mid-round
+//! failure surface is "died before the delta upload"; the split-specific
+//! drop phases collapse to [`DropPhase::BeforeGradUpload`] there.
+
+use crate::config::RunConfig;
+use crate::util::rng::Rng;
+
+/// Where in the round a client stopped participating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DropPhase {
+    /// Vanished after `client_fwd`, before uploading activations.
+    AfterFwd,
+    /// Vanished after the (quantize-)upload reached the server.
+    AfterUpload,
+    /// Vanished before uploading client-side gradients.
+    BeforeGradUpload,
+    /// Evicted: finished, but past the round deadline (straggler).
+    Deadline,
+}
+
+impl DropPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DropPhase::AfterFwd => "after_fwd",
+            DropPhase::AfterUpload => "after_upload",
+            DropPhase::BeforeGradUpload => "before_grad_upload",
+            DropPhase::Deadline => "deadline",
+        }
+    }
+}
+
+/// One client's failure schedule for one `(round, attempt)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Mid-round dropout point (never [`DropPhase::Deadline`] here).
+    pub drop_at: Option<DropPhase>,
+    /// Simulated straggler compute delay in seconds (0 for punctual
+    /// clients). Feeds the round's simulated wall-clock estimate.
+    pub delay_seconds: f64,
+    /// Straggler past the deadline: runs to completion (all bytes
+    /// metered) but the contribution is discarded. Mutually exclusive
+    /// with `drop_at` — a client that died mid-round never reaches the
+    /// deadline.
+    pub evicted: bool,
+}
+
+impl FaultPlan {
+    /// The phase this client's contribution was lost at, if any.
+    pub fn dropped(&self) -> Option<DropPhase> {
+        if self.evicted {
+            Some(DropPhase::Deadline)
+        } else {
+            self.drop_at
+        }
+    }
+}
+
+/// Stragglers with no deadline configured still draw a delay (it shows up
+/// in the simulated round time) from `[0, this)` seconds.
+const DEFAULT_DELAY_CAP: f64 = 10.0;
+
+/// Round-level fault injection settings (see module docs for semantics).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultConfig {
+    /// Per-client, per-round probability of mid-round dropout.
+    pub drop_prob: f64,
+    /// Per-client, per-round probability of straggling.
+    pub straggler_frac: f64,
+    /// Simulated per-round deadline in seconds; 0 disables eviction.
+    pub round_deadline: f64,
+    /// Abort + resample when fewer clients survive; 0 disables.
+    pub min_survivors: usize,
+}
+
+impl FaultConfig {
+    pub fn from_run(cfg: &RunConfig) -> FaultConfig {
+        FaultConfig {
+            drop_prob: cfg.drop_prob,
+            straggler_frac: cfg.straggler_frac,
+            round_deadline: cfg.round_deadline,
+            min_survivors: cfg.min_survivors,
+        }
+    }
+
+    /// Whether any per-client fault draw happens at all. When false,
+    /// [`FaultConfig::plan`] returns the default plan without touching
+    /// any RNG, so clean runs stay bit-identical to historical logs.
+    pub fn enabled(&self) -> bool {
+        self.drop_prob > 0.0 || self.straggler_frac > 0.0
+    }
+
+    /// Deterministic failure schedule for one client in one
+    /// `(round, attempt)`. Draws from a stream forked off `root` — `fork`
+    /// never advances the parent, so planning perturbs nothing else.
+    pub fn plan(&self, root: &Rng, round: u64, attempt: u32, client: usize) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if !self.enabled() {
+            return plan;
+        }
+        let mut rng = root.fork(fault_key(round, attempt, client));
+        if self.drop_prob > 0.0 && rng.bernoulli(self.drop_prob) {
+            plan.drop_at = Some(match rng.below(3) {
+                0 => DropPhase::AfterFwd,
+                1 => DropPhase::AfterUpload,
+                _ => DropPhase::BeforeGradUpload,
+            });
+        }
+        if self.straggler_frac > 0.0 && rng.bernoulli(self.straggler_frac) {
+            // with a deadline, expected half of stragglers land past it
+            let cap = if self.round_deadline > 0.0 {
+                2.0 * self.round_deadline
+            } else {
+                DEFAULT_DELAY_CAP
+            };
+            plan.delay_seconds = rng.uniform_in(0.0, cap);
+            plan.evicted = plan.drop_at.is_none()
+                && self.round_deadline > 0.0
+                && plan.delay_seconds > self.round_deadline;
+        }
+        plan
+    }
+}
+
+/// Fork key for a client's fault schedule. Distinct tag from the client
+/// work streams (`0xC11E`/`0xFEDA`) so fault draws and batch draws are
+/// independent; includes the attempt so a resampled round gets fresh
+/// schedules.
+pub fn fault_key(round: u64, attempt: u32, client: usize) -> u64 {
+    (round << 20) ^ ((attempt as u64) << 44) ^ (client as u64) ^ 0xFA17
+}
+
+/// Per-phase drop tally for one committed round (the `dropped_at_phase`
+/// column of the round logs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DropCounts {
+    pub after_fwd: usize,
+    pub after_upload: usize,
+    pub before_grad_upload: usize,
+    pub deadline: usize,
+}
+
+impl DropCounts {
+    pub fn add(&mut self, phase: DropPhase) {
+        match phase {
+            DropPhase::AfterFwd => self.after_fwd += 1,
+            DropPhase::AfterUpload => self.after_upload += 1,
+            DropPhase::BeforeGradUpload => self.before_grad_upload += 1,
+            DropPhase::Deadline => self.deadline += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.after_fwd + self.after_upload + self.before_grad_upload + self.deadline
+    }
+
+    /// Compact log form: `"after_fwd:1;deadline:2"`; empty when nothing
+    /// dropped. Uses `;` so the value stays a single CSV cell.
+    pub fn summary(&self) -> String {
+        let mut parts = Vec::new();
+        for (n, name) in [
+            (self.after_fwd, "after_fwd"),
+            (self.after_upload, "after_upload"),
+            (self.before_grad_upload, "before_grad_upload"),
+            (self.deadline, "deadline"),
+        ] {
+            if n > 0 {
+                parts.push(format!("{name}:{n}"));
+            }
+        }
+        parts.join(";")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn faulty() -> FaultConfig {
+        FaultConfig {
+            drop_prob: 0.4,
+            straggler_frac: 0.5,
+            round_deadline: 2.0,
+            min_survivors: 1,
+        }
+    }
+
+    #[test]
+    fn disabled_config_draws_nothing() {
+        let fc = FaultConfig { drop_prob: 0.0, straggler_frac: 0.0, round_deadline: 5.0, min_survivors: 3 };
+        assert!(!fc.enabled());
+        let root = Rng::new(1);
+        for c in 0..50 {
+            assert_eq!(fc.plan(&root, 0, 1, c), FaultPlan::default());
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_and_vary_by_key() {
+        let fc = faulty();
+        let root = Rng::new(9);
+        let a = fc.plan(&root, 3, 1, 7);
+        assert_eq!(a, fc.plan(&root, 3, 1, 7), "same key, same plan");
+        // across clients/rounds/attempts the schedule must vary somewhere
+        let mut distinct = false;
+        for c in 0..20 {
+            if fc.plan(&root, 3, 1, c) != a || fc.plan(&root, 4, 1, 7) != a {
+                distinct = true;
+            }
+        }
+        assert!(distinct);
+        assert_ne!(
+            fault_key(3, 1, 7),
+            fault_key(3, 2, 7),
+            "resampled attempts need fresh schedules"
+        );
+    }
+
+    #[test]
+    fn drop_and_eviction_rates_roughly_match() {
+        let fc = faulty();
+        let root = Rng::new(4);
+        let (mut drops, mut evicted, mut delayed) = (0, 0, 0);
+        let n = 4000;
+        for c in 0..n {
+            let p = fc.plan(&root, 0, 1, c);
+            if p.drop_at.is_some() {
+                drops += 1;
+                assert!(!p.evicted, "drop and eviction are exclusive");
+            }
+            if p.evicted {
+                evicted += 1;
+                assert!(p.delay_seconds > fc.round_deadline);
+            }
+            if p.delay_seconds > 0.0 {
+                delayed += 1;
+                assert!(p.delay_seconds <= 2.0 * fc.round_deadline);
+            }
+        }
+        let frac = |k: usize| k as f64 / n as f64;
+        assert!((frac(drops) - 0.4).abs() < 0.05, "drop rate {}", frac(drops));
+        assert!((frac(delayed) - 0.5).abs() < 0.05, "straggler rate {}", frac(delayed));
+        // evicted ≈ straggler ∧ ¬dropped ∧ past-deadline ≈ 0.5*0.6*0.5
+        assert!((frac(evicted) - 0.15).abs() < 0.05, "evict rate {}", frac(evicted));
+    }
+
+    #[test]
+    fn all_drop_phases_reachable() {
+        let fc = FaultConfig { drop_prob: 1.0, straggler_frac: 0.0, round_deadline: 0.0, min_survivors: 0 };
+        let root = Rng::new(2);
+        let mut counts = DropCounts::default();
+        for c in 0..300 {
+            counts.add(fc.plan(&root, 1, 1, c).dropped().unwrap());
+        }
+        assert!(counts.after_fwd > 0);
+        assert!(counts.after_upload > 0);
+        assert!(counts.before_grad_upload > 0);
+        assert_eq!(counts.deadline, 0);
+        assert_eq!(counts.total(), 300);
+    }
+
+    #[test]
+    fn summary_format() {
+        let mut c = DropCounts::default();
+        assert_eq!(c.summary(), "");
+        c.add(DropPhase::AfterFwd);
+        c.add(DropPhase::Deadline);
+        c.add(DropPhase::Deadline);
+        assert_eq!(c.summary(), "after_fwd:1;deadline:2");
+        assert_eq!(c.total(), 3);
+    }
+}

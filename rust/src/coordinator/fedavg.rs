@@ -6,10 +6,17 @@
 //! the comparison line of Table 1 and Figure 6: more client compute and
 //! memory, |w| per round instead of activations.
 //!
-//! Like the split trainers, the per-client work (broadcast → H local
-//! steps → delta upload) is a self-contained unit fanned across
+//! Like the split trainer, each round runs the tick-based phase machine
+//! of [`crate::coordinator::engine`] (Sampling → Broadcast →
+//! ClientCompute → Aggregate → Commit) with deterministic fault injection
+//! from [`crate::coordinator::faults`]: the per-client work (broadcast →
+//! H local steps → delta upload) is a self-contained unit fanned across
 //! `cfg.workers` threads, with partials reduced at the barrier in
-//! cohort-slot order — bit-identical at any worker count.
+//! cohort-slot order — bit-identical at any worker count. FedAvg has no
+//! activation upload, so every mid-round drop phase collapses to "died
+//! before the delta upload" ([`DropPhase::BeforeGradUpload`]): the
+//! broadcast downlink is metered, nothing comes back. Deadline-evicted
+//! stragglers upload their delta (metered) but the aggregate ignores it.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,8 +25,10 @@ use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
 use crate::config::RunConfig;
-use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
+use crate::coordinator::aggregator::{ScalarAggregator, SurvivorSet, WeightedAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
+use crate::coordinator::engine::{client_stream_key, sample_key, RoundDriver, RoundPhase};
+use crate::coordinator::faults::{DropCounts, DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::sampler::ClientSampler;
 use crate::coordinator::split::{arrays_to_tensors, open_logs, scalar, write_round};
 use crate::coordinator::Trainer;
@@ -46,6 +55,7 @@ pub struct FedAvgTrainer {
     net: StarNetwork,
     sampler: ClientSampler,
     metric: TaskMetric,
+    faults: FaultConfig,
     rng: Rng,
     csv: Option<CsvWriter>,
     jsonl: Option<JsonlWriter>,
@@ -59,6 +69,10 @@ struct FedAvgClientOutput {
     /// Wire-decoded model delta (global − local after H steps).
     delta: TensorList,
     bytes: RoundBytes,
+    /// Where the contribution was lost, if anywhere (see module docs).
+    dropped: Option<DropPhase>,
+    /// Simulated straggler compute delay.
+    delay_seconds: f64,
 }
 
 /// Immutable round state shared by the cohort workers.
@@ -88,14 +102,30 @@ fn fedavg_client_step(
     ctx: &FedAvgStepCtx<'_>,
     ci: usize,
     crng: &mut Rng,
+    plan: &FaultPlan,
 ) -> anyhow::Result<FedAvgClientOutput> {
     let nmetrics = ctx.spec.metrics.len();
     let mut up = 0usize;
     let mut down = 0usize;
+    let weight = ctx.data.client_weight(ci).max(1e-12);
 
     // broadcast whole model (downlink |w|)
     let (decoded, n) = ctx.net.download(ci, ctx.round, ctx.broadcast)?;
     down += n;
+    if plan.drop_at.is_some() {
+        // FedAvg's only uplink is the delta, so every mid-round drop
+        // collapses to "died before the delta upload": the broadcast is
+        // metered, nothing comes back
+        return Ok(FedAvgClientOutput {
+            weight,
+            loss: 0.0,
+            metric_sums: Vec::new(),
+            delta: TensorList::new(Vec::new(), Vec::new()),
+            bytes: RoundBytes::client(0, down, 0, 1),
+            dropped: Some(DropPhase::BeforeGradUpload),
+            delay_seconds: plan.delay_seconds,
+        });
+    }
     let mut local = match decoded {
         Message::ModelBroadcast { params } => {
             message::payload_to_tensors(&params, ctx.shapes, &ctx.global.names)
@@ -150,12 +180,28 @@ fn fedavg_client_step(
         _ => anyhow::bail!("wrong upload"),
     };
 
+    let bytes = RoundBytes::client(up, down, 1, 1);
+    if plan.evicted {
+        // straggler past the deadline: the delta arrived (and is
+        // metered), but too late to join the aggregate
+        return Ok(FedAvgClientOutput {
+            weight,
+            loss: 0.0,
+            metric_sums: Vec::new(),
+            delta: TensorList::new(Vec::new(), Vec::new()),
+            bytes,
+            dropped: Some(DropPhase::Deadline),
+            delay_seconds: plan.delay_seconds,
+        });
+    }
     Ok(FedAvgClientOutput {
-        weight: ctx.data.client_weight(ci).max(1e-12),
+        weight,
         loss,
         metric_sums,
         delta: delta_wire,
-        bytes: RoundBytes::client(up, down, 1, 1),
+        bytes,
+        dropped: None,
+        delay_seconds: plan.delay_seconds,
     })
 }
 
@@ -176,6 +222,7 @@ impl FedAvgTrainer {
             net: StarNetwork::with_defaults(cfg.num_clients),
             opt: crate::optim::build("sgd", 1.0)?,
             metric: TaskMetric::for_task(&cfg.task),
+            faults: FaultConfig::from_run(&cfg),
             spec,
             wc,
             ws,
@@ -229,6 +276,8 @@ impl FedAvgTrainer {
         Ok((loss.mean(), self.metric.value(&sums, examples)))
     }
 
+    /// One full round through the tick-based phase machine (see
+    /// `split.rs` module docs); returns the committed round record.
     fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
         let t0 = Instant::now();
         let variant = self.cfg.variant();
@@ -236,65 +285,153 @@ impl FedAvgTrainer {
         let nmetrics = self.spec.metrics.len();
 
         self.net.begin_round();
-        let cohort = self.sampler.sample(&mut self.rng.fork(round as u64), &[]);
         let global = self.full_params();
-        let broadcast =
-            Message::ModelBroadcast { params: message::tensors_to_payload(&global) };
         let shapes: Vec<Vec<usize>> =
             global.tensors.iter().map(|t| t.shape().to_vec()).collect();
-        let tasks: Vec<(usize, Rng)> = cohort
-            .iter()
-            .map(|&ci| {
-                (ci, self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xFEDA))
-            })
-            .collect();
-
-        let ctx = FedAvgStepCtx {
-            rt: &*self.rt,
-            data: self.data.as_ref(),
-            net: &self.net,
-            spec: &self.spec,
-            variant: &variant,
-            grad_meta: &grad_meta,
-            global: &global,
-            broadcast: &broadcast,
-            shapes: &shapes,
-            wc_names: &self.wc.names,
-            ws_names: &self.ws.names,
-            nc: self.wc.len(),
-            local_steps: self.cfg.local_steps,
-            client_lr: self.cfg.client_lr,
-            dropout_client: self.cfg.dropout_client,
-            dropout_server: self.cfg.dropout_server,
-            round: round as u32,
-        };
-        let results = scoped_parallel_map(
-            self.cfg.resolved_workers(),
-            tasks,
-            |_slot, (ci, mut crng)| fedavg_client_step(&ctx, ci, &mut crng),
-        );
-
-        // slot-order reduction (see split.rs: bit-identical at any worker
-        // count)
+        let mut driver = RoundDriver::new();
+        // carried across phases within one attempt
+        let mut cohort: Vec<usize> = Vec::new();
+        let mut plans: Vec<FaultPlan> = Vec::new();
+        let mut broadcast: Option<Message> = None;
+        let mut results: Vec<anyhow::Result<FedAvgClientOutput>> = Vec::new();
+        // carried across attempts (aborted attempts used the wire)
+        let mut round_bytes = RoundBytes::default();
+        let mut sim_seconds = 0.0f64;
+        // survivor aggregates of the attempt that commits
         let mut delta_agg = WeightedAggregator::new();
         let mut loss_agg = ScalarAggregator::new();
         let mut metric_sums = vec![0.0f64; nmetrics];
         let mut examples = 0.0f64;
-        let mut round_bytes = RoundBytes::default();
-        let mut per_client_bytes = Vec::with_capacity(cohort.len());
-        for result in results {
-            let out = result?;
-            loss_agg.add(out.loss, out.weight);
-            for (k, s) in metric_sums.iter_mut().enumerate() {
-                *s += out.metric_sums[k];
+        let mut survivors = SurvivorSet::new();
+        let mut drops = DropCounts::default();
+
+        loop {
+            match driver.phase() {
+                RoundPhase::Sampling => {
+                    let attempt = driver.attempt();
+                    cohort = self.sampler.sample(
+                        &mut self.rng.fork(sample_key(round as u64, attempt)),
+                        &[],
+                    );
+                    plans = cohort
+                        .iter()
+                        .map(|&ci| {
+                            self.faults.plan(&self.rng, round as u64, attempt, ci)
+                        })
+                        .collect();
+                    driver.advance();
+                }
+                RoundPhase::Broadcast => {
+                    // parameters can't change between attempts (aborts
+                    // never touch the optimizers), so the payload is
+                    // built once and re-sent on resampled attempts
+                    if broadcast.is_none() {
+                        broadcast = Some(Message::ModelBroadcast {
+                            params: message::tensors_to_payload(&global),
+                        });
+                    }
+                    driver.advance();
+                }
+                RoundPhase::ClientCompute => {
+                    let attempt = driver.attempt();
+                    let tasks: Vec<(usize, Rng, FaultPlan)> = cohort
+                        .iter()
+                        .zip(&plans)
+                        .map(|(&ci, &plan)| {
+                            let key =
+                                client_stream_key(0xFEDA, round as u64, ci, attempt);
+                            (ci, self.rng.fork(key), plan)
+                        })
+                        .collect();
+                    let ctx = FedAvgStepCtx {
+                        rt: &*self.rt,
+                        data: self.data.as_ref(),
+                        net: &self.net,
+                        spec: &self.spec,
+                        variant: &variant,
+                        grad_meta: &grad_meta,
+                        global: &global,
+                        broadcast: broadcast.as_ref().expect("broadcast built"),
+                        shapes: &shapes,
+                        wc_names: &self.wc.names,
+                        ws_names: &self.ws.names,
+                        nc: self.wc.len(),
+                        local_steps: self.cfg.local_steps,
+                        client_lr: self.cfg.client_lr,
+                        dropout_client: self.cfg.dropout_client,
+                        dropout_server: self.cfg.dropout_server,
+                        round: round as u32,
+                    };
+                    results = scoped_parallel_map(
+                        self.cfg.resolved_workers(),
+                        tasks,
+                        |_slot, (ci, mut crng, plan)| {
+                            fedavg_client_step(&ctx, ci, &mut crng, &plan)
+                        },
+                    );
+                    driver.advance();
+                }
+                RoundPhase::Aggregate => {
+                    // slot-order reduction (see split.rs: bit-identical
+                    // at any worker count)
+                    delta_agg = WeightedAggregator::new();
+                    loss_agg = ScalarAggregator::new();
+                    metric_sums = vec![0.0f64; nmetrics];
+                    examples = 0.0;
+                    survivors = SurvivorSet::new();
+                    drops = DropCounts::default();
+                    let mut per_client: Vec<(usize, usize, f64)> =
+                        Vec::with_capacity(cohort.len());
+                    for result in std::mem::take(&mut results) {
+                        let out = result?;
+                        per_client.push((
+                            out.bytes.up as usize,
+                            out.bytes.down as usize,
+                            out.delay_seconds,
+                        ));
+                        round_bytes.merge(&out.bytes);
+                        match out.dropped {
+                            Some(phase) => {
+                                drops.add(phase);
+                                survivors.dropped();
+                            }
+                            None => {
+                                survivors.survivor(out.weight);
+                                loss_agg.add(out.loss, out.weight);
+                                for (k, s) in metric_sums.iter_mut().enumerate() {
+                                    *s += out.metric_sums[k];
+                                }
+                                examples += self.spec.batch as f64;
+                                delta_agg.add(&out.delta, out.weight);
+                            }
+                        }
+                    }
+                    sim_seconds += self.net.estimate_round_time_with_delays(
+                        &per_client,
+                        self.faults.round_deadline,
+                    );
+                    // survivor weights renormalize to a convex combination
+                    // (kept in lockstep with split.rs)
+                    debug_assert!(
+                        survivors.survived() == 0
+                            || (survivors.normalized().iter().sum::<f64>() - 1.0).abs()
+                                < 1e-9,
+                        "survivor weights must renormalize to 1"
+                    );
+                    if self.faults.min_survivors > 0
+                        && survivors.survived() < self.faults.min_survivors
+                        && driver.resample()
+                    {
+                        continue;
+                    }
+                    driver.advance();
+                }
+                RoundPhase::Commit => break,
             }
-            examples += self.spec.batch as f64;
-            delta_agg.add(&out.delta, out.weight);
-            per_client_bytes.push((out.bytes.up as usize, out.bytes.down as usize));
-            round_bytes.merge(&out.bytes);
         }
 
-        // pseudo-gradient step: w <- w - 1.0 * mean(delta)
+        // pseudo-gradient step: w <- w - 1.0 * mean(delta); skipped when
+        // nobody survived (degraded commit)
         let mut full = global;
         if let Some(delta) = delta_agg.finish() {
             self.opt.step(&mut full, &delta);
@@ -313,7 +450,11 @@ impl FedAvgTrainer {
             downlink_bytes: round_bytes.down,
             cumulative_uplink: self.net.totals().up,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            sim_comm_seconds: self.net.estimate_round_time(&per_client_bytes),
+            sim_comm_seconds: sim_seconds,
+            cohort_sampled: cohort.len(),
+            cohort_survived: survivors.survived(),
+            dropped: drops,
+            attempts: driver.attempt(),
             ..Default::default()
         };
         if self.cfg.eval_every > 0

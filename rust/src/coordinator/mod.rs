@@ -10,6 +10,11 @@
 //! * [`fedavg::FedAvgTrainer`] — the whole-model baseline with H local
 //!   steps.
 //!
+//! Both trainers drive each round through the tick-based phase machine in
+//! [`engine`] (Sampling → Broadcast → ClientCompute → Aggregate → Commit)
+//! with deterministic fault injection from [`faults`] — client dropout,
+//! stragglers, deadline eviction, and partial-cohort resampling.
+//!
 //! All model math executes through PJRT artifacts; all transfers go
 //! through the metered [`crate::comm::StarNetwork`].
 
@@ -17,6 +22,8 @@ pub mod aggregator;
 pub mod checkpoint;
 pub mod client;
 pub mod correction;
+pub mod engine;
+pub mod faults;
 pub mod fedavg;
 pub mod quantize;
 pub mod sampler;

@@ -1,28 +1,40 @@
 //! The SplitFed / FedLite round state machine (paper §3 + §4).
 //!
-//! Per round:
-//! 1. sample a cohort; broadcast the client-side model (downlink);
-//! 2. **client forward** — `client_fwd` artifact per client;
-//! 3. **FedLite only**: quantize the activations (native or Pallas/PJRT
-//!    backend), serialize codebook+codewords through the metered wire, and
-//!    let the *server-side reconstruction from the decoded bytes* be the
-//!    `z~` that trains the server (the bytes really round-trip);
-//! 4. **server update** — `server_step` artifact: loss, metrics, `∂h/∂z~`,
-//!    server grads; weighted-aggregate server grads (p_i over cohort);
-//! 5. **client backward** — send `∂h/∂z~` down (metered), run `client_bwd`
-//!    (gradient correction eq. (5) happens inside the artifact);
-//! 6. **client-side model sync** — upload client grads (metered),
-//!    weighted-aggregate, one optimizer step on each side.
+//! Each round runs the explicit tick-based phase machine of
+//! [`crate::coordinator::engine`]:
 //!
-//! Steps 0–6 for one client are a self-contained unit of work
-//! ([`client_step`] → [`ClientRoundOutput`]) with no shared mutable
-//! state: the cohort fans out across `cfg.workers` threads
-//! ([`crate::util::pool::scoped_parallel_map`]) and the partials are
-//! reduced at the barrier in cohort-slot order. Per-client RNG streams
-//! are forked from `(round, client)` keys and every reduction has a fixed
-//! order, so round records are **bit-identical at any worker count**
-//! (`workers = 1` recovers the serial loop exactly; enforced by
-//! `rust/tests/determinism.rs`).
+//! * **Sampling** — pick the cohort (`ClientSampler`) and draw each
+//!   client's deterministic fault schedule
+//!   ([`crate::coordinator::faults::FaultConfig::plan`]);
+//! * **Broadcast** — build the round's client-model broadcast message,
+//!   shared read-only by the whole cohort;
+//! * **ClientCompute** — fan the cohort across `cfg.workers` threads
+//!   ([`crate::util::pool::scoped_parallel_map`]); one client's unit of
+//!   work is [`client_step`]: broadcast download → `client_fwd` →
+//!   (FedLite) quantize → metered wire round-trip (the server trains on
+//!   the *reconstruction from the decoded bytes*) → `server_step` → grad
+//!   download → `client_bwd` (gradient correction eq. (5) inside the
+//!   artifact) → client-grad upload. Fault injection short-circuits this
+//!   pipeline at the scheduled phase: bytes a client sent before failing
+//!   stay metered, its gradients never leave the worker;
+//! * **Aggregate** — reduce the partials in cohort-slot order; weights
+//!   `p_i` renormalize over the *survivors* (the weighted mean divides by
+//!   the surviving weight mass — see `aggregator::SurvivorSet`). If fewer
+//!   than `min_survivors` clients survived, rewind to **Sampling** for a
+//!   fresh attempt (bounded by `engine::MAX_SAMPLING_ATTEMPTS`) without
+//!   touching the optimizers;
+//! * **Commit** — one optimizer step per side on the survivor aggregate
+//!   (skipped when nobody survived), then emit the round record with
+//!   `cohort_sampled` / `cohort_survived` / `dropped_at_phase` /
+//!   `round_attempts`.
+//!
+//! Per-client RNG streams (batches *and* fault schedules) are forked from
+//! pure `(round, attempt, client)` keys and every reduction has a fixed
+//! order, so round records are **bit-identical at any worker count**,
+//! clean or faulty (`workers = 1` recovers the serial loop exactly;
+//! enforced by `rust/tests/determinism.rs`), and a clean config
+//! (`drop_prob = 0`) reproduces the pre-fault engine bit for bit
+//! (`rust/tests/faults.rs`).
 //!
 //! Labels are *not* metered (the paper's cost model excludes them; in the
 //! vertical-FL deployment the server owns labels — see DESIGN.md).
@@ -34,8 +46,10 @@ use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
 use crate::config::{Algorithm, RunConfig};
-use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
+use crate::coordinator::aggregator::{ScalarAggregator, SurvivorSet, WeightedAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
+use crate::coordinator::engine::{client_stream_key, sample_key, RoundDriver, RoundPhase};
+use crate::coordinator::faults::{DropCounts, DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::quantize::QuantizeBackend;
 use crate::coordinator::sampler::ClientSampler;
 use crate::coordinator::Trainer;
@@ -63,6 +77,7 @@ pub struct SplitTrainer {
     sampler: ClientSampler,
     quantizer: Option<QuantizeBackend>,
     metric: TaskMetric,
+    faults: FaultConfig,
     rng: Rng,
     csv: Option<CsvWriter>,
     jsonl: Option<JsonlWriter>,
@@ -81,8 +96,39 @@ pub struct ClientRoundOutput {
     pub quant_rel_err: f64,
     pub wc_grads: TensorList,
     pub ws_grads: TensorList,
-    /// This client's metered transfers (merged after the barrier).
+    /// This client's metered transfers (merged after the barrier). Bytes
+    /// sent before a mid-round failure are included — they crossed the
+    /// wire.
     pub bytes: RoundBytes,
+    /// Where the client's contribution was lost, if anywhere. Dropped and
+    /// evicted clients carry empty gradient lists and are excluded from
+    /// every aggregate.
+    pub dropped: Option<DropPhase>,
+    /// Simulated straggler compute delay (feeds the round-time estimate).
+    pub delay_seconds: f64,
+}
+
+impl ClientRoundOutput {
+    /// A failed client's partial contribution: the bytes it sent, nothing
+    /// else.
+    fn failed(
+        phase: DropPhase,
+        weight: f64,
+        bytes: RoundBytes,
+        delay_seconds: f64,
+    ) -> ClientRoundOutput {
+        ClientRoundOutput {
+            weight,
+            loss: 0.0,
+            metric_sums: Vec::new(),
+            quant_rel_err: 0.0,
+            wc_grads: TensorList::new(Vec::new(), Vec::new()),
+            ws_grads: TensorList::new(Vec::new(), Vec::new()),
+            bytes,
+            dropped: Some(phase),
+            delay_seconds,
+        }
+    }
 }
 
 /// Immutable view of the round state shared (read-only) by the cohort
@@ -113,10 +159,16 @@ struct ClientStepCtx<'a> {
 
 /// One client's full round pipeline: broadcast → `client_fwd` → quantize →
 /// metered wire round-trip → `server_step` → `client_bwd` → grad upload.
+///
+/// `plan` injects this client's scheduled faults: the pipeline stops at
+/// the scheduled drop phase (bytes sent so far stay metered, nothing else
+/// is produced), and an evicted straggler runs to completion — all its
+/// bytes cross the wire — but returns a discarded contribution.
 fn client_step(
     ctx: &ClientStepCtx<'_>,
     ci: usize,
     crng: &mut Rng,
+    plan: &FaultPlan,
 ) -> anyhow::Result<ClientRoundOutput> {
     let mut up_bytes = 0usize;
     let mut down_bytes = 0usize;
@@ -125,6 +177,7 @@ fn client_step(
     let act_b = ctx.spec.act_batch;
     let d = ctx.spec.cut_dim;
     let nmetrics = ctx.spec.metrics.len();
+    let weight = ctx.data.client_weight(ci).max(1e-12);
 
     // 0. model broadcast (downlink)
     let (_, n) = ctx.net.download(ci, ctx.round, ctx.broadcast)?;
@@ -153,6 +206,15 @@ fn client_step(
         .as_f32()
         .ok_or_else(|| anyhow::anyhow!("z dtype"))?
         .to_vec();
+    if plan.drop_at == Some(DropPhase::AfterFwd) {
+        // vanished before uploading: only the broadcast crossed the wire
+        return Ok(ClientRoundOutput::failed(
+            DropPhase::AfterFwd,
+            weight,
+            RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+            plan.delay_seconds,
+        ));
+    }
 
     // 2. upload: quantized (FedLite) or raw (SplitFed); the server
     //    trains on what came off the wire.
@@ -184,6 +246,16 @@ fn client_step(
             }
         }
     };
+    if plan.drop_at == Some(DropPhase::AfterUpload) {
+        // the activation upload landed (and is metered); the client is
+        // gone, so the server never trains on it
+        return Ok(ClientRoundOutput::failed(
+            DropPhase::AfterUpload,
+            weight,
+            RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+            plan.delay_seconds,
+        ));
+    }
     let z_tilde = Array::f32(&[act_b, d], z_tilde_server);
 
     // 3. server update
@@ -197,7 +269,6 @@ fn client_step(
     let outs = ctx
         .rt
         .run(ctx.variant, "server_step", &assemble(ctx.step, &src)?)?;
-    let weight = ctx.data.client_weight(ci).max(1e-12);
     let loss = scalar(&outs[0])? as f64;
     let mut metric_sums = vec![0.0f64; nmetrics];
     for (k, s) in metric_sums.iter_mut().enumerate() {
@@ -219,6 +290,16 @@ fn client_step(
         Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
         _ => anyhow::bail!("wrong download variant"),
     };
+    if plan.drop_at == Some(DropPhase::BeforeGradUpload) {
+        // uplink activations and the grad download are metered; the
+        // client-side gradient never comes back
+        return Ok(ClientRoundOutput::failed(
+            DropPhase::BeforeGradUpload,
+            weight,
+            RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+            plan.delay_seconds,
+        ));
+    }
 
     // 5. client backward (gradient correction inside the artifact)
     let src = InputSources {
@@ -249,6 +330,17 @@ fn client_step(
         _ => anyhow::bail!("wrong sync variant"),
     };
 
+    let bytes = RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs);
+    if plan.evicted {
+        // straggler past the deadline: every message crossed the wire,
+        // but the round committed without it
+        return Ok(ClientRoundOutput::failed(
+            DropPhase::Deadline,
+            weight,
+            bytes,
+            plan.delay_seconds,
+        ));
+    }
     Ok(ClientRoundOutput {
         weight,
         loss,
@@ -256,7 +348,9 @@ fn client_step(
         quant_rel_err,
         wc_grads: synced,
         ws_grads,
-        bytes: RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+        bytes,
+        dropped: None,
+        delay_seconds: plan.delay_seconds,
     })
 }
 
@@ -288,6 +382,7 @@ impl SplitTrainer {
             opt_c: crate::optim::build(&cfg.optimizer, cfg.client_lr)?,
             opt_s: crate::optim::build(&cfg.optimizer, cfg.server_lr)?,
             metric: TaskMetric::for_task(&cfg.task),
+            faults: FaultConfig::from_run(&cfg),
             quantizer,
             spec,
             wc,
@@ -340,7 +435,8 @@ impl SplitTrainer {
         Ok((loss.mean(), self.metric.value(&sums, examples)))
     }
 
-    /// One full round; returns the round record.
+    /// One full round through the tick-based phase machine (see the
+    /// module docs); returns the committed round record.
     fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
         let t0 = Instant::now();
         let variant = self.cfg.variant();
@@ -350,71 +446,169 @@ impl SplitTrainer {
         let nmetrics = self.spec.metrics.len();
 
         self.net.begin_round();
-        let cohort = self.sampler.sample(&mut self.rng.fork(round as u64), &[]);
-        let broadcast =
-            Message::ModelBroadcast { params: message::tensors_to_payload(&self.wc) };
-        // Per-client RNG streams use the same (round, client) fork keys as
-        // the original serial loop; `fork` never advances the root stream,
-        // so hoisting the forks out of the loop is behavior-preserving.
-        let tasks: Vec<(usize, Rng)> = cohort
-            .iter()
-            .map(|&ci| {
-                (ci, self.rng.fork(((round as u64) << 20) ^ (ci as u64) ^ 0xC11E))
-            })
-            .collect();
-
-        let ctx = ClientStepCtx {
-            rt: &*self.rt,
-            data: self.data.as_ref(),
-            net: &self.net,
-            quantizer: self.quantizer.as_ref(),
-            spec: &self.spec,
-            variant: &variant,
-            fwd: &fwd_meta,
-            step: &step_meta,
-            bwd: &bwd_meta,
-            wc: &self.wc,
-            ws: &self.ws,
-            broadcast: &broadcast,
-            lambda: if self.quantizer.is_some() { self.cfg.lambda } else { 0.0 },
-            dropout_client: self.cfg.dropout_client,
-            dropout_server: self.cfg.dropout_server,
-            round: round as u32,
-        };
-        // fan the cohort across the worker threads; collection is the
-        // round barrier
-        let results = scoped_parallel_map(
-            self.cfg.resolved_workers(),
-            tasks,
-            |_slot, (ci, mut crng)| client_step(&ctx, ci, &mut crng),
-        );
-
-        // reduce the partials in cohort-slot order: every accumulation
-        // below happens in the same order the serial loop used, so the
-        // records are bit-identical at any worker count
+        let mut driver = RoundDriver::new();
+        // carried across phases within one attempt
+        let mut cohort: Vec<usize> = Vec::new();
+        let mut plans: Vec<FaultPlan> = Vec::new();
+        let mut broadcast: Option<Message> = None;
+        let mut results: Vec<anyhow::Result<ClientRoundOutput>> = Vec::new();
+        // carried across *attempts*: aborted attempts really used the
+        // wire and the simulated clock, so bytes/time accumulate
+        let mut round_bytes = RoundBytes::default();
+        let mut sim_seconds = 0.0f64;
+        // survivor aggregates of the attempt that commits
         let mut ws_agg = WeightedAggregator::new();
         let mut wc_agg = WeightedAggregator::new();
         let mut loss_agg = ScalarAggregator::new();
         let mut qerr_agg = ScalarAggregator::new();
         let mut metric_sums = vec![0.0f64; nmetrics];
         let mut examples = 0.0f64;
-        let mut round_bytes = RoundBytes::default();
-        let mut per_client_bytes: Vec<(usize, usize)> = Vec::with_capacity(cohort.len());
-        for result in results {
-            let out = result?;
-            loss_agg.add(out.loss, out.weight);
-            for (k, s) in metric_sums.iter_mut().enumerate() {
-                *s += out.metric_sums[k];
+        let mut survivors = SurvivorSet::new();
+        let mut drops = DropCounts::default();
+
+        loop {
+            match driver.phase() {
+                RoundPhase::Sampling => {
+                    let attempt = driver.attempt();
+                    cohort = self.sampler.sample(
+                        &mut self.rng.fork(sample_key(round as u64, attempt)),
+                        &[],
+                    );
+                    plans = cohort
+                        .iter()
+                        .map(|&ci| {
+                            self.faults.plan(&self.rng, round as u64, attempt, ci)
+                        })
+                        .collect();
+                    driver.advance();
+                }
+                RoundPhase::Broadcast => {
+                    // parameters can't change between attempts (aborts
+                    // never touch the optimizers), so the payload is
+                    // built once and re-sent on resampled attempts
+                    if broadcast.is_none() {
+                        broadcast = Some(Message::ModelBroadcast {
+                            params: message::tensors_to_payload(&self.wc),
+                        });
+                    }
+                    driver.advance();
+                }
+                RoundPhase::ClientCompute => {
+                    // Per-client RNG streams use the same (round, client)
+                    // fork keys as the original serial loop; `fork` never
+                    // advances the root stream, so hoisting the forks out
+                    // of the loop is behavior-preserving.
+                    let attempt = driver.attempt();
+                    let tasks: Vec<(usize, Rng, FaultPlan)> = cohort
+                        .iter()
+                        .zip(&plans)
+                        .map(|(&ci, &plan)| {
+                            let key =
+                                client_stream_key(0xC11E, round as u64, ci, attempt);
+                            (ci, self.rng.fork(key), plan)
+                        })
+                        .collect();
+                    let ctx = ClientStepCtx {
+                        rt: &*self.rt,
+                        data: self.data.as_ref(),
+                        net: &self.net,
+                        quantizer: self.quantizer.as_ref(),
+                        spec: &self.spec,
+                        variant: &variant,
+                        fwd: &fwd_meta,
+                        step: &step_meta,
+                        bwd: &bwd_meta,
+                        wc: &self.wc,
+                        ws: &self.ws,
+                        broadcast: broadcast.as_ref().expect("broadcast built"),
+                        lambda: if self.quantizer.is_some() {
+                            self.cfg.lambda
+                        } else {
+                            0.0
+                        },
+                        dropout_client: self.cfg.dropout_client,
+                        dropout_server: self.cfg.dropout_server,
+                        round: round as u32,
+                    };
+                    // fan the cohort across the worker threads;
+                    // collection is the round barrier
+                    results = scoped_parallel_map(
+                        self.cfg.resolved_workers(),
+                        tasks,
+                        |_slot, (ci, mut crng, plan)| {
+                            client_step(&ctx, ci, &mut crng, &plan)
+                        },
+                    );
+                    driver.advance();
+                }
+                RoundPhase::Aggregate => {
+                    // reduce the partials in cohort-slot order: every
+                    // accumulation below happens in the same order the
+                    // serial loop used, so the records are bit-identical
+                    // at any worker count
+                    ws_agg = WeightedAggregator::new();
+                    wc_agg = WeightedAggregator::new();
+                    loss_agg = ScalarAggregator::new();
+                    qerr_agg = ScalarAggregator::new();
+                    metric_sums = vec![0.0f64; nmetrics];
+                    examples = 0.0;
+                    survivors = SurvivorSet::new();
+                    drops = DropCounts::default();
+                    let mut per_client: Vec<(usize, usize, f64)> =
+                        Vec::with_capacity(cohort.len());
+                    for result in std::mem::take(&mut results) {
+                        let out = result?;
+                        per_client.push((
+                            out.bytes.up as usize,
+                            out.bytes.down as usize,
+                            out.delay_seconds,
+                        ));
+                        round_bytes.merge(&out.bytes);
+                        match out.dropped {
+                            Some(phase) => {
+                                drops.add(phase);
+                                survivors.dropped();
+                            }
+                            None => {
+                                survivors.survivor(out.weight);
+                                loss_agg.add(out.loss, out.weight);
+                                for (k, s) in metric_sums.iter_mut().enumerate() {
+                                    *s += out.metric_sums[k];
+                                }
+                                examples += self.spec.batch as f64;
+                                ws_agg.add(&out.ws_grads, out.weight);
+                                wc_agg.add(&out.wc_grads, out.weight);
+                                qerr_agg.add(out.quant_rel_err, 1.0);
+                            }
+                        }
+                    }
+                    sim_seconds += self
+                        .net
+                        .estimate_round_time_with_delays(&per_client, self.faults.round_deadline);
+                    // survivor weights renormalize to a convex combination
+                    debug_assert!(
+                        survivors.survived() == 0
+                            || (survivors.normalized().iter().sum::<f64>() - 1.0).abs()
+                                < 1e-9,
+                        "survivor weights must renormalize to 1"
+                    );
+                    if self.faults.min_survivors > 0
+                        && survivors.survived() < self.faults.min_survivors
+                        && driver.resample()
+                    {
+                        // too few survivors: abort the attempt (its bytes
+                        // stay metered) and resample a fresh cohort
+                        // without touching the optimizers
+                        continue;
+                    }
+                    driver.advance();
+                }
+                RoundPhase::Commit => break,
             }
-            examples += self.spec.batch as f64;
-            ws_agg.add(&out.ws_grads, out.weight);
-            wc_agg.add(&out.wc_grads, out.weight);
-            qerr_agg.add(out.quant_rel_err, 1.0);
-            per_client_bytes.push((out.bytes.up as usize, out.bytes.down as usize));
-            round_bytes.merge(&out.bytes);
         }
 
-        // optimizer steps on the aggregated gradients
+        // optimizer steps on the survivor-aggregated gradients (skipped
+        // when nobody survived a degraded commit)
         if let Some(g) = ws_agg.finish() {
             self.opt_s.step(&mut self.ws, &g);
         }
@@ -427,7 +621,7 @@ impl SplitTrainer {
         // archive the meter's per-round delta (cumulative totals live
         // there too); the record reports the slot-order merged partials,
         // which must agree with the meter while all round traffic flows
-        // through client_step
+        // through client_step — including aborted attempts
         let meter_delta = self.net.end_round();
         debug_assert_eq!(meter_delta, round_bytes, "meter vs merged partials");
         let mut rec = RoundRecord {
@@ -439,7 +633,11 @@ impl SplitTrainer {
             downlink_bytes: round_bytes.down,
             cumulative_uplink: self.net.totals().up,
             wall_seconds: t0.elapsed().as_secs_f64(),
-            sim_comm_seconds: self.net.estimate_round_time(&per_client_bytes),
+            sim_comm_seconds: sim_seconds,
+            cohort_sampled: cohort.len(),
+            cohort_survived: survivors.survived(),
+            dropped: drops,
+            attempts: driver.attempt(),
             ..Default::default()
         };
         if self.cfg.eval_every > 0
@@ -527,7 +725,8 @@ pub(crate) fn open_logs(
         &[
             "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
             "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
-            "wall_seconds", "sim_comm_seconds",
+            "wall_seconds", "sim_comm_seconds", "cohort_sampled", "cohort_survived",
+            "dropped_at_phase", "round_attempts",
         ],
     )?;
     let jsonl = JsonlWriter::create(format!("{base}.jsonl"))?;
@@ -552,6 +751,10 @@ pub(crate) fn write_round(
             rec.cumulative_uplink.to_string(),
             format!("{:.4}", rec.wall_seconds),
             format!("{:.4}", rec.sim_comm_seconds),
+            rec.cohort_sampled.to_string(),
+            rec.cohort_survived.to_string(),
+            rec.dropped.summary(),
+            rec.attempts.to_string(),
         ])?;
     }
     if let Some(j) = jsonl {

@@ -49,6 +49,29 @@ fn cli() -> Cli {
                     Flag::opt("quantizer", "native", "native | pjrt (Pallas artifact)"),
                     Flag::opt("lr", "0", "learning rate override (0 = preset)"),
                     Flag::opt("alpha", "0.3", "Dirichlet non-IID concentration"),
+                    Flag::opt(
+                        "drop-prob",
+                        "0",
+                        "per-client probability of mid-round failure \
+                         (after fwd / after upload / before grad upload)",
+                    ),
+                    Flag::opt(
+                        "straggler-frac",
+                        "0",
+                        "fraction of clients that straggle each round",
+                    ),
+                    Flag::opt(
+                        "round-deadline",
+                        "0",
+                        "simulated round deadline in seconds; stragglers \
+                         past it are evicted (0 = no deadline)",
+                    ),
+                    Flag::opt(
+                        "min-survivors",
+                        "0",
+                        "abort + resample the round when fewer clients \
+                         survive (0 = never abort)",
+                    ),
                     Flag::opt("seed", "17", "root RNG seed"),
                     Flag::opt("eval-every", "10", "eval period in rounds (0 = never)"),
                     Flag::opt("artifacts", "artifacts", "artifacts directory"),
@@ -161,6 +184,10 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
         cfg.server_lr = lr as f32;
     }
     cfg.alpha = args.f64("alpha")?;
+    cfg.drop_prob = args.prob("drop-prob")?;
+    cfg.straggler_frac = args.prob("straggler-frac")?;
+    cfg.round_deadline = args.f64("round-deadline")?;
+    cfg.min_survivors = args.usize("min-survivors")?;
     cfg.seed = args.u64("seed")?;
     cfg.eval_every = args.usize("eval-every")?;
     // the tiny preset always runs on the built-in native engine
@@ -177,6 +204,12 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
         cfg.clients_per_round, cfg.num_clients, cfg.resolved_workers(),
         cfg.pq.q, cfg.pq.l, cfg.pq.r, cfg.lambda, cfg.quantizer
     );
+    if cfg.drop_prob > 0.0 || cfg.straggler_frac > 0.0 || cfg.min_survivors > 0 {
+        log::info!(
+            "faults: drop_prob={} straggler_frac={} round_deadline={}s min_survivors={}",
+            cfg.drop_prob, cfg.straggler_frac, cfg.round_deadline, cfg.min_survivors
+        );
+    }
     let save = args.get("save").unwrap_or("").to_string();
     let run_log = if !save.is_empty() && cfg.algorithm != Algorithm::FedAvg {
         // keep the concrete trainer so the final parameters can be saved

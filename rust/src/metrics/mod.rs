@@ -6,6 +6,7 @@
 //! the paper's headline numbers. [`RoundRecord`]/[`RunLog`] accumulate the
 //! per-round series that the figures plot.
 
+use crate::coordinator::faults::DropCounts;
 use crate::util::json::{Object, Value};
 
 /// Converts raw metric sums into the per-task headline metric.
@@ -70,6 +71,15 @@ pub struct RoundRecord {
     pub cumulative_uplink: u64,
     pub wall_seconds: f64,
     pub sim_comm_seconds: f64,
+    /// Clients sampled into the committed attempt's cohort.
+    pub cohort_sampled: usize,
+    /// Clients whose contribution reached the aggregate.
+    pub cohort_survived: usize,
+    /// Per-phase drop tally for the committed attempt.
+    pub dropped: DropCounts,
+    /// Sampling attempts this round took (1 = committed first try; see
+    /// `coordinator::engine::RoundDriver`).
+    pub attempts: u32,
 }
 
 impl RoundRecord {
@@ -90,6 +100,10 @@ impl RoundRecord {
         o.insert("cumulative_uplink", Value::Num(self.cumulative_uplink as f64));
         o.insert("wall_seconds", Value::Num(self.wall_seconds));
         o.insert("sim_comm_seconds", Value::Num(self.sim_comm_seconds));
+        o.insert("cohort_sampled", Value::from_usize(self.cohort_sampled));
+        o.insert("cohort_survived", Value::from_usize(self.cohort_survived));
+        o.insert("dropped_at_phase", Value::Str(self.dropped.summary()));
+        o.insert("round_attempts", Value::from_usize(self.attempts as usize));
         Value::Obj(o)
     }
 }
@@ -230,5 +244,25 @@ mod tests {
         assert_eq!(j.get("round").as_usize(), Some(3));
         assert_eq!(j.get("train_loss").as_f64(), Some(1.5));
         assert_eq!(j.get("eval_loss").as_f64(), None);
+    }
+
+    #[test]
+    fn round_record_json_cohort_fields() {
+        use crate::coordinator::faults::DropPhase;
+        let mut dropped = DropCounts::default();
+        dropped.add(DropPhase::AfterUpload);
+        let r = RoundRecord {
+            round: 1,
+            cohort_sampled: 4,
+            cohort_survived: 3,
+            dropped,
+            attempts: 2,
+            ..Default::default()
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("cohort_sampled").as_usize(), Some(4));
+        assert_eq!(j.get("cohort_survived").as_usize(), Some(3));
+        assert_eq!(j.get("dropped_at_phase").as_str(), Some("after_upload:1"));
+        assert_eq!(j.get("round_attempts").as_usize(), Some(2));
     }
 }

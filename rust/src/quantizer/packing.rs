@@ -63,7 +63,9 @@ pub fn unpack(bytes: &[u8], n: usize, l: usize) -> anyhow::Result<Vec<u32>> {
             got += take;
             bitpos += take;
         }
-        anyhow::ensure!((v as usize) < l.max(2).max(l), "decoded code {v} >= L={l}");
+        // L = 1 still carries one bit per code, but only 0 is a valid
+        // codeword — reject streams whose padding bits were tampered with
+        anyhow::ensure!((v as usize) < l.max(1), "decoded code {v} >= L={l}");
         out.push(v as u32);
     }
     Ok(out)
@@ -112,6 +114,15 @@ mod tests {
         assert_eq!(pack(&[1, 0, 1, 1, 0, 0, 1, 0], 2).len(), 1);
         // 3 codes with L=32 (5 bits) -> 15 bits -> 2 bytes
         assert_eq!(pack(&[31, 0, 17], 32).len(), 2);
+    }
+
+    #[test]
+    fn l1_corrupt_bit_rejected() {
+        // L = 1: only the zero codeword exists; a stray 1 bit is corruption
+        let packed = pack(&[0; 8], 1);
+        assert_eq!(packed, vec![0u8]);
+        assert_eq!(unpack(&packed, 8, 1).unwrap(), vec![0; 8]);
+        assert!(unpack(&[0b0000_0100], 8, 1).is_err());
     }
 
     #[test]

@@ -67,6 +67,16 @@ impl Args {
         parse_num(self.get(name), name)
     }
 
+    /// A probability-valued flag: parsed as f64 and validated into [0, 1].
+    pub fn prob(&self, name: &str) -> anyhow::Result<f64> {
+        let v: f64 = parse_num(self.get(name), name)?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&v),
+            "--{name} must be a probability in [0, 1], got {v}"
+        );
+        Ok(v)
+    }
+
     pub fn str(&self, name: &str) -> anyhow::Result<&str> {
         self.get(name)
             .ok_or_else(|| anyhow::anyhow!("missing required flag --{name}"))
@@ -217,6 +227,7 @@ mod tests {
                     Flag::req("task", "task name"),
                     Flag::switch("verbose", "chatty"),
                     Flag::multi("sweep", "values to sweep"),
+                    Flag::opt("p", "0", "a probability"),
                 ],
             }],
         }
@@ -249,6 +260,19 @@ mod tests {
             .parse(&sv(&["train", "--task", "t", "--sweep", "1", "--sweep", "2"]))
             .unwrap();
         assert_eq!(inv.args.get_all("sweep"), &["1".to_string(), "2".to_string()]);
+    }
+
+    #[test]
+    fn prob_flag_validates_range() {
+        let inv = cli().parse(&sv(&["train", "--p", "0.3"])).unwrap();
+        assert!((inv.args.prob("p").unwrap() - 0.3).abs() < 1e-12);
+        let inv = cli().parse(&sv(&["train", "--p", "1.5"])).unwrap();
+        assert!(inv.args.prob("p").is_err());
+        let inv = cli().parse(&sv(&["train", "--p", "-0.1"])).unwrap();
+        assert!(inv.args.prob("p").is_err());
+        // boundary values are probabilities too
+        let inv = cli().parse(&sv(&["train", "--p", "1"])).unwrap();
+        assert_eq!(inv.args.prob("p").unwrap(), 1.0);
     }
 
     #[test]

@@ -5,7 +5,10 @@
 //! records must be **bit-identical at any worker count**. These tests run
 //! the native `femnist_tiny` engine (no artifacts needed) through all
 //! three trainers (FedLite / SplitFed / FedAvg) at workers = 1, 2, 4 and
-//! compare the full `RoundRecord` streams field by field.
+//! compare the full `RoundRecord` streams field by field — for clean
+//! configs *and* for faulty ones (dropout + stragglers + deadline +
+//! survivor floor), proving fault schedules come from the per-client RNG
+//! forks and never from wall-clock or thread scheduling.
 
 use std::sync::Arc;
 
@@ -14,7 +17,7 @@ use fedlite::coordinator::{build_trainer, Trainer};
 use fedlite::metrics::RunLog;
 use fedlite::runtime::Runtime;
 
-fn run(algo: Algorithm, workers: usize, seed: u64) -> RunLog {
+fn base_cfg(algo: Algorithm, workers: usize, seed: u64) -> RunConfig {
     let mut cfg = RunConfig::tiny("femnist").unwrap();
     cfg.algorithm = algo;
     cfg.rounds = 3;
@@ -25,9 +28,28 @@ fn run(algo: Algorithm, workers: usize, seed: u64) -> RunLog {
     cfg.eval_batches = 1;
     cfg.workers = workers;
     cfg.seed = seed;
+    cfg
+}
+
+fn run_cfg(cfg: RunConfig) -> RunLog {
     let rt = Arc::new(Runtime::native());
     let mut trainer = build_trainer(cfg, rt).unwrap();
     trainer.run().unwrap()
+}
+
+fn run(algo: Algorithm, workers: usize, seed: u64) -> RunLog {
+    run_cfg(base_cfg(algo, workers, seed))
+}
+
+/// The acceptance scenario: dropout + stragglers + deadline eviction +
+/// survivor floor, all on.
+fn run_faulty(algo: Algorithm, workers: usize, seed: u64) -> RunLog {
+    let mut cfg = base_cfg(algo, workers, seed);
+    cfg.drop_prob = 0.3;
+    cfg.straggler_frac = 0.5;
+    cfg.round_deadline = 0.05;
+    cfg.min_survivors = 1;
+    run_cfg(cfg)
 }
 
 /// Everything except wall-clock must match bit for bit.
@@ -65,6 +87,10 @@ fn assert_identical(a: &RunLog, b: &RunLog) {
             y.eval_metric.map(f64::to_bits),
             "eval metric r{r}"
         );
+        assert_eq!(x.cohort_sampled, y.cohort_sampled, "sampled r{r}");
+        assert_eq!(x.cohort_survived, y.cohort_survived, "survived r{r}");
+        assert_eq!(x.dropped, y.dropped, "drop phases r{r}");
+        assert_eq!(x.attempts, y.attempts, "attempts r{r}");
     }
 }
 
@@ -89,6 +115,50 @@ fn fedavg_records_invariant_to_worker_count() {
     let serial = run(Algorithm::FedAvg, 1, 13);
     for workers in [2, 4] {
         assert_identical(&serial, &run(Algorithm::FedAvg, workers, 13));
+    }
+}
+
+/// Fault schedules (dropout, stragglers, deadline eviction, resampling)
+/// are drawn from per-client RNG forks keyed on (round, attempt, client),
+/// so a faulty run must also be bit-identical at any worker count.
+#[test]
+fn faulty_fedlite_records_invariant_to_worker_count() {
+    let serial = run_faulty(Algorithm::FedLite, 1, 31);
+    for workers in [2, 4] {
+        assert_identical(&serial, &run_faulty(Algorithm::FedLite, workers, 31));
+    }
+}
+
+#[test]
+fn faulty_splitfed_records_invariant_to_worker_count() {
+    let serial = run_faulty(Algorithm::SplitFed, 1, 32);
+    for workers in [2, 4] {
+        assert_identical(&serial, &run_faulty(Algorithm::SplitFed, workers, 32));
+    }
+}
+
+#[test]
+fn faulty_fedavg_records_invariant_to_worker_count() {
+    let serial = run_faulty(Algorithm::FedAvg, 1, 33);
+    for workers in [2, 4] {
+        assert_identical(&serial, &run_faulty(Algorithm::FedAvg, workers, 33));
+    }
+}
+
+/// The faulty invariance tests must not pass vacuously: over 3 rounds ×
+/// 4 clients at drop 0.3 + straggler 0.5 someone must actually drop.
+#[test]
+fn faulty_runs_actually_inject_faults() {
+    let log = run_faulty(Algorithm::FedLite, 2, 31);
+    let dropped: usize = log.rounds.iter().map(|r| r.dropped.total()).sum();
+    assert!(dropped > 0, "fault config injected nothing");
+    for rec in &log.rounds {
+        assert_eq!(
+            rec.cohort_survived + rec.dropped.total(),
+            rec.cohort_sampled,
+            "r{}",
+            rec.round
+        );
     }
 }
 

@@ -90,6 +90,64 @@ fn prop_codes_always_in_range_and_pack_roundtrip() {
 }
 
 #[test]
+fn prop_pack_is_left_inverse_of_unpack() {
+    // pack(unpack(bits)) == bits: any byte stream decodes and re-encodes
+    // losslessly when the code width divides the stream exactly. Power-of-
+    // two widths make every bit pattern a valid codeword; byte-aligned
+    // totals leave no pad bits (pack zero-fills pads, so unaligned tails
+    // round-trip only from pack's own output — covered by the companion
+    // codes-roundtrip property).
+    forall("pack-left-inverse", |rng| {
+        let bits = [1usize, 2, 4, 8][rng.below(4)];
+        let l = 1usize << bits;
+        let nbytes = 1 + rng.below(64);
+        let bytes: Vec<u8> = (0..nbytes).map(|_| rng.below(256) as u8).collect();
+        let n = nbytes * 8 / bits;
+        let codes = packing::unpack(&bytes, n, l).unwrap();
+        assert_eq!(codes.len(), n);
+        assert!(codes.iter().all(|&c| (c as usize) < l));
+        assert_eq!(packing::pack(&codes, l), bytes, "bits={bits} nbytes={nbytes}");
+    });
+}
+
+#[test]
+fn prop_kmeans_assignment_invariant_under_permutation() {
+    // permuting the points permutes the codes and nothing else: the
+    // argmin of each point depends only on that point and the centroids
+    use fedlite::quantizer::{KMeans, KMeansInit};
+    forall("kmeans-permutation", |rng| {
+        let d = 1 + rng.below(6);
+        let n = 2 + rng.below(40);
+        let l = 1 + rng.below(6);
+        let points: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let centroids: Vec<f32> = (0..l * d).map(|_| rng.normal() as f32).collect();
+        let km = KMeans::new(l, d, 0, KMeansInit::RandomRows);
+
+        let mut codes = vec![0u32; n];
+        let err = km.assign(&points, n, &centroids, &mut codes);
+
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let permuted: Vec<f32> = perm
+            .iter()
+            .flat_map(|&i| points[i * d..(i + 1) * d].iter().copied())
+            .collect();
+        let mut codes_p = vec![0u32; n];
+        let err_p = km.assign(&permuted, n, &centroids, &mut codes_p);
+
+        for (slot, &src) in perm.iter().enumerate() {
+            assert_eq!(codes_p[slot], codes[src], "slot {slot} <- point {src}");
+        }
+        // the error is the same multiset of per-point distances; only the
+        // f64 summation order differs
+        assert!(
+            (err - err_p).abs() <= 1e-6 * err.abs().max(1.0),
+            "{err} vs {err_p}"
+        );
+    });
+}
+
+#[test]
 fn prop_qerr_consistent_with_ztilde() {
     forall("qerr-consistency", |rng| {
         let (cfg, b, d, z) = rand_pq_setup(rng);
