@@ -57,7 +57,9 @@ pub struct ByteMeter {
     up_msgs: AtomicU64,
     down_msgs: AtomicU64,
     rounds: Mutex<Vec<RoundBytes>>,
-    round_start: Mutex<RoundBytes>,
+    /// Cumulative snapshot taken at `begin_round`; `None` while no round
+    /// is open. The `Option` makes begin/end pairing checkable.
+    round_start: Mutex<Option<RoundBytes>>,
 }
 
 impl ByteMeter {
@@ -89,19 +91,37 @@ impl ByteMeter {
     }
 
     /// Mark the start of a round (call before the round's transfers).
+    /// Calls must pair with [`ByteMeter::end_round`]; an unmatched second
+    /// `begin_round` is a caller bug (debug-asserted) and restarts the
+    /// round window in release.
     pub fn begin_round(&self) {
-        *self.round_start.lock().unwrap() = self.totals();
+        let mut start = self.round_start.lock().unwrap();
+        debug_assert!(
+            start.is_none(),
+            "begin_round without a matching end_round (round meter already open)"
+        );
+        *start = Some(self.totals());
     }
 
-    /// Close the round; returns and archives this round's delta.
+    /// Close the round; returns and archives this round's delta. The round
+    /// engine calls this on *every* exit path — including error aborts —
+    /// so the per-round archive never desyncs from the round records. An
+    /// `end_round` with no open round is a caller bug (debug-asserted) and
+    /// degrades to an empty delta in release; the subtraction saturates so
+    /// an unbalanced meter can never wrap.
     pub fn end_round(&self) -> RoundBytes {
-        let start = *self.round_start.lock().unwrap();
+        let mut slot = self.round_start.lock().unwrap();
+        debug_assert!(
+            slot.is_some(),
+            "end_round without a matching begin_round (no round meter open)"
+        );
         let now = self.totals();
+        let start = slot.take().unwrap_or(now);
         let delta = RoundBytes {
-            up: now.up - start.up,
-            down: now.down - start.down,
-            up_msgs: now.up_msgs - start.up_msgs,
-            down_msgs: now.down_msgs - start.down_msgs,
+            up: now.up.saturating_sub(start.up),
+            down: now.down.saturating_sub(start.down),
+            up_msgs: now.up_msgs.saturating_sub(start.up_msgs),
+            down_msgs: now.down_msgs.saturating_sub(start.down_msgs),
         };
         self.rounds.lock().unwrap().push(delta);
         delta
@@ -157,6 +177,31 @@ mod tests {
         assert_eq!(total.up_msgs, 3);
         assert_eq!(total.down_msgs, 1);
         assert_eq!(total.total(), 137);
+    }
+
+    /// Unpaired `end_round` is caught by the debug assertion; in release
+    /// it degrades to an empty delta instead of wrapping the unsigned
+    /// subtraction into ~u64::MAX bytes.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "end_round without"))]
+    fn unbalanced_end_round_saturates_instead_of_wrapping() {
+        let m = ByteMeter::new();
+        m.record(Direction::Uplink, 10);
+        let delta = m.end_round(); // no begin_round
+        assert_eq!(delta, RoundBytes::default());
+    }
+
+    /// Unpaired second `begin_round` is caught in debug; in release it
+    /// restarts the round window.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "begin_round without"))]
+    fn unbalanced_begin_round_restarts_the_window() {
+        let m = ByteMeter::new();
+        m.begin_round();
+        m.record(Direction::Uplink, 7);
+        m.begin_round();
+        m.record(Direction::Uplink, 3);
+        assert_eq!(m.end_round().up, 3, "second begin restarted the window");
     }
 
     #[test]

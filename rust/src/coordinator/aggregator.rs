@@ -22,9 +22,15 @@ impl WeightedAggregator {
         WeightedAggregator { acc: None, total_weight: 0.0 }
     }
 
-    /// Add one client's contribution with weight `p_i > 0`.
+    /// Add one client's contribution with weight `p_i >= 0`. A weight of
+    /// exactly zero (an empty-shard client) contributes nothing to the
+    /// mean but is tolerated; the zero-total-mass case is handled in
+    /// [`WeightedAggregator::finish`].
     pub fn add(&mut self, contribution: &TensorList, weight: f64) {
-        assert!(weight > 0.0, "non-positive aggregation weight");
+        assert!(
+            weight >= 0.0 && weight.is_finite(),
+            "negative or non-finite aggregation weight"
+        );
         match &mut self.acc {
             None => {
                 let mut first = contribution.clone();
@@ -56,9 +62,15 @@ impl WeightedAggregator {
         self.total_weight += other.total_weight;
     }
 
-    /// Normalized weighted mean; `None` if nothing was added.
+    /// Normalized weighted mean; `None` if nothing was added — or if the
+    /// accumulated weight mass is zero, where dividing would turn the
+    /// aggregate into NaN/Inf and poison the optimizer step (the round
+    /// engine treats that case as a degraded commit).
     pub fn finish(self) -> Option<TensorList> {
         let mut acc = self.acc?;
+        if self.total_weight <= 0.0 {
+            return None;
+        }
         acc.scale((1.0 / self.total_weight) as f32);
         Some(acc)
     }
@@ -88,9 +100,15 @@ impl SurvivorSet {
         Self::default()
     }
 
-    /// Record a surviving client with aggregation weight `p_i > 0`.
+    /// Record a surviving client with aggregation weight `p_i >= 0`.
+    /// Zero-weight survivors count toward `survived()` but carry no
+    /// aggregation mass; when *all* survivors have zero weight the round
+    /// engine commits degraded instead of renormalizing (NaN weights).
     pub fn survivor(&mut self, weight: f64) {
-        assert!(weight > 0.0, "non-positive survivor weight");
+        assert!(
+            weight >= 0.0 && weight.is_finite(),
+            "negative or non-finite survivor weight"
+        );
         self.weights.push(weight);
         self.sampled += 1;
     }
@@ -113,7 +131,8 @@ impl SurvivorSet {
     }
 
     /// Survivor weights renormalized over the surviving cohort; empty when
-    /// nobody survived.
+    /// nobody survived *or* the surviving weight mass is zero (no convex
+    /// combination exists to renormalize into).
     pub fn normalized(&self) -> Vec<f64> {
         let total = self.total_weight();
         if total <= 0.0 {
@@ -198,10 +217,39 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "non-positive")]
-    fn zero_weight_rejected() {
+    #[should_panic(expected = "negative")]
+    fn negative_weight_rejected() {
         let mut agg = WeightedAggregator::new();
-        agg.add(&tl(&[1.0]), 0.0);
+        agg.add(&tl(&[1.0]), -0.1);
+    }
+
+    #[test]
+    fn zero_total_weight_finishes_none() {
+        // a cohort of empty-shard clients must not renormalize into NaN
+        let mut agg = WeightedAggregator::new();
+        agg.add(&tl(&[1.0, 2.0]), 0.0);
+        agg.add(&tl(&[3.0, 4.0]), 0.0);
+        assert_eq!(agg.count_weight(), 0.0);
+        assert!(agg.finish().is_none(), "zero mass has no mean");
+    }
+
+    #[test]
+    fn zero_weight_contributions_are_ignored_in_the_mean() {
+        let mut agg = WeightedAggregator::new();
+        agg.add(&tl(&[100.0, 100.0]), 0.0);
+        agg.add(&tl(&[2.0, -4.0]), 0.5);
+        let out = agg.finish().unwrap();
+        assert_eq!(out.tensors[0].data(), &[2.0, -4.0]);
+    }
+
+    #[test]
+    fn survivor_set_zero_mass_normalizes_to_empty() {
+        let mut s = SurvivorSet::new();
+        s.survivor(0.0);
+        s.survivor(0.0);
+        assert_eq!(s.survived(), 2);
+        assert_eq!(s.total_weight(), 0.0);
+        assert!(s.normalized().is_empty(), "no convex combination exists");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Tick-based round phase driver shared by the trainers.
+//! The generic, algorithm-agnostic round engine shared by every trainer.
 //!
 //! Every federated round is an explicit state machine (in the style of the
 //! Psyche coordinator's `RunState`/`tick` loop):
@@ -10,17 +10,51 @@
 //!                 survivors, attempt += 1)
 //! ```
 //!
-//! The driver owns only the phase/attempt bookkeeping; the trainers own
-//! the per-phase work. `Aggregate` may rewind to `Sampling` when the
-//! surviving cohort is smaller than `min_survivors` — each rewind is a new
-//! *attempt* with fresh sampling and fault-schedule RNG keys. The attempt
-//! budget is bounded so a pathological fault config degrades (commit with
-//! whatever survived, possibly nobody, and no optimizer step) instead of
-//! livelocking.
+//! [`RoundEngine`] owns everything the algorithms share — cohort sampling,
+//! fault-plan drawing, the [`crate::util::pool::scoped_parallel_map`]
+//! fan-out, survivor/drop reduction in cohort-slot order, resample
+//! decisions, byte and simulated-time accumulation, degraded commits, and
+//! [`RoundRecord`] assembly — so that FedLite, SplitFed, and FedAvg run
+//! the *same* round protocol and only the payloads differ (the
+//! precondition for the paper's cross-algorithm communication comparison,
+//! Figs. 4–6). An algorithm plugs in through the small [`RoundAlgorithm`]
+//! trait: build the broadcast, run one client's step, fold a survivor's
+//! payload into the aggregate, and apply the committed optimizer step.
 //!
-//! All RNG keys are pure functions of `(round, attempt, client)` — never
-//! of wall-clock or thread identity — so the engine stays bit-identical at
-//! any `--workers` count (see `rust/tests/determinism.rs`).
+//! Engine invariants, enforced here for every algorithm:
+//!
+//! * **Determinism** — all RNG keys are pure functions of
+//!   `(round, attempt, client)` — never wall-clock or thread identity —
+//!   and every reduction runs in cohort-slot order, so round records are
+//!   bit-identical at any `--workers` count (`rust/tests/determinism.rs`).
+//! * **Metered exits** — `net.begin_round()`/`end_round()` bracket the
+//!   round on *every* exit path, including a client step failing with an
+//!   error mid-attempt. (Before the engine existed, each trainer's `?` on
+//!   a failed client skipped `end_round`, bleeding the aborted round's
+//!   bytes into the next round's meter delta and desyncing the per-round
+//!   archive from the `RoundRecord`s.)
+//! * **Degraded commits** — when nobody survived, *or* when the survivors'
+//!   total aggregation weight is zero (e.g. a cohort of empty-shard
+//!   clients, which would otherwise renormalize into NaN weights), the
+//!   round commits without an optimizer step.
+//! * **Bounded resampling** — `Aggregate` may rewind to `Sampling` when
+//!   the surviving cohort is smaller than `min_survivors`; the attempt
+//!   budget is bounded so a pathological fault config degrades instead of
+//!   livelocking.
+
+use std::time::Instant;
+
+use crate::comm::accounting::RoundBytes;
+use crate::comm::message::Message;
+use crate::comm::StarNetwork;
+use crate::config::RunConfig;
+use crate::coordinator::aggregator::{ScalarAggregator, SurvivorSet};
+use crate::coordinator::faults::{DropCounts, DropPhase, FaultConfig, FaultPlan};
+use crate::coordinator::sampler::ClientSampler;
+use crate::metrics::{RoundRecord, RunLog, TaskMetric};
+use crate::util::logging::{CsvWriter, JsonlWriter};
+use crate::util::pool::scoped_parallel_map;
+use crate::util::rng::Rng;
 
 /// The phases of one federated round.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -121,9 +155,466 @@ pub fn client_stream_key(tag: u64, round: u64, client: usize, attempt: u32) -> u
     ((round << 20) ^ (client as u64) ^ tag) ^ (((attempt as u64) - 1) << 52)
 }
 
+/// The algorithm-independent slice of one client's round contribution:
+/// produced on a worker thread by [`RoundAlgorithm::client_step`], reduced
+/// on the coordinator thread in cohort-slot order by the engine.
+pub struct ClientOutput<P> {
+    /// Aggregation weight p_i (dataset share).
+    pub weight: f64,
+    pub loss: f64,
+    /// Raw metric sums in manifest order. Surviving clients must supply
+    /// exactly [`RoundEnv::nmetrics`] entries (debug-asserted in the
+    /// Aggregate reduction); dropped clients leave this empty.
+    pub metric_sums: Vec<f64>,
+    /// Relative quantization error (0 when not quantizing).
+    pub quant_rel_err: f64,
+    /// The algorithm-specific survivor payload (gradients, model delta,
+    /// …); `None` for dropped and evicted clients, which are excluded
+    /// from every aggregate.
+    pub payload: Option<P>,
+    /// This client's metered transfers (merged after the barrier). Bytes
+    /// sent before a mid-round failure are included — they crossed the
+    /// wire.
+    pub bytes: RoundBytes,
+    /// Where the client's contribution was lost, if anywhere.
+    pub dropped: Option<DropPhase>,
+    /// Simulated straggler compute delay (feeds the round-time estimate).
+    pub delay_seconds: f64,
+}
+
+impl<P> ClientOutput<P> {
+    /// A failed client's partial contribution: the bytes it sent, nothing
+    /// else.
+    pub fn failed(
+        phase: DropPhase,
+        weight: f64,
+        bytes: RoundBytes,
+        delay_seconds: f64,
+    ) -> ClientOutput<P> {
+        ClientOutput {
+            weight,
+            loss: 0.0,
+            metric_sums: Vec::new(),
+            quant_rel_err: 0.0,
+            payload: None,
+            bytes,
+            dropped: Some(phase),
+            delay_seconds,
+        }
+    }
+}
+
+/// Borrowed view of the round infrastructure an algorithm shares with the
+/// engine. Everything the phase loop needs that is not algorithm-specific
+/// comes through here, so the engine (and its tests) never depend on a
+/// concrete trainer.
+pub struct RoundEnv<'a> {
+    pub net: &'a StarNetwork,
+    pub sampler: &'a ClientSampler,
+    pub faults: &'a FaultConfig,
+    /// Root RNG; the engine only ever forks it (forking never advances
+    /// the parent stream).
+    pub rng: &'a Rng,
+    pub metric: TaskMetric,
+    /// Examples contributed per surviving client (the task batch size).
+    pub batch_examples: f64,
+    /// Number of raw metric sums each surviving client reports.
+    pub nmetrics: usize,
+    /// Cohort fan-out width (resolved `--workers`).
+    pub workers: usize,
+    /// Total rounds in the run (drives [`RoundEngine::run`]).
+    pub rounds: usize,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    /// Sampling-attempt budget per round (trainers pass
+    /// [`MAX_SAMPLING_ATTEMPTS`]; tests may shrink it).
+    pub max_attempts: u32,
+}
+
+/// What an algorithm plugs into the engine: the payload-specific hooks of
+/// the round protocol. Everything else — sampling, fault plans, fan-out,
+/// reduction order, byte/time accounting, resampling, degraded commits,
+/// record assembly — is the engine's, identical for every algorithm.
+///
+/// `Sync` is required because `client_step` runs concurrently on the
+/// cohort workers against `&self`.
+pub trait RoundAlgorithm: Sync {
+    /// Per-round precomputed state (artifact metas, broadcast inputs);
+    /// built once per round, shared read-only by the cohort workers, and
+    /// handed back to [`RoundAlgorithm::commit`].
+    type Prep: Sync;
+    /// Algorithm-specific survivor payload carried by [`ClientOutput`].
+    type Payload: Send;
+    /// Survivor accumulator, reset at the start of every attempt.
+    type Accum;
+
+    /// RNG stream tag distinguishing this algorithm's client work streams
+    /// (see [`client_stream_key`]).
+    fn stream_tag(&self) -> u64;
+
+    /// The engine's borrowed view of the shared round infrastructure.
+    fn env(&self) -> RoundEnv<'_>;
+
+    /// Fetch per-round state (artifact metas, parameter snapshots). Runs
+    /// before the round's byte meter opens — no network traffic here.
+    fn prepare(&self, round: usize) -> anyhow::Result<Self::Prep>;
+
+    /// Build the round's model broadcast. Called at most once per round:
+    /// parameters can't change between attempts (aborts never touch the
+    /// optimizers), so the payload is re-sent on resampled attempts.
+    fn build_broadcast(&self, prep: &Self::Prep) -> Message;
+
+    /// One client's full round pipeline, run on a worker thread. `plan`
+    /// injects the client's scheduled faults; bytes sent before a failure
+    /// must be returned in `ClientOutput::bytes` (they crossed the wire).
+    fn client_step(
+        &self,
+        prep: &Self::Prep,
+        broadcast: &Message,
+        round: u32,
+        client: usize,
+        rng: &mut Rng,
+        plan: &FaultPlan,
+    ) -> anyhow::Result<ClientOutput<Self::Payload>>;
+
+    /// Fresh survivor accumulator for one attempt.
+    fn new_accum(&self) -> Self::Accum;
+
+    /// Fold one survivor's payload into the attempt's accumulator. Called
+    /// in cohort-slot order with the client's aggregation weight.
+    fn accumulate(&self, acc: &mut Self::Accum, payload: Self::Payload, weight: f64);
+
+    /// Apply the committed round: step the optimizers on the survivor
+    /// aggregate. `survivors` is `None` for a degraded commit (nobody
+    /// survived, or the surviving weight mass is zero) — parameters must
+    /// not move.
+    fn commit(
+        &mut self,
+        prep: Self::Prep,
+        survivors: Option<Self::Accum>,
+        round: usize,
+    ) -> anyhow::Result<()>;
+
+    /// Evaluate the current model on held-out batches (loss, metric).
+    fn evaluate(&mut self, batches: usize) -> anyhow::Result<(f64, f64)>;
+
+    /// The run's CSV/JSONL writers (either may be absent).
+    fn writers(&mut self) -> (&mut Option<CsvWriter>, &mut Option<JsonlWriter>);
+
+    /// Emit the periodic progress log line for a committed record.
+    fn log_round(&self, rec: &RoundRecord);
+}
+
+/// Everything one round produced before the commit: the survivor
+/// aggregates plus the engine-side bookkeeping that becomes the record.
+struct RoundOutcome<Acc> {
+    accum: Acc,
+    loss_agg: ScalarAggregator,
+    qerr_agg: ScalarAggregator,
+    metric_sums: Vec<f64>,
+    examples: f64,
+    survivors: SurvivorSet,
+    drops: DropCounts,
+    /// Byte totals merged from the per-client partials, accumulated
+    /// across *attempts* (aborted attempts really used the wire).
+    bytes: RoundBytes,
+    sim_seconds: f64,
+    cohort_sampled: usize,
+    attempts: u32,
+}
+
+/// The generic round engine: drives [`RoundAlgorithm`] hooks through the
+/// tick-based phase machine. See the module docs for the invariants.
+pub struct RoundEngine<'a, A: RoundAlgorithm> {
+    algo: &'a mut A,
+}
+
+impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
+    pub fn new(algo: &'a mut A) -> Self {
+        RoundEngine { algo }
+    }
+
+    /// Run the configured number of rounds — the trainers' `run` entry
+    /// point (logging, CSV/JSONL writing, and flushing included).
+    pub fn run(&mut self) -> anyhow::Result<RunLog> {
+        let rounds = self.algo.env().rounds;
+        let mut log = RunLog::default();
+        for round in 0..rounds {
+            let rec = self.round(round)?;
+            if round == 0 || (round + 1) % 10 == 0 {
+                self.algo.log_round(&rec);
+            }
+            let (csv, jsonl) = self.algo.writers();
+            write_round(csv, jsonl, &rec)?;
+            log.push(rec);
+        }
+        let (csv, jsonl) = self.algo.writers();
+        if let Some(c) = csv {
+            c.flush()?;
+        }
+        if let Some(j) = jsonl {
+            j.flush()?;
+        }
+        Ok(log)
+    }
+
+    /// One full round through the phase machine; returns the committed
+    /// round record.
+    pub fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
+        let t0 = Instant::now();
+        let prep = self.algo.prepare(round)?;
+        self.algo.env().net.begin_round();
+        let outcome = drive(&*self.algo, &prep, round);
+        // close the round meter on *every* exit path: an error
+        // mid-attempt must still archive this round's delta, or its bytes
+        // bleed into the next round's delta and the per-round archive
+        // desyncs from the records
+        let meter_delta = self.algo.env().net.end_round();
+        let outcome = outcome?;
+        debug_assert_eq!(meter_delta, outcome.bytes, "meter vs merged partials");
+
+        // degraded commit (no optimizer step) when nobody survived — or
+        // when the survivors' total weight is zero, which would otherwise
+        // renormalize into NaN aggregation weights
+        let survived = outcome.survivors.survived();
+        let committed = if survived > 0 && outcome.survivors.total_weight() > 0.0 {
+            Some(outcome.accum)
+        } else {
+            None
+        };
+        self.algo.commit(prep, committed, round)?;
+
+        let metric = self.algo.env().metric;
+        let mut rec = RoundRecord {
+            round,
+            train_loss: outcome.loss_agg.mean(),
+            train_metric: metric.value(&outcome.metric_sums, outcome.examples),
+            quant_error: outcome.qerr_agg.mean(),
+            uplink_bytes: outcome.bytes.up,
+            downlink_bytes: outcome.bytes.down,
+            cumulative_uplink: self.algo.env().net.totals().up,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            sim_comm_seconds: outcome.sim_seconds,
+            cohort_sampled: outcome.cohort_sampled,
+            cohort_survived: survived,
+            dropped: outcome.drops,
+            attempts: outcome.attempts,
+            ..Default::default()
+        };
+        let (eval_every, eval_batches) = {
+            let env = self.algo.env();
+            (env.eval_every, env.eval_batches)
+        };
+        if eval_every > 0 && (round % eval_every == eval_every - 1 || round == 0) {
+            let (el, em) = self.algo.evaluate(eval_batches)?;
+            rec.eval_loss = Some(el);
+            rec.eval_metric = Some(em);
+        }
+        Ok(rec)
+    }
+}
+
+/// The attempt loop: Sampling → Broadcast → ClientCompute → Aggregate,
+/// rewinding on resample, until the phase machine reaches `Commit`. Pure
+/// with respect to the algorithm (`&A`): optimizer movement happens in
+/// [`RoundAlgorithm::commit`], outside.
+fn drive<A: RoundAlgorithm>(
+    algo: &A,
+    prep: &A::Prep,
+    round: usize,
+) -> anyhow::Result<RoundOutcome<A::Accum>> {
+    let env = algo.env();
+    let mut driver = RoundDriver::with_max_attempts(env.max_attempts);
+    // carried across phases within one attempt
+    let mut cohort: Vec<usize> = Vec::new();
+    let mut plans: Vec<FaultPlan> = Vec::new();
+    let mut broadcast: Option<Message> = None;
+    let mut results: Vec<anyhow::Result<ClientOutput<A::Payload>>> = Vec::new();
+    // carried across *attempts*: aborted attempts really used the wire
+    // and the simulated clock, so bytes/time accumulate
+    let mut bytes = RoundBytes::default();
+    let mut sim_seconds = 0.0f64;
+    // survivor aggregates of the attempt that commits
+    let mut accum = algo.new_accum();
+    let mut loss_agg = ScalarAggregator::new();
+    let mut qerr_agg = ScalarAggregator::new();
+    let mut metric_sums = vec![0.0f64; env.nmetrics];
+    let mut examples = 0.0f64;
+    let mut survivors = SurvivorSet::new();
+    let mut drops = DropCounts::default();
+
+    loop {
+        match driver.phase() {
+            RoundPhase::Sampling => {
+                let attempt = driver.attempt();
+                cohort = env.sampler.sample(
+                    &mut env.rng.fork(sample_key(round as u64, attempt)),
+                    &[],
+                );
+                plans = env.faults.plans(env.rng, round as u64, attempt, &cohort);
+                driver.advance();
+            }
+            RoundPhase::Broadcast => {
+                // parameters can't change between attempts (aborts never
+                // touch the optimizers), so the payload is built once and
+                // re-sent on resampled attempts
+                if broadcast.is_none() {
+                    broadcast = Some(algo.build_broadcast(prep));
+                }
+                driver.advance();
+            }
+            RoundPhase::ClientCompute => {
+                // Per-client RNG streams use pure (round, attempt, client)
+                // fork keys; `fork` never advances the root stream, so the
+                // fan-out is behavior-preserving at any worker count.
+                let attempt = driver.attempt();
+                let tasks: Vec<(usize, Rng, FaultPlan)> = cohort
+                    .iter()
+                    .zip(&plans)
+                    .map(|(&ci, &plan)| {
+                        let key =
+                            client_stream_key(algo.stream_tag(), round as u64, ci, attempt);
+                        (ci, env.rng.fork(key), plan)
+                    })
+                    .collect();
+                let msg = broadcast.as_ref().expect("broadcast built");
+                // fan the cohort across the worker threads; collection is
+                // the round barrier
+                results = scoped_parallel_map(
+                    env.workers,
+                    tasks,
+                    |_slot, (ci, mut crng, plan)| {
+                        algo.client_step(prep, msg, round as u32, ci, &mut crng, &plan)
+                    },
+                );
+                driver.advance();
+            }
+            RoundPhase::Aggregate => {
+                // reduce the partials in cohort-slot order: every
+                // accumulation below happens in the same order the serial
+                // loop used, so the records are bit-identical at any
+                // worker count
+                accum = algo.new_accum();
+                loss_agg = ScalarAggregator::new();
+                qerr_agg = ScalarAggregator::new();
+                metric_sums = vec![0.0f64; env.nmetrics];
+                examples = 0.0;
+                survivors = SurvivorSet::new();
+                drops = DropCounts::default();
+                let mut per_client: Vec<(usize, usize, f64)> =
+                    Vec::with_capacity(cohort.len());
+                for result in std::mem::take(&mut results) {
+                    let out = result?;
+                    per_client.push((
+                        out.bytes.up as usize,
+                        out.bytes.down as usize,
+                        out.delay_seconds,
+                    ));
+                    bytes.merge(&out.bytes);
+                    match out.dropped {
+                        Some(phase) => {
+                            drops.add(phase);
+                            survivors.dropped();
+                        }
+                        None => {
+                            debug_assert_eq!(
+                                out.metric_sums.len(),
+                                env.nmetrics,
+                                "RoundAlgorithm contract: a surviving client's \
+                                 metric_sums must have exactly env().nmetrics entries"
+                            );
+                            survivors.survivor(out.weight);
+                            loss_agg.add(out.loss, out.weight);
+                            for (k, s) in metric_sums.iter_mut().enumerate() {
+                                *s += out.metric_sums[k];
+                            }
+                            examples += env.batch_examples;
+                            let payload =
+                                out.payload.expect("surviving client carries a payload");
+                            algo.accumulate(&mut accum, payload, out.weight);
+                            qerr_agg.add(out.quant_rel_err, 1.0);
+                        }
+                    }
+                }
+                sim_seconds += env
+                    .net
+                    .estimate_round_time_with_delays(&per_client, env.faults.round_deadline);
+                // survivor weights renormalize to a convex combination
+                // (except the zero-mass degenerate case, which commits
+                // degraded instead of dividing by zero)
+                debug_assert!(
+                    survivors.survived() == 0
+                        || survivors.total_weight() <= 0.0
+                        || (survivors.normalized().iter().sum::<f64>() - 1.0).abs() < 1e-9,
+                    "survivor weights must renormalize to 1"
+                );
+                if env.faults.min_survivors > 0
+                    && survivors.survived() < env.faults.min_survivors
+                    && driver.resample()
+                {
+                    // too few survivors: abort the attempt (its bytes stay
+                    // metered) and resample a fresh cohort without
+                    // touching the optimizers
+                    continue;
+                }
+                driver.advance();
+            }
+            RoundPhase::Commit => break,
+        }
+    }
+
+    Ok(RoundOutcome {
+        accum,
+        loss_agg,
+        qerr_agg,
+        metric_sums,
+        examples,
+        survivors,
+        drops,
+        bytes,
+        sim_seconds,
+        cohort_sampled: cohort.len(),
+        attempts: driver.attempt(),
+    })
+}
+
+/// Open the run's CSV + JSONL writers under `cfg.out_dir` (none when the
+/// out dir is empty). The column schema is
+/// [`RoundRecord::CSV_COLUMNS`] — one source of truth shared with the CI
+/// schema diff.
+pub(crate) fn open_logs(
+    cfg: &RunConfig,
+) -> anyhow::Result<(Option<CsvWriter>, Option<JsonlWriter>)> {
+    if cfg.out_dir.is_empty() {
+        return Ok((None, None));
+    }
+    let base = format!(
+        "{}/{}_{}_{}", cfg.out_dir, cfg.task, cfg.algorithm.name(), cfg.seed
+    );
+    let csv = CsvWriter::create(format!("{base}.csv"), &RoundRecord::CSV_COLUMNS)?;
+    let jsonl = JsonlWriter::create(format!("{base}.jsonl"))?;
+    Ok((Some(csv), Some(jsonl)))
+}
+
+/// Append one committed record to the run's writers.
+pub(crate) fn write_round(
+    csv: &mut Option<CsvWriter>,
+    jsonl: &mut Option<JsonlWriter>,
+    rec: &RoundRecord,
+) -> anyhow::Result<()> {
+    if let Some(c) = csv {
+        c.row(&rec.csv_row())?;
+    }
+    if let Some(j) = jsonl {
+        j.record(&rec.to_json())?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::accounting::RoundBytes;
 
     #[test]
     fn phases_advance_in_order() {
@@ -184,5 +675,242 @@ mod tests {
             client_stream_key(0xC11E, 3, 5, 1),
             client_stream_key(0xC11E, 3, 5, 2)
         );
+    }
+
+    // -- engine semantics, driven through a mock algorithm -------------------
+
+    const COHORT: usize = 4;
+
+    fn clean_faults() -> FaultConfig {
+        FaultConfig {
+            drop_prob: 0.0,
+            straggler_frac: 0.0,
+            round_deadline: 0.0,
+            min_survivors: 0,
+        }
+    }
+
+    /// Minimal algorithm: every client downloads the broadcast (metered),
+    /// then survives/drops per its fault plan. Lets the tests observe
+    /// commit decisions and meter behavior without a full trainer.
+    struct MockAlgo {
+        net: StarNetwork,
+        sampler: ClientSampler,
+        faults: FaultConfig,
+        rng: Rng,
+        max_attempts: u32,
+        /// Client index whose step fails with an error (the error path).
+        fail_client: Option<usize>,
+        /// Aggregation weight every survivor carries.
+        weight: f64,
+        /// One entry per committed round: did commit get an aggregate?
+        committed: Vec<bool>,
+        csv: Option<CsvWriter>,
+        jsonl: Option<JsonlWriter>,
+    }
+
+    impl MockAlgo {
+        fn new(faults: FaultConfig, max_attempts: u32) -> MockAlgo {
+            MockAlgo {
+                net: StarNetwork::with_defaults(COHORT),
+                sampler: ClientSampler::uniform(COHORT, COHORT),
+                faults,
+                rng: Rng::new(0x7E57),
+                max_attempts,
+                fail_client: None,
+                weight: 1.0,
+                committed: Vec::new(),
+                csv: None,
+                jsonl: None,
+            }
+        }
+
+        fn broadcast_wire_len() -> u64 {
+            Message::ModelBroadcast { params: vec![vec![0.0f32; 4]] }.wire_len() as u64
+        }
+    }
+
+    impl RoundAlgorithm for MockAlgo {
+        type Prep = ();
+        type Payload = ();
+        type Accum = usize;
+
+        fn stream_tag(&self) -> u64 {
+            0x7E57
+        }
+
+        fn env(&self) -> RoundEnv<'_> {
+            RoundEnv {
+                net: &self.net,
+                sampler: &self.sampler,
+                faults: &self.faults,
+                rng: &self.rng,
+                metric: TaskMetric::Accuracy,
+                batch_examples: 1.0,
+                nmetrics: 0,
+                workers: 1,
+                rounds: 1,
+                eval_every: 0,
+                eval_batches: 0,
+                max_attempts: self.max_attempts,
+            }
+        }
+
+        fn prepare(&self, _round: usize) -> anyhow::Result<()> {
+            Ok(())
+        }
+
+        fn build_broadcast(&self, _prep: &()) -> Message {
+            Message::ModelBroadcast { params: vec![vec![0.0f32; 4]] }
+        }
+
+        fn client_step(
+            &self,
+            _prep: &(),
+            broadcast: &Message,
+            round: u32,
+            client: usize,
+            _rng: &mut Rng,
+            plan: &FaultPlan,
+        ) -> anyhow::Result<ClientOutput<()>> {
+            let (_, n) = self.net.download(client, round, broadcast)?;
+            let bytes = RoundBytes::client(0, n, 0, 1);
+            if self.fail_client == Some(client) {
+                anyhow::bail!("injected client failure");
+            }
+            if let Some(phase) = plan.dropped() {
+                return Ok(ClientOutput::failed(
+                    phase,
+                    self.weight,
+                    bytes,
+                    plan.delay_seconds,
+                ));
+            }
+            Ok(ClientOutput {
+                weight: self.weight,
+                loss: 1.0,
+                metric_sums: Vec::new(),
+                quant_rel_err: 0.0,
+                payload: Some(()),
+                bytes,
+                dropped: None,
+                delay_seconds: plan.delay_seconds,
+            })
+        }
+
+        fn new_accum(&self) -> usize {
+            0
+        }
+
+        fn accumulate(&self, acc: &mut usize, _payload: (), _weight: f64) {
+            *acc += 1;
+        }
+
+        fn commit(
+            &mut self,
+            _prep: (),
+            survivors: Option<usize>,
+            _round: usize,
+        ) -> anyhow::Result<()> {
+            self.committed.push(survivors.is_some());
+            Ok(())
+        }
+
+        fn evaluate(&mut self, _batches: usize) -> anyhow::Result<(f64, f64)> {
+            Ok((0.0, 0.0))
+        }
+
+        fn writers(&mut self) -> (&mut Option<CsvWriter>, &mut Option<JsonlWriter>) {
+            (&mut self.csv, &mut self.jsonl)
+        }
+
+        fn log_round(&self, _rec: &RoundRecord) {}
+    }
+
+    /// The error-path byte-accounting bugfix: a client step failing with
+    /// an error must still close the round meter, so the aborted round's
+    /// delta is archived and the next round's delta carries only its own
+    /// bytes.
+    #[test]
+    fn error_mid_round_closes_the_byte_meter() {
+        let mut m = MockAlgo::new(clean_faults(), MAX_SAMPLING_ATTEMPTS);
+        m.fail_client = Some(1);
+        assert!(RoundEngine::new(&mut m).round(0).is_err());
+        assert!(m.committed.is_empty(), "a failed round must not commit");
+        assert_eq!(
+            m.net.meter.per_round().len(),
+            1,
+            "the aborted round's delta must be archived"
+        );
+
+        m.fail_client = None;
+        let rec = RoundEngine::new(&mut m).round(1).unwrap();
+        let per_round = m.net.meter.per_round();
+        assert_eq!(per_round.len(), 2);
+        let one_round = COHORT as u64 * MockAlgo::broadcast_wire_len();
+        // without the fix, round 1's delta would also contain round 0's
+        // leaked bytes (2x the cohort broadcast)
+        assert_eq!(per_round[0].down, one_round);
+        assert_eq!(per_round[1].down, one_round);
+        assert_eq!(rec.downlink_bytes, one_round);
+        assert_eq!(m.committed, vec![true]);
+    }
+
+    /// A cohort whose survivors all carry weight zero must commit degraded
+    /// (no optimizer step) instead of renormalizing into NaN weights.
+    #[test]
+    fn zero_total_weight_commits_degraded() {
+        let mut m = MockAlgo::new(clean_faults(), MAX_SAMPLING_ATTEMPTS);
+        m.weight = 0.0;
+        let rec = RoundEngine::new(&mut m).round(0).unwrap();
+        assert_eq!(rec.cohort_survived, COHORT);
+        assert_eq!(rec.attempts, 1);
+        assert_eq!(
+            m.committed,
+            vec![false],
+            "zero-weight survivors must not step the optimizer"
+        );
+        assert_eq!(rec.train_loss, 0.0, "zero weight mass yields no loss signal");
+    }
+
+    /// `max_attempts = 1`: the resample path is disabled — one failed
+    /// floor check commits degraded immediately.
+    #[test]
+    fn max_attempts_one_commits_degraded_without_resampling() {
+        let faults = FaultConfig {
+            drop_prob: 1.0,
+            straggler_frac: 0.0,
+            round_deadline: 0.0,
+            min_survivors: 1,
+        };
+        let mut m = MockAlgo::new(faults, 1);
+        let rec = RoundEngine::new(&mut m).round(0).unwrap();
+        assert_eq!(rec.attempts, 1, "no resampling budget");
+        assert_eq!(rec.cohort_survived, 0);
+        assert_eq!(rec.dropped.total(), COHORT);
+        assert_eq!(m.committed, vec![false]);
+    }
+
+    /// A survivor floor above the cohort size can never be met: the round
+    /// exhausts its attempt budget, then commits with whoever survived
+    /// (the optimizer still steps — survivors exist).
+    #[test]
+    fn floor_above_cohort_exhausts_budget_then_commits_survivors() {
+        let faults = FaultConfig {
+            drop_prob: 0.0,
+            straggler_frac: 0.0,
+            round_deadline: 0.0,
+            min_survivors: COHORT + 1,
+        };
+        let mut m = MockAlgo::new(faults, 4);
+        let rec = RoundEngine::new(&mut m).round(0).unwrap();
+        assert_eq!(rec.attempts, 4, "budget fully spent on an unreachable floor");
+        assert_eq!(rec.cohort_survived, COHORT);
+        assert_eq!(m.committed, vec![true], "whoever survived still commits");
+        // every aborted attempt broadcast to its whole cohort: bytes from
+        // all 4 attempts are metered and merged into the one record
+        let expect = 4 * COHORT as u64 * MockAlgo::broadcast_wire_len();
+        assert_eq!(rec.downlink_bytes, expect);
+        assert_eq!(m.net.meter.per_round()[0].down, expect);
     }
 }

@@ -146,6 +146,24 @@ impl FaultConfig {
         }
         plan
     }
+
+    /// Deterministic failure schedules for a whole cohort in one
+    /// `(round, attempt)`, drawn in cohort-slot order. This is the round
+    /// engine's Sampling-phase entry point; per-client draws stay pure
+    /// functions of `(round, attempt, client)`, so the slot order here is
+    /// bookkeeping only.
+    pub fn plans(
+        &self,
+        root: &Rng,
+        round: u64,
+        attempt: u32,
+        cohort: &[usize],
+    ) -> Vec<FaultPlan> {
+        cohort
+            .iter()
+            .map(|&ci| self.plan(root, round, attempt, ci))
+            .collect()
+    }
 }
 
 /// Fork key for a client's fault schedule. Distinct tag from the client
@@ -283,6 +301,18 @@ mod tests {
         assert!(counts.before_grad_upload > 0);
         assert_eq!(counts.deadline, 0);
         assert_eq!(counts.total(), 300);
+    }
+
+    #[test]
+    fn cohort_plans_match_per_client_draws() {
+        let fc = faulty();
+        let root = Rng::new(11);
+        let cohort = [3usize, 9, 0, 7];
+        let batch = fc.plans(&root, 2, 1, &cohort);
+        assert_eq!(batch.len(), cohort.len());
+        for (slot, &ci) in cohort.iter().enumerate() {
+            assert_eq!(batch[slot], fc.plan(&root, 2, 1, ci), "slot {slot}");
+        }
     }
 
     #[test]

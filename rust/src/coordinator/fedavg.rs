@@ -1,4 +1,4 @@
-//! FedAvg baseline (McMahan et al., 2017) over the same substrate.
+//! FedAvg baseline (McMahan et al., 2017) on the generic engine.
 //!
 //! Each selected client receives the whole model (downlink |w|), runs `H`
 //! local SGD steps using the `full_grad` artifact, and uploads its model
@@ -6,31 +6,31 @@
 //! the comparison line of Table 1 and Figure 6: more client compute and
 //! memory, |w| per round instead of activations.
 //!
-//! Like the split trainer, each round runs the tick-based phase machine
-//! of [`crate::coordinator::engine`] (Sampling → Broadcast →
-//! ClientCompute → Aggregate → Commit) with deterministic fault injection
-//! from [`crate::coordinator::faults`]: the per-client work (broadcast →
-//! H local steps → delta upload) is a self-contained unit fanned across
-//! `cfg.workers` threads, with partials reduced at the barrier in
-//! cohort-slot order — bit-identical at any worker count. FedAvg has no
+//! The round protocol itself — sampling, fault plans, fan-out, slot-order
+//! reduction, byte accounting, resampling, degraded commits — is
+//! [`crate::coordinator::engine::RoundEngine`]'s, shared verbatim with the
+//! split trainer, so the cross-algorithm communication comparison is
+//! apples-to-apples; this module only supplies the FedAvg payload hooks
+//! ([`crate::coordinator::engine::RoundAlgorithm`]). FedAvg has no
 //! activation upload, so every mid-round drop phase collapses to "died
 //! before the delta upload" ([`DropPhase::BeforeGradUpload`]): the
 //! broadcast downlink is metered, nothing comes back. Deadline-evicted
 //! stragglers upload their delta (metered) but the aggregate ignores it.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
 use crate::config::RunConfig;
-use crate::coordinator::aggregator::{ScalarAggregator, SurvivorSet, WeightedAggregator};
+use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
-use crate::coordinator::engine::{client_stream_key, sample_key, RoundDriver, RoundPhase};
-use crate::coordinator::faults::{DropCounts, DropPhase, FaultConfig, FaultPlan};
+use crate::coordinator::engine::{
+    open_logs, ClientOutput, RoundAlgorithm, RoundEngine, RoundEnv, MAX_SAMPLING_ATTEMPTS,
+};
+use crate::coordinator::faults::{DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::sampler::ClientSampler;
-use crate::coordinator::split::{arrays_to_tensors, open_logs, scalar, write_round};
+use crate::coordinator::split::{arrays_to_tensors, scalar};
 use crate::coordinator::Trainer;
 use crate::data::FederatedDataset;
 use crate::metrics::{RoundRecord, RunLog, TaskMetric};
@@ -39,7 +39,6 @@ use crate::optim::Optimizer;
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::TensorList;
 use crate::util::logging::{CsvWriter, JsonlWriter};
-use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
 pub struct FedAvgTrainer {
@@ -61,148 +60,13 @@ pub struct FedAvgTrainer {
     jsonl: Option<JsonlWriter>,
 }
 
-/// One FedAvg client's round contribution (worker-thread product).
-struct FedAvgClientOutput {
-    weight: f64,
-    loss: f64,
-    metric_sums: Vec<f64>,
-    /// Wire-decoded model delta (global − local after H steps).
-    delta: TensorList,
-    bytes: RoundBytes,
-    /// Where the contribution was lost, if anywhere (see module docs).
-    dropped: Option<DropPhase>,
-    /// Simulated straggler compute delay.
-    delay_seconds: f64,
-}
-
-/// Immutable round state shared by the cohort workers.
-struct FedAvgStepCtx<'a> {
-    rt: &'a Runtime,
-    data: &'a dyn FederatedDataset,
-    net: &'a StarNetwork,
-    spec: &'a ModelSpec,
-    variant: &'a str,
-    grad_meta: &'a ArtifactMeta,
-    global: &'a TensorList,
-    /// The round's whole-model broadcast, built once and shared.
-    broadcast: &'a Message,
-    shapes: &'a [Vec<usize>],
-    wc_names: &'a [String],
-    ws_names: &'a [String],
-    /// Number of client-side tensors (split point in `global`).
-    nc: usize,
-    local_steps: usize,
-    client_lr: f32,
-    dropout_client: f64,
-    dropout_server: f64,
-    round: u32,
-}
-
-fn fedavg_client_step(
-    ctx: &FedAvgStepCtx<'_>,
-    ci: usize,
-    crng: &mut Rng,
-    plan: &FaultPlan,
-) -> anyhow::Result<FedAvgClientOutput> {
-    let nmetrics = ctx.spec.metrics.len();
-    let mut up = 0usize;
-    let mut down = 0usize;
-    let weight = ctx.data.client_weight(ci).max(1e-12);
-
-    // broadcast whole model (downlink |w|)
-    let (decoded, n) = ctx.net.download(ci, ctx.round, ctx.broadcast)?;
-    down += n;
-    if plan.drop_at.is_some() {
-        // FedAvg's only uplink is the delta, so every mid-round drop
-        // collapses to "died before the delta upload": the broadcast is
-        // metered, nothing comes back
-        return Ok(FedAvgClientOutput {
-            weight,
-            loss: 0.0,
-            metric_sums: Vec::new(),
-            delta: TensorList::new(Vec::new(), Vec::new()),
-            bytes: RoundBytes::client(0, down, 0, 1),
-            dropped: Some(DropPhase::BeforeGradUpload),
-            delay_seconds: plan.delay_seconds,
-        });
-    }
-    let mut local = match decoded {
-        Message::ModelBroadcast { params } => {
-            message::payload_to_tensors(&params, ctx.shapes, &ctx.global.names)
-        }
-        _ => anyhow::bail!("wrong broadcast"),
-    };
-
-    // H local SGD steps
-    let mut loss = 0.0f64;
-    let mut metric_sums = vec![0.0f64; nmetrics];
-    for step in 0..ctx.local_steps {
-        let batch = ctx.data.train_batch(ci, ctx.spec.batch, crng);
-        let masks = draw_masks(
-            &[ctx.grad_meta],
-            ctx.dropout_client,
-            ctx.dropout_server,
-            crng,
-        );
-        let (lc, ls) = local.tensors.split_at(ctx.nc);
-        let lwc = TensorList::new(ctx.wc_names.to_vec(), lc.to_vec());
-        let lws = TensorList::new(ctx.ws_names.to_vec(), ls.to_vec());
-        let src = InputSources {
-            wc: Some(&lwc),
-            ws: Some(&lws),
-            batch: Some(&batch),
-            masks: Some(&masks),
-            ..Default::default()
-        };
-        let outs = ctx
-            .rt
-            .run(ctx.variant, "full_grad", &assemble(ctx.grad_meta, &src)?)?;
-        if step == 0 {
-            loss = scalar(&outs[0])? as f64;
-            for (k, s) in metric_sums.iter_mut().enumerate() {
-                *s = scalar(&outs[1 + k])? as f64;
-            }
-        }
-        let grads = arrays_to_tensors(&outs[1 + nmetrics..], ctx.global)?;
-        local.axpy(-ctx.client_lr, &grads);
-    }
-
-    // upload model delta (uplink |w|)
-    let mut delta = ctx.global.clone();
-    delta.axpy(-1.0, &local); // delta = global - local = lr * sum grads
-    let up_msg = Message::ClientGrads { grads: message::tensors_to_payload(&delta) };
-    let (decoded, n) = ctx.net.upload(ci, ctx.round, &up_msg)?;
-    up += n;
-    let delta_wire = match decoded {
-        Message::ClientGrads { grads } => {
-            message::payload_to_tensors(&grads, ctx.shapes, &ctx.global.names)
-        }
-        _ => anyhow::bail!("wrong upload"),
-    };
-
-    let bytes = RoundBytes::client(up, down, 1, 1);
-    if plan.evicted {
-        // straggler past the deadline: the delta arrived (and is
-        // metered), but too late to join the aggregate
-        return Ok(FedAvgClientOutput {
-            weight,
-            loss: 0.0,
-            metric_sums: Vec::new(),
-            delta: TensorList::new(Vec::new(), Vec::new()),
-            bytes,
-            dropped: Some(DropPhase::Deadline),
-            delay_seconds: plan.delay_seconds,
-        });
-    }
-    Ok(FedAvgClientOutput {
-        weight,
-        loss,
-        metric_sums,
-        delta: delta_wire,
-        bytes,
-        dropped: None,
-        delay_seconds: plan.delay_seconds,
-    })
+/// Per-round state shared by the cohort: the artifact handle plus the
+/// round's whole-model snapshot (handed back to `commit`, which steps it).
+pub struct FedAvgPrep {
+    variant: String,
+    grad_meta: ArtifactMeta,
+    global: TensorList,
+    shapes: Vec<Vec<usize>>,
 }
 
 impl FedAvgTrainer {
@@ -275,223 +139,207 @@ impl FedAvgTrainer {
         }
         Ok((loss.mean(), self.metric.value(&sums, examples)))
     }
+}
 
-    /// One full round through the tick-based phase machine (see
-    /// `split.rs` module docs); returns the committed round record.
-    fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
-        let t0 = Instant::now();
+impl RoundAlgorithm for FedAvgTrainer {
+    type Prep = FedAvgPrep;
+    /// Wire-decoded model delta (global − local after H steps).
+    type Payload = TensorList;
+    type Accum = WeightedAggregator;
+
+    fn stream_tag(&self) -> u64 {
+        0xFEDA
+    }
+
+    fn env(&self) -> RoundEnv<'_> {
+        RoundEnv {
+            net: &self.net,
+            sampler: &self.sampler,
+            faults: &self.faults,
+            rng: &self.rng,
+            metric: self.metric,
+            batch_examples: self.spec.batch as f64,
+            nmetrics: self.spec.metrics.len(),
+            workers: self.cfg.resolved_workers(),
+            rounds: self.cfg.rounds,
+            eval_every: self.cfg.eval_every,
+            eval_batches: self.cfg.eval_batches,
+            max_attempts: MAX_SAMPLING_ATTEMPTS,
+        }
+    }
+
+    fn prepare(&self, _round: usize) -> anyhow::Result<FedAvgPrep> {
         let variant = self.cfg.variant();
-        let grad_meta = self.rt.manifest.artifact(&variant, "full_grad")?.clone();
-        let nmetrics = self.spec.metrics.len();
-
-        self.net.begin_round();
         let global = self.full_params();
         let shapes: Vec<Vec<usize>> =
             global.tensors.iter().map(|t| t.shape().to_vec()).collect();
-        let mut driver = RoundDriver::new();
-        // carried across phases within one attempt
-        let mut cohort: Vec<usize> = Vec::new();
-        let mut plans: Vec<FaultPlan> = Vec::new();
-        let mut broadcast: Option<Message> = None;
-        let mut results: Vec<anyhow::Result<FedAvgClientOutput>> = Vec::new();
-        // carried across attempts (aborted attempts used the wire)
-        let mut round_bytes = RoundBytes::default();
-        let mut sim_seconds = 0.0f64;
-        // survivor aggregates of the attempt that commits
-        let mut delta_agg = WeightedAggregator::new();
-        let mut loss_agg = ScalarAggregator::new();
-        let mut metric_sums = vec![0.0f64; nmetrics];
-        let mut examples = 0.0f64;
-        let mut survivors = SurvivorSet::new();
-        let mut drops = DropCounts::default();
+        Ok(FedAvgPrep {
+            grad_meta: self.rt.manifest.artifact(&variant, "full_grad")?.clone(),
+            variant,
+            global,
+            shapes,
+        })
+    }
 
-        loop {
-            match driver.phase() {
-                RoundPhase::Sampling => {
-                    let attempt = driver.attempt();
-                    cohort = self.sampler.sample(
-                        &mut self.rng.fork(sample_key(round as u64, attempt)),
-                        &[],
-                    );
-                    plans = cohort
-                        .iter()
-                        .map(|&ci| {
-                            self.faults.plan(&self.rng, round as u64, attempt, ci)
-                        })
-                        .collect();
-                    driver.advance();
-                }
-                RoundPhase::Broadcast => {
-                    // parameters can't change between attempts (aborts
-                    // never touch the optimizers), so the payload is
-                    // built once and re-sent on resampled attempts
-                    if broadcast.is_none() {
-                        broadcast = Some(Message::ModelBroadcast {
-                            params: message::tensors_to_payload(&global),
-                        });
-                    }
-                    driver.advance();
-                }
-                RoundPhase::ClientCompute => {
-                    let attempt = driver.attempt();
-                    let tasks: Vec<(usize, Rng, FaultPlan)> = cohort
-                        .iter()
-                        .zip(&plans)
-                        .map(|(&ci, &plan)| {
-                            let key =
-                                client_stream_key(0xFEDA, round as u64, ci, attempt);
-                            (ci, self.rng.fork(key), plan)
-                        })
-                        .collect();
-                    let ctx = FedAvgStepCtx {
-                        rt: &*self.rt,
-                        data: self.data.as_ref(),
-                        net: &self.net,
-                        spec: &self.spec,
-                        variant: &variant,
-                        grad_meta: &grad_meta,
-                        global: &global,
-                        broadcast: broadcast.as_ref().expect("broadcast built"),
-                        shapes: &shapes,
-                        wc_names: &self.wc.names,
-                        ws_names: &self.ws.names,
-                        nc: self.wc.len(),
-                        local_steps: self.cfg.local_steps,
-                        client_lr: self.cfg.client_lr,
-                        dropout_client: self.cfg.dropout_client,
-                        dropout_server: self.cfg.dropout_server,
-                        round: round as u32,
-                    };
-                    results = scoped_parallel_map(
-                        self.cfg.resolved_workers(),
-                        tasks,
-                        |_slot, (ci, mut crng, plan)| {
-                            fedavg_client_step(&ctx, ci, &mut crng, &plan)
-                        },
-                    );
-                    driver.advance();
-                }
-                RoundPhase::Aggregate => {
-                    // slot-order reduction (see split.rs: bit-identical
-                    // at any worker count)
-                    delta_agg = WeightedAggregator::new();
-                    loss_agg = ScalarAggregator::new();
-                    metric_sums = vec![0.0f64; nmetrics];
-                    examples = 0.0;
-                    survivors = SurvivorSet::new();
-                    drops = DropCounts::default();
-                    let mut per_client: Vec<(usize, usize, f64)> =
-                        Vec::with_capacity(cohort.len());
-                    for result in std::mem::take(&mut results) {
-                        let out = result?;
-                        per_client.push((
-                            out.bytes.up as usize,
-                            out.bytes.down as usize,
-                            out.delay_seconds,
-                        ));
-                        round_bytes.merge(&out.bytes);
-                        match out.dropped {
-                            Some(phase) => {
-                                drops.add(phase);
-                                survivors.dropped();
-                            }
-                            None => {
-                                survivors.survivor(out.weight);
-                                loss_agg.add(out.loss, out.weight);
-                                for (k, s) in metric_sums.iter_mut().enumerate() {
-                                    *s += out.metric_sums[k];
-                                }
-                                examples += self.spec.batch as f64;
-                                delta_agg.add(&out.delta, out.weight);
-                            }
-                        }
-                    }
-                    sim_seconds += self.net.estimate_round_time_with_delays(
-                        &per_client,
-                        self.faults.round_deadline,
-                    );
-                    // survivor weights renormalize to a convex combination
-                    // (kept in lockstep with split.rs)
-                    debug_assert!(
-                        survivors.survived() == 0
-                            || (survivors.normalized().iter().sum::<f64>() - 1.0).abs()
-                                < 1e-9,
-                        "survivor weights must renormalize to 1"
-                    );
-                    if self.faults.min_survivors > 0
-                        && survivors.survived() < self.faults.min_survivors
-                        && driver.resample()
-                    {
-                        continue;
-                    }
-                    driver.advance();
-                }
-                RoundPhase::Commit => break,
+    fn build_broadcast(&self, prep: &FedAvgPrep) -> Message {
+        Message::ModelBroadcast { params: message::tensors_to_payload(&prep.global) }
+    }
+
+    fn client_step(
+        &self,
+        prep: &FedAvgPrep,
+        broadcast: &Message,
+        round: u32,
+        ci: usize,
+        crng: &mut Rng,
+        plan: &FaultPlan,
+    ) -> anyhow::Result<ClientOutput<TensorList>> {
+        let nmetrics = self.spec.metrics.len();
+        let mut up = 0usize;
+        let mut down = 0usize;
+        let weight = self.data.client_weight(ci).max(1e-12);
+        let nc = self.wc.len();
+
+        // broadcast whole model (downlink |w|)
+        let (decoded, n) = self.net.download(ci, round, broadcast)?;
+        down += n;
+        if plan.drop_at.is_some() {
+            // FedAvg's only uplink is the delta, so every mid-round drop
+            // collapses to "died before the delta upload": the broadcast
+            // is metered, nothing comes back
+            return Ok(ClientOutput::failed(
+                DropPhase::BeforeGradUpload,
+                weight,
+                RoundBytes::client(0, down, 0, 1),
+                plan.delay_seconds,
+            ));
+        }
+        let mut local = match decoded {
+            Message::ModelBroadcast { params } => {
+                message::payload_to_tensors(&params, &prep.shapes, &prep.global.names)
             }
+            _ => anyhow::bail!("wrong broadcast"),
+        };
+
+        // H local SGD steps
+        let mut loss = 0.0f64;
+        let mut metric_sums = vec![0.0f64; nmetrics];
+        for step in 0..self.cfg.local_steps {
+            let batch = self.data.train_batch(ci, self.spec.batch, crng);
+            let masks = draw_masks(
+                &[&prep.grad_meta],
+                self.cfg.dropout_client,
+                self.cfg.dropout_server,
+                crng,
+            );
+            let (lc, ls) = local.tensors.split_at(nc);
+            let lwc = TensorList::new(self.wc.names.to_vec(), lc.to_vec());
+            let lws = TensorList::new(self.ws.names.to_vec(), ls.to_vec());
+            let src = InputSources {
+                wc: Some(&lwc),
+                ws: Some(&lws),
+                batch: Some(&batch),
+                masks: Some(&masks),
+                ..Default::default()
+            };
+            let outs = self
+                .rt
+                .run(&prep.variant, "full_grad", &assemble(&prep.grad_meta, &src)?)?;
+            if step == 0 {
+                loss = scalar(&outs[0])? as f64;
+                for (k, s) in metric_sums.iter_mut().enumerate() {
+                    *s = scalar(&outs[1 + k])? as f64;
+                }
+            }
+            let grads = arrays_to_tensors(&outs[1 + nmetrics..], &prep.global)?;
+            local.axpy(-self.cfg.client_lr, &grads);
         }
 
-        // pseudo-gradient step: w <- w - 1.0 * mean(delta); skipped when
-        // nobody survived (degraded commit)
-        let mut full = global;
-        if let Some(delta) = delta_agg.finish() {
-            self.opt.step(&mut full, &delta);
+        // upload model delta (uplink |w|)
+        let mut delta = prep.global.clone();
+        delta.axpy(-1.0, &local); // delta = global - local = lr * sum grads
+        let up_msg = Message::ClientGrads { grads: message::tensors_to_payload(&delta) };
+        let (decoded, n) = self.net.upload(ci, round, &up_msg)?;
+        up += n;
+        let delta_wire = match decoded {
+            Message::ClientGrads { grads } => {
+                message::payload_to_tensors(&grads, &prep.shapes, &prep.global.names)
+            }
+            _ => anyhow::bail!("wrong upload"),
+        };
+
+        let bytes = RoundBytes::client(up, down, 1, 1);
+        if plan.evicted {
+            // straggler past the deadline: the delta arrived (and is
+            // metered), but too late to join the aggregate
+            return Ok(ClientOutput::failed(
+                DropPhase::Deadline,
+                weight,
+                bytes,
+                plan.delay_seconds,
+            ));
+        }
+        Ok(ClientOutput {
+            weight,
+            loss,
+            metric_sums,
+            quant_rel_err: 0.0,
+            payload: Some(delta_wire),
+            bytes,
+            dropped: None,
+            delay_seconds: plan.delay_seconds,
+        })
+    }
+
+    fn new_accum(&self) -> WeightedAggregator {
+        WeightedAggregator::new()
+    }
+
+    fn accumulate(&self, acc: &mut WeightedAggregator, delta: TensorList, weight: f64) {
+        acc.add(&delta, weight);
+    }
+
+    fn commit(
+        &mut self,
+        prep: FedAvgPrep,
+        survivors: Option<WeightedAggregator>,
+        round: usize,
+    ) -> anyhow::Result<()> {
+        // pseudo-gradient step: w <- w - 1.0 * mean(delta); skipped on a
+        // degraded commit
+        let mut full = prep.global;
+        if let Some(agg) = survivors {
+            if let Some(delta) = agg.finish() {
+                self.opt.step(&mut full, &delta);
+            }
         }
         anyhow::ensure!(full.is_finite(), "parameters diverged at round {round}");
         self.split_back(full);
+        Ok(())
+    }
 
-        let meter_delta = self.net.end_round();
-        debug_assert_eq!(meter_delta, round_bytes, "meter vs merged partials");
-        let mut rec = RoundRecord {
-            round,
-            train_loss: loss_agg.mean(),
-            train_metric: self.metric.value(&metric_sums, examples),
-            quant_error: 0.0,
-            uplink_bytes: round_bytes.up,
-            downlink_bytes: round_bytes.down,
-            cumulative_uplink: self.net.totals().up,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            sim_comm_seconds: sim_seconds,
-            cohort_sampled: cohort.len(),
-            cohort_survived: survivors.survived(),
-            dropped: drops,
-            attempts: driver.attempt(),
-            ..Default::default()
-        };
-        if self.cfg.eval_every > 0
-            && (round % self.cfg.eval_every == self.cfg.eval_every - 1 || round == 0)
-        {
-            let (el, em) = self.evaluate(self.cfg.eval_batches)?;
-            rec.eval_loss = Some(el);
-            rec.eval_metric = Some(em);
-        }
-        Ok(rec)
+    fn evaluate(&mut self, batches: usize) -> anyhow::Result<(f64, f64)> {
+        FedAvgTrainer::evaluate(self, batches)
+    }
+
+    fn writers(&mut self) -> (&mut Option<CsvWriter>, &mut Option<JsonlWriter>) {
+        (&mut self.csv, &mut self.jsonl)
+    }
+
+    fn log_round(&self, rec: &RoundRecord) {
+        log::info!(
+            "fedavg {} r{:>4}: loss={:.4} metric={:.4} upKB={:.1}",
+            self.cfg.task,
+            rec.round,
+            rec.train_loss,
+            rec.train_metric,
+            rec.uplink_bytes as f64 / 1024.0,
+        );
     }
 }
 
 impl Trainer for FedAvgTrainer {
     fn run(&mut self) -> anyhow::Result<RunLog> {
-        let mut log = RunLog::default();
-        for round in 0..self.cfg.rounds {
-            let rec = self.round(round)?;
-            if round == 0 || (round + 1) % 10 == 0 {
-                log::info!(
-                    "fedavg {} r{:>4}: loss={:.4} metric={:.4} upKB={:.1}",
-                    self.cfg.task,
-                    round,
-                    rec.train_loss,
-                    rec.train_metric,
-                    rec.uplink_bytes as f64 / 1024.0,
-                );
-            }
-            write_round(&mut self.csv, &mut self.jsonl, &rec)?;
-            log.push(rec);
-        }
-        if let Some(c) = &mut self.csv {
-            c.flush()?;
-        }
-        if let Some(j) = &mut self.jsonl {
-            j.flush()?;
-        }
-        Ok(log)
+        RoundEngine::new(self).run()
     }
 }

@@ -10,10 +10,16 @@
 //! * [`fedavg::FedAvgTrainer`] — the whole-model baseline with H local
 //!   steps.
 //!
-//! Both trainers drive each round through the tick-based phase machine in
-//! [`engine`] (Sampling → Broadcast → ClientCompute → Aggregate → Commit)
-//! with deterministic fault injection from [`faults`] — client dropout,
-//! stragglers, deadline eviction, and partial-cohort resampling.
+//! Both trainers implement [`engine::RoundAlgorithm`] and run every round
+//! through the one generic [`engine::RoundEngine`] (Sampling → Broadcast →
+//! ClientCompute → Aggregate → Commit) with deterministic fault injection
+//! from [`faults`] — client dropout, stragglers, deadline eviction, and
+//! partial-cohort resampling. The engine owns the round protocol end to
+//! end (sampling, fan-out, reduction order, byte/time accounting,
+//! degraded commits, record assembly); an algorithm only supplies its
+//! broadcast, per-client step, survivor accumulation, and optimizer
+//! commit — so the cross-algorithm communication comparison stays
+//! apples-to-apples by construction.
 //!
 //! All model math executes through PJRT artifacts; all transfers go
 //! through the metered [`crate::comm::StarNetwork`].

@@ -1,32 +1,25 @@
-//! The SplitFed / FedLite round state machine (paper §3 + §4).
+//! The SplitFed / FedLite trainer (paper §3 + §4) on the generic engine.
 //!
-//! Each round runs the explicit tick-based phase machine of
-//! [`crate::coordinator::engine`]:
+//! Each round runs through [`crate::coordinator::engine::RoundEngine`] —
+//! the Sampling → Broadcast → ClientCompute → Aggregate → Commit phase
+//! machine, fault injection, survivor reduction, byte accounting, and
+//! record assembly all live there, shared verbatim with FedAvg. This
+//! module only supplies the split-learning payload hooks
+//! ([`crate::coordinator::engine::RoundAlgorithm`]):
 //!
-//! * **Sampling** — pick the cohort (`ClientSampler`) and draw each
-//!   client's deterministic fault schedule
-//!   ([`crate::coordinator::faults::FaultConfig::plan`]);
-//! * **Broadcast** — build the round's client-model broadcast message,
-//!   shared read-only by the whole cohort;
-//! * **ClientCompute** — fan the cohort across `cfg.workers` threads
-//!   ([`crate::util::pool::scoped_parallel_map`]); one client's unit of
-//!   work is [`client_step`]: broadcast download → `client_fwd` →
-//!   (FedLite) quantize → metered wire round-trip (the server trains on
-//!   the *reconstruction from the decoded bytes*) → `server_step` → grad
+//! * **broadcast** — the client-side model `w_c`;
+//! * **client step** — broadcast download → `client_fwd` → (FedLite)
+//!   quantize → metered wire round-trip (the server trains on the
+//!   *reconstruction from the decoded bytes*) → `server_step` → grad
 //!   download → `client_bwd` (gradient correction eq. (5) inside the
 //!   artifact) → client-grad upload. Fault injection short-circuits this
 //!   pipeline at the scheduled phase: bytes a client sent before failing
 //!   stay metered, its gradients never leave the worker;
-//! * **Aggregate** — reduce the partials in cohort-slot order; weights
-//!   `p_i` renormalize over the *survivors* (the weighted mean divides by
-//!   the surviving weight mass — see `aggregator::SurvivorSet`). If fewer
-//!   than `min_survivors` clients survived, rewind to **Sampling** for a
-//!   fresh attempt (bounded by `engine::MAX_SAMPLING_ATTEMPTS`) without
-//!   touching the optimizers;
-//! * **Commit** — one optimizer step per side on the survivor aggregate
-//!   (skipped when nobody survived), then emit the round record with
-//!   `cohort_sampled` / `cohort_survived` / `dropped_at_phase` /
-//!   `round_attempts`.
+//! * **accumulate** — fold a survivor's `(w_s, w_c)` gradients into the
+//!   weighted aggregates (weights renormalize over survivors — see
+//!   `aggregator::SurvivorSet`);
+//! * **commit** — one optimizer step per side on the survivor aggregate
+//!   (skipped on a degraded commit).
 //!
 //! Per-client RNG streams (batches *and* fault schedules) are forked from
 //! pure `(round, attempt, client)` keys and every reduction has a fixed
@@ -40,16 +33,17 @@
 //! vertical-FL deployment the server owns labels — see DESIGN.md).
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
 use crate::config::{Algorithm, RunConfig};
-use crate::coordinator::aggregator::{ScalarAggregator, SurvivorSet, WeightedAggregator};
+use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
-use crate::coordinator::engine::{client_stream_key, sample_key, RoundDriver, RoundPhase};
-use crate::coordinator::faults::{DropCounts, DropPhase, FaultConfig, FaultPlan};
+use crate::coordinator::engine::{
+    open_logs, ClientOutput, RoundAlgorithm, RoundEngine, RoundEnv, MAX_SAMPLING_ATTEMPTS,
+};
+use crate::coordinator::faults::{DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::quantize::QuantizeBackend;
 use crate::coordinator::sampler::ClientSampler;
 use crate::coordinator::Trainer;
@@ -60,7 +54,6 @@ use crate::optim::Optimizer;
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::{Tensor, TensorList};
 use crate::util::logging::{CsvWriter, JsonlWriter};
-use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
 /// Split-learning trainer (SplitFed when `quantizer` is None).
@@ -83,275 +76,25 @@ pub struct SplitTrainer {
     jsonl: Option<JsonlWriter>,
 }
 
-/// What one client contributes to a round: produced on a worker thread by
-/// [`client_step`], reduced on the coordinator thread in cohort-slot
-/// order.
-pub struct ClientRoundOutput {
-    /// Aggregation weight p_i (dataset share), floored at 1e-12.
-    pub weight: f64,
-    pub loss: f64,
-    /// Raw metric sums in manifest order.
-    pub metric_sums: Vec<f64>,
-    /// Relative quantization error (0 for SplitFed).
-    pub quant_rel_err: f64,
+/// Per-round artifact handles, fetched once and shared by the cohort.
+pub struct SplitPrep {
+    variant: String,
+    fwd: ArtifactMeta,
+    step: ArtifactMeta,
+    bwd: ArtifactMeta,
+}
+
+/// What one surviving client contributes to the split aggregates.
+pub struct SplitPayload {
     pub wc_grads: TensorList,
     pub ws_grads: TensorList,
-    /// This client's metered transfers (merged after the barrier). Bytes
-    /// sent before a mid-round failure are included — they crossed the
-    /// wire.
-    pub bytes: RoundBytes,
-    /// Where the client's contribution was lost, if anywhere. Dropped and
-    /// evicted clients carry empty gradient lists and are excluded from
-    /// every aggregate.
-    pub dropped: Option<DropPhase>,
-    /// Simulated straggler compute delay (feeds the round-time estimate).
-    pub delay_seconds: f64,
 }
 
-impl ClientRoundOutput {
-    /// A failed client's partial contribution: the bytes it sent, nothing
-    /// else.
-    fn failed(
-        phase: DropPhase,
-        weight: f64,
-        bytes: RoundBytes,
-        delay_seconds: f64,
-    ) -> ClientRoundOutput {
-        ClientRoundOutput {
-            weight,
-            loss: 0.0,
-            metric_sums: Vec::new(),
-            quant_rel_err: 0.0,
-            wc_grads: TensorList::new(Vec::new(), Vec::new()),
-            ws_grads: TensorList::new(Vec::new(), Vec::new()),
-            bytes,
-            dropped: Some(phase),
-            delay_seconds,
-        }
-    }
-}
-
-/// Immutable view of the round state shared (read-only) by the cohort
-/// workers. Everything here is `Sync`; per-client mutability lives in the
-/// worker's own `Rng` and locals.
-struct ClientStepCtx<'a> {
-    rt: &'a Runtime,
-    data: &'a dyn FederatedDataset,
-    net: &'a StarNetwork,
-    quantizer: Option<&'a QuantizeBackend>,
-    spec: &'a ModelSpec,
-    variant: &'a str,
-    fwd: &'a ArtifactMeta,
-    step: &'a ArtifactMeta,
-    bwd: &'a ArtifactMeta,
-    wc: &'a TensorList,
-    ws: &'a TensorList,
-    /// The round's model broadcast, built once and shared: the payload is
-    /// identical for every client, and `StarNetwork::download` only needs
-    /// `&Message`.
-    broadcast: &'a Message,
-    /// Gradient-correction strength (0 when not quantizing).
-    lambda: f32,
-    dropout_client: f64,
-    dropout_server: f64,
-    round: u32,
-}
-
-/// One client's full round pipeline: broadcast → `client_fwd` → quantize →
-/// metered wire round-trip → `server_step` → `client_bwd` → grad upload.
-///
-/// `plan` injects this client's scheduled faults: the pipeline stops at
-/// the scheduled drop phase (bytes sent so far stay metered, nothing else
-/// is produced), and an evicted straggler runs to completion — all its
-/// bytes cross the wire — but returns a discarded contribution.
-fn client_step(
-    ctx: &ClientStepCtx<'_>,
-    ci: usize,
-    crng: &mut Rng,
-    plan: &FaultPlan,
-) -> anyhow::Result<ClientRoundOutput> {
-    let mut up_bytes = 0usize;
-    let mut down_bytes = 0usize;
-    let mut up_msgs = 0u64;
-    let mut down_msgs = 0u64;
-    let act_b = ctx.spec.act_batch;
-    let d = ctx.spec.cut_dim;
-    let nmetrics = ctx.spec.metrics.len();
-    let weight = ctx.data.client_weight(ci).max(1e-12);
-
-    // 0. model broadcast (downlink)
-    let (_, n) = ctx.net.download(ci, ctx.round, ctx.broadcast)?;
-    down_bytes += n;
-    down_msgs += 1;
-
-    // 1. client forward
-    let batch = ctx.data.train_batch(ci, ctx.spec.batch, crng);
-    let masks = draw_masks(
-        &[ctx.fwd, ctx.step, ctx.bwd],
-        ctx.dropout_client,
-        ctx.dropout_server,
-        crng,
-    );
-    let src = InputSources {
-        wc: Some(ctx.wc),
-        batch: Some(&batch),
-        masks: Some(&masks),
-        ..Default::default()
-    };
-    let z_arr = ctx
-        .rt
-        .run(ctx.variant, "client_fwd", &assemble(ctx.fwd, &src)?)?
-        .remove(0);
-    let z = z_arr
-        .as_f32()
-        .ok_or_else(|| anyhow::anyhow!("z dtype"))?
-        .to_vec();
-    if plan.drop_at == Some(DropPhase::AfterFwd) {
-        // vanished before uploading: only the broadcast crossed the wire
-        return Ok(ClientRoundOutput::failed(
-            DropPhase::AfterFwd,
-            weight,
-            RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
-            plan.delay_seconds,
-        ));
-    }
-
-    // 2. upload: quantized (FedLite) or raw (SplitFed); the server
-    //    trains on what came off the wire.
-    let (z_tilde_server, quant_rel_err) = match ctx.quantizer {
-        Some(qz) => {
-            let out = qz.quantize(&z, act_b, crng)?;
-            let msg = Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
-            let (decoded, n) = ctx.net.upload(ci, ctx.round, &msg)?;
-            up_bytes += n;
-            up_msgs += 1;
-            let codes = decoded.unpack_codes()?;
-            let cbs = match &decoded {
-                Message::QuantizedUpload { codebooks, .. } => codebooks.clone(),
-                _ => anyhow::bail!("wrong upload variant"),
-            };
-            let native = crate::quantizer::GroupedPq::new(qz.config, d)?;
-            let rec = native.reconstruct(&cbs, &codes, act_b);
-            debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
-            (rec, out.relative_error(&z))
-        }
-        None => {
-            let msg = Message::ActivationUpload { z: z.clone(), b: act_b, d };
-            let (decoded, n) = ctx.net.upload(ci, ctx.round, &msg)?;
-            up_bytes += n;
-            up_msgs += 1;
-            match decoded {
-                Message::ActivationUpload { z, .. } => (z, 0.0),
-                _ => anyhow::bail!("wrong upload variant"),
-            }
-        }
-    };
-    if plan.drop_at == Some(DropPhase::AfterUpload) {
-        // the activation upload landed (and is metered); the client is
-        // gone, so the server never trains on it
-        return Ok(ClientRoundOutput::failed(
-            DropPhase::AfterUpload,
-            weight,
-            RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
-            plan.delay_seconds,
-        ));
-    }
-    let z_tilde = Array::f32(&[act_b, d], z_tilde_server);
-
-    // 3. server update
-    let src = InputSources {
-        ws: Some(ctx.ws),
-        batch: Some(&batch),
-        masks: Some(&masks),
-        z_tilde: Some(&z_tilde),
-        ..Default::default()
-    };
-    let outs = ctx
-        .rt
-        .run(ctx.variant, "server_step", &assemble(ctx.step, &src)?)?;
-    let loss = scalar(&outs[0])? as f64;
-    let mut metric_sums = vec![0.0f64; nmetrics];
-    for (k, s) in metric_sums.iter_mut().enumerate() {
-        *s = scalar(&outs[1 + k])? as f64;
-    }
-    let grad_z = outs[1 + nmetrics].clone();
-    let ws_grads = arrays_to_tensors(&outs[2 + nmetrics..], ctx.ws)?;
-
-    // 4. gradient download
-    let gz_vec = grad_z
-        .as_f32()
-        .ok_or_else(|| anyhow::anyhow!("grad_z dtype"))?
-        .to_vec();
-    let gmsg = Message::GradDownload { grad: gz_vec, b: act_b, d };
-    let (decoded, n) = ctx.net.download(ci, ctx.round, &gmsg)?;
-    down_bytes += n;
-    down_msgs += 1;
-    let grad_wire = match decoded {
-        Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
-        _ => anyhow::bail!("wrong download variant"),
-    };
-    if plan.drop_at == Some(DropPhase::BeforeGradUpload) {
-        // uplink activations and the grad download are metered; the
-        // client-side gradient never comes back
-        return Ok(ClientRoundOutput::failed(
-            DropPhase::BeforeGradUpload,
-            weight,
-            RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
-            plan.delay_seconds,
-        ));
-    }
-
-    // 5. client backward (gradient correction inside the artifact)
-    let src = InputSources {
-        wc: Some(ctx.wc),
-        batch: Some(&batch),
-        masks: Some(&masks),
-        z_tilde: Some(&z_tilde),
-        grad_z: Some(&grad_wire),
-        lambda: Some(ctx.lambda),
-        ..Default::default()
-    };
-    let bwd = ctx
-        .rt
-        .run(ctx.variant, "client_bwd", &assemble(ctx.bwd, &src)?)?;
-    let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], ctx.wc)?;
-
-    // 6. client-side grad sync (uplink)
-    let cmsg = Message::ClientGrads { grads: message::tensors_to_payload(&wc_grads) };
-    let (decoded, n) = ctx.net.upload(ci, ctx.round, &cmsg)?;
-    up_bytes += n;
-    up_msgs += 1;
-    let synced = match decoded {
-        Message::ClientGrads { grads } => message::payload_to_tensors(
-            &grads,
-            &ctx.wc.tensors.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>(),
-            &ctx.wc.names,
-        ),
-        _ => anyhow::bail!("wrong sync variant"),
-    };
-
-    let bytes = RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs);
-    if plan.evicted {
-        // straggler past the deadline: every message crossed the wire,
-        // but the round committed without it
-        return Ok(ClientRoundOutput::failed(
-            DropPhase::Deadline,
-            weight,
-            bytes,
-            plan.delay_seconds,
-        ));
-    }
-    Ok(ClientRoundOutput {
-        weight,
-        loss,
-        metric_sums,
-        quant_rel_err,
-        wc_grads: synced,
-        ws_grads,
-        bytes,
-        dropped: None,
-        delay_seconds: plan.delay_seconds,
-    })
+/// The split trainer's survivor accumulator: one weighted aggregate per
+/// model side.
+pub struct SplitAccum {
+    ws_agg: WeightedAggregator,
+    wc_agg: WeightedAggregator,
 }
 
 impl SplitTrainer {
@@ -434,250 +177,301 @@ impl SplitTrainer {
         }
         Ok((loss.mean(), self.metric.value(&sums, examples)))
     }
+}
 
-    /// One full round through the tick-based phase machine (see the
-    /// module docs); returns the committed round record.
-    fn round(&mut self, round: usize) -> anyhow::Result<RoundRecord> {
-        let t0 = Instant::now();
+impl RoundAlgorithm for SplitTrainer {
+    type Prep = SplitPrep;
+    type Payload = SplitPayload;
+    type Accum = SplitAccum;
+
+    fn stream_tag(&self) -> u64 {
+        0xC11E
+    }
+
+    fn env(&self) -> RoundEnv<'_> {
+        RoundEnv {
+            net: &self.net,
+            sampler: &self.sampler,
+            faults: &self.faults,
+            rng: &self.rng,
+            metric: self.metric,
+            batch_examples: self.spec.batch as f64,
+            nmetrics: self.spec.metrics.len(),
+            workers: self.cfg.resolved_workers(),
+            rounds: self.cfg.rounds,
+            eval_every: self.cfg.eval_every,
+            eval_batches: self.cfg.eval_batches,
+            max_attempts: MAX_SAMPLING_ATTEMPTS,
+        }
+    }
+
+    fn prepare(&self, _round: usize) -> anyhow::Result<SplitPrep> {
         let variant = self.cfg.variant();
-        let fwd_meta = self.rt.manifest.artifact(&variant, "client_fwd")?.clone();
-        let step_meta = self.rt.manifest.artifact(&variant, "server_step")?.clone();
-        let bwd_meta = self.rt.manifest.artifact(&variant, "client_bwd")?.clone();
+        Ok(SplitPrep {
+            fwd: self.rt.manifest.artifact(&variant, "client_fwd")?.clone(),
+            step: self.rt.manifest.artifact(&variant, "server_step")?.clone(),
+            bwd: self.rt.manifest.artifact(&variant, "client_bwd")?.clone(),
+            variant,
+        })
+    }
+
+    fn build_broadcast(&self, _prep: &SplitPrep) -> Message {
+        Message::ModelBroadcast { params: message::tensors_to_payload(&self.wc) }
+    }
+
+    /// One client's full round pipeline (see the module docs); runs on a
+    /// worker thread against `&self`.
+    fn client_step(
+        &self,
+        prep: &SplitPrep,
+        broadcast: &Message,
+        round: u32,
+        ci: usize,
+        crng: &mut Rng,
+        plan: &FaultPlan,
+    ) -> anyhow::Result<ClientOutput<SplitPayload>> {
+        let mut up_bytes = 0usize;
+        let mut down_bytes = 0usize;
+        let mut up_msgs = 0u64;
+        let mut down_msgs = 0u64;
+        let act_b = self.spec.act_batch;
+        let d = self.spec.cut_dim;
         let nmetrics = self.spec.metrics.len();
+        let weight = self.data.client_weight(ci).max(1e-12);
+        let lambda = if self.quantizer.is_some() { self.cfg.lambda } else { 0.0 };
 
-        self.net.begin_round();
-        let mut driver = RoundDriver::new();
-        // carried across phases within one attempt
-        let mut cohort: Vec<usize> = Vec::new();
-        let mut plans: Vec<FaultPlan> = Vec::new();
-        let mut broadcast: Option<Message> = None;
-        let mut results: Vec<anyhow::Result<ClientRoundOutput>> = Vec::new();
-        // carried across *attempts*: aborted attempts really used the
-        // wire and the simulated clock, so bytes/time accumulate
-        let mut round_bytes = RoundBytes::default();
-        let mut sim_seconds = 0.0f64;
-        // survivor aggregates of the attempt that commits
-        let mut ws_agg = WeightedAggregator::new();
-        let mut wc_agg = WeightedAggregator::new();
-        let mut loss_agg = ScalarAggregator::new();
-        let mut qerr_agg = ScalarAggregator::new();
-        let mut metric_sums = vec![0.0f64; nmetrics];
-        let mut examples = 0.0f64;
-        let mut survivors = SurvivorSet::new();
-        let mut drops = DropCounts::default();
+        // 0. model broadcast (downlink)
+        let (_, n) = self.net.download(ci, round, broadcast)?;
+        down_bytes += n;
+        down_msgs += 1;
 
-        loop {
-            match driver.phase() {
-                RoundPhase::Sampling => {
-                    let attempt = driver.attempt();
-                    cohort = self.sampler.sample(
-                        &mut self.rng.fork(sample_key(round as u64, attempt)),
-                        &[],
-                    );
-                    plans = cohort
-                        .iter()
-                        .map(|&ci| {
-                            self.faults.plan(&self.rng, round as u64, attempt, ci)
-                        })
-                        .collect();
-                    driver.advance();
-                }
-                RoundPhase::Broadcast => {
-                    // parameters can't change between attempts (aborts
-                    // never touch the optimizers), so the payload is
-                    // built once and re-sent on resampled attempts
-                    if broadcast.is_none() {
-                        broadcast = Some(Message::ModelBroadcast {
-                            params: message::tensors_to_payload(&self.wc),
-                        });
-                    }
-                    driver.advance();
-                }
-                RoundPhase::ClientCompute => {
-                    // Per-client RNG streams use the same (round, client)
-                    // fork keys as the original serial loop; `fork` never
-                    // advances the root stream, so hoisting the forks out
-                    // of the loop is behavior-preserving.
-                    let attempt = driver.attempt();
-                    let tasks: Vec<(usize, Rng, FaultPlan)> = cohort
-                        .iter()
-                        .zip(&plans)
-                        .map(|(&ci, &plan)| {
-                            let key =
-                                client_stream_key(0xC11E, round as u64, ci, attempt);
-                            (ci, self.rng.fork(key), plan)
-                        })
-                        .collect();
-                    let ctx = ClientStepCtx {
-                        rt: &*self.rt,
-                        data: self.data.as_ref(),
-                        net: &self.net,
-                        quantizer: self.quantizer.as_ref(),
-                        spec: &self.spec,
-                        variant: &variant,
-                        fwd: &fwd_meta,
-                        step: &step_meta,
-                        bwd: &bwd_meta,
-                        wc: &self.wc,
-                        ws: &self.ws,
-                        broadcast: broadcast.as_ref().expect("broadcast built"),
-                        lambda: if self.quantizer.is_some() {
-                            self.cfg.lambda
-                        } else {
-                            0.0
-                        },
-                        dropout_client: self.cfg.dropout_client,
-                        dropout_server: self.cfg.dropout_server,
-                        round: round as u32,
-                    };
-                    // fan the cohort across the worker threads;
-                    // collection is the round barrier
-                    results = scoped_parallel_map(
-                        self.cfg.resolved_workers(),
-                        tasks,
-                        |_slot, (ci, mut crng, plan)| {
-                            client_step(&ctx, ci, &mut crng, &plan)
-                        },
-                    );
-                    driver.advance();
-                }
-                RoundPhase::Aggregate => {
-                    // reduce the partials in cohort-slot order: every
-                    // accumulation below happens in the same order the
-                    // serial loop used, so the records are bit-identical
-                    // at any worker count
-                    ws_agg = WeightedAggregator::new();
-                    wc_agg = WeightedAggregator::new();
-                    loss_agg = ScalarAggregator::new();
-                    qerr_agg = ScalarAggregator::new();
-                    metric_sums = vec![0.0f64; nmetrics];
-                    examples = 0.0;
-                    survivors = SurvivorSet::new();
-                    drops = DropCounts::default();
-                    let mut per_client: Vec<(usize, usize, f64)> =
-                        Vec::with_capacity(cohort.len());
-                    for result in std::mem::take(&mut results) {
-                        let out = result?;
-                        per_client.push((
-                            out.bytes.up as usize,
-                            out.bytes.down as usize,
-                            out.delay_seconds,
-                        ));
-                        round_bytes.merge(&out.bytes);
-                        match out.dropped {
-                            Some(phase) => {
-                                drops.add(phase);
-                                survivors.dropped();
-                            }
-                            None => {
-                                survivors.survivor(out.weight);
-                                loss_agg.add(out.loss, out.weight);
-                                for (k, s) in metric_sums.iter_mut().enumerate() {
-                                    *s += out.metric_sums[k];
-                                }
-                                examples += self.spec.batch as f64;
-                                ws_agg.add(&out.ws_grads, out.weight);
-                                wc_agg.add(&out.wc_grads, out.weight);
-                                qerr_agg.add(out.quant_rel_err, 1.0);
-                            }
-                        }
-                    }
-                    sim_seconds += self
-                        .net
-                        .estimate_round_time_with_delays(&per_client, self.faults.round_deadline);
-                    // survivor weights renormalize to a convex combination
-                    debug_assert!(
-                        survivors.survived() == 0
-                            || (survivors.normalized().iter().sum::<f64>() - 1.0).abs()
-                                < 1e-9,
-                        "survivor weights must renormalize to 1"
-                    );
-                    if self.faults.min_survivors > 0
-                        && survivors.survived() < self.faults.min_survivors
-                        && driver.resample()
-                    {
-                        // too few survivors: abort the attempt (its bytes
-                        // stay metered) and resample a fresh cohort
-                        // without touching the optimizers
-                        continue;
-                    }
-                    driver.advance();
-                }
-                RoundPhase::Commit => break,
+        // 1. client forward
+        let batch = self.data.train_batch(ci, self.spec.batch, crng);
+        let masks = draw_masks(
+            &[&prep.fwd, &prep.step, &prep.bwd],
+            self.cfg.dropout_client,
+            self.cfg.dropout_server,
+            crng,
+        );
+        let src = InputSources {
+            wc: Some(&self.wc),
+            batch: Some(&batch),
+            masks: Some(&masks),
+            ..Default::default()
+        };
+        let z_arr = self
+            .rt
+            .run(&prep.variant, "client_fwd", &assemble(&prep.fwd, &src)?)?
+            .remove(0);
+        let z = z_arr
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("z dtype"))?
+            .to_vec();
+        if plan.drop_at == Some(DropPhase::AfterFwd) {
+            // vanished before uploading: only the broadcast crossed the wire
+            return Ok(ClientOutput::failed(
+                DropPhase::AfterFwd,
+                weight,
+                RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+                plan.delay_seconds,
+            ));
+        }
+
+        // 2. upload: quantized (FedLite) or raw (SplitFed); the server
+        //    trains on what came off the wire.
+        let (z_tilde_server, quant_rel_err) = match &self.quantizer {
+            Some(qz) => {
+                let out = qz.quantize(&z, act_b, crng)?;
+                let msg = Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
+                let (decoded, n) = self.net.upload(ci, round, &msg)?;
+                up_bytes += n;
+                up_msgs += 1;
+                let codes = decoded.unpack_codes()?;
+                let cbs = match &decoded {
+                    Message::QuantizedUpload { codebooks, .. } => codebooks.clone(),
+                    _ => anyhow::bail!("wrong upload variant"),
+                };
+                let native = crate::quantizer::GroupedPq::new(qz.config, d)?;
+                let rec = native.reconstruct(&cbs, &codes, act_b);
+                debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
+                (rec, out.relative_error(&z))
             }
+            None => {
+                let msg = Message::ActivationUpload { z: z.clone(), b: act_b, d };
+                let (decoded, n) = self.net.upload(ci, round, &msg)?;
+                up_bytes += n;
+                up_msgs += 1;
+                match decoded {
+                    Message::ActivationUpload { z, .. } => (z, 0.0),
+                    _ => anyhow::bail!("wrong upload variant"),
+                }
+            }
+        };
+        if plan.drop_at == Some(DropPhase::AfterUpload) {
+            // the activation upload landed (and is metered); the client is
+            // gone, so the server never trains on it
+            return Ok(ClientOutput::failed(
+                DropPhase::AfterUpload,
+                weight,
+                RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+                plan.delay_seconds,
+            ));
+        }
+        let z_tilde = Array::f32(&[act_b, d], z_tilde_server);
+
+        // 3. server update
+        let src = InputSources {
+            ws: Some(&self.ws),
+            batch: Some(&batch),
+            masks: Some(&masks),
+            z_tilde: Some(&z_tilde),
+            ..Default::default()
+        };
+        let outs = self
+            .rt
+            .run(&prep.variant, "server_step", &assemble(&prep.step, &src)?)?;
+        let loss = scalar(&outs[0])? as f64;
+        let mut metric_sums = vec![0.0f64; nmetrics];
+        for (k, s) in metric_sums.iter_mut().enumerate() {
+            *s = scalar(&outs[1 + k])? as f64;
+        }
+        let grad_z = outs[1 + nmetrics].clone();
+        let ws_grads = arrays_to_tensors(&outs[2 + nmetrics..], &self.ws)?;
+
+        // 4. gradient download
+        let gz_vec = grad_z
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("grad_z dtype"))?
+            .to_vec();
+        let gmsg = Message::GradDownload { grad: gz_vec, b: act_b, d };
+        let (decoded, n) = self.net.download(ci, round, &gmsg)?;
+        down_bytes += n;
+        down_msgs += 1;
+        let grad_wire = match decoded {
+            Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
+            _ => anyhow::bail!("wrong download variant"),
+        };
+        if plan.drop_at == Some(DropPhase::BeforeGradUpload) {
+            // uplink activations and the grad download are metered; the
+            // client-side gradient never comes back
+            return Ok(ClientOutput::failed(
+                DropPhase::BeforeGradUpload,
+                weight,
+                RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+                plan.delay_seconds,
+            ));
         }
 
-        // optimizer steps on the survivor-aggregated gradients (skipped
-        // when nobody survived a degraded commit)
-        if let Some(g) = ws_agg.finish() {
-            self.opt_s.step(&mut self.ws, &g);
+        // 5. client backward (gradient correction inside the artifact)
+        let src = InputSources {
+            wc: Some(&self.wc),
+            batch: Some(&batch),
+            masks: Some(&masks),
+            z_tilde: Some(&z_tilde),
+            grad_z: Some(&grad_wire),
+            lambda: Some(lambda),
+            ..Default::default()
+        };
+        let bwd = self
+            .rt
+            .run(&prep.variant, "client_bwd", &assemble(&prep.bwd, &src)?)?;
+        let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
+
+        // 6. client-side grad sync (uplink)
+        let cmsg = Message::ClientGrads { grads: message::tensors_to_payload(&wc_grads) };
+        let (decoded, n) = self.net.upload(ci, round, &cmsg)?;
+        up_bytes += n;
+        up_msgs += 1;
+        let synced = match decoded {
+            Message::ClientGrads { grads } => message::payload_to_tensors(
+                &grads,
+                &self.wc.tensors.iter().map(|t| t.shape().to_vec()).collect::<Vec<_>>(),
+                &self.wc.names,
+            ),
+            _ => anyhow::bail!("wrong sync variant"),
+        };
+
+        let bytes = RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs);
+        if plan.evicted {
+            // straggler past the deadline: every message crossed the wire,
+            // but the round committed without it
+            return Ok(ClientOutput::failed(
+                DropPhase::Deadline,
+                weight,
+                bytes,
+                plan.delay_seconds,
+            ));
         }
-        if let Some(g) = wc_agg.finish() {
-            self.opt_c.step(&mut self.wc, &g);
+        Ok(ClientOutput {
+            weight,
+            loss,
+            metric_sums,
+            quant_rel_err,
+            payload: Some(SplitPayload { wc_grads: synced, ws_grads }),
+            bytes,
+            dropped: None,
+            delay_seconds: plan.delay_seconds,
+        })
+    }
+
+    fn new_accum(&self) -> SplitAccum {
+        SplitAccum {
+            ws_agg: WeightedAggregator::new(),
+            wc_agg: WeightedAggregator::new(),
+        }
+    }
+
+    fn accumulate(&self, acc: &mut SplitAccum, payload: SplitPayload, weight: f64) {
+        acc.ws_agg.add(&payload.ws_grads, weight);
+        acc.wc_agg.add(&payload.wc_grads, weight);
+    }
+
+    fn commit(
+        &mut self,
+        _prep: SplitPrep,
+        survivors: Option<SplitAccum>,
+        round: usize,
+    ) -> anyhow::Result<()> {
+        // optimizer steps on the survivor-aggregated gradients (skipped
+        // on a degraded commit)
+        if let Some(acc) = survivors {
+            if let Some(g) = acc.ws_agg.finish() {
+                self.opt_s.step(&mut self.ws, &g);
+            }
+            if let Some(g) = acc.wc_agg.finish() {
+                self.opt_c.step(&mut self.wc, &g);
+            }
         }
         anyhow::ensure!(self.wc.is_finite() && self.ws.is_finite(),
             "parameters diverged (NaN/Inf) at round {round}");
+        Ok(())
+    }
 
-        // archive the meter's per-round delta (cumulative totals live
-        // there too); the record reports the slot-order merged partials,
-        // which must agree with the meter while all round traffic flows
-        // through client_step — including aborted attempts
-        let meter_delta = self.net.end_round();
-        debug_assert_eq!(meter_delta, round_bytes, "meter vs merged partials");
-        let mut rec = RoundRecord {
-            round,
-            train_loss: loss_agg.mean(),
-            train_metric: self.metric.value(&metric_sums, examples),
-            quant_error: qerr_agg.mean(),
-            uplink_bytes: round_bytes.up,
-            downlink_bytes: round_bytes.down,
-            cumulative_uplink: self.net.totals().up,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            sim_comm_seconds: sim_seconds,
-            cohort_sampled: cohort.len(),
-            cohort_survived: survivors.survived(),
-            dropped: drops,
-            attempts: driver.attempt(),
-            ..Default::default()
-        };
-        if self.cfg.eval_every > 0
-            && (round % self.cfg.eval_every == self.cfg.eval_every - 1 || round == 0)
-        {
-            let (el, em) = self.evaluate(self.cfg.eval_batches)?;
-            rec.eval_loss = Some(el);
-            rec.eval_metric = Some(em);
-        }
-        Ok(rec)
+    fn evaluate(&mut self, batches: usize) -> anyhow::Result<(f64, f64)> {
+        SplitTrainer::evaluate(self, batches)
+    }
+
+    fn writers(&mut self) -> (&mut Option<CsvWriter>, &mut Option<JsonlWriter>) {
+        (&mut self.csv, &mut self.jsonl)
+    }
+
+    fn log_round(&self, rec: &RoundRecord) {
+        log::info!(
+            "{} {} r{:>4}: loss={:.4} metric={:.4} upKB={:.1} qerr={:.3}",
+            self.cfg.algorithm.name(),
+            self.cfg.task,
+            rec.round,
+            rec.train_loss,
+            rec.train_metric,
+            rec.uplink_bytes as f64 / 1024.0,
+            rec.quant_error,
+        );
     }
 }
 
 impl Trainer for SplitTrainer {
     fn run(&mut self) -> anyhow::Result<RunLog> {
-        let mut log = RunLog::default();
-        let algo = self.cfg.algorithm.name();
-        for round in 0..self.cfg.rounds {
-            let rec = self.round(round)?;
-            if round == 0 || (round + 1) % 10 == 0 {
-                log::info!(
-                    "{algo} {} r{:>4}: loss={:.4} metric={:.4} upKB={:.1} qerr={:.3}",
-                    self.cfg.task,
-                    round,
-                    rec.train_loss,
-                    rec.train_metric,
-                    rec.uplink_bytes as f64 / 1024.0,
-                    rec.quant_error,
-                );
-            }
-            write_round(&mut self.csv, &mut self.jsonl, &rec)?;
-            log.push(rec);
-        }
-        if let Some(c) = &mut self.csv {
-            c.flush()?;
-        }
-        if let Some(j) = &mut self.jsonl {
-            j.flush()?;
-        }
-        Ok(log)
+        RoundEngine::new(self).run()
     }
 }
 
@@ -709,56 +503,4 @@ pub fn arrays_to_tensors(arrs: &[Array], like: &TensorList) -> anyhow::Result<Te
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
     Ok(TensorList::new(like.names.clone(), tensors))
-}
-
-pub(crate) fn open_logs(
-    cfg: &RunConfig,
-) -> anyhow::Result<(Option<CsvWriter>, Option<JsonlWriter>)> {
-    if cfg.out_dir.is_empty() {
-        return Ok((None, None));
-    }
-    let base = format!(
-        "{}/{}_{}_{}", cfg.out_dir, cfg.task, cfg.algorithm.name(), cfg.seed
-    );
-    let csv = CsvWriter::create(
-        format!("{base}.csv"),
-        &[
-            "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
-            "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
-            "wall_seconds", "sim_comm_seconds", "cohort_sampled", "cohort_survived",
-            "dropped_at_phase", "round_attempts",
-        ],
-    )?;
-    let jsonl = JsonlWriter::create(format!("{base}.jsonl"))?;
-    Ok((Some(csv), Some(jsonl)))
-}
-
-pub(crate) fn write_round(
-    csv: &mut Option<CsvWriter>,
-    jsonl: &mut Option<JsonlWriter>,
-    rec: &RoundRecord,
-) -> anyhow::Result<()> {
-    if let Some(c) = csv {
-        c.row(&[
-            rec.round.to_string(),
-            format!("{:.6}", rec.train_loss),
-            format!("{:.6}", rec.train_metric),
-            rec.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
-            rec.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default(),
-            format!("{:.6}", rec.quant_error),
-            rec.uplink_bytes.to_string(),
-            rec.downlink_bytes.to_string(),
-            rec.cumulative_uplink.to_string(),
-            format!("{:.4}", rec.wall_seconds),
-            format!("{:.4}", rec.sim_comm_seconds),
-            rec.cohort_sampled.to_string(),
-            rec.cohort_survived.to_string(),
-            rec.dropped.summary(),
-            rec.attempts.to_string(),
-        ])?;
-    }
-    if let Some(j) = jsonl {
-        j.record(&rec.to_json())?;
-    }
-    Ok(())
 }

@@ -83,6 +83,42 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
+    /// Column schema of the per-round CSV. One source of truth, shared by
+    /// every trainer through the round engine's log writers and asserted
+    /// against in CI (the cross-trainer schema diff): split and fedavg
+    /// logs must carry identical columns and cohort bookkeeping or the
+    /// paper's communication comparison is apples-to-oranges.
+    pub const CSV_COLUMNS: [&'static str; 15] = [
+        "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
+        "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
+        "wall_seconds", "sim_comm_seconds", "cohort_sampled", "cohort_survived",
+        "dropped_at_phase", "round_attempts",
+    ];
+
+    /// Render this record as one CSV row in [`RoundRecord::CSV_COLUMNS`]
+    /// order. The formatting is part of the golden bit-identity contract
+    /// (`rust/tests/determinism.rs`): do not change widths or precision
+    /// without re-blessing the fixtures.
+    pub fn csv_row(&self) -> Vec<String> {
+        vec![
+            self.round.to_string(),
+            format!("{:.6}", self.train_loss),
+            format!("{:.6}", self.train_metric),
+            self.eval_loss.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            self.eval_metric.map(|v| format!("{v:.6}")).unwrap_or_default(),
+            format!("{:.6}", self.quant_error),
+            self.uplink_bytes.to_string(),
+            self.downlink_bytes.to_string(),
+            self.cumulative_uplink.to_string(),
+            format!("{:.4}", self.wall_seconds),
+            format!("{:.4}", self.sim_comm_seconds),
+            self.cohort_sampled.to_string(),
+            self.cohort_survived.to_string(),
+            self.dropped.summary(),
+            self.attempts.to_string(),
+        ]
+    }
+
     pub fn to_json(&self) -> Value {
         let mut o = Object::new();
         o.insert("round", Value::from_usize(self.round));
@@ -244,6 +280,29 @@ mod tests {
         assert_eq!(j.get("round").as_usize(), Some(3));
         assert_eq!(j.get("train_loss").as_f64(), Some(1.5));
         assert_eq!(j.get("eval_loss").as_f64(), None);
+    }
+
+    #[test]
+    fn csv_row_matches_schema() {
+        let r = RoundRecord {
+            round: 2,
+            train_loss: 1.25,
+            eval_loss: Some(0.5),
+            uplink_bytes: 42,
+            attempts: 3,
+            ..Default::default()
+        };
+        let row = r.csv_row();
+        assert_eq!(row.len(), RoundRecord::CSV_COLUMNS.len());
+        assert_eq!(row[0], "2");
+        assert_eq!(row[1], "1.250000");
+        assert_eq!(row[3], "0.500000");
+        assert_eq!(row[4], "", "absent eval metric renders empty");
+        assert_eq!(row[6], "42");
+        assert_eq!(row[14], "3");
+        // the schema itself is load-bearing for the CI cross-trainer diff
+        assert_eq!(RoundRecord::CSV_COLUMNS[9], "wall_seconds");
+        assert_eq!(RoundRecord::CSV_COLUMNS[13], "dropped_at_phase");
     }
 
     #[test]

@@ -8,7 +8,12 @@
 use crate::tensor::TensorList;
 
 /// Common interface: apply one update given gradients.
-pub trait Optimizer: Send {
+///
+/// `Send + Sync` because trainers holding optimizers are shared by
+/// reference with the cohort worker threads (the round engine's fan-out);
+/// the workers never touch optimizer state — `step` needs `&mut` — but
+/// the auto-trait bound must hold for the share to compile.
+pub trait Optimizer: Send + Sync {
     fn step(&mut self, params: &mut TensorList, grads: &TensorList);
     fn learning_rate(&self) -> f32;
     fn set_learning_rate(&mut self, lr: f32);

@@ -45,13 +45,18 @@ impl CostModel {
         self.raw_activation_bits(b, d) / self.fedlite_bits(b, d, q, r, l)
     }
 
-    /// Actual wire bytes (f32 codebook entries at 4 bytes + bit-packed
-    /// codewords + header) — what [`crate::comm`] transports.
+    /// Actual wire bytes of the quantized upload, exactly as
+    /// [`crate::comm::message`] frames it: f32 codebook entries at 4
+    /// bytes, the bit-packed codewords as *one* stream across all R
+    /// groups (not R separately padded streams), plus the message framing
+    /// ([`QUANTIZED_WIRE_OVERHEAD`]: the 13-byte header, six u32 geometry
+    /// fields, and two length prefixes). Kept in lockstep with
+    /// `Message::wire_len` by `wire_bytes_matches_wire_format_exactly`.
     pub fn wire_bytes(&self, b: usize, d: usize, q: usize, r: usize, l: usize) -> usize {
         let dsub = d / q;
         let codebook = r * l * dsub * 4;
-        let ng = b * q / r;
-        codebook + r * packing::packed_len(ng, l)
+        let ncodes = b * q; // == r * group_size(b)
+        QUANTIZED_WIRE_OVERHEAD + codebook + packing::packed_len(ncodes, l)
     }
 
     // -- per-round per-client up-link totals (Table 1 / Fig. 6) -------------
@@ -79,6 +84,12 @@ impl CostModel {
         self.fedlite_bits(b, d, q, r, l) + (self.phi * wc_params) as f64
     }
 }
+
+/// Framing bytes [`crate::comm::message`] puts around a quantized upload
+/// body: `magic u32 | type u8 | round u32 | client u32` (13-byte header),
+/// six `u32` geometry fields (q, R, L, B, d, Ng), and the two `u32`
+/// length prefixes of the codebook and codeword sections.
+pub const QUANTIZED_WIRE_OVERHEAD: usize = 13 + 6 * 4 + 4 + 4;
 
 /// Convenience free functions mirroring the paper's formulas.
 pub fn compressed_bits(phi: usize, b: usize, d: usize, q: usize, r: usize, l: usize) -> f64 {
@@ -137,13 +148,50 @@ mod tests {
 
     #[test]
     fn wire_bytes_close_to_model() {
-        // packed wire bytes should track the f32-variant of the model
+        // packed wire bytes should track the f32-variant of the model:
+        // for the headline config log2 L is exact and the packing is
+        // byte-aligned, so the only gap is the message framing (45 bytes
+        // against a ~2.9 KB payload, ~1.6%)
         let m = CostModel::new(32); // wire floats are f32
         let (b, d, q, r, l) = (20, 9216, 1152, 1, 2);
         let model_bits = m.fedlite_bits(b, d, q, r, l);
         let wire = m.wire_bytes(b, d, q, r, l) as f64 * 8.0;
         let rel = (wire - model_bits).abs() / model_bits;
-        assert!(rel < 0.05, "wire {wire} vs model {model_bits}");
+        assert!(rel < 0.02, "wire {wire} vs model {model_bits} (rel {rel:.4})");
+        // and the framing is the entire gap
+        let framed = model_bits + (QUANTIZED_WIRE_OVERHEAD * 8) as f64;
+        assert!((wire - framed).abs() < 1e-9, "wire {wire} vs framed model {framed}");
+    }
+
+    /// `wire_bytes` must equal what the wire format actually transports,
+    /// byte for byte — codebooks, single packed codeword stream, and
+    /// message framing included.
+    #[test]
+    fn wire_bytes_matches_wire_format_exactly() {
+        use crate::comm::message::Message;
+        use crate::quantizer::packing;
+        let m = CostModel::default();
+        for (b, d, q, r, l) in
+            [(20, 9216, 1152, 1, 2), (6, 16, 4, 2, 3), (20, 100, 1, 1, 4), (8, 32, 8, 4, 5)]
+        {
+            let dsub = d / q;
+            let ng = b * q / r;
+            let msg = Message::QuantizedUpload {
+                q,
+                r,
+                l,
+                b,
+                d,
+                ng,
+                codebooks: vec![0.0; r * l * dsub],
+                packed_codes: vec![0; packing::packed_len(r * ng, l)],
+            };
+            assert_eq!(
+                m.wire_bytes(b, d, q, r, l),
+                msg.wire_len(),
+                "({b},{d},{q},{r},{l})"
+            );
+        }
     }
 
     #[test]

@@ -1,14 +1,23 @@
-//! Workers-invariance regression tests for the parallel cohort engine.
+//! Workers-invariance + golden bit-identity tests for the round engine.
 //!
-//! The round loop fans each cohort across `cfg.workers` threads and
-//! reduces the per-client partials in cohort-slot order, so the round
-//! records must be **bit-identical at any worker count**. These tests run
-//! the native `femnist_tiny` engine (no artifacts needed) through all
-//! three trainers (FedLite / SplitFed / FedAvg) at workers = 1, 2, 4 and
-//! compare the full `RoundRecord` streams field by field — for clean
-//! configs *and* for faulty ones (dropout + stragglers + deadline +
-//! survivor floor), proving fault schedules come from the per-client RNG
-//! forks and never from wall-clock or thread scheduling.
+//! The generic `RoundEngine` fans each cohort across `cfg.workers`
+//! threads and reduces the per-client partials in cohort-slot order, so
+//! the round records must be **bit-identical at any worker count**. These
+//! tests run the native `femnist_tiny` engine (no artifacts needed)
+//! through all three trainers (FedLite / SplitFed / FedAvg) at
+//! workers = 1, 2, 4 and compare the full `RoundRecord` streams field by
+//! field — for clean configs *and* for faulty ones (dropout + stragglers
+//! + deadline + survivor floor), proving fault schedules come from the
+//! per-client RNG forks and never from wall-clock or thread scheduling.
+//!
+//! The golden harness at the bottom locks the *CSV bytes* themselves: it
+//! drives the real `fedlite train` binary and compares its round logs
+//! (minus the nondeterministic `wall_seconds` column) against fixtures in
+//! `tests/fixtures/golden/`. Fixtures are captured with
+//! `FEDLITE_BLESS_GOLDEN=1 cargo test --test determinism golden`; the CI
+//! `golden` job blesses them from the PR's *base* commit and then runs
+//! this test against the PR's engine, so any refactor that changes a
+//! single byte of a clean or faulty round log fails CI.
 
 use std::sync::Arc;
 
@@ -158,6 +167,204 @@ fn faulty_runs_actually_inject_faults() {
             rec.cohort_sampled,
             "r{}",
             rec.round
+        );
+    }
+}
+
+// -- golden bit-identity harness ---------------------------------------------
+
+/// One golden scenario: a name plus the extra `fedlite train` flags it
+/// adds on top of the shared `common` flags.
+struct GoldenScenario {
+    name: String,
+    flags: Vec<String>,
+}
+
+/// Parse `tests/fixtures/golden/scenarios.txt` — the one source of truth
+/// for the golden train invocations, shared with the CI golden job so the
+/// blessed (base-commit) and compared (head) runs can never use different
+/// flags. Returns the common flags and the scenario list.
+fn golden_scenarios() -> (Vec<String>, Vec<GoldenScenario>) {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/golden/scenarios.txt");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut common = Vec::new();
+    let mut scenarios = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, flags) = line.split_once('|').expect("scenarios.txt line: name|flags");
+        let flags: Vec<String> = flags.split_whitespace().map(String::from).collect();
+        if name == "common" {
+            common = flags;
+        } else {
+            scenarios.push(GoldenScenario { name: name.to_string(), flags });
+        }
+    }
+    assert!(!common.is_empty(), "scenarios.txt needs a `common` row");
+    assert!(scenarios.len() >= 2, "scenarios.txt needs clean + faulty rows");
+    (common, scenarios)
+}
+
+fn golden_fixture_path(scenario: &str, algo: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/golden")
+        .join(scenario)
+        .join(format!("femnist_{algo}_7.csv"))
+}
+
+/// Strip the `wall_seconds` column (the only nondeterministic field) —
+/// the same normalization `.github/scripts/drop_wall.sh` applies when CI
+/// blesses fixtures from the base commit. The two implementations are
+/// cross-checked against each other in
+/// `golden_round_csvs_match_fixtures` whenever bash is available, so
+/// they cannot drift apart silently.
+fn drop_wall_column(raw: &str) -> String {
+    let header = raw.lines().next().unwrap_or_default();
+    let skip = header.split(',').position(|c| c == "wall_seconds");
+    let keep = |line: &str| -> String {
+        line.split(',')
+            .enumerate()
+            .filter(|(i, _)| Some(*i) != skip)
+            .map(|(_, c)| c)
+            .collect::<Vec<_>>()
+            .join(",")
+    };
+    let mut out = String::new();
+    for line in raw.lines() {
+        out.push_str(&keep(line));
+        out.push('\n');
+    }
+    out
+}
+
+/// Assert the Rust normalizer and `.github/scripts/drop_wall.sh` agree on
+/// `raw` (skipped quietly where bash is unavailable). CI blesses fixtures
+/// through the shell script and this test compares through the Rust
+/// implementation, so their lockstep *is* the golden contract.
+fn assert_normalizers_agree(raw: &str) {
+    let script = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../.github/scripts/drop_wall.sh");
+    if !script.exists() {
+        return;
+    }
+    let tmp = std::path::Path::new(env!("CARGO_TARGET_TMPDIR")).join("drop-wall-check.csv");
+    std::fs::write(&tmp, raw).unwrap();
+    let out = match std::process::Command::new("bash")
+        .arg(&script)
+        .arg(&tmp)
+        .output()
+    {
+        Ok(out) => out,
+        Err(_) => return, // no bash on this machine; CI always has one
+    };
+    if !out.status.success() {
+        // in the CI golden job nothing may pass vacuously; elsewhere a
+        // broken local shell just skips the cross-check
+        assert!(
+            std::env::var_os("FEDLITE_REQUIRE_GOLDEN").is_none(),
+            "drop_wall.sh failed under FEDLITE_REQUIRE_GOLDEN: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        return;
+    }
+    assert_eq!(
+        String::from_utf8_lossy(&out.stdout),
+        drop_wall_column(raw),
+        "drop_wall.sh and the test's normalizer diverged — fix one to match the other"
+    );
+}
+
+/// Run the real `fedlite train` binary for one golden scenario and return
+/// the normalized round CSV it wrote.
+fn train_csv(common: &[String], scenario: &GoldenScenario, algo: &str, workers: usize) -> String {
+    let out_dir = std::path::Path::new(env!("CARGO_TARGET_TMPDIR"))
+        .join(format!("golden-{}-{algo}-w{workers}", scenario.name));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_fedlite"))
+        .arg("train")
+        .args(common)
+        .args([
+            "--algorithm", algo,
+            "--workers", &workers.to_string(),
+            "--out-dir", out_dir.to_str().unwrap(),
+        ])
+        .args(&scenario.flags)
+        .output()
+        .expect("spawn fedlite train");
+    assert!(
+        out.status.success(),
+        "fedlite train failed for {}/{algo}: {}",
+        scenario.name,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let csv = out_dir.join(format!("femnist_{algo}_7.csv"));
+    let raw = std::fs::read_to_string(&csv).unwrap();
+    assert_normalizers_agree(&raw);
+    drop_wall_column(&raw)
+}
+
+/// Golden bit-identity: the engine must reproduce the captured fixtures
+/// byte for byte (modulo wall-clock), at workers = 1 *and* 4. Run with
+/// `FEDLITE_BLESS_GOLDEN=1` to (re)capture fixtures. A missing fixture is
+/// loudly skipped so fresh checkouts still pass — unless
+/// `FEDLITE_REQUIRE_GOLDEN=1` (set by the CI `golden` job, which blesses
+/// fixtures from the PR's base commit first), where a missing fixture is
+/// a hard failure so the comparison can never pass vacuously.
+#[test]
+fn golden_round_csvs_match_fixtures() {
+    let bless = std::env::var_os("FEDLITE_BLESS_GOLDEN").is_some();
+    let require = std::env::var_os("FEDLITE_REQUIRE_GOLDEN").is_some();
+    let (common, scenarios) = golden_scenarios();
+    let mut skipped = 0usize;
+    for scenario in &scenarios {
+        for algo in ["fedlite", "splitfed", "fedavg"] {
+            let got = train_csv(&common, scenario, algo, 1);
+            assert_eq!(
+                got,
+                train_csv(&common, scenario, algo, 4),
+                "{}/{algo}: workers must not change the round log",
+                scenario.name
+            );
+            let path = golden_fixture_path(&scenario.name, algo);
+            if bless {
+                std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+                std::fs::write(&path, &got).unwrap();
+                eprintln!("blessed golden fixture {}", path.display());
+                continue;
+            }
+            match std::fs::read_to_string(&path) {
+                Ok(want) => assert_eq!(
+                    got,
+                    want,
+                    "{}/{algo}: engine no longer reproduces {}",
+                    scenario.name,
+                    path.display()
+                ),
+                Err(_) => {
+                    assert!(
+                        !require,
+                        "FEDLITE_REQUIRE_GOLDEN is set but fixture {} is missing",
+                        path.display()
+                    );
+                    skipped += 1;
+                    eprintln!(
+                        "SKIPPED golden fixture {} (missing) — capture it with \
+                         FEDLITE_BLESS_GOLDEN=1 cargo test --test determinism golden",
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
+    if skipped > 0 {
+        eprintln!(
+            "golden_round_csvs_match_fixtures: {skipped} fixture comparison(s) \
+             SKIPPED — only workers-invariance was asserted"
         );
     }
 }
