@@ -1,0 +1,66 @@
+#!/usr/bin/env python3
+"""Compare a head bench JSON (fedlite-bench-v1) against a base bench CSV.
+
+Usage: bench_compare.py HEAD_JSON BASE_CSV OUT_MD
+
+Emits a markdown report: per-case speedup (base mean / head mean) for
+cases present in both runs, plus a coverage diff (base cases missing
+from head are flagged — renamed or dropped coverage should be called
+out in the PR, not silent). Advisory: always exits 0 unless inputs are
+unreadable; CI timing noise must not block merges.
+"""
+import csv
+import json
+import sys
+
+
+def main() -> int:
+    head_path, base_path, out_path = sys.argv[1:4]
+    with open(head_path) as f:
+        head = json.load(f)
+    head_rows = {r["case"]: r for r in head.get("rows", [])}
+
+    base_rows = {}
+    with open(base_path) as f:
+        for row in csv.DictReader(f):
+            base_rows[row["case"]] = row
+
+    lines = ["## bench_quantizer: head vs base", ""]
+    shared = [c for c in base_rows if c in head_rows]
+    if shared:
+        lines += [
+            "| case | base mean | head mean | speedup |",
+            "|---|---:|---:|---:|",
+        ]
+        for case in shared:
+            b = float(base_rows[case]["mean_s"])
+            h = float(head_rows[case]["mean_s"])
+            speed = b / h if h > 0 else float("inf")
+            lines.append(f"| {case} | {b:.3e}s | {h:.3e}s | {speed:.2f}x |")
+        lines.append("")
+
+    missing = sorted(c for c in base_rows if c not in head_rows)
+    added = sorted(c for c in head_rows if c not in base_rows)
+    if missing:
+        lines.append(
+            f"**coverage warning:** {len(missing)} base case(s) absent from "
+            "head (renamed or dropped — call it out in the PR):"
+        )
+        lines += [f"- `{c}`" for c in missing]
+        lines.append("")
+    if added:
+        lines.append(f"{len(added)} new case(s) in head:")
+        lines += [f"- `{c}`" for c in added]
+        lines.append("")
+    if not shared and not missing:
+        lines.append("_no base cases found — nothing to compare_")
+
+    report = "\n".join(lines) + "\n"
+    with open(out_path, "w") as f:
+        f.write(report)
+    print(report)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

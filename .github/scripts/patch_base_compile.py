@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Patch a *base-commit* checkout so it compiles for CI comparisons.
+
+The seed tree carried a latent compile blocker: `rust/src/util/json.rs`
+derived `thiserror::Error`, but `thiserror` was never a dependency, so
+every cargo invocation failed. The head tree fixes this with a manual
+`Display`/`Error` impl (a compile-only change — no runtime behavior).
+The `golden` and `bench` CI jobs build the PR's base commit for
+bit-identity / speedup comparisons; until the fix is in every base,
+apply the same compile-only patch to the base checkout. No-op once the
+base already builds (the marker string is gone).
+
+Usage: patch_base_compile.py /path/to/base-checkout
+"""
+import sys
+from pathlib import Path
+
+OLD = """#[derive(Debug, thiserror::Error)]
+#[error("json parse error at byte {offset}: {msg}")]
+pub struct ParseError {
+    pub offset: usize,
+    pub msg: String,
+}"""
+
+NEW = """#[derive(Debug)]
+pub struct ParseError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.offset, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}"""
+
+
+def main() -> int:
+    base = Path(sys.argv[1])
+    target = base / "rust" / "src" / "util" / "json.rs"
+    if not target.exists():
+        print(f"patch_base_compile: {target} missing — nothing to do")
+        return 0
+    src = target.read_text()
+    if "thiserror" not in src:
+        print("patch_base_compile: base already compiles — no-op")
+        return 0
+    if OLD not in src:
+        print(
+            "patch_base_compile: thiserror present but block not recognized — "
+            "leaving the base untouched (its build will fail loudly)"
+        )
+        return 0
+    target.write_text(src.replace(OLD, NEW, 1))
+    print(f"patch_base_compile: patched {target}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

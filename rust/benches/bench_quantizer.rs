@@ -5,19 +5,39 @@
 //! packing and wire encode/decode. This is the §Perf baseline for the
 //! coordinator-side hot loop: in a FedLite round the quantizer runs once
 //! per client.
+//!
+//! Each sweep point runs twice: the allocating `quantize` entry point
+//! (the historical baseline shape of the measurement) and the
+//! steady-state `quantize_into` with a warm scratch arena — the path the
+//! round engine actually drives — plus, where the config allows it, a
+//! multi-worker scratch (`R > 1` fans groups across lanes, `R == 1`
+//! chunks the assignment pass over points). All three produce
+//! bit-identical outputs; only the wall clock differs.
+//!
+//! Knobs (used by the CI `bench` job): `FEDLITE_BENCH_REPS=<n>` overrides
+//! the timed iteration counts; `FEDLITE_BENCH_SMALL=1` shrinks the
+//! activation shape 4× for quick smoke runs.
+//!
+//! Output: `results/bench/quantizer.{csv,json}` plus the repo-root
+//! trajectory file `BENCH_quantizer.json` (schema in `util::bench`).
 
 use fedlite::comm::message::Message;
 use fedlite::quantizer::packing;
-use fedlite::quantizer::pq::{GroupedPq, PqConfig};
-use fedlite::util::bench::Bench;
+use fedlite::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
+use fedlite::util::bench::{reps_or, small_shape, Bench};
+use fedlite::util::pool::ThreadPool;
 use fedlite::util::rng::Rng;
 
 fn main() {
     let mut b = Bench::new("quantizer");
-    let (batch, d) = (20usize, 9216usize);
+    // FEMNIST paper shape, or 4x smaller with FEDLITE_BENCH_SMALL=1
+    let scale = if small_shape() { 4usize } else { 1 };
+    let (batch, d) = (20usize / scale.min(4), 9216usize / scale);
+    let reps = reps_or(5);
     let mut rng = Rng::new(0);
     let z: Vec<f32> = (0..batch * d).map(|_| rng.normal() as f32).collect();
     let work = (batch * d * 4) as f64;
+    let auto_workers = ThreadPool::default_size();
 
     // the paper's headline + representative sweep points (q, R, L, iters)
     for (q, r, l) in [
@@ -29,52 +49,99 @@ fn main() {
         (288, 288, 8),  // vanilla PQ
         (1, 1, 8),      // K-means over whole vectors
     ] {
+        let (q, r) = ((q / scale).max(1), (r / scale).max(1));
         let pq = GroupedPq::new(PqConfig::new(q, r, l).with_iters(8), d).unwrap();
         let mut qrng = Rng::new(42);
         b.case(
             &format!("quantize q={q} R={r} L={l} iters=8"),
             1,
-            5,
+            reps,
             work,
             || {
                 let out = pq.quantize(&z, batch, &mut qrng);
                 std::hint::black_box(out.sq_error);
             },
         );
+        // steady-state scratch path (what the round engine drives)
+        let mut scratch = QuantizeScratch::new();
+        let mut out = PqOutput::default();
+        let mut qrng = Rng::new(42);
+        b.case(
+            &format!("quantize_into q={q} R={r} L={l} iters=8 (warm scratch)"),
+            1,
+            reps,
+            work,
+            || {
+                pq.quantize_into(&z, batch, &mut qrng, &mut scratch, &mut out);
+                std::hint::black_box(out.sq_error);
+            },
+        );
+        // nested fan-out: groups across lanes (R > 1) or assignment
+        // chunking over points (R == 1)
+        if auto_workers > 1 {
+            let mut scratch = QuantizeScratch::with_workers(auto_workers);
+            let mut out = PqOutput::default();
+            let mut qrng = Rng::new(42);
+            b.case(
+                &format!(
+                    "quantize_into q={q} R={r} L={l} iters=8 (workers={auto_workers})"
+                ),
+                1,
+                reps,
+                work,
+                || {
+                    pq.quantize_into(&z, batch, &mut qrng, &mut scratch, &mut out);
+                    std::hint::black_box(out.sq_error);
+                },
+            );
+        }
     }
 
     // Lloyd iteration scaling at the headline config
     for iters in [1usize, 4, 8, 16] {
-        let pq = GroupedPq::new(PqConfig::new(1152, 1, 2).with_iters(iters), d).unwrap();
+        let q = (1152 / scale).max(1);
+        let pq = GroupedPq::new(PqConfig::new(q, 1, 2).with_iters(iters), d).unwrap();
         let mut qrng = Rng::new(42);
-        b.case(&format!("quantize q=1152 L=2 iters={iters}"), 1, 5, work, || {
-            std::hint::black_box(pq.quantize(&z, batch, &mut qrng).sq_error);
+        let mut scratch = QuantizeScratch::new();
+        let mut out = PqOutput::default();
+        b.case(&format!("quantize q={q} L=2 iters={iters}"), 1, reps, work, || {
+            pq.quantize_into(&z, batch, &mut qrng, &mut scratch, &mut out);
+            std::hint::black_box(out.sq_error);
         });
     }
 
     // packing + wire
-    let pq = GroupedPq::new(PqConfig::new(1152, 1, 2).with_iters(2), d).unwrap();
+    let q = (1152 / scale).max(1);
+    let pq = GroupedPq::new(PqConfig::new(q, 1, 2).with_iters(2), d).unwrap();
     let mut qrng = Rng::new(7);
     let out = pq.quantize(&z, batch, &mut qrng);
-    b.case("pack codes (23040 @ 1 bit)", 10, 100, out.codes.len() as f64 * 4.0, || {
-        std::hint::black_box(packing::pack(&out.codes, 2));
-    });
+    let pack_reps = reps_or(100);
+    b.case(
+        &format!("pack codes ({} @ 1 bit)", out.codes.len()),
+        10,
+        pack_reps,
+        out.codes.len() as f64 * 4.0,
+        || {
+            std::hint::black_box(packing::pack(&out.codes, 2));
+        },
+    );
     let packed = packing::pack(&out.codes, 2);
-    b.case("unpack codes", 10, 100, out.codes.len() as f64 * 4.0, || {
+    b.case("unpack codes", 10, pack_reps, out.codes.len() as f64 * 4.0, || {
         std::hint::black_box(packing::unpack(&packed, out.codes.len(), 2).unwrap());
     });
     let msg = Message::from_pq(&out.config, batch, d, &out.codebooks, &out.codes);
-    b.case("wire encode quantized upload", 10, 200, msg.wire_len() as f64, || {
+    let wire_reps = reps_or(200);
+    b.case("wire encode quantized upload", 10, wire_reps, msg.wire_len() as f64, || {
         std::hint::black_box(msg.encode(0, 0));
     });
     let bytes = msg.encode(0, 0);
-    b.case("wire decode quantized upload", 10, 200, bytes.len() as f64, || {
+    b.case("wire decode quantized upload", 10, wire_reps, bytes.len() as f64, || {
         std::hint::black_box(Message::decode(&bytes).unwrap());
     });
     let raw = Message::ActivationUpload { z: z.clone(), b: batch, d };
-    b.case("wire encode raw activations (SplitFed)", 5, 50, work, || {
+    b.case("wire encode raw activations (SplitFed)", 5, reps_or(50), work, || {
         std::hint::black_box(raw.encode(0, 0));
     });
 
-    b.finish();
+    b.finish_to(Some("BENCH_quantizer.json"));
 }

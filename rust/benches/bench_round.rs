@@ -64,7 +64,7 @@ fn main() {
 
     if !cfg!(feature = "pjrt") || !std::path::Path::new("artifacts/manifest.json").exists() {
         println!("bench_round: no pjrt feature or artifacts, skipping the PJRT section");
-        b.finish();
+        b.finish_to(Some("BENCH_round.json"));
         return;
     }
     let rt = Arc::new(Runtime::open("artifacts").expect("runtime"));
@@ -154,5 +154,5 @@ fn main() {
         std::hint::black_box(rt.run(variant, "client_bwd", &bwd_inputs).unwrap());
     });
 
-    b.finish();
+    b.finish_to(Some("BENCH_round.json"));
 }

@@ -247,6 +247,13 @@ pub trait RoundAlgorithm: Sync {
     type Payload: Send;
     /// Survivor accumulator, reset at the start of every attempt.
     type Accum;
+    /// Per-cohort-slot reusable working buffers, owned by the engine and
+    /// lent to [`RoundAlgorithm::client_step`] for the step's duration.
+    /// The pool persists across rounds, so warm scratches make repeated
+    /// client steps allocation-quiet (the FedLite quantize path performs
+    /// zero heap allocations after round 1). Use `()` when the algorithm
+    /// has nothing to reuse.
+    type Scratch: Send + Default;
 
     /// RNG stream tag distinguishing this algorithm's client work streams
     /// (see [`client_stream_key`]).
@@ -267,6 +274,10 @@ pub trait RoundAlgorithm: Sync {
     /// One client's full round pipeline, run on a worker thread. `plan`
     /// injects the client's scheduled faults; bytes sent before a failure
     /// must be returned in `ClientOutput::bytes` (they crossed the wire).
+    /// `scratch` is this cohort slot's reusable buffer set — state left
+    /// in it must never affect results (it is lent slot-by-slot, warm
+    /// from arbitrary earlier rounds and attempts).
+    #[allow(clippy::too_many_arguments)]
     fn client_step(
         &self,
         prep: &Self::Prep,
@@ -275,6 +286,7 @@ pub trait RoundAlgorithm: Sync {
         client: usize,
         rng: &mut Rng,
         plan: &FaultPlan,
+        scratch: &mut Self::Scratch,
     ) -> anyhow::Result<ClientOutput<Self::Payload>>;
 
     /// Fresh survivor accumulator for one attempt.
@@ -327,11 +339,15 @@ struct RoundOutcome<Acc> {
 /// tick-based phase machine. See the module docs for the invariants.
 pub struct RoundEngine<'a, A: RoundAlgorithm> {
     algo: &'a mut A,
+    /// Per-cohort-slot scratch pool, lent to `client_step` and recovered
+    /// after the round barrier. Grows to the largest cohort seen and then
+    /// persists across rounds (the zero-allocation steady state).
+    scratches: Vec<A::Scratch>,
 }
 
 impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
     pub fn new(algo: &'a mut A) -> Self {
-        RoundEngine { algo }
+        RoundEngine { algo, scratches: Vec::new() }
     }
 
     /// Run the configured number of rounds — the trainers' `run` entry
@@ -364,7 +380,7 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
         let t0 = Instant::now();
         let prep = self.algo.prepare(round)?;
         self.algo.env().net.begin_round();
-        let outcome = drive(&*self.algo, &prep, round);
+        let outcome = drive(&*self.algo, &prep, round, &mut self.scratches);
         // close the round meter on *every* exit path: an error
         // mid-attempt must still archive this round's delta, or its bytes
         // bleed into the next round's delta and the per-round archive
@@ -422,6 +438,7 @@ fn drive<A: RoundAlgorithm>(
     algo: &A,
     prep: &A::Prep,
     round: usize,
+    scratches: &mut Vec<A::Scratch>,
 ) -> anyhow::Result<RoundOutcome<A::Accum>> {
     let env = algo.env();
     let mut driver = RoundDriver::with_max_attempts(env.max_attempts);
@@ -468,25 +485,43 @@ fn drive<A: RoundAlgorithm>(
                 // fork keys; `fork` never advances the root stream, so the
                 // fan-out is behavior-preserving at any worker count.
                 let attempt = driver.attempt();
-                let tasks: Vec<(usize, Rng, FaultPlan)> = cohort
+                // lend one warm scratch per cohort slot (the pool grows to
+                // the largest cohort once, then persists across rounds)
+                while scratches.len() < cohort.len() {
+                    scratches.push(A::Scratch::default());
+                }
+                let mut lent = std::mem::take(scratches);
+                let spare = lent.split_off(cohort.len());
+                let tasks: Vec<(usize, Rng, FaultPlan, A::Scratch)> = cohort
                     .iter()
                     .zip(&plans)
-                    .map(|(&ci, &plan)| {
+                    .zip(lent)
+                    .map(|((&ci, &plan), scratch)| {
                         let key =
                             client_stream_key(algo.stream_tag(), round as u64, ci, attempt);
-                        (ci, env.rng.fork(key), plan)
+                        (ci, env.rng.fork(key), plan, scratch)
                     })
                     .collect();
                 let msg = broadcast.as_ref().expect("broadcast built");
                 // fan the cohort across the worker threads; collection is
                 // the round barrier
-                results = scoped_parallel_map(
+                let pairs = scoped_parallel_map(
                     env.workers,
                     tasks,
-                    |_slot, (ci, mut crng, plan)| {
-                        algo.client_step(prep, msg, round as u32, ci, &mut crng, &plan)
+                    |_slot, (ci, mut crng, plan, mut scratch)| {
+                        let out = algo.client_step(
+                            prep, msg, round as u32, ci, &mut crng, &plan, &mut scratch,
+                        );
+                        (out, scratch)
                     },
                 );
+                // recover the scratches (slot order) before reducing
+                results = Vec::with_capacity(pairs.len());
+                for (out, scratch) in pairs {
+                    results.push(out);
+                    scratches.push(scratch);
+                }
+                scratches.extend(spare);
                 driver.advance();
             }
             RoundPhase::Aggregate => {
@@ -734,6 +769,7 @@ mod tests {
         type Prep = ();
         type Payload = ();
         type Accum = usize;
+        type Scratch = ();
 
         fn stream_tag(&self) -> u64 {
             0x7E57
@@ -772,6 +808,7 @@ mod tests {
             client: usize,
             _rng: &mut Rng,
             plan: &FaultPlan,
+            _scratch: &mut (),
         ) -> anyhow::Result<ClientOutput<()>> {
             let (_, n) = self.net.download(client, round, broadcast)?;
             let bytes = RoundBytes::client(0, n, 0, 1);

@@ -146,6 +146,9 @@ impl RoundAlgorithm for FedAvgTrainer {
     /// Wire-decoded model delta (global − local after H steps).
     type Payload = TensorList;
     type Accum = WeightedAggregator;
+    /// Nothing worth reusing: the step's buffers are the model-sized
+    /// tensors, which the aggregation takes ownership of anyway.
+    type Scratch = ();
 
     fn stream_tag(&self) -> u64 {
         0xFEDA
@@ -193,6 +196,7 @@ impl RoundAlgorithm for FedAvgTrainer {
         ci: usize,
         crng: &mut Rng,
         plan: &FaultPlan,
+        _scratch: &mut (),
     ) -> anyhow::Result<ClientOutput<TensorList>> {
         let nmetrics = self.spec.metrics.len();
         let mut up = 0usize;

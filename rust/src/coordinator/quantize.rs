@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use crate::config::QuantizerEngine;
 use crate::data::Array;
-use crate::quantizer::pq::{GroupedPq, PqConfig, PqOutput};
+use crate::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
 use crate::runtime::Runtime;
 use crate::util::rng::Rng;
 
@@ -63,6 +63,41 @@ impl QuantizeBackend {
         match self.engine {
             Engine::Native(_) => "native",
             Engine::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// The backend's native [`GroupedPq`] (both engines carry one — the
+    /// PJRT path uses it for gathering and host-side init). Lets callers
+    /// reconstruct server-side without building a second quantizer.
+    pub fn native_pq(&self) -> &GroupedPq {
+        match &self.engine {
+            Engine::Native(pq) => pq,
+            Engine::Pjrt { gather, .. } => gather,
+        }
+    }
+
+    /// Quantize one activation batch into caller-owned buffers. On the
+    /// native engine this is the zero-allocation steady-state path (see
+    /// [`GroupedPq::quantize_into`]); the PJRT path round-trips through
+    /// the artifact runtime and replaces `out` wholesale (the device
+    /// boundary allocates regardless).
+    pub fn quantize_into(
+        &self,
+        z: &[f32],
+        b: usize,
+        rng: &mut Rng,
+        scratch: &mut QuantizeScratch,
+        out: &mut PqOutput,
+    ) -> anyhow::Result<()> {
+        match &self.engine {
+            Engine::Native(pq) => {
+                pq.quantize_into(z, b, rng, scratch, out);
+                Ok(())
+            }
+            Engine::Pjrt { .. } => {
+                *out = self.quantize(z, b, rng)?;
+                Ok(())
+            }
         }
     }
 

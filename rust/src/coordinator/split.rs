@@ -51,6 +51,7 @@ use crate::data::{Array, FederatedDataset};
 use crate::metrics::{RoundRecord, RunLog, TaskMetric};
 use crate::models::ModelSpec;
 use crate::optim::Optimizer;
+use crate::quantizer::{PqOutput, QuantizeScratch};
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::{Tensor, TensorList};
 use crate::util::logging::{CsvWriter, JsonlWriter};
@@ -95,6 +96,16 @@ pub struct SplitPayload {
 pub struct SplitAccum {
     ws_agg: WeightedAggregator,
     wc_agg: WeightedAggregator,
+}
+
+/// Per-cohort-slot reusable buffers for the FedLite client step: the
+/// quantizer's scratch arena plus a warm [`PqOutput`]. Owned by the round
+/// engine's scratch pool, so after round 1 the quantize path performs no
+/// heap allocation (see `tests/alloc.rs`).
+#[derive(Default)]
+pub struct SplitScratch {
+    quant: QuantizeScratch,
+    pq: PqOutput,
 }
 
 impl SplitTrainer {
@@ -183,6 +194,7 @@ impl RoundAlgorithm for SplitTrainer {
     type Prep = SplitPrep;
     type Payload = SplitPayload;
     type Accum = SplitAccum;
+    type Scratch = SplitScratch;
 
     fn stream_tag(&self) -> u64 {
         0xC11E
@@ -229,6 +241,7 @@ impl RoundAlgorithm for SplitTrainer {
         ci: usize,
         crng: &mut Rng,
         plan: &FaultPlan,
+        scratch: &mut SplitScratch,
     ) -> anyhow::Result<ClientOutput<SplitPayload>> {
         let mut up_bytes = 0usize;
         let mut down_bytes = 0usize;
@@ -263,10 +276,10 @@ impl RoundAlgorithm for SplitTrainer {
             .rt
             .run(&prep.variant, "client_fwd", &assemble(&prep.fwd, &src)?)?
             .remove(0);
-        let z = z_arr
-            .as_f32()
-            .ok_or_else(|| anyhow::anyhow!("z dtype"))?
-            .to_vec();
+        let z = match z_arr {
+            Array::F32 { data, .. } => data,
+            _ => anyhow::bail!("z dtype"),
+        };
         if plan.drop_at == Some(DropPhase::AfterFwd) {
             // vanished before uploading: only the broadcast crossed the wire
             return Ok(ClientOutput::failed(
@@ -281,20 +294,30 @@ impl RoundAlgorithm for SplitTrainer {
         //    trains on what came off the wire.
         let (z_tilde_server, quant_rel_err) = match &self.quantizer {
             Some(qz) => {
-                let out = qz.quantize(&z, act_b, crng)?;
+                qz.quantize_into(&z, act_b, crng, &mut scratch.quant, &mut scratch.pq)?;
+                let out = &mut scratch.pq;
                 let msg = Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
                 let (decoded, n) = self.net.upload(ci, round, &msg)?;
                 up_bytes += n;
                 up_msgs += 1;
-                let codes = decoded.unpack_codes()?;
                 let cbs = match &decoded {
-                    Message::QuantizedUpload { codebooks, .. } => codebooks.clone(),
+                    Message::QuantizedUpload { codebooks, .. } => codebooks,
                     _ => anyhow::bail!("wrong upload variant"),
                 };
-                let native = crate::quantizer::GroupedPq::new(qz.config, d)?;
-                let rec = native.reconstruct(&cbs, &codes, act_b);
-                debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
-                (rec, out.relative_error(&z))
+                // the wire is lossless for codebooks + codes, so the
+                // decoded reconstruction equals the quantizer's own z~
+                // bit for bit; re-proving it (decode → reconstruct →
+                // compare) is debug-only — it used to build a second
+                // GroupedPq and re-reconstruct per client per round
+                if cfg!(debug_assertions) {
+                    let codes = decoded.unpack_codes()?;
+                    let rec = qz.native_pq().reconstruct(cbs, &codes, act_b);
+                    debug_assert_eq!(rec, out.z_tilde, "wire changed z~");
+                }
+                let rel = out.relative_error(&z);
+                // the server trains on the wire-equivalent z~; the buffer
+                // is lent out and recovered after the backward pass
+                (std::mem::take(&mut out.z_tilde), rel)
             }
             None => {
                 let msg = Message::ActivationUpload { z: z.clone(), b: act_b, d };
@@ -309,7 +332,12 @@ impl RoundAlgorithm for SplitTrainer {
         };
         if plan.drop_at == Some(DropPhase::AfterUpload) {
             // the activation upload landed (and is metered); the client is
-            // gone, so the server never trains on it
+            // gone, so the server never trains on it. The z~ buffer still
+            // goes back to the slot scratch — faulty rounds must not
+            // reintroduce steady-state allocations
+            if self.quantizer.is_some() {
+                scratch.pq.z_tilde = z_tilde_server;
+            }
             return Ok(ClientOutput::failed(
                 DropPhase::AfterUpload,
                 weight,
@@ -353,7 +381,13 @@ impl RoundAlgorithm for SplitTrainer {
         };
         if plan.drop_at == Some(DropPhase::BeforeGradUpload) {
             // uplink activations and the grad download are metered; the
-            // client-side gradient never comes back
+            // client-side gradient never comes back. Recover the z~
+            // buffer here too — this exit skips the backward pass
+            if self.quantizer.is_some() {
+                if let Array::F32 { data, .. } = z_tilde {
+                    scratch.pq.z_tilde = data;
+                }
+            }
             return Ok(ClientOutput::failed(
                 DropPhase::BeforeGradUpload,
                 weight,
@@ -376,6 +410,13 @@ impl RoundAlgorithm for SplitTrainer {
             .rt
             .run(&prep.variant, "client_bwd", &assemble(&prep.bwd, &src)?)?;
         let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
+        // hand the z~ buffer back to the slot scratch so the next round's
+        // quantize reuses it instead of allocating
+        if self.quantizer.is_some() {
+            if let Array::F32 { data, .. } = z_tilde {
+                scratch.pq.z_tilde = data;
+            }
+        }
 
         // 6. client-side grad sync (uplink)
         let cmsg = Message::ClientGrads { grads: message::tensors_to_payload(&wc_grads) };

@@ -5,13 +5,38 @@
 //! argmin ties broken toward the lowest centroid index, empty clusters
 //! keep their previous centroid. Initialization is either L distinct
 //! random rows (what the AOT artifacts receive) or k-means++.
+//!
+//! # The pruned hot path and its exactness contract
+//!
+//! [`KMeans::run_from_into`] is the zero-allocation kernel behind
+//! [`crate::quantizer::pq::GroupedPq::quantize_into`]. It carries
+//! Hamerly-style norm bounds across Lloyd iterations — a per-point upper
+//! bound on the distance to the assigned centroid, a per-point lower
+//! bound on the distance to every *other* centroid, and per-centroid
+//! drift tracking — so that most points skip the full L-centroid scan
+//! once the clustering starts to settle.
+//!
+//! Exactness is mandatory, not best-effort: the bound test is inflated by
+//! a conservative floating-point slack (see [`formula_slack`]) that
+//! covers the worst-case rounding of the `xn − 2·dot + cnorm` distance
+//! formula, so a point is only skipped when its previous assignment
+//! *provably* equals what the full scan would pick — including the
+//! lowest-index tie-break, which cannot fire under the strict separation
+//! the test requires. Any point that fails the test takes the verbatim
+//! naive scan ([`scan_point`], the same code path
+//! [`KMeans::assign_with_norms`] uses). Codes, per-point errors, and the
+//! f64 error-summation order are therefore bit-identical to the naive
+//! kernel at any worker count — enforced by the golden fixtures and the
+//! `prop_pruned_lloyd_matches_naive` property test.
 
+use crate::util::pool::scoped_chunks;
 use crate::util::rng::Rng;
 
 /// Centroid initialization strategy.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum KMeansInit {
     /// L distinct rows sampled uniformly (matches the PJRT artifact path).
+    #[default]
     RandomRows,
     /// k-means++ seeding (D² sampling) — better error at equal iterations.
     PlusPlus,
@@ -25,6 +50,96 @@ pub struct KMeans {
     pub init: KMeansInit,
 }
 
+/// Per-point pruning state: assignment plus the Hamerly bounds (in
+/// distance, not squared-distance, domain) and the final-pass formula
+/// distance. Struct-of-one-array keeps the assignment pass cache-friendly
+/// and lets [`scoped_chunks`] split the pass across workers.
+#[derive(Clone, Copy, Debug, Default)]
+struct PointState {
+    code: u32,
+    /// Upper bound on the true distance to the assigned centroid.
+    ub: f32,
+    /// Lower bound on the true distance to every other centroid.
+    lb: f32,
+    /// Formula distance to the assigned centroid (final pass only).
+    dist: f32,
+}
+
+/// Reusable buffers for [`KMeans::run_from_into`]: after the first call
+/// at a given `(n, l, d)` shape, subsequent runs perform no heap
+/// allocation (capacities only grow, asserted by `tests/alloc.rs`).
+#[derive(Default)]
+pub struct KMeansScratch {
+    /// `||x||²` per point — loop-invariant across Lloyd iterations.
+    xnorms: Vec<f32>,
+    /// `||x||` per point (feeds the float-error slack).
+    sqrt_xn: Vec<f32>,
+    /// `||c||²` per centroid, refreshed every assignment pass.
+    cnorm: Vec<f32>,
+    /// Per-point assignment + bounds.
+    states: Vec<PointState>,
+    /// Previous-iteration centroids (drift tracking).
+    old_cents: Vec<f32>,
+    /// Per-centroid drift `||c_new − c_old||` (inflated upper bound).
+    drift: Vec<f32>,
+    /// f64 accumulators for the Lloyd update.
+    sums: Vec<f64>,
+    counts: Vec<usize>,
+}
+
+impl KMeansScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn prepare(&mut self, n: usize, l: usize, d: usize) {
+        self.xnorms.resize(n, 0.0);
+        self.sqrt_xn.resize(n, 0.0);
+        self.cnorm.resize(l, 0.0);
+        self.states.resize(n, PointState::default());
+        self.old_cents.resize(l * d, 0.0);
+        self.drift.resize(l, 0.0);
+        self.sums.resize(l * d, 0.0);
+        self.counts.resize(l, 0);
+    }
+
+    /// Capacity fingerprint (pointer + capacity per buffer) — the
+    /// scratch-stability tests assert this does not change across
+    /// same-shape reuse.
+    pub fn capacity_fingerprint(&self) -> Vec<(usize, usize)> {
+        vec![
+            (self.xnorms.as_ptr() as usize, self.xnorms.capacity()),
+            (self.sqrt_xn.as_ptr() as usize, self.sqrt_xn.capacity()),
+            (self.cnorm.as_ptr() as usize, self.cnorm.capacity()),
+            (self.states.as_ptr() as usize, self.states.capacity()),
+            (self.old_cents.as_ptr() as usize, self.old_cents.capacity()),
+            (self.drift.as_ptr() as usize, self.drift.capacity()),
+            (self.sums.as_ptr() as usize, self.sums.capacity()),
+            (self.counts.as_ptr() as usize, self.counts.capacity()),
+        ]
+    }
+}
+
+/// Multiplicative inflation applied to every bound update; 8 ulps per
+/// operation is far beyond what one add/sqrt can lose.
+const BOUND_INFLATE: f32 = 1.0 + 8.0 * f32::EPSILON;
+const BOUND_DEFLATE: f32 = 1.0 - 8.0 * f32::EPSILON;
+
+/// Points-per-pass work threshold below which the assignment pass stays
+/// serial even when `workers > 1` (thread spawn would dominate).
+const PAR_MIN_WORK: usize = 1 << 17;
+
+/// Conservative bound on `|fl(xn − 2·dot + cnorm) − exact|`: standard
+/// dot-product error analysis gives ≤ (d+2)·u·(‖x‖+‖c‖)² with u = EPS/2;
+/// (d+16)·EPS provides ≥ 4× headroom, which also absorbs the rounding of
+/// the bound arithmetic itself. Overshooting only costs pruning rate,
+/// never correctness.
+#[inline]
+fn formula_slack(d: usize, sx: f32, cmax: f32) -> f32 {
+    let s = sx + cmax;
+    (d as f32 + 16.0) * f32::EPSILON * s * s
+}
+
 impl KMeans {
     pub fn new(l: usize, d: usize, iters: usize, init: KMeansInit) -> Self {
         assert!(l >= 1 && d >= 1);
@@ -33,23 +148,47 @@ impl KMeans {
 
     /// Pick initial centroids from `points` (`n x d`, flat row-major).
     pub fn init_centroids(&self, points: &[f32], n: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.l * self.d];
+        let mut idx = Vec::new();
+        self.init_centroids_into(points, n, rng, &mut idx, &mut out);
+        out
+    }
+
+    /// Buffer-reusing [`KMeans::init_centroids`]: writes the `[L, d]`
+    /// centroids into `out`, reusing `idx_scratch` for the row draw.
+    /// Consumes exactly the same RNG stream as the allocating version.
+    /// Allocation-free for `RandomRows` (the artifact/hot-path init);
+    /// `PlusPlus` still allocates its seeding buffers — it is not part
+    /// of the zero-alloc steady-state contract.
+    pub fn init_centroids_into(
+        &self,
+        points: &[f32],
+        n: usize,
+        rng: &mut Rng,
+        idx_scratch: &mut Vec<usize>,
+        out: &mut [f32],
+    ) {
         assert_eq!(points.len(), n * self.d);
+        assert_eq!(out.len(), self.l * self.d);
         assert!(n >= 1, "kmeans on empty point set");
         match self.init {
             KMeansInit::RandomRows => {
                 // L distinct rows when possible; wrap when n < L.
-                let mut out = Vec::with_capacity(self.l * self.d);
-                let idx = if n >= self.l {
-                    rng.choose_k(n, self.l)
+                if n >= self.l {
+                    rng.choose_k_into(n, self.l, idx_scratch);
                 } else {
-                    (0..self.l).map(|i| i % n).collect()
-                };
-                for i in idx {
-                    out.extend_from_slice(&points[i * self.d..(i + 1) * self.d]);
+                    idx_scratch.clear();
+                    idx_scratch.extend((0..self.l).map(|i| i % n));
                 }
-                out
+                for (slot, &i) in idx_scratch.iter().enumerate() {
+                    out[slot * self.d..(slot + 1) * self.d]
+                        .copy_from_slice(&points[i * self.d..(i + 1) * self.d]);
+                }
             }
-            KMeansInit::PlusPlus => self.plus_plus(points, n, rng),
+            KMeansInit::PlusPlus => {
+                let cents = self.plus_plus(points, n, rng);
+                out.copy_from_slice(&cents);
+            }
         }
     }
 
@@ -95,7 +234,8 @@ impl KMeans {
 
     /// Assignment with pre-computed `||x||^2` per point. `run_from` hoists
     /// the norm computation out of the Lloyd loop (§Perf: the points never
-    /// change across iterations, only the centroids do).
+    /// change across iterations, only the centroids do). This is the naive
+    /// full-scan reference the pruned kernel must match bit for bit.
     pub fn assign_with_norms(
         &self,
         points: &[f32],
@@ -114,17 +254,7 @@ impl KMeans {
         let mut total = 0.0f64;
         for i in 0..n {
             let x = &points[i * d..(i + 1) * d];
-            let xn = xnorms[i];
-            let mut best = 0usize;
-            let mut best_d = f32::INFINITY;
-            for j in 0..self.l {
-                let c = &centroids[j * d..(j + 1) * d];
-                let dist = xn - 2.0 * dot(x, c) + cnorm[j];
-                if dist < best_d {
-                    best_d = dist;
-                    best = j;
-                }
-            }
+            let (best, best_d, _) = scan_point(x, xnorms[i], centroids, &cnorm, d);
             codes[i] = best as u32;
             total += best_d.max(0.0) as f64;
         }
@@ -175,7 +305,8 @@ impl KMeans {
     }
 
     /// Lloyd iterations from given initial centroids (mutated in place).
-    /// Returns `(codes, final_sq_error)`.
+    /// Returns `(codes, final_sq_error)`. Convenience wrapper over
+    /// [`KMeans::run_from_into`] with a throwaway scratch.
     pub fn run_from(
         &self,
         points: &[f32],
@@ -183,14 +314,162 @@ impl KMeans {
         centroids: &mut Vec<f32>,
     ) -> RunOut {
         let mut codes = vec![0u32; n];
-        // §Perf: point norms are loop-invariant across Lloyd iterations.
-        let xnorms = point_norms(points, n, self.d);
-        for _ in 0..self.iters {
-            self.assign_with_norms(points, &xnorms, n, centroids, &mut codes);
-            self.update(points, n, &codes, centroids);
-        }
-        let err = self.assign_with_norms(points, &xnorms, n, centroids, &mut codes);
+        let mut scratch = KMeansScratch::default();
+        let err = self.run_from_into(points, n, centroids, &mut codes, &mut scratch, 1);
         RunOut { codes, err }
+    }
+
+    /// The pruned, allocation-free Lloyd kernel: `iters` iterations from
+    /// the given centroids (mutated in place), codes written into the
+    /// caller's buffer, scratch reused across calls. When `workers > 1`
+    /// and the pass is large enough, the assignment chunks over points via
+    /// [`scoped_chunks`]; per-point work is independent and the error is
+    /// summed serially in point order afterwards, so results are
+    /// bit-identical at any worker count. See the module docs for the
+    /// exactness contract of the pruning.
+    pub fn run_from_into(
+        &self,
+        points: &[f32],
+        n: usize,
+        centroids: &mut [f32],
+        codes: &mut [u32],
+        scratch: &mut KMeansScratch,
+        workers: usize,
+    ) -> f64 {
+        assert_eq!(points.len(), n * self.d);
+        assert_eq!(centroids.len(), self.l * self.d);
+        assert_eq!(codes.len(), n);
+        let d = self.d;
+        scratch.prepare(n, self.l, d);
+        // §Perf: point norms are loop-invariant across Lloyd iterations.
+        for i in 0..n {
+            let x = &points[i * d..(i + 1) * d];
+            let xn = dot(x, x);
+            scratch.xnorms[i] = xn;
+            scratch.sqrt_xn[i] = xn.max(0.0).sqrt();
+        }
+        let mut cmax = refresh_cnorm(centroids, self.l, d, &mut scratch.cnorm);
+        self.assign_pass(points, centroids, cmax, scratch, true, self.iters == 0, workers);
+        for it in 0..self.iters {
+            self.update_in(points, n, centroids, scratch);
+            cmax = refresh_cnorm(centroids, self.l, d, &mut scratch.cnorm);
+            let finalize = it + 1 == self.iters;
+            self.assign_pass(points, centroids, cmax, scratch, false, finalize, workers);
+        }
+        // reduce codes + error in point order — the same f64 summation
+        // order the naive final assignment uses
+        let mut total = 0.0f64;
+        for (code, st) in codes.iter_mut().zip(&scratch.states[..n]) {
+            *code = st.code;
+            total += st.dist.max(0.0) as f64;
+        }
+        total
+    }
+
+    /// One assignment pass over all points. `full` forces the naive scan
+    /// (first pass, no bounds yet); `finalize` records the per-point
+    /// formula distance for the error reduction.
+    #[allow(clippy::too_many_arguments)]
+    fn assign_pass(
+        &self,
+        points: &[f32],
+        centroids: &[f32],
+        cmax: f32,
+        scratch: &mut KMeansScratch,
+        full: bool,
+        finalize: bool,
+        workers: usize,
+    ) {
+        let d = self.d;
+        let l = self.l;
+        let n = scratch.states.len();
+        let xnorms = &scratch.xnorms;
+        let sqrt_xn = &scratch.sqrt_xn;
+        let cnorm = &scratch.cnorm;
+        let scan = |start: usize, chunk: &mut [PointState]| {
+            for (k, st) in chunk.iter_mut().enumerate() {
+                let i = start + k;
+                let x = &points[i * d..(i + 1) * d];
+                let xn = xnorms[i];
+                let e = formula_slack(d, sqrt_xn[i], cmax);
+                if !full {
+                    // Hamerly skip test: the assigned centroid provably
+                    // stays the formula-argmin (strict separation beats
+                    // the combined float slack, so no tie is possible)
+                    let keep = st.lb > 0.0 && st.ub * st.ub + 2.0 * e < st.lb * st.lb;
+                    if keep {
+                        if finalize {
+                            let j = st.code as usize;
+                            let c = &centroids[j * d..(j + 1) * d];
+                            st.dist = xn - 2.0 * dot(x, c) + cnorm[j];
+                        }
+                        continue;
+                    }
+                }
+                let (best, best_d, second) = scan_point(x, xn, centroids, cnorm, d);
+                st.code = best as u32;
+                st.ub = (best_d.max(0.0) + e).sqrt() * BOUND_INFLATE;
+                st.lb = (second - e).max(0.0).sqrt() * BOUND_DEFLATE;
+                if finalize {
+                    st.dist = best_d;
+                }
+            }
+        };
+        if workers > 1 && n * l * d >= PAR_MIN_WORK {
+            scoped_chunks(&mut scratch.states, workers.min(n), |_ci, start, chunk| {
+                scan(start, chunk)
+            });
+        } else {
+            scan(0, &mut scratch.states[..n]);
+        }
+    }
+
+    /// Scratch-backed Lloyd update (identical arithmetic to
+    /// [`KMeans::update`]) plus centroid-drift bound maintenance.
+    fn update_in(
+        &self,
+        points: &[f32],
+        n: usize,
+        centroids: &mut [f32],
+        scratch: &mut KMeansScratch,
+    ) {
+        let d = self.d;
+        scratch.old_cents.copy_from_slice(centroids);
+        scratch.sums.iter_mut().for_each(|s| *s = 0.0);
+        scratch.counts.iter_mut().for_each(|c| *c = 0);
+        for i in 0..n {
+            let j = scratch.states[i].code as usize;
+            scratch.counts[j] += 1;
+            let x = &points[i * d..(i + 1) * d];
+            let s = &mut scratch.sums[j * d..(j + 1) * d];
+            for (sv, xv) in s.iter_mut().zip(x) {
+                *sv += *xv as f64;
+            }
+        }
+        for j in 0..self.l {
+            if scratch.counts[j] > 0 {
+                let inv = 1.0 / scratch.counts[j] as f64;
+                for k in 0..d {
+                    centroids[j * d + k] = (scratch.sums[j * d + k] * inv) as f32;
+                }
+            }
+        }
+        // per-centroid drift (inflated upper bound on ‖c_new − c_old‖);
+        // empty clusters kept their centroid, so their drift is exactly 0
+        let mut dmax = 0.0f32;
+        for j in 0..self.l {
+            let s2 = sq_dist(
+                &scratch.old_cents[j * d..(j + 1) * d],
+                &centroids[j * d..(j + 1) * d],
+            );
+            let dj = (s2 * (1.0 + d as f32 * f32::EPSILON)).sqrt() * BOUND_INFLATE;
+            scratch.drift[j] = dj;
+            dmax = dmax.max(dj);
+        }
+        for st in scratch.states[..n].iter_mut() {
+            st.ub = (st.ub + scratch.drift[st.code as usize]) * BOUND_INFLATE;
+            st.lb = ((st.lb - dmax) * BOUND_DEFLATE).max(0.0);
+        }
     }
 }
 
@@ -212,11 +491,89 @@ fn point_norms(points: &[f32], n: usize, d: usize) -> Vec<f32> {
         .collect()
 }
 
-/// 4-lane unrolled dot product — the assignment inner loop is dominated by
-/// short dots (dsub 8–32); independent partial sums let the compiler keep
-/// four accumulators live instead of a serial FP dependency chain (§Perf).
+/// Refresh `||c||²` per centroid; returns an inflated upper bound on
+/// `max_j ||c_j||` (feeds the float-error slack).
+fn refresh_cnorm(centroids: &[f32], l: usize, d: usize, cnorm: &mut [f32]) -> f32 {
+    let mut cmax2 = 0.0f32;
+    for (j, cn) in cnorm.iter_mut().enumerate().take(l) {
+        let c = &centroids[j * d..(j + 1) * d];
+        *cn = dot(c, c);
+        cmax2 = cmax2.max(*cn);
+    }
+    cmax2.max(0.0).sqrt() * BOUND_INFLATE
+}
+
+/// The naive scan over all L centroids for one point: the formula argmin
+/// with the lowest-index tie-break, plus the second-best distance for the
+/// pruning bounds. Tracking `second` adds comparisons but never changes
+/// which `(best, best_d)` the original loop produced.
+#[inline]
+fn scan_point(
+    x: &[f32],
+    xn: f32,
+    centroids: &[f32],
+    cnorm: &[f32],
+    d: usize,
+) -> (usize, f32, f32) {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    let mut second = f32::INFINITY;
+    for (j, cn) in cnorm.iter().enumerate() {
+        let c = &centroids[j * d..(j + 1) * d];
+        let dist = xn - 2.0 * dot(x, c) + cn;
+        if dist < best_d {
+            second = best_d;
+            best_d = dist;
+            best = j;
+        } else if dist < second {
+            second = dist;
+        }
+    }
+    (best, best_d, second)
+}
+
+/// Unrolled dot product — the assignment inner loop is dominated by short
+/// dots (dsub 8–32); independent partial sums let the compiler keep four
+/// accumulators live instead of a serial FP dependency chain (§Perf).
+/// `dsub % 8 == 0` (the paper's FEMNIST shapes) takes the wide variant.
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
+    if a.len() % 8 == 0 {
+        dot8(a, b)
+    } else {
+        dot4(a, b)
+    }
+}
+
+/// 8-elements-per-iteration variant for `len % 8 == 0`. Deliberately
+/// keeps the *same four accumulators in the same update order* as
+/// [`dot4`] (two of its iterations unrolled), so the result is
+/// bit-identical to the 4-lane path — an 8-accumulator version would
+/// round differently and break the golden fixtures. The win is halved
+/// loop overhead and wider instruction scheduling, not a different sum.
+#[inline]
+fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % 8, 0);
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 8;
+    for k in 0..chunks {
+        let i = k * 8;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+        acc[0] += a[i + 4] * b[i + 4];
+        acc[1] += a[i + 5] * b[i + 5];
+        acc[2] += a[i + 6] * b[i + 6];
+        acc[3] += a[i + 7] * b[i + 7];
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3])
+}
+
+/// 4-lane unrolled dot with a scalar tail (any length).
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = [0.0f32; 4];
     let chunks = a.len() / 4;
@@ -328,6 +685,32 @@ mod tests {
     }
 
     #[test]
+    fn pruned_tie_break_matches_naive_on_duplicate_centroids() {
+        // duplicated centroids + several iterations: skipped points must
+        // keep reporting the lowest index, exactly like the full scan
+        let mut rng = Rng::new(11);
+        let n = 40;
+        let pts: Vec<f32> = (0..n * 2).map(|_| (rng.below(3) as f32) - 1.0).collect();
+        let km = KMeans::new(4, 2, 5, KMeansInit::RandomRows);
+        let mut cents = vec![0.5f32, 0.5, 0.5, 0.5, -0.5, -0.5, 2.0, 2.0];
+        let mut cents_naive = cents.clone();
+        // naive reference: the historical assign/update sequence
+        let mut codes_naive = vec![0u32; n];
+        let xn = point_norms(&pts, n, 2);
+        for _ in 0..km.iters {
+            km.assign_with_norms(&pts, &xn, n, &cents_naive, &mut codes_naive);
+            km.update(&pts, n, &codes_naive, &mut cents_naive);
+        }
+        let err_naive = km.assign_with_norms(&pts, &xn, n, &cents_naive, &mut codes_naive);
+        let mut codes = vec![0u32; n];
+        let mut scratch = KMeansScratch::default();
+        let err = km.run_from_into(&pts, n, &mut cents, &mut codes, &mut scratch, 1);
+        assert_eq!(codes, codes_naive);
+        assert_eq!(cents, cents_naive);
+        assert_eq!(err.to_bits(), err_naive.to_bits());
+    }
+
+    #[test]
     fn more_clusters_than_points_wraps() {
         let pts = vec![1.0f32, 2.0, 3.0, 4.0];
         let km = KMeans::new(4, 2, 2, KMeansInit::RandomRows);
@@ -346,5 +729,33 @@ mod tests {
         let (cents, _, _) = km.run(&pts, 3, &mut rng);
         assert!((cents[0] - 2.0).abs() < 1e-6);
         assert!((cents[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dot8_is_bit_identical_to_dot4() {
+        let mut rng = Rng::new(21);
+        for len in [8usize, 16, 24, 32, 64, 128] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal() as f32 * 3.0).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal() as f32 * 3.0).collect();
+            assert_eq!(dot8(&a, &b).to_bits(), dot4(&a, &b).to_bits(), "len={len}");
+        }
+    }
+
+    #[test]
+    fn scratch_capacity_stable_across_same_shape_runs() {
+        let mut rng = Rng::new(9);
+        let (n, d, l) = (120, 8, 6);
+        let pts: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let km = KMeans::new(l, d, 4, KMeansInit::RandomRows);
+        let mut scratch = KMeansScratch::default();
+        let mut codes = vec![0u32; n];
+        let mut cents = km.init_centroids(&pts, n, &mut rng);
+        km.run_from_into(&pts, n, &mut cents, &mut codes, &mut scratch, 1);
+        let fp = scratch.capacity_fingerprint();
+        for _ in 0..3 {
+            let mut c2 = cents.clone();
+            km.run_from_into(&pts, n, &mut c2, &mut codes, &mut scratch, 1);
+            assert_eq!(scratch.capacity_fingerprint(), fp, "scratch reallocated");
+        }
     }
 }

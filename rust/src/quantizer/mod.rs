@@ -20,5 +20,5 @@ pub mod packing;
 pub mod pq;
 
 pub use cost::{compressed_bits, compression_ratio, CostModel};
-pub use kmeans::{KMeans, KMeansInit};
-pub use pq::{GroupedPq, PqConfig, PqOutput};
+pub use kmeans::{KMeans, KMeansInit, KMeansScratch};
+pub use pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};

@@ -9,11 +9,11 @@
 //! is vanilla product quantization (per-subvector-position codebooks);
 //! `R = 1` is the paper's preferred configuration.
 
-use crate::quantizer::kmeans::{sq_dist, KMeans, KMeansInit};
+use crate::quantizer::kmeans::{sq_dist, KMeans, KMeansInit, KMeansScratch};
 use crate::util::rng::Rng;
 
 /// Quantizer hyper-parameters (paper notation).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct PqConfig {
     /// Number of subvectors each activation vector is split into.
     pub q: usize,
@@ -59,8 +59,10 @@ impl PqConfig {
     }
 }
 
-/// Result of quantizing one activation batch.
-#[derive(Clone, Debug)]
+/// Result of quantizing one activation batch. [`GroupedPq::quantize_into`]
+/// reuses the buffers of a caller-owned instance (capacities only grow),
+/// so a warm `PqOutput` makes the steady-state hot path allocation-free.
+#[derive(Clone, Debug, Default)]
 pub struct PqOutput {
     /// `[R, L, dsub]` flat codebooks.
     pub codebooks: Vec<f32>,
@@ -95,6 +97,54 @@ impl PqOutput {
     }
 }
 
+/// Reusable working buffers for [`GroupedPq::quantize_into`]: the gather
+/// arena (all `R` groups back to back), per-group reconstruction slices,
+/// per-group error slots (reduced in group order), the init row-draw
+/// buffer, and one [`KMeansScratch`] per fan-out lane. After warm-up at a
+/// fixed shape, the quantize path allocates nothing (`tests/alloc.rs`).
+#[derive(Default)]
+pub struct QuantizeScratch {
+    /// `[R][Ng, dsub]` gathered groups (`b·d` floats total).
+    groups: Vec<f32>,
+    /// `[R][Ng, dsub]` per-group reconstructions.
+    recon: Vec<f32>,
+    /// Per-group final squared error, reduced serially in group order.
+    group_err: Vec<f64>,
+    /// Index buffer for the RandomRows draw (`Rng::choose_k_into`).
+    init_idx: Vec<usize>,
+    /// One k-means scratch per fan-out lane (lane 0 is the serial path).
+    kms: Vec<KMeansScratch>,
+    /// Fan-out width: across groups when `R > 1`, across points inside
+    /// the single group otherwise. `0`/`1` = fully serial — what the
+    /// cohort workers use, since the round engine already parallelizes
+    /// over clients. Results are bit-identical at any setting.
+    pub workers: usize,
+}
+
+impl QuantizeScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Scratch sized for nested fan-out inside one quantize call.
+    pub fn with_workers(workers: usize) -> Self {
+        QuantizeScratch { workers, ..Default::default() }
+    }
+
+    /// Capacity fingerprint for scratch-stability assertions (pointer +
+    /// capacity per buffer; lane scratches excluded — they have their
+    /// own fingerprints).
+    pub fn capacity_fingerprint(&self) -> Vec<(usize, usize)> {
+        vec![
+            (self.groups.as_ptr() as usize, self.groups.capacity()),
+            (self.recon.as_ptr() as usize, self.recon.capacity()),
+            (self.group_err.as_ptr() as usize, self.group_err.capacity()),
+            (self.init_idx.as_ptr() as usize, self.init_idx.capacity()),
+            (self.kms.as_ptr() as usize, self.kms.capacity()),
+        ]
+    }
+}
+
 /// The grouped product quantizer engine.
 pub struct GroupedPq {
     pub config: PqConfig,
@@ -111,14 +161,22 @@ impl GroupedPq {
     /// `[Ng, dsub]` buffer (paper Fig. 2 steps i–ii).
     pub fn gather_group(&self, z: &[f32], b: usize, g: usize, out: &mut Vec<f32>) {
         let c = &self.config;
-        let dsub = c.dsub(self.d);
-        let per_group = c.q / c.r;
+        let chunk = (c.q / c.r) * c.dsub(self.d);
         out.clear();
-        out.reserve(b * per_group * dsub);
+        out.resize(b * chunk, 0.0);
+        self.gather_group_into(z, b, g, out);
+    }
+
+    /// Allocation-free [`GroupedPq::gather_group`] writing into a caller
+    /// slice of exactly `Ng * dsub` floats.
+    pub fn gather_group_into(&self, z: &[f32], b: usize, g: usize, out: &mut [f32]) {
+        let c = &self.config;
+        let chunk = (c.q / c.r) * c.dsub(self.d);
+        assert_eq!(out.len(), b * chunk);
         for j in 0..b {
             let row = &z[j * self.d..(j + 1) * self.d];
-            let start = g * per_group * dsub;
-            out.extend_from_slice(&row[start..start + per_group * dsub]);
+            out[j * chunk..(j + 1) * chunk]
+                .copy_from_slice(&row[g * chunk..(g + 1) * chunk]);
         }
     }
 
@@ -134,36 +192,161 @@ impl GroupedPq {
         }
     }
 
-    /// Quantize one activation batch `z [b, d]`.
+    /// Quantize one activation batch `z [b, d]`. Convenience wrapper over
+    /// [`GroupedPq::quantize_into`] with throwaway buffers (bit-identical
+    /// output; the `_into` form is the steady-state hot path).
     pub fn quantize(&self, z: &[f32], b: usize, rng: &mut Rng) -> PqOutput {
+        let mut scratch = QuantizeScratch::default();
+        let mut out = PqOutput::default();
+        self.quantize_into(z, b, rng, &mut scratch, &mut out);
+        out
+    }
+
+    /// Quantize one activation batch `z [b, d]` into caller-owned buffers.
+    ///
+    /// After the first call at a given `(b, d, config)` shape, repeated
+    /// calls perform **no heap allocation**: every working buffer lives in
+    /// `scratch`, and `out`'s vectors are resized in place (capacities
+    /// only grow). Results are bit-identical to [`GroupedPq::quantize`]
+    /// and to the pre-scratch serial engine at any `scratch.workers`
+    /// setting:
+    ///
+    /// * gathering and centroid init run serially in group order, so the
+    ///   RNG stream is consumed exactly as before (the Lloyd runs never
+    ///   touch the RNG);
+    /// * with `R > 1` and `workers > 1`, the per-group k-means runs fan
+    ///   out across scoped threads over disjoint output slices, and the
+    ///   error reduction happens serially in group-slot order afterwards
+    ///   (the same determinism contract as the cohort engine);
+    /// * with `R == 1`, the assignment pass inside the single k-means run
+    ///   chunks over points instead (see [`KMeans::run_from_into`]).
+    pub fn quantize_into(
+        &self,
+        z: &[f32],
+        b: usize,
+        rng: &mut Rng,
+        scratch: &mut QuantizeScratch,
+        out: &mut PqOutput,
+    ) {
         assert_eq!(z.len(), b * self.d, "z len vs b*d");
         let c = self.config;
         let dsub = c.dsub(self.d);
         let ng = c.group_size(b);
+        let gsz = ng * dsub;
+        let cbsz = c.l * dsub;
         let km = KMeans::new(c.l, dsub, c.iters, c.init);
+        let workers = scratch.workers.max(1);
 
-        let mut codebooks = Vec::with_capacity(c.r * c.l * dsub);
-        let mut codes = Vec::with_capacity(c.r * ng);
-        let mut z_tilde = vec![0.0f32; b * self.d];
-        let mut sq_error = 0.0f64;
-        let mut group_buf: Vec<f32> = Vec::new();
-        let mut recon = vec![0.0f32; ng * dsub];
+        out.config = c;
+        out.b = b;
+        out.d = self.d;
+        out.codebooks.resize(c.r * cbsz, 0.0);
+        out.codes.resize(c.r * ng, 0);
+        out.z_tilde.resize(b * self.d, 0.0);
+        scratch.groups.resize(c.r * gsz, 0.0);
+        scratch.recon.resize(c.r * gsz, 0.0);
+        scratch.group_err.resize(c.r, 0.0);
 
+        // phase 1 (serial): gather every group and draw its initial
+        // centroids directly into the codebook slots — the RNG is only
+        // consumed here, in group order, exactly like the serial engine
         for g in 0..c.r {
-            self.gather_group(z, b, g, &mut group_buf);
-            let mut cents = km.init_centroids(&group_buf, ng, rng);
-            let out = km.run_from(&group_buf, ng, &mut cents);
-            sq_error += out.err;
-            for (i, &code) in out.codes.iter().enumerate() {
-                let src = &cents[code as usize * dsub..(code as usize + 1) * dsub];
-                recon[i * dsub..(i + 1) * dsub].copy_from_slice(src);
-            }
-            self.scatter_group(&recon, b, g, &mut z_tilde);
-            codebooks.extend_from_slice(&cents);
-            codes.extend(out.codes);
+            let grp = &mut scratch.groups[g * gsz..(g + 1) * gsz];
+            self.gather_group_into(z, b, g, grp);
+            km.init_centroids_into(
+                grp,
+                ng,
+                rng,
+                &mut scratch.init_idx,
+                &mut out.codebooks[g * cbsz..(g + 1) * cbsz],
+            );
         }
 
-        PqOutput { codebooks, codes, z_tilde, sq_error, config: c, b, d: self.d }
+        // phase 2: per-group Lloyd runs + group-local reconstruction,
+        // fanned across lanes when there are many codebooks
+        let lanes = if c.r > 1 { workers.min(c.r) } else { 1 };
+        while scratch.kms.len() < lanes {
+            scratch.kms.push(KMeansScratch::default());
+        }
+        let run_group = |g: usize,
+                         cb: &mut [f32],
+                         codes: &mut [u32],
+                         rec: &mut [f32],
+                         kms: &mut KMeansScratch,
+                         inner_workers: usize|
+         -> f64 {
+            let grp = &scratch.groups[g * gsz..(g + 1) * gsz];
+            let err = km.run_from_into(grp, ng, cb, codes, kms, inner_workers);
+            for (i, &code) in codes.iter().enumerate() {
+                let src = &cb[code as usize * dsub..(code as usize + 1) * dsub];
+                rec[i * dsub..(i + 1) * dsub].copy_from_slice(src);
+            }
+            err
+        };
+        if lanes > 1 {
+            // contiguous group ranges per lane over disjoint output slices
+            let base = c.r / lanes;
+            let rem = c.r % lanes;
+            std::thread::scope(|s| {
+                let mut cb_rest: &mut [f32] = &mut out.codebooks;
+                let mut code_rest: &mut [u32] = &mut out.codes;
+                let mut recon_rest: &mut [f32] = &mut scratch.recon;
+                let mut err_rest: &mut [f64] = &mut scratch.group_err;
+                let mut kms_rest: &mut [KMeansScratch] = &mut scratch.kms;
+                let run_group = &run_group;
+                let mut g0 = 0usize;
+                for lane in 0..lanes {
+                    let glen = base + usize::from(lane < rem);
+                    let (cb, t) = cb_rest.split_at_mut(glen * cbsz);
+                    cb_rest = t;
+                    let (codes, t) = code_rest.split_at_mut(glen * ng);
+                    code_rest = t;
+                    let (rec, t) = recon_rest.split_at_mut(glen * gsz);
+                    recon_rest = t;
+                    let (errs, t) = err_rest.split_at_mut(glen);
+                    err_rest = t;
+                    let (kms, t) = kms_rest.split_at_mut(1);
+                    kms_rest = t;
+                    let start = g0;
+                    s.spawn(move || {
+                        for k in 0..glen {
+                            errs[k] = run_group(
+                                start + k,
+                                &mut cb[k * cbsz..(k + 1) * cbsz],
+                                &mut codes[k * ng..(k + 1) * ng],
+                                &mut rec[k * gsz..(k + 1) * gsz],
+                                &mut kms[0],
+                                1,
+                            );
+                        }
+                    });
+                    g0 += glen;
+                }
+            });
+        } else {
+            let (kms, _) = scratch.kms.split_at_mut(1);
+            let (recon, _) = scratch.recon.split_at_mut(c.r * gsz);
+            let (errs, _) = scratch.group_err.split_at_mut(c.r);
+            for g in 0..c.r {
+                errs[g] = run_group(
+                    g,
+                    &mut out.codebooks[g * cbsz..(g + 1) * cbsz],
+                    &mut out.codes[g * ng..(g + 1) * ng],
+                    &mut recon[g * gsz..(g + 1) * gsz],
+                    &mut kms[0],
+                    workers,
+                );
+            }
+        }
+
+        // phase 3 (serial): scatter + error reduction in group-slot order
+        // (the f64 summation order of the serial engine)
+        let mut sq_error = 0.0f64;
+        for g in 0..c.r {
+            self.scatter_group(&scratch.recon[g * gsz..(g + 1) * gsz], b, g, &mut out.z_tilde);
+            sq_error += scratch.group_err[g];
+        }
+        out.sq_error = sq_error;
     }
 
     /// Reconstruct `z_tilde` from codebooks + codes (server side).

@@ -1,12 +1,33 @@
 //! Minimal benchmark harness (criterion is unavailable offline).
 //!
-//! `cargo bench` targets use `harness = false` and call [`Bench::run`]:
-//! warmup, N timed iterations, mean/min/max/p50 reporting, and CSV
+//! `cargo bench` targets use `harness = false` and call [`Bench::case`]:
+//! warmup, N timed iterations, mean/min/max/p50 reporting, and CSV + JSON
 //! persistence under `results/bench/` so §Perf before/after numbers are
-//! reproducible files, not terminal scrollback.
+//! reproducible files, not terminal scrollback. [`Bench::finish_to`]
+//! additionally writes a repo-root trajectory file (`BENCH_<suite>.json`)
+//! that CI regenerates and diffs across PRs.
+//!
+//! # JSON schema (`fedlite-bench-v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "fedlite-bench-v1",
+//!   "suite": "quantizer",
+//!   "rows": [
+//!     {"case": "quantize q=288 R=1 L=32 iters=8", "iters": 5,
+//!      "ns_per_iter": 1234567.0, "mean_s": 1.234567e-3,
+//!      "p50_s": 1.2e-3, "min_s": 1.1e-3, "max_s": 1.4e-3,
+//!      "mb_per_s": 598.2}
+//!   ]
+//! }
+//! ```
+//!
+//! `ns_per_iter` is the mean over timed iterations; `mb_per_s` is 0 when
+//! the case declared no per-iteration work amount.
 
 use std::time::Instant;
 
+use crate::util::json::{Object, Value};
 use crate::util::logging::CsvWriter;
 
 /// One benchmark suite (one `cargo bench` target).
@@ -23,6 +44,21 @@ pub struct Stats {
     pub min: f64,
     pub max: f64,
     pub p50: f64,
+}
+
+/// Resolve an iteration-count knob against the `FEDLITE_BENCH_REPS` env
+/// var (CI runs the suites with reduced reps; 0/garbage means "default").
+pub fn reps_or(default: usize) -> usize {
+    std::env::var("FEDLITE_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or(default)
+}
+
+/// Whether `FEDLITE_BENCH_SMALL` asks for the reduced problem shape.
+pub fn small_shape() -> bool {
+    std::env::var("FEDLITE_BENCH_SMALL").map(|v| v == "1").unwrap_or(false)
 }
 
 impl Bench {
@@ -64,8 +100,59 @@ impl Bench {
         stats
     }
 
-    /// Write the suite's CSV under `results/bench/<name>.csv`.
+    /// Machine-readable view of the suite (schema `fedlite-bench-v1`).
+    pub fn to_json(&self) -> Value {
+        let mut root = Object::new();
+        root.insert("schema", Value::Str("fedlite-bench-v1".into()));
+        root.insert("suite", Value::Str(self.name.clone()));
+        let rows = self
+            .rows
+            .iter()
+            .map(|(label, s, thr)| {
+                let mut row = Object::new();
+                row.insert("case", Value::Str(label.clone()));
+                row.insert("iters", Value::from_usize(s.iters));
+                row.insert("ns_per_iter", Value::Num(s.mean * 1e9));
+                row.insert("mean_s", Value::Num(s.mean));
+                row.insert("p50_s", Value::Num(s.p50));
+                row.insert("min_s", Value::Num(s.min));
+                row.insert("max_s", Value::Num(s.max));
+                row.insert("mb_per_s", Value::Num(thr / 1e6));
+                Value::Obj(row)
+            })
+            .collect();
+        root.insert("rows", Value::Arr(rows));
+        Value::Obj(root)
+    }
+
+    /// Write the suite's CSV + JSON under `results/bench/<name>.{csv,json}`.
     pub fn finish(self) {
+        self.finish_to(None);
+    }
+
+    /// [`Bench::finish`] plus a repo-root perf-trajectory copy of the JSON
+    /// (e.g. `BENCH_quantizer.json`) that CI regenerates and diffs.
+    pub fn finish_to(self, trajectory: Option<&str>) {
+        let json = self.to_json();
+        let json_path = format!("results/bench/{}.json", self.name);
+        if std::fs::create_dir_all("results/bench").is_ok()
+            && std::fs::write(&json_path, json.to_string_pretty()).is_ok()
+        {
+            println!("(wrote {json_path})");
+        }
+        if let Some(path) = trajectory {
+            // resolve relative trajectory paths against the workspace root
+            // (this package lives in rust/), not the cwd: cargo bench runs
+            // harness binaries from the package root
+            let p = if std::path::Path::new(path).is_absolute() {
+                std::path::PathBuf::from(path)
+            } else {
+                std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/..")).join(path)
+            };
+            if std::fs::write(&p, json.to_string_pretty()).is_ok() {
+                println!("(wrote {})", p.display());
+            }
+        }
         let path = format!("results/bench/{}.csv", self.name);
         if let Ok(mut csv) = CsvWriter::create(
             &path,
@@ -110,5 +197,25 @@ mod tests {
         let s = b.case("noop", 1, 10, 0.0, || { std::hint::black_box(1 + 1); });
         assert!(s.min <= s.p50 && s.p50 <= s.max);
         assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn json_schema_well_formed() {
+        let mut b = Bench::new("json-test");
+        b.case("a", 0, 3, 8.0, || { std::hint::black_box(2 * 2); });
+        b.case("b", 0, 3, 0.0, || { std::hint::black_box(3 * 3); });
+        let v = b.to_json();
+        assert_eq!(v.get("schema").as_str(), Some("fedlite-bench-v1"));
+        assert_eq!(v.get("suite").as_str(), Some("json-test"));
+        let rows = v.get("rows").as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("case").as_str(), Some("a"));
+        assert_eq!(rows[0].get("iters").as_usize(), Some(3));
+        assert!(rows[0].get("ns_per_iter").as_f64().unwrap() > 0.0);
+        assert!(rows[0].get("mb_per_s").as_f64().unwrap() >= 0.0);
+        assert_eq!(rows[1].get("mb_per_s").as_f64(), Some(0.0));
+        // round-trips through the in-house parser
+        let back = crate::util::json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(back, v);
     }
 }

@@ -205,14 +205,24 @@ impl Rng {
 
     /// `k` distinct indices from `[0, n)` (partial Fisher–Yates).
     pub fn choose_k(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx = Vec::new();
+        self.choose_k_into(n, k, &mut idx);
+        idx
+    }
+
+    /// Allocation-free [`Rng::choose_k`]: leaves the `k` chosen indices in
+    /// `scratch[..k]`, reusing its capacity. Consumes exactly the same RNG
+    /// stream (`k` draws of `below`), so the two are interchangeable on
+    /// any reproducibility-sensitive path.
+    pub fn choose_k_into(&mut self, n: usize, k: usize, scratch: &mut Vec<usize>) {
         assert!(k <= n, "choose_k({k}) from {n}");
-        let mut idx: Vec<usize> = (0..n).collect();
+        scratch.clear();
+        scratch.extend(0..n);
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            scratch.swap(i, j);
         }
-        idx.truncate(k);
-        idx
+        scratch.truncate(k);
     }
 
     /// Fill a slice with scaled Bernoulli dropout mask values

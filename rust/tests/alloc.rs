@@ -1,0 +1,80 @@
+//! Steady-state allocation audit for the quantizer hot path.
+//!
+//! A counting global allocator wraps `System`; after one warm-up call at
+//! a fixed shape, repeated `quantize_into` calls must perform **zero**
+//! heap allocations on the serial path (`workers = 1` — exactly what the
+//! round engine's cohort workers use, since the engine already fans out
+//! over clients). The capacity fingerprints double-check that no scratch
+//! buffer was silently reallocated.
+//!
+//! This file deliberately contains a single `#[test]`: the allocation
+//! counter is process-wide, and the libtest harness runs tests from one
+//! binary on concurrent threads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use fedlite::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
+use fedlite::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn quantize_into_steady_state_performs_zero_allocations() {
+    let (b, d) = (8usize, 192usize);
+    let mut zrng = Rng::new(3);
+    let z: Vec<f32> = (0..b * d).map(|_| zrng.normal() as f32).collect();
+    // single-group, many-codebook, and whole-vector configs (dsub = 8
+    // exercises the wide dot path)
+    for (q, r, l) in [(24usize, 1usize, 4usize), (24, 8, 2), (1, 1, 3)] {
+        let pq = GroupedPq::new(PqConfig::new(q, r, l).with_iters(4), d).unwrap();
+        let mut scratch = QuantizeScratch::new(); // workers = 1: serial path
+        let mut out = PqOutput::default();
+        let mut qrng = Rng::new(7);
+        // warm-up: buffers grow to their steady-state capacities here
+        pq.quantize_into(&z, b, &mut qrng, &mut scratch, &mut out);
+        let fingerprint = scratch.capacity_fingerprint();
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..3 {
+            pq.quantize_into(&z, b, &mut qrng, &mut scratch, &mut out);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "quantize_into allocated on the warm path (q={q} R={r} L={l})"
+        );
+        assert_eq!(
+            scratch.capacity_fingerprint(),
+            fingerprint,
+            "scratch reallocated (q={q} R={r} L={l})"
+        );
+        std::hint::black_box(out.sq_error);
+    }
+}

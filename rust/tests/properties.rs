@@ -6,10 +6,13 @@
 //! failure reports the seed that produced it (re-run with that seed to
 //! shrink by hand).
 
+use std::cell::RefCell;
+
 use fedlite::comm::message::Message;
 use fedlite::quantizer::cost::CostModel;
 use fedlite::quantizer::packing;
-use fedlite::quantizer::pq::{GroupedPq, PqConfig};
+use fedlite::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
+use fedlite::quantizer::{KMeans, KMeansInit, KMeansScratch};
 use fedlite::tensor::{Tensor, TensorList};
 use fedlite::util::json;
 use fedlite::util::rng::Rng;
@@ -114,7 +117,6 @@ fn prop_pack_is_left_inverse_of_unpack() {
 fn prop_kmeans_assignment_invariant_under_permutation() {
     // permuting the points permutes the codes and nothing else: the
     // argmin of each point depends only on that point and the centroids
-    use fedlite::quantizer::{KMeans, KMeansInit};
     forall("kmeans-permutation", |rng| {
         let d = 1 + rng.below(6);
         let n = 2 + rng.below(40);
@@ -145,6 +147,145 @@ fn prop_kmeans_assignment_invariant_under_permutation() {
             "{err} vs {err_p}"
         );
     });
+}
+
+#[test]
+fn prop_pruned_lloyd_matches_naive() {
+    // the Hamerly-pruned kernel (`run_from_into`) must reproduce the
+    // naive assign/update sequence bit for bit: identical codes,
+    // identical centroids, identical total-error bits — across random
+    // shapes including the 8-lane dot path (d % 8 == 0), tie-heavy
+    // discrete point sets (duplicate points and centroids), and empty
+    // clusters (a centroid parked far from every point)
+    let scratch = RefCell::new(KMeansScratch::new()); // reused across cases
+    forall("pruned-vs-naive", |rng| {
+        let d = [1usize, 2, 3, 4, 8, 16][rng.below(6)];
+        let n = 2 + rng.below(60);
+        let l = 1 + rng.below(8);
+        let iters = rng.below(6);
+        let discrete = rng.bernoulli(0.5);
+        let points: Vec<f32> = (0..n * d)
+            .map(|_| {
+                if discrete {
+                    rng.below(3) as f32 - 1.0
+                } else {
+                    rng.normal() as f32
+                }
+            })
+            .collect();
+        let km = KMeans::new(l, d, iters, KMeansInit::RandomRows);
+        let mut cents = km.init_centroids(&points, n, rng);
+        if rng.bernoulli(0.3) {
+            // park one centroid far away: it captures nothing and must
+            // stay put (the empty-cluster rule) on both paths
+            let j = rng.below(l);
+            for v in &mut cents[j * d..(j + 1) * d] {
+                *v = 1e3;
+            }
+        }
+        // naive reference: the historical assign/update sequence
+        let mut cents_naive = cents.clone();
+        let mut codes_naive = vec![0u32; n];
+        for _ in 0..iters {
+            km.assign(&points, n, &cents_naive, &mut codes_naive);
+            km.update(&points, n, &codes_naive, &mut cents_naive);
+        }
+        let err_naive = km.assign(&points, n, &cents_naive, &mut codes_naive);
+
+        let mut codes = vec![0u32; n];
+        let err = km.run_from_into(
+            &points,
+            n,
+            &mut cents,
+            &mut codes,
+            &mut scratch.borrow_mut(),
+            1,
+        );
+        assert_eq!(codes, codes_naive);
+        assert_eq!(cents, cents_naive);
+        assert_eq!(err.to_bits(), err_naive.to_bits(), "{err} vs {err_naive}");
+    });
+}
+
+#[test]
+fn pruned_parallel_assignment_bit_identical_across_workers() {
+    // a pass large enough to trigger the chunked assignment: codes,
+    // centroids, and error bits must not depend on the worker count
+    let mut rng = Rng::new(0xBEEF);
+    let (n, d, l) = (3000usize, 8usize, 12usize);
+    let points: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let km = KMeans::new(l, d, 6, KMeansInit::RandomRows);
+    let cents0 = km.init_centroids(&points, n, &mut rng);
+    let mut reference: Option<(Vec<u32>, Vec<f32>, u64)> = None;
+    for workers in [1usize, 2, 4, 8] {
+        let mut cents = cents0.clone();
+        let mut codes = vec![0u32; n];
+        let mut scratch = KMeansScratch::new();
+        let err = km.run_from_into(&points, n, &mut cents, &mut codes, &mut scratch, workers);
+        match &reference {
+            None => reference = Some((codes, cents, err.to_bits())),
+            Some((c0, ce0, e0)) => {
+                assert_eq!(&codes, c0, "codes diverged at workers={workers}");
+                assert_eq!(&cents, ce0, "centroids diverged at workers={workers}");
+                assert_eq!(err.to_bits(), *e0, "error diverged at workers={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantize_into_scratch_reuse_matches_fresh() {
+    // one scratch arena + output carried across every random config (and
+    // two consecutive same-shape calls per config): results must be
+    // bit-identical to fresh-buffer `quantize` with the same RNG state
+    let state = RefCell::new((QuantizeScratch::new(), PqOutput::default()));
+    forall("quantize-into-reuse", |rng| {
+        let (cfg, b, d, z) = rand_pq_setup(rng);
+        let pq = GroupedPq::new(cfg, d).unwrap();
+        let mut guard = state.borrow_mut();
+        let (scratch, out) = &mut *guard;
+        scratch.workers = 1 + rng.below(3);
+        for round in 0..2 {
+            let z2: Vec<f32> = if round == 0 {
+                z.clone()
+            } else {
+                z.iter().map(|v| v * 0.5 + 1.0).collect()
+            };
+            let mut rng_fresh = rng.clone();
+            pq.quantize_into(&z2, b, rng, scratch, out);
+            let fresh = pq.quantize(&z2, b, &mut rng_fresh);
+            assert_eq!(out.codebooks, fresh.codebooks);
+            assert_eq!(out.codes, fresh.codes);
+            assert_eq!(out.z_tilde, fresh.z_tilde);
+            assert_eq!(out.sq_error.to_bits(), fresh.sq_error.to_bits());
+            assert_eq!((out.b, out.d), (fresh.b, fresh.d));
+        }
+    });
+}
+
+#[test]
+fn quantize_group_fanout_bit_identical_across_workers() {
+    // many-codebook config (R > 1): fanning the per-group k-means runs
+    // across lanes must not change a single output bit
+    let mut zrng = Rng::new(0xFA11);
+    let (b, d) = (6usize, 96usize);
+    let z: Vec<f32> = (0..b * d).map(|_| zrng.normal() as f32).collect();
+    let cfg = PqConfig::new(24, 12, 4).with_iters(5); // dsub=4, 12 codebooks
+    let pq = GroupedPq::new(cfg, d).unwrap();
+    let base = {
+        let mut r = Rng::new(5);
+        pq.quantize(&z, b, &mut r)
+    };
+    for workers in [2usize, 3, 5, 16] {
+        let mut scratch = QuantizeScratch::with_workers(workers);
+        let mut out = PqOutput::default();
+        let mut r = Rng::new(5);
+        pq.quantize_into(&z, b, &mut r, &mut scratch, &mut out);
+        assert_eq!(out.codebooks, base.codebooks, "workers={workers}");
+        assert_eq!(out.codes, base.codes, "workers={workers}");
+        assert_eq!(out.z_tilde, base.z_tilde, "workers={workers}");
+        assert_eq!(out.sq_error.to_bits(), base.sq_error.to_bits(), "workers={workers}");
+    }
 }
 
 #[test]
