@@ -1,31 +1,50 @@
 #!/usr/bin/env python3
-"""Compare a head bench JSON (fedlite-bench-v1) against a base bench CSV.
+"""Compare head bench JSONs (fedlite-bench-v1) against base bench CSVs.
 
-Usage: bench_compare.py HEAD_JSON BASE_CSV OUT_MD
+Usage: bench_compare.py OUT_MD [SUITE HEAD_JSON BASE_CSV]...
 
-Emits a markdown report: per-case speedup (base mean / head mean) for
-cases present in both runs, plus a coverage diff (base cases missing
-from head are flagged — renamed or dropped coverage should be called
-out in the PR, not silent). Advisory: always exits 0 unless inputs are
-unreadable; CI timing noise must not block merges.
+One markdown report, one section per suite: per-case speedup
+(base mean / head mean) for cases present in both runs, plus a coverage
+diff (base cases missing from head are flagged — renamed or dropped
+coverage should be called out in the PR, not silent). A missing or
+unreadable BASE_CSV degrades that suite to a head-only coverage listing
+(e.g. a suite that does not exist at the base commit yet). Advisory:
+always exits 0 unless the head inputs are unreadable; CI timing noise
+must not block merges.
 """
 import csv
 import json
+import os
 import sys
 
 
-def main() -> int:
-    head_path, base_path, out_path = sys.argv[1:4]
+def compare_suite(lines: list, suite: str, head_path: str, base_path: str) -> None:
     with open(head_path) as f:
         head = json.load(f)
     head_rows = {r["case"]: r for r in head.get("rows", [])}
 
-    base_rows = {}
-    with open(base_path) as f:
-        for row in csv.DictReader(f):
-            base_rows[row["case"]] = row
+    lines += [f"## bench_{suite}: head vs base", ""]
 
-    lines = ["## bench_quantizer: head vs base", ""]
+    base_rows = {}
+    try:
+        with open(base_path) as f:
+            for row in csv.DictReader(f):
+                base_rows[row["case"]] = row
+    except (OSError, KeyError, csv.Error) as e:
+        reason = (
+            "suite absent at the base commit?"
+            if not os.path.exists(base_path)
+            else f"base CSV unreadable: {e}"
+        )
+        lines += [
+            f"_no base run for `{suite}` ({reason}) — "
+            f"head-only listing, {len(head_rows)} case(s)_",
+            "",
+        ]
+        lines += [f"- `{c}`" for c in sorted(head_rows)]
+        lines.append("")
+        return
+
     shared = [c for c in base_rows if c in head_rows]
     if shared:
         lines += [
@@ -33,8 +52,12 @@ def main() -> int:
             "|---|---:|---:|---:|",
         ]
         for case in shared:
-            b = float(base_rows[case]["mean_s"])
-            h = float(head_rows[case]["mean_s"])
+            try:
+                b = float(base_rows[case].get("mean_s", "nan"))
+                h = float(head_rows[case]["mean_s"])
+            except (TypeError, ValueError):
+                lines.append(f"| {case} | ? | ? | (unparseable mean_s) |")
+                continue
             speed = b / h if h > 0 else float("inf")
             lines.append(f"| {case} | {b:.3e}s | {h:.3e}s | {speed:.2f}x |")
         lines.append("")
@@ -54,7 +77,18 @@ def main() -> int:
         lines.append("")
     if not shared and not missing:
         lines.append("_no base cases found — nothing to compare_")
+        lines.append("")
 
+
+def main() -> int:
+    out_path = sys.argv[1]
+    triples = sys.argv[2:]
+    if len(triples) % 3 != 0:
+        print("usage: bench_compare.py OUT_MD [SUITE HEAD_JSON BASE_CSV]...")
+        return 2
+    lines = []
+    for i in range(0, len(triples), 3):
+        compare_suite(lines, triples[i], triples[i + 1], triples[i + 2])
     report = "\n".join(lines) + "\n"
     with open(out_path, "w") as f:
         f.write(report)

@@ -1,0 +1,169 @@
+//! Bench: the native engine's compute kernels, per artifact per variant.
+//!
+//! For every registered native variant (`femnist_tiny` / `femnist_small`
+//! / `femnist_stress`) and every artifact (`client_fwd`, `server_step`,
+//! `client_bwd`, `full_grad`, `full_eval`), times three kernel policies
+//! that produce **bit-identical** outputs (asserted here before timing):
+//!
+//! * `naive` — the historical triple-loop kernels (the baseline PR 5
+//!   replaced);
+//! * `tiled` — the cache-blocked kernels from `tensor::gemm` (what the
+//!   round engine's cohort workers run);
+//! * `tiled+parallel` — tiled + row fan-out across the machine's cores
+//!   (skipped on single-core machines; the case list in
+//!   `BENCH_engine.json::expected_cases` still names it).
+//!
+//! Every case runs through `run_scratch` with a warm [`EngineScratch`],
+//! so the measurement is the kernels plus the fixed `Array` output copy,
+//! not allocator noise. The `work` column is the artifact's FLOP count
+//! (2·MACs), so the harness's MB/s column reads as MFLOP/s here.
+//!
+//! Knobs (used by the CI `bench` job): `FEDLITE_BENCH_REPS=<n>`
+//! overrides the timed iteration count; `FEDLITE_BENCH_SMALL=1` skips
+//! the `stress` variant (called out loudly — no silent coverage drop).
+//!
+//! Output: `results/bench/engine.{csv,json}` plus the repo-root
+//! trajectory file `BENCH_engine.json` (schema in `util::bench`).
+
+use fedlite::data::Array;
+use fedlite::runtime::native::{EngineScratch, NativeEngine, NativeModelCfg};
+use fedlite::runtime::Runtime;
+use fedlite::tensor::gemm::GemmPolicy;
+use fedlite::util::bench::{reps_or, small_shape, Bench};
+use fedlite::util::pool::ThreadPool;
+use fedlite::util::rng::Rng;
+
+/// Ready-made input lists for every artifact of one variant.
+struct VariantInputs {
+    fwd: Vec<Array>,
+    step: Vec<Array>,
+    bwd: Vec<Array>,
+    full: Vec<Array>,
+    eval: Vec<Array>,
+}
+
+fn build_inputs(cfg: &NativeModelCfg) -> VariantInputs {
+    let rt = Runtime::native();
+    let key = cfg.variant_key();
+    let spec = rt.manifest.variant(&key).unwrap().spec.clone();
+    let rng = Rng::new(0xB_E7C);
+    let wc = spec.client.init_tensors(&mut rng.fork(1));
+    let ws = spec.server.init_tensors(&mut rng.fork(2));
+    let mut r = rng.fork(3);
+    let x = r.uniform_vec(cfg.batch * cfg.input, 0.0, 1.0);
+    let y: Vec<i32> = (0..cfg.batch).map(|_| r.below(cfg.classes) as i32).collect();
+    let ex = r.uniform_vec(cfg.eval_batch * cfg.input, 0.0, 1.0);
+    let ey: Vec<i32> = (0..cfg.eval_batch).map(|_| r.below(cfg.classes) as i32).collect();
+    let arr = |t: &fedlite::tensor::Tensor| Array::f32(t.shape(), t.data().to_vec());
+
+    let mut fwd: Vec<Array> = wc.tensors.iter().map(arr).collect();
+    fwd.push(Array::f32(&[cfg.batch, 28, 28, 1], x.clone()));
+
+    let mut full: Vec<Array> = wc.tensors.iter().map(arr).collect();
+    full.extend(ws.tensors.iter().map(arr));
+    full.push(Array::f32(&[cfg.batch, 28, 28, 1], x));
+    full.push(Array::i32(&[cfg.batch], y.clone()));
+
+    let mut eval: Vec<Array> = wc.tensors.iter().map(arr).collect();
+    eval.extend(ws.tensors.iter().map(arr));
+    eval.push(Array::f32(&[cfg.eval_batch, 28, 28, 1], ex));
+    eval.push(Array::i32(&[cfg.eval_batch], ey));
+
+    // derive z / grad_z for the split-path artifacts from a real pass
+    let engine = NativeEngine::new();
+    let z = engine.run(&key, "client_fwd", &fwd).unwrap().remove(0);
+    let mut step: Vec<Array> = ws.tensors.iter().map(arr).collect();
+    step.push(Array::i32(&[cfg.batch], y));
+    step.push(z.clone());
+    let souts = engine.run(&key, "server_step", &step).unwrap();
+
+    let mut bwd: Vec<Array> = wc.tensors.iter().map(arr).collect();
+    bwd.push(full[6].clone()); // x
+    bwd.push(z); // z_tilde = z
+    bwd.push(souts[2].clone()); // grad_z
+    bwd.push(Array::f32(&[], vec![1e-4]));
+
+    VariantInputs { fwd, step, bwd, full, eval }
+}
+
+/// FLOPs (2·MACs) per artifact — the dominant dense-math terms only.
+fn flops(cfg: &NativeModelCfg, artifact: &str) -> f64 {
+    let (m, e) = (cfg.batch as f64, cfg.eval_batch as f64);
+    let (i, c, h, k) = (
+        cfg.input as f64,
+        cfg.cut as f64,
+        cfg.hidden as f64,
+        cfg.classes as f64,
+    );
+    let fwd_cut = m * i * c;
+    let server_fwd = m * (c * h + h * k);
+    let server_bwd = m * (h * k + k * h + c * h + h * c); // g_w3, dh1, g_w2, gz
+    2.0 * match artifact {
+        "client_fwd" => fwd_cut,
+        "server_step" => server_fwd + server_bwd,
+        "client_bwd" => 2.0 * fwd_cut, // recomputed fwd + g_w1
+        "full_grad" => 2.0 * fwd_cut + server_fwd + server_bwd,
+        "full_eval" => e * (i * c + c * h + h * k),
+        _ => unreachable!(),
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("engine");
+    let reps = reps_or(5);
+    let auto = ThreadPool::default_size();
+
+    for cfg in NativeModelCfg::registry() {
+        if small_shape() && cfg.preset == "stress" {
+            println!("(FEDLITE_BENCH_SMALL=1: skipping the stress variant — its \
+                      expected_cases rows will be absent from this run)");
+            continue;
+        }
+        let key = cfg.variant_key();
+        let inputs = build_inputs(cfg);
+        let mut policies = vec![
+            ("naive", GemmPolicy::naive()),
+            ("tiled", GemmPolicy::tiled()),
+        ];
+        if auto > 1 {
+            policies.push(("tiled+parallel", GemmPolicy::parallel(auto)));
+        } else {
+            println!("(single core: skipping the tiled+parallel cases for {key})");
+        }
+
+        for (artifact, ins) in [
+            ("client_fwd", &inputs.fwd),
+            ("server_step", &inputs.step),
+            ("client_bwd", &inputs.bwd),
+            ("full_grad", &inputs.full),
+            ("full_eval", &inputs.eval),
+        ] {
+            // exactness sanity before any timing: every timed policy must
+            // produce bit-identical outputs for this artifact (full_eval
+            // is the only eval_batch-shaped case, so it gets its own check)
+            let reference = NativeEngine::new().run(&key, artifact, ins).unwrap();
+            for (label, p) in &policies {
+                let outs = NativeEngine::with_policy(*p).run(&key, artifact, ins).unwrap();
+                for (a, r) in outs.iter().zip(&reference) {
+                    assert_eq!(
+                        a.as_f32().unwrap(),
+                        r.as_f32().unwrap(),
+                        "{key} {artifact} differs under the {label} policy"
+                    );
+                }
+            }
+            let work = flops(cfg, artifact);
+            for (label, p) in &policies {
+                let engine = NativeEngine::with_policy(*p);
+                let mut scratch = EngineScratch::new();
+                b.case(&format!("{artifact} {key} {label}"), 1, reps, work, || {
+                    std::hint::black_box(
+                        engine.run_scratch(&key, artifact, ins, &mut scratch).unwrap(),
+                    );
+                });
+            }
+        }
+    }
+
+    b.finish_to(Some("BENCH_engine.json"));
+}

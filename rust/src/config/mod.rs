@@ -182,23 +182,42 @@ impl RunConfig {
         Ok(c)
     }
 
-    /// The CI/smoke preset: the built-in native `femnist_tiny` variant
-    /// (no AOT artifacts or PJRT needed). Tiny cohort defaults and a PQ
-    /// geometry sized to the 32-wide cut layer.
-    pub fn tiny(task: &str) -> anyhow::Result<RunConfig> {
+    /// A built-in native-engine preset (no AOT artifacts or PJRT
+    /// needed): `tiny` (the CI smoke/golden variant, 32-wide cut),
+    /// `small` (wider cut/hidden, batch 32), or `stress` (paper-scale
+    /// 1152-wide cut). Small cohort defaults and a PQ geometry sized to
+    /// each variant's cut width (the `stress` geometry's dsub = 8
+    /// exercises the wide-dot kernel path).
+    pub fn native(task: &str, preset: &str) -> anyhow::Result<RunConfig> {
         anyhow::ensure!(
             task == "femnist",
-            "the tiny (native) preset only exists for femnist, not '{task}'"
+            "the native presets only exist for femnist, not '{task}'"
         );
         let mut c = RunConfig::preset(task)?;
-        c.preset = "tiny".into();
-        c.pq = PqConfig::new(8, 1, 4).with_iters(4);
+        c.preset = preset.into();
+        c.pq = match preset {
+            // d = 32: dsub 4 (the historical tiny geometry, bits unchanged)
+            "tiny" => PqConfig::new(8, 1, 4).with_iters(4),
+            // d = 64: dsub 4
+            "small" => PqConfig::new(16, 1, 4).with_iters(4),
+            // d = 1152: dsub 8 — the paper's FEMNIST subvector width
+            "stress" => PqConfig::new(144, 1, 8).with_iters(4),
+            other => anyhow::bail!(
+                "unknown native preset '{other}' (try tiny, small, or stress)"
+            ),
+        };
         c.clients_per_round = 4;
         c.eval_batches = 2;
         c.dropout_client = 0.0;
         c.dropout_server = 0.0;
         c.artifacts_dir = "native".into();
         Ok(c)
+    }
+
+    /// The CI/smoke preset (`RunConfig::native(task, "tiny")`), kept as a
+    /// named constructor because tests and the golden manifest pin it.
+    pub fn tiny(task: &str) -> anyhow::Result<RunConfig> {
+        RunConfig::native(task, "tiny")
     }
 
     /// Cohort worker threads after resolving `0` (auto) to the machine
@@ -365,6 +384,24 @@ mod tests {
         assert_eq!(c.pq, PqConfig::new(8, 1, 4).with_iters(4));
         assert!(c.validate().is_ok());
         assert!(RunConfig::tiny("so_tag").is_err());
+    }
+
+    #[test]
+    fn native_presets_match_their_variants() {
+        // every native preset must target a registered engine variant and
+        // carry a PQ geometry that divides its cut width
+        use crate::runtime::native::NativeModelCfg;
+        for preset in ["tiny", "small", "stress"] {
+            let c = RunConfig::native("femnist", preset).unwrap();
+            assert_eq!(c.variant(), format!("femnist_{preset}"));
+            assert_eq!(c.artifacts_dir, "native");
+            let cfg = NativeModelCfg::by_preset(preset)
+                .unwrap_or_else(|| panic!("preset {preset} not registered"));
+            c.pq.validate(cfg.cut).unwrap();
+            assert!(c.validate().is_ok());
+        }
+        assert!(RunConfig::native("femnist", "paper").is_err());
+        assert!(RunConfig::native("so_tag", "small").is_err());
     }
 
     #[test]

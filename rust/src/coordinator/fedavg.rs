@@ -36,6 +36,7 @@ use crate::data::FederatedDataset;
 use crate::metrics::{RoundRecord, RunLog, TaskMetric};
 use crate::models::ModelSpec;
 use crate::optim::Optimizer;
+use crate::runtime::native::EngineScratch;
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::TensorList;
 use crate::util::logging::{CsvWriter, JsonlWriter};
@@ -58,6 +59,17 @@ pub struct FedAvgTrainer {
     rng: Rng,
     csv: Option<CsvWriter>,
     jsonl: Option<JsonlWriter>,
+    /// Warm engine buffers for the eval pass.
+    eval_scratch: EngineScratch,
+}
+
+/// Per-cohort-slot reusable buffers for the FedAvg client step: the
+/// native engine's forward/backward intermediates, reused across the H
+/// local steps and across rounds (the model-sized delta tensors are the
+/// payload and are not reusable).
+#[derive(Default)]
+pub struct FedAvgScratch {
+    engine: EngineScratch,
 }
 
 /// Per-round state shared by the cohort: the artifact handle plus the
@@ -96,6 +108,7 @@ impl FedAvgTrainer {
             cfg,
             csv,
             jsonl,
+            eval_scratch: EngineScratch::new(),
         })
     }
 
@@ -130,7 +143,10 @@ impl FedAvgTrainer {
                 batch: Some(&batch),
                 ..Default::default()
             };
-            let outs = self.rt.run(&variant, "full_eval", &assemble(&meta, &src)?)?;
+            let inputs = assemble(&meta, &src)?;
+            let outs = self
+                .rt
+                .run_scratch(&variant, "full_eval", &inputs, &mut self.eval_scratch)?;
             loss.add(scalar(&outs[0])? as f64, 1.0);
             for (k, s) in sums.iter_mut().enumerate() {
                 *s += scalar(&outs[1 + k])? as f64;
@@ -146,9 +162,7 @@ impl RoundAlgorithm for FedAvgTrainer {
     /// Wire-decoded model delta (global − local after H steps).
     type Payload = TensorList;
     type Accum = WeightedAggregator;
-    /// Nothing worth reusing: the step's buffers are the model-sized
-    /// tensors, which the aggregation takes ownership of anyway.
-    type Scratch = ();
+    type Scratch = FedAvgScratch;
 
     fn stream_tag(&self) -> u64 {
         0xFEDA
@@ -196,7 +210,7 @@ impl RoundAlgorithm for FedAvgTrainer {
         ci: usize,
         crng: &mut Rng,
         plan: &FaultPlan,
-        _scratch: &mut (),
+        scratch: &mut FedAvgScratch,
     ) -> anyhow::Result<ClientOutput<TensorList>> {
         let nmetrics = self.spec.metrics.len();
         let mut up = 0usize;
@@ -246,9 +260,12 @@ impl RoundAlgorithm for FedAvgTrainer {
                 masks: Some(&masks),
                 ..Default::default()
             };
-            let outs = self
-                .rt
-                .run(&prep.variant, "full_grad", &assemble(&prep.grad_meta, &src)?)?;
+            let outs = self.rt.run_scratch(
+                &prep.variant,
+                "full_grad",
+                &assemble(&prep.grad_meta, &src)?,
+                &mut scratch.engine,
+            )?;
             if step == 0 {
                 loss = scalar(&outs[0])? as f64;
                 for (k, s) in metric_sums.iter_mut().enumerate() {

@@ -52,6 +52,7 @@ use crate::metrics::{RoundRecord, RunLog, TaskMetric};
 use crate::models::ModelSpec;
 use crate::optim::Optimizer;
 use crate::quantizer::{PqOutput, QuantizeScratch};
+use crate::runtime::native::EngineScratch;
 use crate::runtime::{ArtifactMeta, Runtime};
 use crate::tensor::{Tensor, TensorList};
 use crate::util::logging::{CsvWriter, JsonlWriter};
@@ -75,6 +76,9 @@ pub struct SplitTrainer {
     rng: Rng,
     csv: Option<CsvWriter>,
     jsonl: Option<JsonlWriter>,
+    /// Warm engine buffers for the eval pass (the round path's scratches
+    /// live in the engine's per-slot pool).
+    eval_scratch: EngineScratch,
 }
 
 /// Per-round artifact handles, fetched once and shared by the cohort.
@@ -98,14 +102,17 @@ pub struct SplitAccum {
     wc_agg: WeightedAggregator,
 }
 
-/// Per-cohort-slot reusable buffers for the FedLite client step: the
-/// quantizer's scratch arena plus a warm [`PqOutput`]. Owned by the round
-/// engine's scratch pool, so after round 1 the quantize path performs no
-/// heap allocation (see `tests/alloc.rs`).
+/// Per-cohort-slot reusable buffers for the split client step: the
+/// quantizer's scratch arena, a warm [`PqOutput`], and the native
+/// engine's [`EngineScratch`] (every forward/backward intermediate).
+/// Owned by the round engine's scratch pool, so after round 1 the
+/// quantize path performs no heap allocation and the compute path reuses
+/// all of its intermediates (see `tests/alloc.rs`).
 #[derive(Default)]
 pub struct SplitScratch {
     quant: QuantizeScratch,
     pq: PqOutput,
+    engine: EngineScratch,
 }
 
 impl SplitTrainer {
@@ -147,6 +154,7 @@ impl SplitTrainer {
             cfg,
             csv,
             jsonl,
+            eval_scratch: EngineScratch::new(),
         })
     }
 
@@ -176,7 +184,9 @@ impl SplitTrainer {
                 ..Default::default()
             };
             let inputs = assemble(&meta, &src)?;
-            let outs = self.rt.run(&variant, "full_eval", &inputs)?;
+            let outs = self
+                .rt
+                .run_scratch(&variant, "full_eval", &inputs, &mut self.eval_scratch)?;
             loss.add(scalar(&outs[0])? as f64, 1.0);
             for (k, s) in sums.iter_mut().enumerate() {
                 *s += scalar(&outs[1 + k])? as f64;
@@ -274,7 +284,12 @@ impl RoundAlgorithm for SplitTrainer {
         };
         let z_arr = self
             .rt
-            .run(&prep.variant, "client_fwd", &assemble(&prep.fwd, &src)?)?
+            .run_scratch(
+                &prep.variant,
+                "client_fwd",
+                &assemble(&prep.fwd, &src)?,
+                &mut scratch.engine,
+            )?
             .remove(0);
         let z = match z_arr {
             Array::F32 { data, .. } => data,
@@ -355,9 +370,12 @@ impl RoundAlgorithm for SplitTrainer {
             z_tilde: Some(&z_tilde),
             ..Default::default()
         };
-        let outs = self
-            .rt
-            .run(&prep.variant, "server_step", &assemble(&prep.step, &src)?)?;
+        let outs = self.rt.run_scratch(
+            &prep.variant,
+            "server_step",
+            &assemble(&prep.step, &src)?,
+            &mut scratch.engine,
+        )?;
         let loss = scalar(&outs[0])? as f64;
         let mut metric_sums = vec![0.0f64; nmetrics];
         for (k, s) in metric_sums.iter_mut().enumerate() {
@@ -406,9 +424,12 @@ impl RoundAlgorithm for SplitTrainer {
             lambda: Some(lambda),
             ..Default::default()
         };
-        let bwd = self
-            .rt
-            .run(&prep.variant, "client_bwd", &assemble(&prep.bwd, &src)?)?;
+        let bwd = self.rt.run_scratch(
+            &prep.variant,
+            "client_bwd",
+            &assemble(&prep.bwd, &src)?,
+            &mut scratch.engine,
+        )?;
         let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
         // hand the z~ buffer back to the slot scratch so the next round's
         // quantize reuses it instead of allocating

@@ -23,7 +23,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`util`] | substrates built in-tree (PRNG, JSON, CLI, thread pool, logging) |
-//! | [`tensor`] | small row-major f32 tensor used by optimizers/aggregation |
+//! | [`tensor`] | small row-major f32 tensor + the tiled deterministic GEMM kernels |
 //! | [`quantizer`] | native grouped-PQ engine + bit-packing + cost model |
 //! | [`runtime`] | PJRT artifact loading/execution (the `xla` crate) |
 //! | [`optim`] | SGD / Adam / AdaGrad (paper §C.2 per-task optimizers) |

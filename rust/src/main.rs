@@ -27,8 +27,9 @@ fn cli() -> Cli {
                     Flag::opt(
                         "preset",
                         "",
-                        "'' = task default (PJRT artifacts); 'tiny' = built-in \
-                         native femnist variant (no artifacts needed)",
+                        "'' = task default (PJRT artifacts); tiny | small | \
+                         stress = built-in native femnist variants (no \
+                         artifacts needed; stress is the paper-scale cut)",
                     ),
                     Flag::opt("algorithm", "fedlite", "fedlite | splitfed | fedavg"),
                     Flag::opt(
@@ -148,10 +149,13 @@ fn dispatch(cmd: &str, args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
 fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     let task = args.str("task")?;
     let preset = args.get("preset").unwrap_or("");
+    let native_preset = matches!(preset, "tiny" | "small" | "stress");
     let mut cfg = match preset {
         "" => RunConfig::preset(task)?,
-        "tiny" => RunConfig::tiny(task)?,
-        other => anyhow::bail!("unknown preset '{other}' (try '' or 'tiny')"),
+        p if native_preset => RunConfig::native(task, p)?,
+        other => {
+            anyhow::bail!("unknown preset '{other}' (try '', tiny, small, or stress)")
+        }
     };
     cfg.algorithm = Algorithm::parse(args.str("algorithm")?)?;
     cfg.workers = args.usize("workers")?;
@@ -190,8 +194,8 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     cfg.min_survivors = args.usize("min-survivors")?;
     cfg.seed = args.u64("seed")?;
     cfg.eval_every = args.usize("eval-every")?;
-    // the tiny preset always runs on the built-in native engine
-    if cfg.preset != "tiny" {
+    // the native presets always run on the built-in native engine
+    if !native_preset {
         cfg.artifacts_dir = args.str("artifacts")?.to_string();
     }
     cfg.out_dir = args.get("out-dir").unwrap_or("").to_string();

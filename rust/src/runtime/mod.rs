@@ -3,9 +3,12 @@
 //! Two backends share one [`Runtime`] front:
 //!
 //! * **Native** (always available) — a pure-rust reference engine
-//!   ([`native`]) that executes the built-in `femnist_tiny` split MLP.
-//!   It needs no artifacts directory, which is what lets CI build, test,
-//!   and smoke-train the full round loop from a fresh clone.
+//!   ([`native`]) that executes the built-in split-MLP family
+//!   (`femnist_tiny` / `femnist_small` / `femnist_stress`, see
+//!   [`native::NativeModelCfg::registry`]) through the tiled
+//!   deterministic kernels in [`crate::tensor::gemm`]. It needs no
+//!   artifacts directory, which is what lets CI build, test, and
+//!   smoke-train the full round loop from a fresh clone.
 //! * **PJRT** (cargo feature `pjrt`) — loads AOT HLO-text artifacts and
 //!   executes them: `HloModuleProto::from_text_file` (text, *not*
 //!   serialized proto — see `python/compile/aot.py`) →
@@ -86,11 +89,27 @@ impl Runtime {
         name: &str,
         inputs: &[Array],
     ) -> anyhow::Result<Vec<Array>> {
+        self.run_scratch(variant, name, inputs, &mut native::EngineScratch::default())
+    }
+
+    /// [`Runtime::run`] against a caller-owned [`native::EngineScratch`]:
+    /// on the native backend the engine's intermediate buffers come from
+    /// (and stay in) `scratch`, so a warm scratch makes repeated calls
+    /// allocation-quiet (the trainers lend one per cohort slot from the
+    /// round engine's scratch pool). The PJRT backend ignores the scratch
+    /// — the device boundary allocates regardless.
+    pub fn run_scratch(
+        &self,
+        variant: &str,
+        name: &str,
+        inputs: &[Array],
+        scratch: &mut native::EngineScratch,
+    ) -> anyhow::Result<Vec<Array>> {
         let meta = self.manifest.artifact(variant, name)?;
         meta.check_inputs(inputs)
             .map_err(|e| anyhow::anyhow!("{variant}/{name}: {e}"))?;
         let outs = match &self.backend {
-            Backend::Native(engine) => engine.run(variant, name, inputs)?,
+            Backend::Native(engine) => engine.run_scratch(variant, name, inputs, scratch)?,
             #[cfg(feature = "pjrt")]
             Backend::Pjrt(backend) => backend.run(variant, name, inputs)?,
         };

@@ -1,272 +1,357 @@
-//! Native reference engine: a pure-rust split MLP (`femnist_tiny`).
+//! Native reference engine: a parameterized family of pure-rust split MLPs.
 //!
 //! Implements the same artifact contract the PJRT backend serves —
 //! `client_fwd`, `server_step`, `client_bwd`, `full_grad`, `full_eval`
-//! with manifest-declared input order/shapes/roles — for one built-in
-//! variant, so the full round state machines (SplitFed / FedLite /
-//! FedAvg) run from a fresh clone with no Python lowering step and no
-//! XLA toolchain. CI's build/test/smoke jobs and the workers-invariance
-//! determinism tests execute through this engine.
+//! with manifest-declared input order/shapes/roles — for the built-in
+//! [`NativeModelCfg::registry`] variants, so the full round state
+//! machines (SplitFed / FedLite / FedAvg) run from a fresh clone with no
+//! Python lowering step and no XLA toolchain. CI's build/test/smoke jobs
+//! and the workers-invariance determinism tests execute through this
+//! engine.
 //!
-//! Model (`femnist_tiny`): client = dense(784→32) + ReLU (the cut layer);
-//! server = dense(32→32) + ReLU + dense(32→62) + softmax cross-entropy,
-//! `correct`-count metric. Gradient correction (paper eq. (5)) is applied
-//! in `client_bwd`: the client loss term λ/2·‖z − z~‖² contributes
-//! λ·(z − z~) to the gradient at the cut. All reductions run in a fixed
-//! sequential order, so outputs are bit-identical regardless of how many
-//! cohort workers call `run` concurrently (`&self`, no shared state).
+//! Model shape (every variant): client = dense(input→cut) + ReLU (the
+//! cut layer); server = dense(cut→hidden) + ReLU + dense(hidden→classes)
+//! + softmax cross-entropy, `correct`-count metric. Gradient correction
+//! (paper eq. (5)) is applied in `client_bwd`: the client loss term
+//! λ/2·‖z − z~‖² contributes λ·(z − z~) to the gradient at the cut.
+//!
+//! Registered variants (`femnist_<preset>`; all consume the synthetic
+//! FEMNIST data, x `[B, 28, 28, 1]`, 62 classes):
+//!
+//! | preset | cut | hidden | batch | eval_batch | role |
+//! |---|---|---|---|---|---|
+//! | `tiny` | 32 | 32 | 8 | 32 | CI smoke / golden fixtures (bits unchanged) |
+//! | `small` | 64 | 128 | 32 | 64 | realistic batch, wider cut |
+//! | `stress` | 1152 | 256 | 8 | 16 | paper-scale cut width (the q=1152 PQ geometry) |
+//!
+//! All dense math runs through the tiled deterministic kernels in
+//! [`crate::tensor::gemm`] — bit-identical to the naive triple loops by
+//! construction (see that module's exactness contract), so the `tiny`
+//! golden fixtures reproduce exactly with tiling enabled. Every reduction
+//! has a fixed order and `run` takes `&self`, so outputs are
+//! bit-identical regardless of how many cohort workers call `run`
+//! concurrently.
+//!
+//! The zero-allocation steady state mirrors the quantizer's (PR 4): an
+//! [`EngineScratch`] arena holds every intermediate (zpre/z/h1pre/h1/
+//! logits/grad buffers); [`NativeEngine::run_scratch`] and the public
+//! `*_into` compute layer reuse it across calls, so after warm-up the
+//! compute path performs no heap allocation (`rust/tests/alloc.rs`
+//! audits the combined compute+quantize client path). The `Vec<Array>`
+//! outputs of the `run` contract still allocate — that boundary is the
+//! runtime API, not the kernels.
 
 use std::collections::HashMap;
 
 use crate::data::Array;
 use crate::models::{ModelSpec, ParamSpec, SideSpec};
 use crate::runtime::artifact::{ArtifactMeta, IoSpec, Manifest, Variant};
+use crate::tensor::gemm::{self, GemmPolicy};
 use crate::util::json::{Object, Value};
 
-/// The variant key the native engine serves.
+/// The historical single-variant key (the `tiny` preset); kept for the
+/// golden fixtures and tests that pin it.
 pub const VARIANT: &str = "femnist_tiny";
 
-const IN: usize = 28 * 28; // flattened [28, 28, 1] images
-const CUT: usize = 32; // cut-layer width d
-const HID: usize = 32; // server hidden width
-const CLASSES: usize = 62;
-const BATCH: usize = 8;
-const EVAL_BATCH: usize = 32;
+/// Dimensions of one native split-MLP variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct NativeModelCfg {
+    /// Preset name; the manifest key is `femnist_<preset>`.
+    pub preset: &'static str,
+    /// Flattened input dim (28·28 — every variant eats FEMNIST images).
+    pub input: usize,
+    /// Cut-layer width d (what the quantizer sees).
+    pub cut: usize,
+    /// Server hidden width.
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
 
-/// Stateless executor for the built-in variant.
-pub struct NativeEngine;
+/// The built-in variant family. `tiny` must stay bit-identical to the
+/// pre-family engine (golden fixtures); new variants append here and are
+/// picked up by the manifest, the presets, the generalized tests, and
+/// `bench_engine` automatically.
+const REGISTRY: &[NativeModelCfg] = &[
+    NativeModelCfg {
+        preset: "tiny",
+        input: 28 * 28,
+        cut: 32,
+        hidden: 32,
+        classes: 62,
+        batch: 8,
+        eval_batch: 32,
+    },
+    NativeModelCfg {
+        preset: "small",
+        input: 28 * 28,
+        cut: 64,
+        hidden: 128,
+        classes: 62,
+        batch: 32,
+        eval_batch: 64,
+    },
+    NativeModelCfg {
+        preset: "stress",
+        input: 28 * 28,
+        cut: 1152,
+        hidden: 256,
+        classes: 62,
+        batch: 8,
+        eval_batch: 16,
+    },
+];
+
+impl NativeModelCfg {
+    /// Every variant the native engine serves.
+    pub fn registry() -> &'static [NativeModelCfg] {
+        REGISTRY
+    }
+
+    /// Manifest key for this variant.
+    pub fn variant_key(&self) -> String {
+        format!("femnist_{}", self.preset)
+    }
+
+    /// Look a variant up by manifest key (`femnist_<preset>`).
+    pub fn by_variant(variant: &str) -> Option<&'static NativeModelCfg> {
+        REGISTRY.iter().find(|c| c.variant_key() == variant)
+    }
+
+    /// Look a variant up by preset name (`tiny` / `small` / `stress`).
+    pub fn by_preset(preset: &str) -> Option<&'static NativeModelCfg> {
+        REGISTRY.iter().find(|c| c.preset == preset)
+    }
+}
+
+/// Reusable buffers for the engine's compute path: every intermediate of
+/// the forward/backward passes, sized on first use and reused after
+/// (capacities only grow; `rust/tests/alloc.rs` asserts the warm path
+/// allocates nothing). Lent per cohort slot from the round engine's
+/// `RoundAlgorithm::Scratch` pool, so the steady state holds across
+/// rounds and attempts.
+#[derive(Default)]
+pub struct EngineScratch {
+    /// Client pre-activation `[m, cut]`.
+    pub zpre: Vec<f32>,
+    /// Client cut activation `[m, cut]`.
+    pub z: Vec<f32>,
+    /// Server hidden pre-activation `[m, hidden]`.
+    pub h1pre: Vec<f32>,
+    /// Server hidden activation `[m, hidden]`.
+    pub h1: Vec<f32>,
+    /// Logits `[m, classes]`.
+    pub logits: Vec<f32>,
+    /// d(mean loss)/d(logits) `[m, classes]`.
+    pub glogits: Vec<f32>,
+    /// Gradient at the cut `[m, cut]` (server's grad_z, client's
+    /// corrected gz).
+    pub gz: Vec<f32>,
+    /// Gradient at the server hidden layer `[m, hidden]`.
+    pub dh1: Vec<f32>,
+    pub g_w1: Vec<f32>,
+    pub g_b1: Vec<f32>,
+    pub g_w2: Vec<f32>,
+    pub g_b2: Vec<f32>,
+    pub g_w3: Vec<f32>,
+    pub g_b3: Vec<f32>,
+}
+
+impl EngineScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resize every buffer for a pass of `m` rows through `cfg`. Lengths
+    /// are exact (kernels assert them); capacities only ever grow.
+    pub fn prepare(&mut self, cfg: &NativeModelCfg, m: usize) {
+        self.zpre.resize(m * cfg.cut, 0.0);
+        self.z.resize(m * cfg.cut, 0.0);
+        self.h1pre.resize(m * cfg.hidden, 0.0);
+        self.h1.resize(m * cfg.hidden, 0.0);
+        self.logits.resize(m * cfg.classes, 0.0);
+        self.glogits.resize(m * cfg.classes, 0.0);
+        self.gz.resize(m * cfg.cut, 0.0);
+        self.dh1.resize(m * cfg.hidden, 0.0);
+        self.g_w1.resize(cfg.input * cfg.cut, 0.0);
+        self.g_b1.resize(cfg.cut, 0.0);
+        self.g_w2.resize(cfg.cut * cfg.hidden, 0.0);
+        self.g_b2.resize(cfg.hidden, 0.0);
+        self.g_w3.resize(cfg.hidden * cfg.classes, 0.0);
+        self.g_b3.resize(cfg.classes, 0.0);
+    }
+
+    /// Capacity fingerprint (pointer + capacity per buffer) — the
+    /// alloc/scratch-stability tests assert it is stable across
+    /// same-shape reuse.
+    pub fn capacity_fingerprint(&self) -> Vec<(usize, usize)> {
+        [
+            &self.zpre, &self.z, &self.h1pre, &self.h1, &self.logits, &self.glogits,
+            &self.gz, &self.dh1, &self.g_w1, &self.g_b1, &self.g_w2, &self.g_b2,
+            &self.g_w3, &self.g_b3,
+        ]
+        .iter()
+        .map(|v| (v.as_ptr() as usize, v.capacity()))
+        .collect()
+    }
+}
+
+/// Stateless executor for the built-in variant family.
+pub struct NativeEngine {
+    policy: GemmPolicy,
+}
 
 impl NativeEngine {
+    /// Tiled serial kernels — the coordinator default (the round engine
+    /// already fans out over clients; nested threads would oversubscribe).
     pub fn new() -> NativeEngine {
-        NativeEngine
+        NativeEngine::with_policy(GemmPolicy::tiled())
+    }
+
+    /// Engine with an explicit kernel policy (benches compare naive vs
+    /// tiled vs tiled+parallel; all three are bit-identical).
+    pub fn with_policy(policy: GemmPolicy) -> NativeEngine {
+        NativeEngine { policy }
+    }
+
+    pub fn policy(&self) -> GemmPolicy {
+        self.policy
     }
 
     /// Synthesize the manifest the artifacts directory would otherwise
-    /// provide. Input order here is the assembly order — it must match
-    /// the indexing in [`NativeEngine::run`].
+    /// provide: one variant per registry entry. Input order here is the
+    /// assembly order — it must match the indexing in
+    /// [`NativeEngine::run_scratch`].
     pub fn manifest(&self) -> Manifest {
-        let x = |b: usize| io("x", &[b, 28, 28, 1], "f32", "data");
-        let y = |b: usize| io("y", &[b], "s32", "data");
-        let client_params = || {
-            vec![
-                io("w1", &[IN, CUT], "f32", "param_client"),
-                io("b1", &[CUT], "f32", "param_client"),
-            ]
-        };
-        let server_params = || {
-            vec![
-                io("w2", &[CUT, HID], "f32", "param_server"),
-                io("b2", &[HID], "f32", "param_server"),
-                io("w3", &[HID, CLASSES], "f32", "param_server"),
-                io("b3", &[CLASSES], "f32", "param_server"),
-            ]
-        };
-
-        let mut artifacts = HashMap::new();
-        let mut add = |meta: ArtifactMeta| {
-            artifacts.insert(meta.name.clone(), meta);
-        };
-        let mut inputs = client_params();
-        inputs.push(x(BATCH));
-        add(art("client_fwd", inputs, &["z"]));
-
-        let mut inputs = server_params();
-        inputs.push(y(BATCH));
-        inputs.push(io("z_tilde", &[BATCH, CUT], "f32", "cut"));
-        add(art(
-            "server_step",
-            inputs,
-            &["loss", "correct", "grad_z", "g_w2", "g_b2", "g_w3", "g_b3"],
-        ));
-
-        let mut inputs = client_params();
-        inputs.push(x(BATCH));
-        inputs.push(io("z_tilde", &[BATCH, CUT], "f32", "cut"));
-        inputs.push(io("grad_z", &[BATCH, CUT], "f32", "grad_cut"));
-        inputs.push(io("lambda", &[], "f32", "hyper"));
-        add(art("client_bwd", inputs, &["g_w1", "g_b1", "qerr"]));
-
-        let mut inputs = client_params();
-        inputs.extend(server_params());
-        inputs.push(x(BATCH));
-        inputs.push(y(BATCH));
-        add(art(
-            "full_grad",
-            inputs,
-            &[
-                "loss", "correct", "g_w1", "g_b1", "g_w2", "g_b2", "g_w3", "g_b3",
-            ],
-        ));
-
-        let mut inputs = client_params();
-        inputs.extend(server_params());
-        inputs.push(x(EVAL_BATCH));
-        inputs.push(y(EVAL_BATCH));
-        add(art("full_eval", inputs, &["loss", "correct"]));
-
-        let mut config = Object::new();
-        config.insert("batch", Value::from_usize(BATCH));
-        config.insert("eval_batch", Value::from_usize(EVAL_BATCH));
-        let spec = ModelSpec {
-            task: "femnist".to_string(),
-            preset: "tiny".to_string(),
-            cut_dim: CUT,
-            act_batch: BATCH,
-            batch: BATCH,
-            eval_batch: EVAL_BATCH,
-            client: SideSpec {
-                params: vec![
-                    param("w1", &[IN, CUT], "glorot_uniform", IN, CUT),
-                    param("b1", &[CUT], "zeros", CUT, CUT),
-                ],
-            },
-            server: SideSpec {
-                params: vec![
-                    param("w2", &[CUT, HID], "glorot_uniform", CUT, HID),
-                    param("b2", &[HID], "zeros", HID, HID),
-                    param("w3", &[HID, CLASSES], "glorot_uniform", HID, CLASSES),
-                    param("b3", &[CLASSES], "zeros", HID, CLASSES),
-                ],
-            },
-            metrics: vec!["correct".to_string()],
-            client_args: vec!["x".to_string()],
-            server_args: vec!["y".to_string()],
-            config: Value::Obj(config),
-        };
-
         let mut variants = HashMap::new();
-        variants.insert(VARIANT.to_string(), Variant { spec, artifacts });
+        for cfg in NativeModelCfg::registry() {
+            variants.insert(cfg.variant_key(), variant_for(cfg));
+        }
         Manifest { variants, jax_version: "native".to_string() }
     }
 
-    /// Execute one artifact. Inputs were already checked against the
-    /// manifest by [`crate::runtime::Runtime::run`].
+    /// Execute one artifact with a throwaway scratch. Inputs were already
+    /// checked against the manifest by [`crate::runtime::Runtime::run`].
     pub fn run(
         &self,
         variant: &str,
         name: &str,
         inputs: &[Array],
     ) -> anyhow::Result<Vec<Array>> {
-        anyhow::ensure!(
-            variant == VARIANT,
-            "native engine only serves '{VARIANT}', got '{variant}'"
-        );
+        let mut scratch = EngineScratch::default();
+        self.run_scratch(variant, name, inputs, &mut scratch)
+    }
+
+    /// Execute one artifact against a caller-owned [`EngineScratch`]: the
+    /// steady-state entry point the trainers drive (warm scratch ⇒ the
+    /// compute performs no heap allocation; only the output `Array`s
+    /// allocate).
+    pub fn run_scratch(
+        &self,
+        variant: &str,
+        name: &str,
+        inputs: &[Array],
+        s: &mut EngineScratch,
+    ) -> anyhow::Result<Vec<Array>> {
+        let cfg = NativeModelCfg::by_variant(variant).ok_or_else(|| {
+            anyhow::anyhow!(
+                "native engine has no variant '{variant}' (registered: {:?})",
+                NativeModelCfg::registry()
+                    .iter()
+                    .map(|c| c.variant_key())
+                    .collect::<Vec<_>>()
+            )
+        })?;
+        let p = self.policy;
         match name {
-            "client_fwd" => self.client_fwd(inputs),
-            "server_step" => self.server_step(inputs),
-            "client_bwd" => self.client_bwd(inputs),
-            "full_grad" => self.full_grad(inputs),
-            "full_eval" => self.full_eval(inputs),
+            "client_fwd" => {
+                let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
+                let m = cfg.batch;
+                s.prepare(cfg, m);
+                client_fwd_into(cfg, p, w1, b1, x, s);
+                Ok(vec![Array::f32(&[m, cfg.cut], s.z.clone())])
+            }
+            "server_step" => {
+                let (w2, b2, w3, b3) = (
+                    f32s(&inputs[0])?,
+                    f32s(&inputs[1])?,
+                    f32s(&inputs[2])?,
+                    f32s(&inputs[3])?,
+                );
+                let y = i32s(&inputs[4])?;
+                let zt = f32s(&inputs[5])?;
+                let m = cfg.batch;
+                s.prepare(cfg, m);
+                let (loss, correct) = server_step_into(cfg, p, w2, b2, w3, b3, y, zt, s)?;
+                Ok(vec![
+                    Array::f32(&[], vec![loss as f32]),
+                    Array::f32(&[], vec![correct as f32]),
+                    Array::f32(&[m, cfg.cut], s.gz.clone()),
+                    Array::f32(&[cfg.cut, cfg.hidden], s.g_w2.clone()),
+                    Array::f32(&[cfg.hidden], s.g_b2.clone()),
+                    Array::f32(&[cfg.hidden, cfg.classes], s.g_w3.clone()),
+                    Array::f32(&[cfg.classes], s.g_b3.clone()),
+                ])
+            }
+            "client_bwd" => {
+                let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
+                let zt = f32s(&inputs[3])?;
+                let grad_z = f32s(&inputs[4])?;
+                let lambda = f32s(&inputs[5])?[0];
+                s.prepare(cfg, cfg.batch);
+                let qerr = client_bwd_into(cfg, p, w1, b1, x, zt, grad_z, lambda, s);
+                Ok(vec![
+                    Array::f32(&[cfg.input, cfg.cut], s.g_w1.clone()),
+                    Array::f32(&[cfg.cut], s.g_b1.clone()),
+                    Array::f32(&[], vec![qerr as f32]),
+                ])
+            }
+            "full_grad" => {
+                let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
+                let (w2, b2, w3, b3) = (
+                    f32s(&inputs[2])?,
+                    f32s(&inputs[3])?,
+                    f32s(&inputs[4])?,
+                    f32s(&inputs[5])?,
+                );
+                let x = f32s(&inputs[6])?;
+                let y = i32s(&inputs[7])?;
+                s.prepare(cfg, cfg.batch);
+                let (loss, correct) =
+                    full_grad_into(cfg, p, w1, b1, w2, b2, w3, b3, x, y, s)?;
+                Ok(vec![
+                    Array::f32(&[], vec![loss as f32]),
+                    Array::f32(&[], vec![correct as f32]),
+                    Array::f32(&[cfg.input, cfg.cut], s.g_w1.clone()),
+                    Array::f32(&[cfg.cut], s.g_b1.clone()),
+                    Array::f32(&[cfg.cut, cfg.hidden], s.g_w2.clone()),
+                    Array::f32(&[cfg.hidden], s.g_b2.clone()),
+                    Array::f32(&[cfg.hidden, cfg.classes], s.g_w3.clone()),
+                    Array::f32(&[cfg.classes], s.g_b3.clone()),
+                ])
+            }
+            "full_eval" => {
+                let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
+                let (w2, b2, w3, b3) = (
+                    f32s(&inputs[2])?,
+                    f32s(&inputs[3])?,
+                    f32s(&inputs[4])?,
+                    f32s(&inputs[5])?,
+                );
+                let x = f32s(&inputs[6])?;
+                let y = i32s(&inputs[7])?;
+                let m = cfg.eval_batch;
+                s.prepare(cfg, m);
+                let (loss, correct) =
+                    full_eval_into(cfg, p, w1, b1, w2, b2, w3, b3, x, y, m, s)?;
+                Ok(vec![
+                    Array::f32(&[], vec![loss as f32]),
+                    Array::f32(&[], vec![correct as f32]),
+                ])
+            }
             other => anyhow::bail!("native engine has no artifact '{other}'"),
         }
-    }
-
-    fn client_fwd(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
-        let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
-        let zpre = dense(x, w1, b1, BATCH, IN, CUT);
-        let z = relu(&zpre);
-        Ok(vec![Array::f32(&[BATCH, CUT], z)])
-    }
-
-    fn server_step(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
-        let (w2, b2, w3, b3) = (
-            f32s(&inputs[0])?,
-            f32s(&inputs[1])?,
-            f32s(&inputs[2])?,
-            f32s(&inputs[3])?,
-        );
-        let y = i32s(&inputs[4])?;
-        let zt = f32s(&inputs[5])?;
-        let fwd = server_forward(zt, w2, b2, w3, b3, BATCH);
-        let (loss, glogits, correct) = softmax_ce(&fwd.logits, y, BATCH, CLASSES);
-        let back = server_backward(zt, w2, w3, &fwd, &glogits, BATCH);
-        Ok(vec![
-            Array::f32(&[], vec![loss as f32]),
-            Array::f32(&[], vec![correct as f32]),
-            Array::f32(&[BATCH, CUT], back.grad_z),
-            Array::f32(&[CUT, HID], back.g_w2),
-            Array::f32(&[HID], back.g_b2),
-            Array::f32(&[HID, CLASSES], back.g_w3),
-            Array::f32(&[CLASSES], back.g_b3),
-        ])
-    }
-
-    fn client_bwd(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
-        let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
-        let zt = f32s(&inputs[3])?;
-        let grad_z = f32s(&inputs[4])?;
-        let lambda = f32s(&inputs[5])?[0];
-        let zpre = dense(x, w1, b1, BATCH, IN, CUT);
-        let z = relu(&zpre);
-        // gradient correction (eq. (5)): d/dz [λ/2 ‖z − z~‖²] = λ (z − z~)
-        let mut qerr = 0.0f64;
-        let mut gz = vec![0.0f32; BATCH * CUT];
-        for i in 0..BATCH * CUT {
-            let diff = z[i] - zt[i];
-            qerr += (diff as f64) * (diff as f64);
-            gz[i] = grad_z[i] + lambda * diff;
-        }
-        relu_backward(&mut gz, &zpre);
-        let g_w1 = matmul_at_b(x, &gz, BATCH, IN, CUT);
-        let g_b1 = colsum(&gz, BATCH, CUT);
-        Ok(vec![
-            Array::f32(&[IN, CUT], g_w1),
-            Array::f32(&[CUT], g_b1),
-            Array::f32(&[], vec![qerr as f32]),
-        ])
-    }
-
-    fn full_grad(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
-        let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
-        let (w2, b2, w3, b3) = (
-            f32s(&inputs[2])?,
-            f32s(&inputs[3])?,
-            f32s(&inputs[4])?,
-            f32s(&inputs[5])?,
-        );
-        let x = f32s(&inputs[6])?;
-        let y = i32s(&inputs[7])?;
-        // identical composition to the split path with z~ = z and λ = 0,
-        // so split-vs-monolithic agreement is exact by construction
-        let zpre = dense(x, w1, b1, BATCH, IN, CUT);
-        let z = relu(&zpre);
-        let fwd = server_forward(&z, w2, b2, w3, b3, BATCH);
-        let (loss, glogits, correct) = softmax_ce(&fwd.logits, y, BATCH, CLASSES);
-        let back = server_backward(&z, w2, w3, &fwd, &glogits, BATCH);
-        let mut gz = back.grad_z;
-        relu_backward(&mut gz, &zpre);
-        let g_w1 = matmul_at_b(x, &gz, BATCH, IN, CUT);
-        let g_b1 = colsum(&gz, BATCH, CUT);
-        Ok(vec![
-            Array::f32(&[], vec![loss as f32]),
-            Array::f32(&[], vec![correct as f32]),
-            Array::f32(&[IN, CUT], g_w1),
-            Array::f32(&[CUT], g_b1),
-            Array::f32(&[CUT, HID], back.g_w2),
-            Array::f32(&[HID], back.g_b2),
-            Array::f32(&[HID, CLASSES], back.g_w3),
-            Array::f32(&[CLASSES], back.g_b3),
-        ])
-    }
-
-    fn full_eval(&self, inputs: &[Array]) -> anyhow::Result<Vec<Array>> {
-        let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
-        let (w2, b2, w3, b3) = (
-            f32s(&inputs[2])?,
-            f32s(&inputs[3])?,
-            f32s(&inputs[4])?,
-            f32s(&inputs[5])?,
-        );
-        let x = f32s(&inputs[6])?;
-        let y = i32s(&inputs[7])?;
-        let m = EVAL_BATCH;
-        let z = relu(&dense(x, w1, b1, m, IN, CUT));
-        let fwd = server_forward(&z, w2, b2, w3, b3, m);
-        let (loss, _glogits, correct) = softmax_ce(&fwd.logits, y, m, CLASSES);
-        Ok(vec![
-            Array::f32(&[], vec![loss as f32]),
-            Array::f32(&[], vec![correct as f32]),
-        ])
     }
 }
 
@@ -276,7 +361,308 @@ impl Default for NativeEngine {
     }
 }
 
-// -- manifest construction helpers -------------------------------------------
+// -- the compute layer (public: benches and the alloc audit drive it) --------
+//
+// Each `*_into` fills `EngineScratch` buffers prepared by the caller at
+// the right batch size and allocates nothing. `anyhow` is only touched on
+// error paths (label validation), so the Ok path stays allocation-free.
+
+/// Client forward: `zpre = x @ w1 + b1`, `z = relu(zpre)` (`m = batch`).
+pub fn client_fwd_into(
+    cfg: &NativeModelCfg,
+    p: GemmPolicy,
+    w1: &[f32],
+    b1: &[f32],
+    x: &[f32],
+    s: &mut EngineScratch,
+) {
+    let m = s.zpre.len() / cfg.cut;
+    gemm::dense_into(x, w1, b1, m, cfg.input, cfg.cut, &mut s.zpre, p);
+    relu_into(&s.zpre, &mut s.z);
+}
+
+/// Borrowed server-side buffers for [`server_pass`], split out of
+/// [`EngineScratch`] so that `full_grad_into` can lend its
+/// scratch-resident `z` as the cut input while the rest of the arena is
+/// mutably lent.
+struct ServerBufs<'a> {
+    h1pre: &'a mut [f32],
+    h1: &'a mut [f32],
+    logits: &'a mut [f32],
+    glogits: &'a mut [f32],
+    dh1: &'a mut [f32],
+    gz: &'a mut [f32],
+    g_w2: &'a mut [f32],
+    g_b2: &'a mut [f32],
+    g_w3: &'a mut [f32],
+    g_b3: &'a mut [f32],
+}
+
+/// The server forward + loss + backward sequence, shared verbatim by
+/// [`server_step_into`] and [`full_grad_into`] — one copy, so the
+/// split-vs-monolithic exactness contract has a single source of truth.
+#[allow(clippy::too_many_arguments)]
+fn server_pass(
+    cfg: &NativeModelCfg,
+    p: GemmPolicy,
+    w2: &[f32],
+    b2: &[f32],
+    w3: &[f32],
+    b3: &[f32],
+    y: &[i32],
+    zt: &[f32],
+    m: usize,
+    b: ServerBufs<'_>,
+) -> anyhow::Result<(f64, f64)> {
+    let ServerBufs { h1pre, h1, logits, glogits, dh1, gz, g_w2, g_b2, g_w3, g_b3 } = b;
+    // forward
+    gemm::dense_into(zt, w2, b2, m, cfg.cut, cfg.hidden, h1pre, p);
+    relu_into(h1pre, h1);
+    gemm::dense_into(h1, w3, b3, m, cfg.hidden, cfg.classes, logits, p);
+    let (loss, correct) = softmax_ce_into(logits, y, m, cfg.classes, glogits)?;
+    // backward
+    gemm::matmul_at_b_into(h1, glogits, m, cfg.hidden, cfg.classes, g_w3, p);
+    gemm::colsum_into(glogits, m, cfg.classes, g_b3);
+    gemm::matmul_a_bt_into(glogits, w3, m, cfg.classes, cfg.hidden, dh1, p);
+    relu_backward(dh1, h1pre);
+    gemm::matmul_at_b_into(zt, dh1, m, cfg.cut, cfg.hidden, g_w2, p);
+    gemm::colsum_into(dh1, m, cfg.hidden, g_b2);
+    gemm::matmul_a_bt_into(dh1, w2, m, cfg.hidden, cfg.cut, gz, p);
+    Ok((loss, correct))
+}
+
+/// Server forward + loss + backward off the (possibly quantized) cut
+/// activations `zt`. Fills `gz` (grad at the cut) and the server grads;
+/// returns `(mean loss, correct count)`. Errors on an out-of-range label.
+#[allow(clippy::too_many_arguments)]
+pub fn server_step_into(
+    cfg: &NativeModelCfg,
+    p: GemmPolicy,
+    w2: &[f32],
+    b2: &[f32],
+    w3: &[f32],
+    b3: &[f32],
+    y: &[i32],
+    zt: &[f32],
+    s: &mut EngineScratch,
+) -> anyhow::Result<(f64, f64)> {
+    let m = s.h1pre.len() / cfg.hidden;
+    let bufs = ServerBufs {
+        h1pre: &mut s.h1pre,
+        h1: &mut s.h1,
+        logits: &mut s.logits,
+        glogits: &mut s.glogits,
+        dh1: &mut s.dh1,
+        gz: &mut s.gz,
+        g_w2: &mut s.g_w2,
+        g_b2: &mut s.g_b2,
+        g_w3: &mut s.g_w3,
+        g_b3: &mut s.g_b3,
+    };
+    server_pass(cfg, p, w2, b2, w3, b3, y, zt, m, bufs)
+}
+
+/// Client backward with the gradient correction (eq. (5)): recompute the
+/// forward, add `λ·(z − z~)` to the returned cut gradient, backprop to
+/// the client weights. Fills `g_w1`/`g_b1`; returns the squared
+/// correction error `‖z − z~‖²`.
+#[allow(clippy::too_many_arguments)]
+pub fn client_bwd_into(
+    cfg: &NativeModelCfg,
+    p: GemmPolicy,
+    w1: &[f32],
+    b1: &[f32],
+    x: &[f32],
+    zt: &[f32],
+    grad_z: &[f32],
+    lambda: f32,
+    s: &mut EngineScratch,
+) -> f64 {
+    let m = s.zpre.len() / cfg.cut;
+    client_fwd_into(cfg, p, w1, b1, x, s);
+    // gradient correction (eq. (5)): d/dz [λ/2 ‖z − z~‖²] = λ (z − z~)
+    let mut qerr = 0.0f64;
+    for i in 0..m * cfg.cut {
+        let diff = s.z[i] - zt[i];
+        qerr += (diff as f64) * (diff as f64);
+        s.gz[i] = grad_z[i] + lambda * diff;
+    }
+    relu_backward(&mut s.gz, &s.zpre);
+    gemm::matmul_at_b_into(x, &s.gz, m, cfg.input, cfg.cut, &mut s.g_w1, p);
+    gemm::colsum_into(&s.gz, m, cfg.cut, &mut s.g_b1);
+    qerr
+}
+
+/// Monolithic forward+backward: identical composition to the split path
+/// with `z~ = z` and `λ = 0`, so split-vs-monolithic agreement is exact
+/// by construction. Fills every gradient buffer; returns (loss, correct).
+#[allow(clippy::too_many_arguments)]
+pub fn full_grad_into(
+    cfg: &NativeModelCfg,
+    p: GemmPolicy,
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    w3: &[f32],
+    b3: &[f32],
+    x: &[f32],
+    y: &[i32],
+    s: &mut EngineScratch,
+) -> anyhow::Result<(f64, f64)> {
+    let m = s.zpre.len() / cfg.cut;
+    client_fwd_into(cfg, p, w1, b1, x, s);
+    // destructure the arena to split the borrows: the scratch-resident z
+    // is lent to the server pass as zt while gz/h1*/logits are mutably
+    // lent, exactly the server_step_into sequence (one copy of the math)
+    let EngineScratch {
+        zpre, z, h1pre, h1, logits, glogits, gz, dh1,
+        g_w1, g_b1, g_w2, g_b2, g_w3, g_b3,
+    } = s;
+    let bufs = ServerBufs {
+        h1pre,
+        h1,
+        logits,
+        glogits,
+        dh1,
+        gz: &mut gz[..],
+        g_w2,
+        g_b2,
+        g_w3,
+        g_b3,
+    };
+    let (loss, correct) = server_pass(cfg, p, w2, b2, w3, b3, y, z, m, bufs)?;
+    relu_backward(gz, zpre);
+    gemm::matmul_at_b_into(x, gz, m, cfg.input, cfg.cut, g_w1, p);
+    gemm::colsum_into(gz, m, cfg.cut, g_b1);
+    Ok((loss, correct))
+}
+
+/// Forward-only eval over `m` rows; returns (loss, correct). The loss
+/// gradient is still computed into the scratch (same arithmetic as the
+/// historical engine) but unused.
+#[allow(clippy::too_many_arguments)]
+pub fn full_eval_into(
+    cfg: &NativeModelCfg,
+    p: GemmPolicy,
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    w3: &[f32],
+    b3: &[f32],
+    x: &[f32],
+    y: &[i32],
+    m: usize,
+    s: &mut EngineScratch,
+) -> anyhow::Result<(f64, f64)> {
+    gemm::dense_into(x, w1, b1, m, cfg.input, cfg.cut, &mut s.zpre, p);
+    relu_into(&s.zpre, &mut s.z);
+    gemm::dense_into(&s.z, w2, b2, m, cfg.cut, cfg.hidden, &mut s.h1pre, p);
+    relu_into(&s.h1pre, &mut s.h1);
+    gemm::dense_into(&s.h1, w3, b3, m, cfg.hidden, cfg.classes, &mut s.logits, p);
+    softmax_ce_into(&s.logits, y, m, cfg.classes, &mut s.glogits)
+}
+
+// -- manifest construction ---------------------------------------------------
+
+fn variant_for(cfg: &NativeModelCfg) -> Variant {
+    let x = |b: usize| io("x", &[b, 28, 28, 1], "f32", "data");
+    let y = |b: usize| io("y", &[b], "s32", "data");
+    let client_params = || {
+        vec![
+            io("w1", &[cfg.input, cfg.cut], "f32", "param_client"),
+            io("b1", &[cfg.cut], "f32", "param_client"),
+        ]
+    };
+    let server_params = || {
+        vec![
+            io("w2", &[cfg.cut, cfg.hidden], "f32", "param_server"),
+            io("b2", &[cfg.hidden], "f32", "param_server"),
+            io("w3", &[cfg.hidden, cfg.classes], "f32", "param_server"),
+            io("b3", &[cfg.classes], "f32", "param_server"),
+        ]
+    };
+
+    let mut artifacts = HashMap::new();
+    let mut add = |meta: ArtifactMeta| {
+        artifacts.insert(meta.name.clone(), meta);
+    };
+    let mut inputs = client_params();
+    inputs.push(x(cfg.batch));
+    add(art("client_fwd", inputs, &["z"]));
+
+    let mut inputs = server_params();
+    inputs.push(y(cfg.batch));
+    inputs.push(io("z_tilde", &[cfg.batch, cfg.cut], "f32", "cut"));
+    add(art(
+        "server_step",
+        inputs,
+        &["loss", "correct", "grad_z", "g_w2", "g_b2", "g_w3", "g_b3"],
+    ));
+
+    let mut inputs = client_params();
+    inputs.push(x(cfg.batch));
+    inputs.push(io("z_tilde", &[cfg.batch, cfg.cut], "f32", "cut"));
+    inputs.push(io("grad_z", &[cfg.batch, cfg.cut], "f32", "grad_cut"));
+    inputs.push(io("lambda", &[], "f32", "hyper"));
+    add(art("client_bwd", inputs, &["g_w1", "g_b1", "qerr"]));
+
+    let mut inputs = client_params();
+    inputs.extend(server_params());
+    inputs.push(x(cfg.batch));
+    inputs.push(y(cfg.batch));
+    add(art(
+        "full_grad",
+        inputs,
+        &[
+            "loss", "correct", "g_w1", "g_b1", "g_w2", "g_b2", "g_w3", "g_b3",
+        ],
+    ));
+
+    let mut inputs = client_params();
+    inputs.extend(server_params());
+    inputs.push(x(cfg.eval_batch));
+    inputs.push(y(cfg.eval_batch));
+    add(art("full_eval", inputs, &["loss", "correct"]));
+
+    let mut config = Object::new();
+    config.insert("batch", Value::from_usize(cfg.batch));
+    config.insert("eval_batch", Value::from_usize(cfg.eval_batch));
+    let spec = ModelSpec {
+        task: "femnist".to_string(),
+        preset: cfg.preset.to_string(),
+        cut_dim: cfg.cut,
+        act_batch: cfg.batch,
+        batch: cfg.batch,
+        eval_batch: cfg.eval_batch,
+        client: SideSpec {
+            params: vec![
+                param("w1", &[cfg.input, cfg.cut], "glorot_uniform", cfg.input, cfg.cut),
+                param("b1", &[cfg.cut], "zeros", cfg.cut, cfg.cut),
+            ],
+        },
+        server: SideSpec {
+            params: vec![
+                param("w2", &[cfg.cut, cfg.hidden], "glorot_uniform", cfg.cut, cfg.hidden),
+                param("b2", &[cfg.hidden], "zeros", cfg.hidden, cfg.hidden),
+                param(
+                    "w3",
+                    &[cfg.hidden, cfg.classes],
+                    "glorot_uniform",
+                    cfg.hidden,
+                    cfg.classes,
+                ),
+                param("b3", &[cfg.classes], "zeros", cfg.hidden, cfg.classes),
+            ],
+        },
+        metrics: vec!["correct".to_string()],
+        client_args: vec!["x".to_string()],
+        server_args: vec!["y".to_string()],
+        config: Value::Obj(config),
+    };
+    Variant { spec, artifacts }
+}
 
 fn io(name: &str, shape: &[usize], dtype: &str, role: &str) -> IoSpec {
     IoSpec {
@@ -308,7 +694,7 @@ fn param(name: &str, shape: &[usize], init: &str, fan_in: usize, fan_out: usize)
     }
 }
 
-// -- dense math (fixed reduction order => deterministic) ---------------------
+// -- elementwise + loss (fixed reduction order => deterministic) -------------
 
 fn f32s(a: &Array) -> anyhow::Result<&[f32]> {
     a.as_f32().ok_or_else(|| anyhow::anyhow!("expected f32 input"))
@@ -318,25 +704,11 @@ fn i32s(a: &Array) -> anyhow::Result<&[i32]> {
     a.as_i32().ok_or_else(|| anyhow::anyhow!("expected s32 input"))
 }
 
-/// `x [m, k] @ w [k, n] + bias [n]`.
-fn dense(x: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let row = &x[i * k..(i + 1) * k];
-        let o = &mut out[i * n..(i + 1) * n];
-        o.copy_from_slice(bias);
-        for (kk, &xv) in row.iter().enumerate() {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            for (ov, &wv) in o.iter_mut().zip(wrow) {
-                *ov += xv * wv;
-            }
-        }
+fn relu_into(z: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(z.len(), out.len());
+    for (o, &v) in out.iter_mut().zip(z) {
+        *o = if v > 0.0 { v } else { 0.0 };
     }
-    out
-}
-
-fn relu(z: &[f32]) -> Vec<f32> {
-    z.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect()
 }
 
 /// Zero the gradient wherever the pre-activation was non-positive.
@@ -348,105 +720,30 @@ fn relu_backward(grad: &mut [f32], pre: &[f32]) {
     }
 }
 
-/// `a^T [k, m] @ g [m, n]` for `a [m, k]` (weight gradients).
-fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; k * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let grow = &g[i * n..(i + 1) * n];
-        for (kk, &av) in arow.iter().enumerate() {
-            let o = &mut out[kk * n..(kk + 1) * n];
-            for (ov, &gv) in o.iter_mut().zip(grow) {
-                *ov += av * gv;
-            }
-        }
-    }
-    out
-}
-
-/// `g [m, n] @ w^T [n, k]` for `w [k, n]` (input gradients).
-fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * k];
-    for i in 0..m {
-        let grow = &g[i * n..(i + 1) * n];
-        let orow = &mut out[i * k..(i + 1) * k];
-        for (kk, ov) in orow.iter_mut().enumerate() {
-            let wrow = &w[kk * n..(kk + 1) * n];
-            let mut s = 0.0f32;
-            for (gv, wv) in grow.iter().zip(wrow) {
-                s += gv * wv;
-            }
-            *ov = s;
-        }
-    }
-    out
-}
-
-/// Column sums of `g [m, n]` (bias gradients).
-fn colsum(g: &[f32], m: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
-    for i in 0..m {
-        let grow = &g[i * n..(i + 1) * n];
-        for (ov, &gv) in out.iter_mut().zip(grow) {
-            *ov += gv;
-        }
-    }
-    out
-}
-
-struct ServerFwd {
-    h1pre: Vec<f32>,
-    h1: Vec<f32>,
-    logits: Vec<f32>,
-}
-
-fn server_forward(
-    zt: &[f32],
-    w2: &[f32],
-    b2: &[f32],
-    w3: &[f32],
-    b3: &[f32],
+/// Mean softmax cross-entropy over the batch, gradient written into
+/// `grad` (`[m, c]`, fully overwritten). Returns (mean loss,
+/// correct-prediction count). Ties in the argmax resolve to the lowest
+/// class index (fixed, deterministic). Labels are validated against `c`
+/// up front: an out-of-range label is a data bug and surfaces as a
+/// proper error, not an index-out-of-bounds panic mid-round.
+fn softmax_ce_into(
+    logits: &[f32],
+    y: &[i32],
     m: usize,
-) -> ServerFwd {
-    let h1pre = dense(zt, w2, b2, m, CUT, HID);
-    let h1 = relu(&h1pre);
-    let logits = dense(&h1, w3, b3, m, HID, CLASSES);
-    ServerFwd { h1pre, h1, logits }
-}
-
-struct ServerBack {
-    g_w2: Vec<f32>,
-    g_b2: Vec<f32>,
-    g_w3: Vec<f32>,
-    g_b3: Vec<f32>,
-    grad_z: Vec<f32>,
-}
-
-fn server_backward(
-    zt: &[f32],
-    w2: &[f32],
-    w3: &[f32],
-    fwd: &ServerFwd,
-    glogits: &[f32],
-    m: usize,
-) -> ServerBack {
-    let g_w3 = matmul_at_b(&fwd.h1, glogits, m, HID, CLASSES);
-    let g_b3 = colsum(glogits, m, CLASSES);
-    let mut dh1 = matmul_a_bt(glogits, w3, m, CLASSES, HID);
-    relu_backward(&mut dh1, &fwd.h1pre);
-    let g_w2 = matmul_at_b(zt, &dh1, m, CUT, HID);
-    let g_b2 = colsum(&dh1, m, HID);
-    let grad_z = matmul_a_bt(&dh1, w2, m, HID, CUT);
-    ServerBack { g_w2, g_b2, g_w3, g_b3, grad_z }
-}
-
-/// Mean softmax cross-entropy over the batch. Returns (mean loss,
-/// d(mean loss)/d(logits), correct-prediction count). Ties in the argmax
-/// resolve to the lowest class index (fixed, deterministic).
-fn softmax_ce(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f64, Vec<f32>, f64) {
+    c: usize,
+    grad: &mut [f32],
+) -> anyhow::Result<(f64, f64)> {
+    debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(grad.len(), m * c);
+    anyhow::ensure!(y.len() == m, "got {} labels for a batch of {m}", y.len());
+    for (i, &yv) in y.iter().enumerate() {
+        anyhow::ensure!(
+            yv >= 0 && (yv as usize) < c,
+            "label {yv} at row {i} out of range for {c} classes"
+        );
+    }
     let mut loss = 0.0f64;
     let mut correct = 0.0f64;
-    let mut grad = vec![0.0f32; m * c];
     for i in 0..m {
         let row = &logits[i * c..(i + 1) * c];
         let mut maxv = f32::NEG_INFINITY;
@@ -475,7 +772,7 @@ fn softmax_ce(logits: &[f32], y: &[i32], m: usize, c: usize) -> (f64, Vec<f32>, 
         }
         g[yi] -= 1.0 / m as f32;
     }
-    (loss / m as f64, grad, correct)
+    Ok((loss / m as f64, correct))
 }
 
 #[cfg(test)]
@@ -484,133 +781,175 @@ mod tests {
     use crate::runtime::Runtime;
     use crate::util::rng::Rng;
 
-    fn rand_inputs(seed: u64) -> (Vec<Array>, Vec<Array>) {
+    fn rand_inputs(cfg: &NativeModelCfg, seed: u64) -> (Vec<Array>, Vec<Array>) {
         // (full_grad inputs, client_fwd inputs) over shared params/batch
         let rt = Runtime::native();
-        let spec = rt.manifest.variant(VARIANT).unwrap().spec.clone();
+        let spec = rt.manifest.variant(&cfg.variant_key()).unwrap().spec.clone();
         let rng = Rng::new(seed);
         let wc = spec.client.init_tensors(&mut rng.fork(1));
         let ws = spec.server.init_tensors(&mut rng.fork(2));
         let mut r = rng.fork(3);
-        let x = r.uniform_vec(BATCH * IN, 0.0, 1.0);
-        let y: Vec<i32> = (0..BATCH).map(|_| r.below(CLASSES) as i32).collect();
+        let x = r.uniform_vec(cfg.batch * cfg.input, 0.0, 1.0);
+        let y: Vec<i32> = (0..cfg.batch).map(|_| r.below(cfg.classes) as i32).collect();
         let p = |t: &crate::tensor::Tensor| Array::f32(t.shape(), t.data().to_vec());
         let mut full: Vec<Array> = wc.tensors.iter().map(&p).collect();
         full.extend(ws.tensors.iter().map(&p));
-        full.push(Array::f32(&[BATCH, 28, 28, 1], x.clone()));
-        full.push(Array::i32(&[BATCH], y));
+        full.push(Array::f32(&[cfg.batch, 28, 28, 1], x.clone()));
+        full.push(Array::i32(&[cfg.batch], y));
         let mut fwd: Vec<Array> = wc.tensors.iter().map(&p).collect();
-        fwd.push(Array::f32(&[BATCH, 28, 28, 1], x));
+        fwd.push(Array::f32(&[cfg.batch, 28, 28, 1], x));
         (full, fwd)
     }
 
     #[test]
-    fn manifest_is_complete_and_consistent() {
+    fn manifest_is_complete_and_consistent_for_every_variant() {
         let rt = Runtime::native();
-        let v = rt.manifest.variant(VARIANT).unwrap();
-        for a in ["client_fwd", "server_step", "client_bwd", "full_grad", "full_eval"] {
-            assert!(v.artifacts.contains_key(a), "{a} missing");
-        }
-        assert_eq!(v.spec.cut_dim, CUT);
-        assert_eq!(v.spec.client.numel(), IN * CUT + CUT);
-        assert_eq!(
-            v.spec.server.numel(),
-            CUT * HID + HID + HID * CLASSES + CLASSES
-        );
-        // param_client/param_server input order matches the SideSpec order
-        let fwd = v.artifacts.get("client_fwd").unwrap();
-        assert_eq!(fwd.inputs[0].name, v.spec.client.params[0].name);
-        assert_eq!(fwd.inputs[0].shape, v.spec.client.params[0].shape);
-    }
-
-    #[test]
-    fn split_composition_equals_full_grad_exactly() {
-        let engine = NativeEngine::new();
-        let (full_in, fwd_in) = rand_inputs(11);
-        let full = engine.run(VARIANT, "full_grad", &full_in).unwrap();
-
-        let z = engine
-            .run(VARIANT, "client_fwd", &fwd_in)
-            .unwrap()
-            .remove(0);
-        let step_in = vec![
-            full_in[2].clone(), // w2
-            full_in[3].clone(), // b2
-            full_in[4].clone(), // w3
-            full_in[5].clone(), // b3
-            full_in[7].clone(), // y
-            z.clone(),          // z_tilde = z
-        ];
-        let step = engine.run(VARIANT, "server_step", &step_in).unwrap();
-        let bwd_in = vec![
-            full_in[0].clone(), // w1
-            full_in[1].clone(), // b1
-            full_in[6].clone(), // x
-            z,                  // z_tilde = z
-            step[2].clone(),    // grad_z
-            Array::f32(&[], vec![0.0]), // lambda = 0
-        ];
-        let bwd = engine.run(VARIANT, "client_bwd", &bwd_in).unwrap();
-
-        // z~ == z, λ == 0 → zero correction error and bit-identical grads
-        assert_eq!(bwd[2].as_f32().unwrap()[0], 0.0);
-        assert_eq!(step[0].as_f32().unwrap(), full[0].as_f32().unwrap()); // loss
-        assert_eq!(step[1].as_f32().unwrap(), full[1].as_f32().unwrap()); // correct
-        assert_eq!(bwd[0].as_f32().unwrap(), full[2].as_f32().unwrap()); // g_w1
-        assert_eq!(bwd[1].as_f32().unwrap(), full[3].as_f32().unwrap()); // g_b1
-        for (k, out) in ["g_w2", "g_b2", "g_w3", "g_b3"].iter().enumerate() {
-            assert_eq!(
-                step[3 + k].as_f32().unwrap(),
-                full[4 + k].as_f32().unwrap(),
-                "{out}"
-            );
-        }
-    }
-
-    #[test]
-    fn gradients_match_finite_differences() {
-        let engine = NativeEngine::new();
-        let (full_in, _) = rand_inputs(5);
-        let outs = engine.run(VARIANT, "full_grad", &full_in).unwrap();
-        // probe the max-|grad| coordinate of each parameter tensor
-        for (pi, gi) in [(0usize, 2usize), (1, 3), (2, 4), (3, 5), (4, 6), (5, 7)] {
-            let grads = outs[gi].as_f32().unwrap();
-            let (idx, &g) = grads
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
-                .unwrap();
-            if g.abs() < 1e-5 {
-                continue; // too flat to measure against f32 loss noise
+        for cfg in NativeModelCfg::registry() {
+            let key = cfg.variant_key();
+            let v = rt.manifest.variant(&key).unwrap();
+            for a in ["client_fwd", "server_step", "client_bwd", "full_grad", "full_eval"] {
+                assert!(v.artifacts.contains_key(a), "{key}/{a} missing");
             }
-            let eps = 1e-3f32;
-            let probe = |delta: f32| -> f64 {
-                let mut inputs = full_in.clone();
-                if let Array::F32 { data, .. } = &mut inputs[pi] {
-                    data[idx] += delta;
-                }
-                let o = engine.run(VARIANT, "full_grad", &inputs).unwrap();
-                o[0].as_f32().unwrap()[0] as f64
-            };
-            let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
-            let rel = (fd - g as f64).abs() / (g.abs() as f64).max(1e-6);
-            // the loss output is f32, so central differences carry
-            // ~1e-4 absolute noise at eps = 1e-3; accept either bound
-            assert!(
-                rel < 0.05 || (fd - g as f64).abs() < 5e-4,
-                "param {pi} idx {idx}: analytic {g} vs fd {fd} (rel {rel})"
+            assert_eq!(v.spec.cut_dim, cfg.cut, "{key}");
+            assert_eq!(v.spec.client.numel(), cfg.input * cfg.cut + cfg.cut, "{key}");
+            assert_eq!(
+                v.spec.server.numel(),
+                cfg.cut * cfg.hidden + cfg.hidden + cfg.hidden * cfg.classes + cfg.classes,
+                "{key}"
             );
+            // param_client/param_server input order matches the SideSpec
+            let fwd = v.artifacts.get("client_fwd").unwrap();
+            assert_eq!(fwd.inputs[0].name, v.spec.client.params[0].name);
+            assert_eq!(fwd.inputs[0].shape, v.spec.client.params[0].shape);
+        }
+        // the registry still serves the historical key
+        assert!(NativeModelCfg::by_variant(VARIANT).is_some());
+        assert_eq!(NativeModelCfg::by_preset("tiny").unwrap().cut, 32);
+    }
+
+    #[test]
+    fn split_composition_equals_full_grad_exactly_on_every_variant() {
+        for cfg in NativeModelCfg::registry() {
+            let key = cfg.variant_key();
+            let engine = NativeEngine::new();
+            let (full_in, fwd_in) = rand_inputs(cfg, 11);
+            let full = engine.run(&key, "full_grad", &full_in).unwrap();
+
+            let z = engine.run(&key, "client_fwd", &fwd_in).unwrap().remove(0);
+            let step_in = vec![
+                full_in[2].clone(), // w2
+                full_in[3].clone(), // b2
+                full_in[4].clone(), // w3
+                full_in[5].clone(), // b3
+                full_in[7].clone(), // y
+                z.clone(),          // z_tilde = z
+            ];
+            let step = engine.run(&key, "server_step", &step_in).unwrap();
+            let bwd_in = vec![
+                full_in[0].clone(),         // w1
+                full_in[1].clone(),         // b1
+                full_in[6].clone(),         // x
+                z,                          // z_tilde = z
+                step[2].clone(),            // grad_z
+                Array::f32(&[], vec![0.0]), // lambda = 0
+            ];
+            let bwd = engine.run(&key, "client_bwd", &bwd_in).unwrap();
+
+            // z~ == z, λ == 0 → zero correction error and bit-identical grads
+            assert_eq!(bwd[2].as_f32().unwrap()[0], 0.0, "{key} qerr");
+            assert_eq!(step[0].as_f32().unwrap(), full[0].as_f32().unwrap(), "{key} loss");
+            assert_eq!(step[1].as_f32().unwrap(), full[1].as_f32().unwrap(), "{key} correct");
+            assert_eq!(bwd[0].as_f32().unwrap(), full[2].as_f32().unwrap(), "{key} g_w1");
+            assert_eq!(bwd[1].as_f32().unwrap(), full[3].as_f32().unwrap(), "{key} g_b1");
+            for (k, out) in ["g_w2", "g_b2", "g_w3", "g_b3"].iter().enumerate() {
+                assert_eq!(
+                    step[3 + k].as_f32().unwrap(),
+                    full[4 + k].as_f32().unwrap(),
+                    "{key} {out}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_on_every_variant() {
+        for cfg in NativeModelCfg::registry() {
+            let key = cfg.variant_key();
+            let engine = NativeEngine::new();
+            let (full_in, _) = rand_inputs(cfg, 5);
+            let outs = engine.run(&key, "full_grad", &full_in).unwrap();
+            // probe the max-|grad| coordinate of each parameter tensor
+            for (pi, gi) in [(0usize, 2usize), (1, 3), (2, 4), (3, 5), (4, 6), (5, 7)] {
+                let grads = outs[gi].as_f32().unwrap();
+                let (idx, &g) = grads
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+                    .unwrap();
+                if g.abs() < 1e-5 {
+                    continue; // too flat to measure against f32 loss noise
+                }
+                let eps = 1e-3f32;
+                let probe = |delta: f32| -> f64 {
+                    let mut inputs = full_in.clone();
+                    if let Array::F32 { data, .. } = &mut inputs[pi] {
+                        data[idx] += delta;
+                    }
+                    let o = engine.run(&key, "full_grad", &inputs).unwrap();
+                    o[0].as_f32().unwrap()[0] as f64
+                };
+                let fd = (probe(eps) - probe(-eps)) / (2.0 * eps as f64);
+                let rel = (fd - g as f64).abs() / (g.abs() as f64).max(1e-6);
+                // the loss output is f32, so central differences carry
+                // ~1e-4 absolute noise at eps = 1e-3; accept either bound
+                assert!(
+                    rel < 0.05 || (fd - g as f64).abs() < 5e-4,
+                    "{key} param {pi} idx {idx}: analytic {g} vs fd {fd} (rel {rel})"
+                );
+            }
+        }
+    }
+
+    /// All kernel policies produce bit-identical artifact outputs on
+    /// every variant, including the dsub-8, 1152-wide `stress` geometry
+    /// (the engine-level view of the gemm exactness contract).
+    #[test]
+    fn kernel_policies_are_bit_identical_per_artifact() {
+        for cfg in NativeModelCfg::registry() {
+            let key = cfg.variant_key();
+            let (full_in, fwd_in) = rand_inputs(cfg, 23);
+            let engines = [
+                NativeEngine::with_policy(GemmPolicy::naive()),
+                NativeEngine::with_policy(GemmPolicy::tiled()),
+                NativeEngine::with_policy(GemmPolicy::parallel(3)),
+            ];
+            let runs: Vec<_> = engines
+                .iter()
+                .map(|e| {
+                    let z = e.run(&key, "client_fwd", &fwd_in).unwrap();
+                    let full = e.run(&key, "full_grad", &full_in).unwrap();
+                    (z, full)
+                })
+                .collect();
+            for other in &runs[1..] {
+                assert_eq!(
+                    runs[0].0[0].as_f32().unwrap(),
+                    other.0[0].as_f32().unwrap(),
+                    "{key} z"
+                );
+                for (a, b) in runs[0].1.iter().zip(&other.1) {
+                    assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(), "{key} full_grad");
+                }
+            }
         }
     }
 
     #[test]
     fn lambda_correction_shifts_client_gradient() {
+        let cfg = NativeModelCfg::by_preset("tiny").unwrap();
         let engine = NativeEngine::new();
-        let (full_in, fwd_in) = rand_inputs(7);
-        let z = engine
-            .run(VARIANT, "client_fwd", &fwd_in)
-            .unwrap()
-            .remove(0);
+        let (full_in, fwd_in) = rand_inputs(cfg, 7);
+        let z = engine.run(VARIANT, "client_fwd", &fwd_in).unwrap().remove(0);
         // perturb z~ away from z so the correction term is non-zero
         let zt = match &z {
             Array::F32 { shape, data } => {
@@ -622,7 +961,8 @@ mod tests {
             }
             _ => unreachable!(),
         };
-        let grad_z = Array::f32(&[BATCH, CUT], vec![0.0; BATCH * CUT]);
+        let n = cfg.batch * cfg.cut;
+        let grad_z = Array::f32(&[cfg.batch, cfg.cut], vec![0.0; n]);
         let run = |lambda: f32| {
             let bwd_in = vec![
                 full_in[0].clone(),
@@ -640,6 +980,68 @@ mod tests {
         // λ = 0 with zero grad_z → zero client grads; λ > 0 → non-zero
         assert!(without[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
         assert!(with[0].as_f32().unwrap().iter().any(|&v| v != 0.0));
+    }
+
+    /// Satellite: an out-of-range label is a proper error on every
+    /// label-consuming artifact, not an index-out-of-bounds panic.
+    #[test]
+    fn out_of_range_labels_error_instead_of_panicking() {
+        let cfg = NativeModelCfg::by_preset("tiny").unwrap();
+        let engine = NativeEngine::new();
+        let (mut full_in, fwd_in) = rand_inputs(cfg, 13);
+        for bad in [cfg.classes as i32, -1, i32::MAX] {
+            if let Array::I32 { data, .. } = &mut full_in[7] {
+                data[2] = bad;
+            }
+            let err = engine.run(VARIANT, "full_grad", &full_in).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{bad}: {err}");
+
+            // server_step sees the same labels through its own input slot
+            let z = engine.run(VARIANT, "client_fwd", &fwd_in).unwrap().remove(0);
+            let step_in = vec![
+                full_in[2].clone(),
+                full_in[3].clone(),
+                full_in[4].clone(),
+                full_in[5].clone(),
+                full_in[7].clone(), // y (bad)
+                z,
+            ];
+            let err = engine.run(VARIANT, "server_step", &step_in).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{bad}: {err}");
+        }
+        // full_eval validates too (eval batches come from the same data
+        // plumbing)
+        let eval_m = cfg.eval_batch;
+        let mut eval_in = full_in.clone();
+        eval_in[6] = Array::f32(&[eval_m, 28, 28, 1], vec![0.1; eval_m * cfg.input]);
+        eval_in[7] = Array::i32(&[eval_m], vec![cfg.classes as i32; eval_m]);
+        let err = engine.run(VARIANT, "full_eval", &eval_in).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    /// Warm scratch reuse is bit-identical to fresh scratches and keeps
+    /// its buffer capacities (the steady-state contract run_scratch
+    /// provides the trainers).
+    #[test]
+    fn scratch_reuse_is_bit_identical_and_capacity_stable() {
+        let cfg = NativeModelCfg::by_preset("small").unwrap();
+        let key = cfg.variant_key();
+        let engine = NativeEngine::new();
+        let (full_in, _) = rand_inputs(cfg, 31);
+        let fresh = engine.run(&key, "full_grad", &full_in).unwrap();
+        let mut scratch = EngineScratch::new();
+        // warm-up sizes the buffers (full_eval is the largest batch)
+        let _ = engine.run_scratch(&key, "full_grad", &full_in, &mut scratch).unwrap();
+        let fp = scratch.capacity_fingerprint();
+        for _ in 0..2 {
+            let warm = engine
+                .run_scratch(&key, "full_grad", &full_in, &mut scratch)
+                .unwrap();
+            for (a, b) in fresh.iter().zip(&warm) {
+                assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+            }
+            assert_eq!(scratch.capacity_fingerprint(), fp, "scratch reallocated");
+        }
     }
 
     #[test]

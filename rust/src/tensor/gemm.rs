@@ -1,0 +1,570 @@
+//! Deterministic tiled GEMM kernels for the native engine's dense math.
+//!
+//! Three shapes cover every matmul in a split-MLP round:
+//!
+//! * [`dense_into`] — `out[m,n] = x[m,k] @ w[k,n] + bias[n]` (forward);
+//! * [`matmul_at_b_into`] — `out[k,n] = a[m,k]ᵀ @ g[m,n]` (weight grads);
+//! * [`matmul_a_bt_into`] — `out[m,k] = g[m,n] @ w[k,n]ᵀ` (input grads).
+//!
+//! # Exactness contract (what tiling may and may not reorder)
+//!
+//! Every kernel here is **bit-identical** to its naive triple-loop
+//! reference ([`naive`]) by construction: for each output element the
+//! reduction over the contraction dimension runs **strictly in ascending
+//! order into a single accumulator** — the exact FP-operation sequence
+//! the naive loop performs. Tiling only changes *which output element is
+//! worked on when* (row blocks so a streamed operand is loaded once per
+//! block instead of once per row, contraction-dim blocking so the hot
+//! output block stays cache-resident) — reorderings across *independent*
+//! output elements, which cannot change any rounding. The unrolled inner
+//! primitives follow the same rule the quantizer's `dot8` established:
+//! [`axpy8`] updates independent elements (order irrelevant), and
+//! [`dot_serial`] is the rolled single-accumulator loop unrolled *without
+//! reassociation* — one accumulator, same op sequence, fewer branches.
+//! What is **never** done: splitting a reduction across lanes, partial
+//! accumulators per k-block, or FMA contraction — all of which round
+//! differently and would break the golden fixtures.
+//!
+//! # Parallel fan-out
+//!
+//! [`GemmPolicy::parallel`] fans the *output rows* across scoped worker
+//! threads ([`scoped_row_chunks`]): rows are disjoint output regions and
+//! each element's reduction is untouched, so results are bit-identical at
+//! any worker count (enforced by `prop_gemm_modes_bitwise_identical` in
+//! `rust/tests/properties.rs` and the CI golden job). Small problems stay
+//! serial ([`PAR_MIN_WORK`]) — thread spawn would dominate.
+//!
+//! All kernels write caller-provided buffers and allocate nothing (the
+//! parallel path spawns scoped threads, which is why the round engine's
+//! per-client fan-out uses the serial policy — the cohort is already
+//! parallel; see `rust/tests/alloc.rs` for the zero-allocation audit).
+
+use std::thread;
+
+/// Kernel implementation selector.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GemmMode {
+    /// Verbatim reference triple loops (bench baseline, property oracle).
+    Naive,
+    /// Cache-blocked kernels (bit-identical to naive; the default).
+    #[default]
+    Tiled,
+}
+
+/// How the engine's dense math runs: kernel flavor + row fan-out width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmPolicy {
+    pub mode: GemmMode,
+    /// Scoped worker threads for the row fan-out (`<= 1` = serial).
+    /// Ignored in `Naive` mode — the reference is strictly serial.
+    pub workers: usize,
+}
+
+impl GemmPolicy {
+    /// The reference kernels, serial (bench baseline / test oracle).
+    pub fn naive() -> GemmPolicy {
+        GemmPolicy { mode: GemmMode::Naive, workers: 1 }
+    }
+
+    /// Tiled kernels, serial — what the round engine's cohort workers
+    /// use (the cohort fan-out already owns the cores).
+    pub fn tiled() -> GemmPolicy {
+        GemmPolicy { mode: GemmMode::Tiled, workers: 1 }
+    }
+
+    /// Tiled kernels + row-parallel fan-out over disjoint output rows.
+    pub fn parallel(workers: usize) -> GemmPolicy {
+        GemmPolicy { mode: GemmMode::Tiled, workers: workers.max(1) }
+    }
+
+    /// Display label for benches/logs.
+    pub fn label(&self) -> &'static str {
+        match (self.mode, self.workers > 1) {
+            (GemmMode::Naive, _) => "naive",
+            (GemmMode::Tiled, false) => "tiled",
+            (GemmMode::Tiled, true) => "tiled+parallel",
+        }
+    }
+}
+
+impl Default for GemmPolicy {
+    fn default() -> Self {
+        GemmPolicy::tiled()
+    }
+}
+
+/// Output rows processed together in the row-blocked kernels: the shared
+/// operand row (`w`/`g`) is loaded once per block instead of once per
+/// output row. Any value is bit-safe (rows are independent).
+const MR: usize = 4;
+
+/// Contraction-dim block for `matmul_at_b`: this many *output* rows stay
+/// cache-resident while the whole batch streams past, instead of the full
+/// `[k, n]` output being re-streamed per sample.
+const KB: usize = 8;
+
+/// Minimum `m·k·n` MAC count before the parallel policy actually spawns
+/// threads; below this the spawn cost dominates the kernel.
+const PAR_MIN_WORK: usize = 1 << 16;
+
+// -- public kernels ----------------------------------------------------------
+
+/// `out[m,n] = x[m,k] @ w[k,n] + bias[n]`.
+pub fn dense_into(
+    x: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    policy: GemmPolicy,
+) {
+    debug_assert_eq!(x.len(), m * k);
+    debug_assert_eq!(w.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    assert_eq!(out.len(), m * n);
+    match policy.mode {
+        GemmMode::Naive => naive::dense(x, w, bias, m, k, n, out),
+        GemmMode::Tiled => {
+            row_fanout(out, m, n, policy.workers, m * k * n, |row0, rows, o| {
+                dense_rows(&x[row0 * k..(row0 + rows) * k], w, bias, rows, k, n, o)
+            });
+        }
+    }
+}
+
+/// `out[k,n] = a[m,k]ᵀ @ g[m,n]` (weight gradients; reduction over the
+/// batch dimension `m`, in ascending sample order per output element).
+pub fn matmul_at_b_into(
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    policy: GemmPolicy,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(g.len(), m * n);
+    assert_eq!(out.len(), k * n);
+    match policy.mode {
+        GemmMode::Naive => naive::matmul_at_b(a, g, m, k, n, out),
+        GemmMode::Tiled => {
+            // output rows are indexed by the contraction-free dim k
+            row_fanout(out, k, n, policy.workers, m * k * n, |row0, rows, o| {
+                at_b_rows(a, g, m, k, n, row0, rows, o)
+            });
+        }
+    }
+}
+
+/// `out[m,k] = g[m,n] @ w[k,n]ᵀ` (input gradients; each output element is
+/// a single-accumulator dot over `n` in ascending order).
+pub fn matmul_a_bt_into(
+    g: &[f32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    out: &mut [f32],
+    policy: GemmPolicy,
+) {
+    debug_assert_eq!(g.len(), m * n);
+    debug_assert_eq!(w.len(), k * n);
+    assert_eq!(out.len(), m * k);
+    match policy.mode {
+        GemmMode::Naive => naive::matmul_a_bt(g, w, m, n, k, out),
+        GemmMode::Tiled => {
+            row_fanout(out, m, k, policy.workers, m * k * n, |row0, rows, o| {
+                a_bt_rows(&g[row0 * n..(row0 + rows) * n], w, rows, n, k, o)
+            });
+        }
+    }
+}
+
+/// Column sums of `g[m,n]` (bias gradients), rows accumulated in
+/// ascending order — too cheap to tile or fan out.
+pub fn colsum_into(g: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(g.len(), m * n);
+    assert_eq!(out.len(), n);
+    out.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..m {
+        let grow = &g[i * n..(i + 1) * n];
+        for (ov, &gv) in out.iter_mut().zip(grow) {
+            *ov += gv;
+        }
+    }
+}
+
+// -- tiled row kernels -------------------------------------------------------
+
+/// Row-blocked `x @ w + bias` over `rows` rows of `x`/`out`: each `w` row
+/// is loaded once per MR-block and axpy'd into the block's output rows.
+/// Per output element: init from `bias[j]`, then `+= x[i,kk]·w[kk,j]` for
+/// `kk` ascending — the naive loop's exact op sequence.
+fn dense_rows(x: &[f32], w: &[f32], bias: &[f32], rows: usize, k: usize, n: usize, out: &mut [f32]) {
+    let mut i = 0;
+    while i < rows {
+        let mr = MR.min(rows - i);
+        for r in 0..mr {
+            out[(i + r) * n..(i + r + 1) * n].copy_from_slice(bias);
+        }
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for r in 0..mr {
+                let xv = x[(i + r) * k + kk];
+                axpy8(&mut out[(i + r) * n..(i + r + 1) * n], xv, wrow);
+            }
+        }
+        i += mr;
+    }
+}
+
+/// `aᵀ @ g` restricted to output rows `[row0, row0+rows)`: KB-row output
+/// blocks stay cache-resident while all `m` samples stream past once. Per
+/// output element `(kk, j)`: `+= a[i,kk]·g[i,j]` for `i` ascending from a
+/// zeroed slot — the naive loop's exact op sequence.
+fn at_b_rows(
+    a: &[f32],
+    g: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    row0: usize,
+    rows: usize,
+    out: &mut [f32],
+) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let mut kb = 0;
+    while kb < rows {
+        let kbw = KB.min(rows - kb);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let grow = &g[i * n..(i + 1) * n];
+            for r in 0..kbw {
+                let kk = row0 + kb + r;
+                axpy8(&mut out[(kb + r) * n..(kb + r + 1) * n], arow[kk], grow);
+            }
+        }
+        kb += kbw;
+    }
+}
+
+/// `g @ wᵀ` over `rows` rows of `g`/`out`: each `w` row is loaded once
+/// per MR-block and dotted against the block's `g` rows. Per output
+/// element: one [`dot_serial`] — a single accumulator over `n` in
+/// ascending order, exactly the naive inner loop.
+fn a_bt_rows(g: &[f32], w: &[f32], rows: usize, n: usize, k: usize, out: &mut [f32]) {
+    let mut i = 0;
+    while i < rows {
+        let mr = MR.min(rows - i);
+        for kk in 0..k {
+            let wrow = &w[kk * n..(kk + 1) * n];
+            for r in 0..mr {
+                let grow = &g[(i + r) * n..(i + r + 1) * n];
+                out[(i + r) * k + kk] = dot_serial(grow, wrow);
+            }
+        }
+        i += mr;
+    }
+}
+
+// -- fan-out -----------------------------------------------------------------
+
+/// Run `f(first_row, n_rows, row_chunk)` over row-aligned contiguous
+/// chunks of `out` (`rows` rows of `row_len` elements), fanned across up
+/// to `workers` scoped threads. Chunks are disjoint output regions and
+/// every per-element reduction lives entirely inside one chunk, so the
+/// result is bit-identical at any worker count. Serial (one chunk) when
+/// `workers <= 1`, the problem is too small, or there is only one row.
+fn row_fanout<F>(out: &mut [f32], rows: usize, row_len: usize, workers: usize, work: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    debug_assert_eq!(out.len(), rows * row_len);
+    let workers = workers.min(rows).max(1);
+    if workers <= 1 || work < PAR_MIN_WORK {
+        f(0, rows, out);
+        return;
+    }
+    scoped_row_chunks(out, rows, row_len, workers, &f);
+}
+
+/// The scoped split itself: `chunks` contiguous row ranges, one thread
+/// each (mirrors `util::pool::scoped_chunks`, but row-aligned).
+fn scoped_row_chunks<F>(out: &mut [f32], rows: usize, row_len: usize, chunks: usize, f: &F)
+where
+    F: Fn(usize, usize, &mut [f32]) + Sync,
+{
+    let base = rows / chunks;
+    let rem = rows % chunks;
+    thread::scope(|s| {
+        let mut rest = out;
+        let mut row0 = 0;
+        for c in 0..chunks {
+            let nrows = base + usize::from(c < rem);
+            let (head, tail) = rest.split_at_mut(nrows * row_len);
+            rest = tail;
+            let start = row0;
+            s.spawn(move || f(start, nrows, head));
+            row0 += nrows;
+        }
+    });
+}
+
+// -- unrolled inner primitives (bit-identical by construction) ---------------
+
+/// `o[j] += v * w[j]`, unrolled 8-wide with a scalar tail. Every update
+/// touches an independent element, so the unroll cannot change rounding.
+#[inline]
+fn axpy8(o: &mut [f32], v: f32, w: &[f32]) {
+    debug_assert_eq!(o.len(), w.len());
+    let chunks = o.len() / 8;
+    for c in 0..chunks {
+        let j = c * 8;
+        o[j] += v * w[j];
+        o[j + 1] += v * w[j + 1];
+        o[j + 2] += v * w[j + 2];
+        o[j + 3] += v * w[j + 3];
+        o[j + 4] += v * w[j + 4];
+        o[j + 5] += v * w[j + 5];
+        o[j + 6] += v * w[j + 6];
+        o[j + 7] += v * w[j + 7];
+    }
+    for j in chunks * 8..o.len() {
+        o[j] += v * w[j];
+    }
+}
+
+/// Single-accumulator dot in strictly ascending index order, unrolled
+/// 8-wide *without reassociation* (the `dsub % 8` trick from the
+/// quantizer's `dot8`, restricted to one accumulator): the op sequence is
+/// the rolled loop's, so the sum is bit-identical — deliberately NOT a
+/// multi-accumulator dot, which would round differently and break the
+/// engine's exactness contract against the naive `matmul_a_bt`.
+#[inline]
+fn dot_serial(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f32;
+    let chunks = a.len() / 8;
+    for c in 0..chunks {
+        let j = c * 8;
+        s += a[j] * b[j];
+        s += a[j + 1] * b[j + 1];
+        s += a[j + 2] * b[j + 2];
+        s += a[j + 3] * b[j + 3];
+        s += a[j + 4] * b[j + 4];
+        s += a[j + 5] * b[j + 5];
+        s += a[j + 6] * b[j + 6];
+        s += a[j + 7] * b[j + 7];
+    }
+    for j in chunks * 8..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+// -- the reference kernels ---------------------------------------------------
+
+/// The naive triple loops, verbatim from the pre-tiling engine: the
+/// bit-identity oracle for the tiled kernels (property tests, benches).
+pub mod naive {
+    /// `x [m, k] @ w [k, n] + bias [n]`.
+    pub fn dense(x: &[f32], w: &[f32], bias: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        for i in 0..m {
+            let row = &x[i * k..(i + 1) * k];
+            let o = &mut out[i * n..(i + 1) * n];
+            o.copy_from_slice(bias);
+            for (kk, &xv) in row.iter().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                for (ov, &wv) in o.iter_mut().zip(wrow) {
+                    *ov += xv * wv;
+                }
+            }
+        }
+    }
+
+    /// `a^T [k, m] @ g [m, n]` for `a [m, k]` (weight gradients).
+    pub fn matmul_at_b(a: &[f32], g: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let grow = &g[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let o = &mut out[kk * n..(kk + 1) * n];
+                for (ov, &gv) in o.iter_mut().zip(grow) {
+                    *ov += av * gv;
+                }
+            }
+        }
+    }
+
+    /// `g [m, n] @ w^T [n, k]` for `w [k, n]` (input gradients).
+    pub fn matmul_a_bt(g: &[f32], w: &[f32], m: usize, n: usize, k: usize, out: &mut [f32]) {
+        for i in 0..m {
+            let grow = &g[i * n..(i + 1) * n];
+            let orow = &mut out[i * k..(i + 1) * k];
+            for (kk, ov) in orow.iter_mut().enumerate() {
+                let wrow = &w[kk * n..(kk + 1) * n];
+                let mut s = 0.0f32;
+                for (gv, wv) in grow.iter().zip(wrow) {
+                    s += gv * wv;
+                }
+                *ov = s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn run_all(
+        policy: GemmPolicy,
+        (m, k, n): (usize, usize, usize),
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        g: &[f32],
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut d = vec![0.0f32; m * n];
+        dense_into(x, w, bias, m, k, n, &mut d, policy);
+        let mut atb = vec![0.0f32; k * n];
+        matmul_at_b_into(x, g, m, k, n, &mut atb, policy);
+        let mut abt = vec![0.0f32; m * k];
+        matmul_a_bt_into(g, w, m, n, k, &mut abt, policy);
+        (d, atb, abt)
+    }
+
+    /// Tiled and parallel match naive bitwise on shapes that cross every
+    /// tile/unroll boundary (MR, KB, the 8-wide tails, single rows).
+    #[test]
+    fn tiled_and_parallel_match_naive_bitwise() {
+        let mut rng = Rng::new(0xD07);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 7, 5),
+            (4, 8, 8),
+            (5, 9, 17),
+            (8, 784, 32),
+            (2, 33, 62),
+            (13, 40, 24),
+        ] {
+            let x = rand_vec(&mut rng, m * k);
+            let w = rand_vec(&mut rng, k * n);
+            let bias = rand_vec(&mut rng, n);
+            let g = rand_vec(&mut rng, m * n);
+            let base = run_all(GemmPolicy::naive(), (m, k, n), &x, &w, &bias, &g);
+            for policy in [GemmPolicy::tiled(), GemmPolicy::parallel(3)] {
+                let got = run_all(policy, (m, k, n), &x, &w, &bias, &g);
+                assert_eq!(got.0, base.0, "dense {m}x{k}x{n} {:?}", policy);
+                assert_eq!(got.1, base.1, "at_b {m}x{k}x{n} {:?}", policy);
+                assert_eq!(got.2, base.2, "a_bt {m}x{k}x{n} {:?}", policy);
+            }
+        }
+    }
+
+    /// The parallel threshold must not change results, only scheduling:
+    /// force a big-enough shape so threads actually spawn.
+    #[test]
+    fn parallel_spawns_and_matches_on_large_shapes() {
+        let (m, k, n) = (32usize, 96usize, 48usize); // m*k*n > PAR_MIN_WORK
+        assert!(m * k * n >= PAR_MIN_WORK);
+        let mut rng = Rng::new(7);
+        let x = rand_vec(&mut rng, m * k);
+        let w = rand_vec(&mut rng, k * n);
+        let bias = rand_vec(&mut rng, n);
+        let g = rand_vec(&mut rng, m * n);
+        let base = run_all(GemmPolicy::naive(), (m, k, n), &x, &w, &bias, &g);
+        for workers in [2usize, 5, 16] {
+            let got = run_all(GemmPolicy::parallel(workers), (m, k, n), &x, &w, &bias, &g);
+            assert_eq!(got, base, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn dense_known_values() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] + [10, 20]
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let w = [1.0f32, 1.0, 1.0, 1.0];
+        let bias = [10.0f32, 20.0];
+        for policy in [GemmPolicy::naive(), GemmPolicy::tiled()] {
+            let mut out = [0.0f32; 4];
+            dense_into(&x, &w, &bias, 2, 2, 2, &mut out, policy);
+            assert_eq!(out, [13.0, 23.0, 17.0, 27.0]);
+        }
+    }
+
+    #[test]
+    fn transposed_kernels_match_explicit_transpose() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (5usize, 6usize, 4usize);
+        let a = rand_vec(&mut rng, m * k);
+        let g = rand_vec(&mut rng, m * n);
+        let w = rand_vec(&mut rng, k * n);
+        // aᵀ@g via the f64-free reference: out[kk][j] = Σ_i a[i][kk]·g[i][j]
+        let mut want = vec![0.0f32; k * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    want[kk * n + j] += a[i * k + kk] * g[i * n + j];
+                }
+            }
+        }
+        let mut got = vec![0.0f32; k * n];
+        matmul_at_b_into(&a, &g, m, k, n, &mut got, GemmPolicy::tiled());
+        assert_eq!(got, want);
+        // g@wᵀ: out[i][kk] = Σ_j g[i][j]·w[kk][j]
+        let mut want = vec![0.0f32; m * k];
+        for i in 0..m {
+            for kk in 0..k {
+                let mut s = 0.0f32;
+                for j in 0..n {
+                    s += g[i * n + j] * w[kk * n + j];
+                }
+                want[i * k + kk] = s;
+            }
+        }
+        let mut got = vec![0.0f32; m * k];
+        matmul_a_bt_into(&g, &w, m, n, k, &mut got, GemmPolicy::tiled());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn colsum_matches_reference() {
+        let g = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = [0.0f32; 3];
+        colsum_into(&g, 2, 3, &mut out);
+        assert_eq!(out, [5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn dot_serial_matches_rolled_loop_bitwise() {
+        let mut rng = Rng::new(9);
+        for len in [0usize, 1, 7, 8, 9, 16, 31, 62, 1152] {
+            let a = rand_vec(&mut rng, len);
+            let b = rand_vec(&mut rng, len);
+            let mut rolled = 0.0f32;
+            for j in 0..len {
+                rolled += a[j] * b[j];
+            }
+            assert_eq!(dot_serial(&a, &b).to_bits(), rolled.to_bits(), "len={len}");
+        }
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(GemmPolicy::naive().label(), "naive");
+        assert_eq!(GemmPolicy::tiled().label(), "tiled");
+        assert_eq!(GemmPolicy::parallel(4).label(), "tiled+parallel");
+        assert_eq!(GemmPolicy::parallel(1).label(), "tiled");
+        assert_eq!(GemmPolicy::default(), GemmPolicy::tiled());
+    }
+}

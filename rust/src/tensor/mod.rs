@@ -3,7 +3,10 @@
 //! Heavy model math lives in the AOT artifacts (L2); this type exists for
 //! the L3-side linear algebra — parameter aggregation, optimizer updates,
 //! quantizer buffers — so it optimizes for flat `Vec<f32>` access rather
-//! than generality. Shapes are explicit; element ops check them.
+//! than generality. Shapes are explicit; element ops check them. The
+//! native engine's dense compute kernels live in [`gemm`].
+
+pub mod gemm;
 
 use std::fmt;
 

@@ -131,7 +131,11 @@ impl Bench {
     }
 
     /// [`Bench::finish`] plus a repo-root perf-trajectory copy of the JSON
-    /// (e.g. `BENCH_quantizer.json`) that CI regenerates and diffs.
+    /// (e.g. `BENCH_quantizer.json`) that CI regenerates and diffs. The
+    /// trajectory file is **merged**, not replaced: the committed seeds
+    /// carry contract keys (`expected_cases`, `provenance`) that a
+    /// refresh run must preserve — only `schema`/`suite`/`rows` are
+    /// overwritten.
     pub fn finish_to(self, trajectory: Option<&str>) {
         let json = self.to_json();
         let json_path = format!("results/bench/{}.json", self.name);
@@ -149,7 +153,8 @@ impl Bench {
             } else {
                 std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/..")).join(path)
             };
-            if std::fs::write(&p, json.to_string_pretty()).is_ok() {
+            let merged = merge_trajectory(&p, &json);
+            if std::fs::write(&p, merged.to_string_pretty()).is_ok() {
                 println!("(wrote {})", p.display());
             }
         }
@@ -175,6 +180,26 @@ impl Bench {
     }
 }
 
+/// Merge a fresh suite JSON into the trajectory file at `path`: keys the
+/// fresh run produces (`schema`, `suite`, `rows`) replace the old values;
+/// every other key of the existing file — the seeds' `expected_cases`
+/// coverage contract and `provenance` note — is preserved. A missing or
+/// unparseable file degrades to the fresh JSON alone.
+fn merge_trajectory(path: &std::path::Path, fresh: &Value) -> Value {
+    let existing = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| crate::util::json::parse(&text).ok());
+    match (existing, fresh) {
+        (Some(Value::Obj(mut old)), Value::Obj(new)) => {
+            for (k, v) in new.iter() {
+                old.insert(k.clone(), v.clone());
+            }
+            Value::Obj(old)
+        }
+        _ => fresh.clone(),
+    }
+}
+
 fn fmt_s(s: f64) -> String {
     if s < 1e-6 {
         format!("{:.0}ns", s * 1e9)
@@ -197,6 +222,34 @@ mod tests {
         let s = b.case("noop", 1, 10, 0.0, || { std::hint::black_box(1 + 1); });
         assert!(s.min <= s.p50 && s.p50 <= s.max);
         assert!(s.mean > 0.0);
+    }
+
+    #[test]
+    fn merge_trajectory_preserves_contract_keys() {
+        // a refresh must keep the seed's expected_cases/provenance while
+        // replacing schema/suite/rows
+        let dir = std::env::temp_dir().join("fedlite-bench-merge-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_t.json");
+        std::fs::write(
+            &path,
+            r#"{"schema": "fedlite-bench-v1", "suite": "t", "provenance": "seed",
+                "rows": [], "expected_cases": ["a", "b"]}"#,
+        )
+        .unwrap();
+        let mut b = Bench::new("t");
+        b.case("a", 0, 2, 0.0, || {
+            std::hint::black_box(1 + 1);
+        });
+        let merged = merge_trajectory(&path, &b.to_json());
+        assert_eq!(merged.get("provenance").as_str(), Some("seed"));
+        assert_eq!(merged.get("expected_cases").as_arr().unwrap().len(), 2);
+        assert_eq!(merged.get("rows").as_arr().unwrap().len(), 1);
+        assert_eq!(merged.get("suite").as_str(), Some("t"));
+        // missing file degrades to the fresh JSON alone
+        let fresh = merge_trajectory(&dir.join("nope.json"), &b.to_json());
+        assert!(fresh.get("provenance").as_str().is_none());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,11 +1,24 @@
-//! Steady-state allocation audit for the quantizer hot path.
+//! Steady-state allocation audit for the client-side hot path.
 //!
-//! A counting global allocator wraps `System`; after one warm-up call at
-//! a fixed shape, repeated `quantize_into` calls must perform **zero**
-//! heap allocations on the serial path (`workers = 1` — exactly what the
-//! round engine's cohort workers use, since the engine already fans out
-//! over clients). The capacity fingerprints double-check that no scratch
-//! buffer was silently reallocated.
+//! A counting global allocator wraps `System`. Two phases, one contract:
+//!
+//! 1. **Quantizer only** (the PR 4 guarantee): after one warm-up call at
+//!    a fixed shape, repeated `quantize_into` calls perform **zero** heap
+//!    allocations on the serial path.
+//! 2. **Combined compute + quantize client path** (the PR 5 guarantee):
+//!    the full per-client round pipeline — `client_fwd` → quantize →
+//!    `server_step` → grad hand-off → `client_bwd` — driven through the
+//!    native engine's `*_into` layer with a warm [`EngineScratch`] +
+//!    [`QuantizeScratch`], performs **zero** heap allocations after the
+//!    warm-up round. This is the compute layer the trainers' scratch
+//!    pool lends per cohort slot (`Runtime::run_scratch`); the remaining
+//!    steady-state allocations in a real round are the runtime-API
+//!    `Array` outputs and the wire messages, not the kernels.
+//!
+//! Everything runs at `workers = 1` — exactly what the round engine's
+//! cohort workers use, since the engine already fans out over clients.
+//! The capacity fingerprints double-check that no scratch buffer was
+//! silently reallocated.
 //!
 //! This file deliberately contains a single `#[test]`: the allocation
 //! counter is process-wide, and the libtest harness runs tests from one
@@ -15,6 +28,10 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use fedlite::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
+use fedlite::runtime::native::{
+    client_bwd_into, client_fwd_into, server_step_into, EngineScratch, NativeModelCfg,
+};
+use fedlite::tensor::gemm::GemmPolicy;
 use fedlite::util::rng::Rng;
 
 struct CountingAlloc;
@@ -45,13 +62,12 @@ unsafe impl GlobalAlloc for CountingAlloc {
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
-#[test]
-fn quantize_into_steady_state_performs_zero_allocations() {
+/// Phase 1: the quantizer alone (single-group, many-codebook, and
+/// whole-vector configs; dsub = 8 exercises the wide dot path).
+fn quantizer_steady_state() {
     let (b, d) = (8usize, 192usize);
     let mut zrng = Rng::new(3);
     let z: Vec<f32> = (0..b * d).map(|_| zrng.normal() as f32).collect();
-    // single-group, many-codebook, and whole-vector configs (dsub = 8
-    // exercises the wide dot path)
     for (q, r, l) in [(24usize, 1usize, 4usize), (24, 8, 2), (1, 1, 3)] {
         let pq = GroupedPq::new(PqConfig::new(q, r, l).with_iters(4), d).unwrap();
         let mut scratch = QuantizeScratch::new(); // workers = 1: serial path
@@ -77,4 +93,84 @@ fn quantize_into_steady_state_performs_zero_allocations() {
         );
         std::hint::black_box(out.sq_error);
     }
+}
+
+/// Phase 2: the combined compute+quantize client pipeline on the native
+/// engine's `*_into` layer (the code `Runtime::run_scratch` drives).
+fn client_path_steady_state() {
+    // the presets' own PQ geometries (config::RunConfig::native); stress
+    // covers the paper-scale 1152-wide cut and the dsub-8 kernel path
+    for (preset, pq_cfg) in [
+        ("tiny", PqConfig::new(8, 1, 4).with_iters(4)),
+        ("small", PqConfig::new(16, 1, 4).with_iters(4)),
+        ("stress", PqConfig::new(144, 1, 8).with_iters(4)),
+    ] {
+        let cfg = NativeModelCfg::by_preset(preset).unwrap();
+        let m = cfg.batch;
+        let p = GemmPolicy::tiled(); // serial: what a cohort worker runs
+        let mut r = Rng::new(11);
+        let w1 = r.uniform_vec(cfg.input * cfg.cut, -0.05, 0.05);
+        let b1 = r.uniform_vec(cfg.cut, -0.05, 0.05);
+        let w2 = r.uniform_vec(cfg.cut * cfg.hidden, -0.05, 0.05);
+        let b2 = r.uniform_vec(cfg.hidden, -0.05, 0.05);
+        let w3 = r.uniform_vec(cfg.hidden * cfg.classes, -0.05, 0.05);
+        let b3 = r.uniform_vec(cfg.classes, -0.05, 0.05);
+        let x = r.uniform_vec(m * cfg.input, 0.0, 1.0);
+        let y: Vec<i32> = (0..m).map(|_| r.below(cfg.classes) as i32).collect();
+
+        let pq = GroupedPq::new(pq_cfg, cfg.cut).unwrap();
+        let mut es = EngineScratch::new();
+        let mut qs = QuantizeScratch::new();
+        let mut out = PqOutput::default();
+        let mut grad_z = Vec::new();
+        let mut qrng = Rng::new(5);
+
+        let round = |es: &mut EngineScratch,
+                         qs: &mut QuantizeScratch,
+                         out: &mut PqOutput,
+                         grad_z: &mut Vec<f32>,
+                         qrng: &mut Rng| {
+            es.prepare(cfg, m);
+            // 1. client forward
+            client_fwd_into(cfg, p, &w1, &b1, &x, es);
+            // 2. quantize the cut activations (FedLite upload)
+            pq.quantize_into(&es.z, m, qrng, qs, out);
+            // 3. server trains on z~; grad_z lands in es.gz
+            let (loss, _) =
+                server_step_into(cfg, p, &w2, &b2, &w3, &b3, &y, &out.z_tilde, es)
+                    .unwrap();
+            // 4. grad hand-off (the wire round-trip's buffer reuse)
+            grad_z.resize(es.gz.len(), 0.0);
+            grad_z.copy_from_slice(&es.gz);
+            // 5. client backward with the gradient correction
+            let qerr = client_bwd_into(
+                cfg, p, &w1, &b1, &x, &out.z_tilde, grad_z.as_slice(), 1e-4, es,
+            );
+            std::hint::black_box((loss, qerr));
+        };
+
+        // warm-up round: every buffer reaches steady-state capacity
+        round(&mut es, &mut qs, &mut out, &mut grad_z, &mut qrng);
+        let efp = es.capacity_fingerprint();
+        let qfp = qs.capacity_fingerprint();
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..3 {
+            round(&mut es, &mut qs, &mut out, &mut grad_z, &mut qrng);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "the combined compute+quantize client path allocated on the warm \
+             path (preset {preset})"
+        );
+        assert_eq!(es.capacity_fingerprint(), efp, "engine scratch reallocated ({preset})");
+        assert_eq!(qs.capacity_fingerprint(), qfp, "quantize scratch reallocated ({preset})");
+    }
+}
+
+#[test]
+fn client_hot_paths_steady_state_perform_zero_allocations() {
+    quantizer_steady_state();
+    client_path_steady_state();
 }

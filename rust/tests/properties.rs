@@ -13,6 +13,7 @@ use fedlite::quantizer::cost::CostModel;
 use fedlite::quantizer::packing;
 use fedlite::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
 use fedlite::quantizer::{KMeans, KMeansInit, KMeansScratch};
+use fedlite::tensor::gemm::{self, GemmPolicy};
 use fedlite::tensor::{Tensor, TensorList};
 use fedlite::util::json;
 use fedlite::util::rng::Rng;
@@ -231,6 +232,42 @@ fn pruned_parallel_assignment_bit_identical_across_workers() {
             }
         }
     }
+}
+
+#[test]
+fn prop_gemm_modes_bitwise_identical() {
+    // naive ≡ tiled ≡ tiled+parallel for every kernel on random shapes,
+    // including non-multiples of the MR/KB tiles and the 8-wide unroll
+    // (the engine's exactness contract — see tensor::gemm's module docs).
+    forall("gemm-modes-bitwise", |rng| {
+        let m = 1 + rng.below(13);
+        let k = 1 + rng.below(97);
+        let n = 1 + rng.below(70);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let workers = 2 + rng.below(5);
+
+        let run = |p: GemmPolicy| {
+            let mut d = vec![0.0f32; m * n];
+            gemm::dense_into(&x, &w, &bias, m, k, n, &mut d, p);
+            let mut atb = vec![0.0f32; k * n];
+            gemm::matmul_at_b_into(&x, &g, m, k, n, &mut atb, p);
+            let mut abt = vec![0.0f32; m * k];
+            gemm::matmul_a_bt_into(&g, &w, m, n, k, &mut abt, p);
+            (d, atb, abt)
+        };
+        let naive = run(GemmPolicy::naive());
+        let tiled = run(GemmPolicy::tiled());
+        let par = run(GemmPolicy::parallel(workers));
+        assert_eq!(naive.0, tiled.0, "dense naive≡tiled ({m}x{k}x{n})");
+        assert_eq!(naive.1, tiled.1, "at_b naive≡tiled ({m}x{k}x{n})");
+        assert_eq!(naive.2, tiled.2, "a_bt naive≡tiled ({m}x{k}x{n})");
+        assert_eq!(naive.0, par.0, "dense naive≡parallel ({m}x{k}x{n} w={workers})");
+        assert_eq!(naive.1, par.1, "at_b naive≡parallel ({m}x{k}x{n} w={workers})");
+        assert_eq!(naive.2, par.2, "a_bt naive≡parallel ({m}x{k}x{n} w={workers})");
+    });
 }
 
 #[test]
