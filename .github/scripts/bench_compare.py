@@ -8,14 +8,37 @@ One markdown report, one section per suite: per-case speedup
 diff (base cases missing from head are flagged — renamed or dropped
 coverage should be called out in the PR, not silent). A missing or
 unreadable BASE_CSV degrades that suite to a head-only coverage listing
-(e.g. a suite that does not exist at the base commit yet). Advisory:
-always exits 0 unless the head inputs are unreadable; CI timing noise
-must not block merges.
+(e.g. a suite that does not exist at the base commit yet).
+
+If the repo-root trajectory file (BENCH_<suite>.json, relative to cwd)
+declares `expected_cases`, the head run must cover every one of them —
+that list is the suite's coverage contract, and an unmet entry is
+flagged as a violation in the report.
+
+Advisory: always exits 0 unless the head inputs are unreadable; CI
+timing noise must not block merges.
 """
 import csv
 import json
 import os
 import sys
+
+
+def check_contract(lines: list, suite: str, head_rows: dict) -> None:
+    """Flag head cases missing from the trajectory file's contract."""
+    try:
+        with open(f"BENCH_{suite}.json") as f:
+            expected = json.load(f).get("expected_cases") or []
+    except (OSError, ValueError):
+        return
+    unmet = sorted(c for c in expected if c not in head_rows)
+    if unmet:
+        lines.append(
+            f"**coverage contract violation:** BENCH_{suite}.json expects "
+            f"{len(unmet)} case(s) the head run did not produce:"
+        )
+        lines += [f"- `{c}`" for c in unmet]
+        lines.append("")
 
 
 def compare_suite(lines: list, suite: str, head_path: str, base_path: str) -> None:
@@ -24,6 +47,7 @@ def compare_suite(lines: list, suite: str, head_path: str, base_path: str) -> No
     head_rows = {r["case"]: r for r in head.get("rows", [])}
 
     lines += [f"## bench_{suite}: head vs base", ""]
+    check_contract(lines, suite, head_rows)
 
     base_rows = {}
     try:

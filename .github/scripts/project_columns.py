@@ -1,0 +1,37 @@
+#!/usr/bin/env python3
+"""Project a round CSV onto the column set of a reference CSV's header.
+
+Usage: project_columns.py HEAD_CSV REF_CSV
+
+Round-CSV columns are append-only: a newer engine may emit columns a
+reference blessed from an older engine does not have. Printing HEAD_CSV
+restricted to REF_CSV's columns (in REF_CSV's order) makes byte-for-byte
+diffs well-defined across schema growth — and fails loudly if the head
+engine *dropped* a column the reference still carries.
+"""
+import csv
+import sys
+
+
+def main() -> int:
+    head_path, ref_path = sys.argv[1], sys.argv[2]
+    with open(head_path) as f:
+        head = list(csv.reader(f))
+    with open(ref_path) as f:
+        ref_hdr = next(csv.reader(f))
+    if not head:
+        print(f"{head_path}: empty CSV", file=sys.stderr)
+        return 1
+    missing = [c for c in ref_hdr if c not in head[0]]
+    if missing:
+        print(f"{head_path}: dropped column(s) {missing}", file=sys.stderr)
+        return 1
+    idx = [head[0].index(c) for c in ref_hdr]
+    out = csv.writer(sys.stdout, lineterminator="\n")
+    for row in head:
+        out.writerow([row[i] for i in idx])
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

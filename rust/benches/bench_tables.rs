@@ -1,6 +1,10 @@
 //! Bench: regenerate the cost numbers behind Table 1 and the compression
 //! sweeps behind Figures 3/5c, measuring the analytic model's agreement
 //! with the byte-exact wire encoder across the whole (q, R, L) grid.
+//!
+//! Output: `results/bench/tables.{csv,json}` plus the repo-root
+//! trajectory file `BENCH_tables.json`, whose `expected_cases` list is
+//! the suite's coverage contract (checked by `bench_compare.py` in CI).
 
 use fedlite::comm::message::Message;
 use fedlite::models::analytics::{self, TaskCosts};
@@ -56,5 +60,5 @@ fn main() {
     assert!(worst < 0.35, "wire format drifted from the paper model");
     let costs_check: TaskCosts = analytics::femnist_costs();
     assert_eq!(costs_check.wc, 18_816);
-    b.finish();
+    b.finish_to(Some("BENCH_tables.json"));
 }

@@ -33,8 +33,17 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(300);
     let use_pjrt = args.iter().any(|a| a == "--pjrt-quantizer");
 
-    let rt = Arc::new(Runtime::open("artifacts")?);
-    let mut cfg = RunConfig::preset("femnist")?;
+    // prefer the AOT'd artifacts when present; otherwise run the whole
+    // driver on the native femnist_stress variant (the paper-scale
+    // 1152-wide cut — q=288 divides both geometries)
+    let (rt, mut cfg) = match Runtime::open("artifacts") {
+        Ok(rt) => (Arc::new(rt), RunConfig::preset("femnist")?),
+        Err(_) => {
+            anyhow::ensure!(!use_pjrt, "--pjrt-quantizer needs an artifacts directory");
+            println!("no artifacts/ found — using the native femnist_stress variant");
+            (Arc::new(Runtime::native()), RunConfig::native("femnist", "stress")?)
+        }
+    };
     cfg.rounds = rounds;
     cfg.num_clients = 100;
     cfg.clients_per_round = 10;

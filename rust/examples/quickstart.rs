@@ -1,8 +1,11 @@
 //! Quickstart: train FedLite on synthetic federated FEMNIST for a few
 //! rounds and print what moved over the (simulated, metered) network.
 //!
+//! Runs entirely on the built-in native engine — no artifacts, no
+//! Python. (`Runtime::open("artifacts")` swaps in the AOT'd PJRT models
+//! after `make artifacts`.)
+//!
 //! ```bash
-//! make artifacts          # once: AOT-lower the models (python)
 //! cargo run --release --example quickstart
 //! ```
 
@@ -15,21 +18,19 @@ use fedlite::runtime::Runtime;
 fn main() -> anyhow::Result<()> {
     fedlite::util::logging::init("info");
 
-    // 1. open the AOT artifacts (compiled once by `make artifacts`)
-    let rt = Arc::new(Runtime::open("artifacts")?);
-    println!("PJRT platform: {}", rt.platform());
+    // 1. the native engine serves every <task>_<preset> registry variant
+    let rt = Arc::new(Runtime::native());
 
-    // 2. configure a run: paper §C.2 FEMNIST preset, 10 rounds,
-    //    q=288/L=8 quantizer (~49x compression), gradient correction on
-    let mut cfg = RunConfig::preset("femnist")?;
+    // 2. configure a run: femnist_small (64-wide cut), 10 rounds,
+    //    q=16/L=4 product quantizer, gradient correction on
+    let mut cfg = RunConfig::native("femnist", "small")?;
     cfg.rounds = 10;
     cfg.num_clients = 30;
-    cfg.pq = fedlite::quantizer::PqConfig::new(288, 1, 8);
-    cfg.lambda = 1e-4;
     cfg.eval_every = 5;
+    let spec = rt.manifest.variant(&cfg.variant())?.spec.clone();
 
     // 3. train
-    let mut trainer = build_trainer(cfg, rt)?;
+    let mut trainer = build_trainer(cfg.clone(), Arc::clone(&rt))?;
     let log = trainer.run()?;
 
     // 4. inspect
@@ -39,10 +40,11 @@ fn main() -> anyhow::Result<()> {
     println!("final train loss:  {:.4}", last.train_loss);
     println!("eval accuracy:     {:?}", log.best_eval_metric());
     println!("quantization err:  {:.4} (relative)", last.quant_error);
+    println!("surrogate loss:    {:.4} (paper eq. 6)", last.surrogate_loss);
     println!(
         "uplink per round:  {:.1} KB  (raw activations would be {:.1} KB)",
         last.uplink_bytes as f64 / 1024.0,
-        (10 * 20 * 9216 * 4) as f64 / 1024.0
+        (cfg.clients_per_round * spec.act_batch * spec.cut_dim * 4) as f64 / 1024.0
     );
     println!("total uplink:      {:.2} MB", log.total_uplink() as f64 / 1e6);
     Ok(())

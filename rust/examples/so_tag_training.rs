@@ -1,10 +1,10 @@
 //! SO Tag: language-task scenario (multi-label tag prediction, Recall@5).
 //!
-//! The adversarial regime for split learning — the client side holds 83%
+//! The adversarial regime for split learning — the client side holds most
 //! of the parameters (one wide dense layer) — included by the paper to
 //! show activation compression still pays off on language workloads.
-//! Trains FedLite and SplitFed back-to-back at matched budgets, reporting
-//! Recall@5 and bytes.
+//! Trains FedLite and SplitFed back-to-back at matched budgets on the
+//! native `so_tag_small` variant, reporting Recall@5 and bytes.
 //!
 //! ```bash
 //! cargo run --release --example so_tag_training -- [rounds]
@@ -23,15 +23,26 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(60);
-    let rt = Arc::new(Runtime::open("artifacts")?);
+    let rt = Arc::new(Runtime::native());
 
+    // operating points are derived from the variant's cut width so they
+    // stay valid PQ geometries at any preset
+    let d = rt.manifest.variant("so_tag_small")?.spec.cut_dim;
     let mut results = Vec::new();
     for (name, algo, pq) in [
-        ("splitfed", Algorithm::SplitFed, None),
-        ("fedlite q=50 L=20", Algorithm::FedLite, Some(PqConfig::new(50, 1, 20))),
-        ("fedlite q=100 L=10", Algorithm::FedLite, Some(PqConfig::new(100, 1, 10))),
+        ("splitfed".to_string(), Algorithm::SplitFed, None),
+        (
+            format!("fedlite q={} L=8", d / 4),
+            Algorithm::FedLite,
+            Some(PqConfig::new(d / 4, 1, 8)),
+        ),
+        (
+            format!("fedlite q={} L=4", d / 2),
+            Algorithm::FedLite,
+            Some(PqConfig::new(d / 2, 1, 4)),
+        ),
     ] {
-        let mut cfg = RunConfig::preset("so_tag")?;
+        let mut cfg = RunConfig::native("so_tag", "small")?;
         cfg.algorithm = algo;
         cfg.rounds = rounds;
         cfg.num_clients = 40;
@@ -65,11 +76,11 @@ fn main() -> anyhow::Result<()> {
     for (name, recall, up, ratio) in &results {
         println!("{name:<22} {recall:>10.4} {:>12.2} {ratio:>9.1}x", *up as f64 / 1e6);
     }
-    let (_, r_sf, up_sf, _) = results[0];
-    let (_, r_fl, up_fl, _) = results[1];
+    let (_, r_sf, up_sf, _) = &results[0];
+    let (_, r_fl, up_fl, _) = &results[1];
     println!(
         "\nFedLite uses {:.1}x less uplink at Recall@5 delta {:+.4}",
-        up_sf as f64 / up_fl as f64,
+        *up_sf as f64 / *up_fl as f64,
         r_fl - r_sf
     );
     Ok(())

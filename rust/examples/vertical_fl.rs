@@ -9,7 +9,11 @@
 //! converging.
 //!
 //! This example drives the protocol *manually* against the runtime (no
-//! `Trainer`), showing the public API a systems integrator would use.
+//! `Trainer`), showing the public API a systems integrator would use. It
+//! runs on the native `so_tag_small` variant — no artifacts needed — and
+//! passes λ straight to the `client_bwd` artifact, which applies the
+//! correction in-artifact (the `SplitTrainer` instead corrects the wire
+//! gradient host-side; the two paths are bit-identical).
 //!
 //! ```bash
 //! cargo run --release --example vertical_fl -- [steps]
@@ -35,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         .and_then(|a| a.parse().ok())
         .unwrap_or(150);
 
-    let rt = Arc::new(Runtime::open("artifacts")?);
+    let rt = Arc::new(Runtime::native());
     let variant = "so_tag_small";
     let spec = rt.manifest.variant(variant)?.spec.clone();
     let mut rng = Rng::new(11);
@@ -46,13 +50,14 @@ fn main() -> anyhow::Result<()> {
     let mut opt_a = fedlite::optim::build("adagrad", 0.3)?;
     let mut opt_b = fedlite::optim::build("adagrad", 0.3)?;
 
-    // one "client" in the star: party A
+    // one "client" in the star: party A. The dataset geometry must match
+    // the variant, so build it from the same <task>_<preset> config.
     let net = StarNetwork::with_defaults(1);
-    let cfg = RunConfig::preset("so_tag")?;
+    let cfg = RunConfig::native("so_tag", "small")?;
     let data = fedlite::coordinator::build_dataset(&cfg)?;
-    let pq_cfg = PqConfig::new(50, 1, 20);
+    let pq_cfg = PqConfig::new(spec.cut_dim / 4, 1, 8);
     let pq = GroupedPq::new(pq_cfg, spec.cut_dim)?;
-    let lambda = 5e-3f32;
+    let lambda = cfg.lambda;
 
     let fwd = rt.manifest.artifact(variant, "client_fwd")?.clone();
     let step_meta = rt.manifest.artifact(variant, "server_step")?.clone();

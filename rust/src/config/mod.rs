@@ -183,28 +183,35 @@ impl RunConfig {
     }
 
     /// A built-in native-engine preset (no AOT artifacts or PJRT
-    /// needed): `tiny` (the CI smoke/golden variant, 32-wide cut),
-    /// `small` (wider cut/hidden, batch 32), or `stress` (paper-scale
-    /// 1152-wide cut). Small cohort defaults and a PQ geometry sized to
-    /// each variant's cut width (the `stress` geometry's dsub = 8
-    /// exercises the wide-dot kernel path).
+    /// needed): any `<task>_<preset>` variant the native registry
+    /// serves — `tiny` (the CI smoke/golden variants, 32-wide cut),
+    /// `small` (wider cut/hidden), or `stress` (femnist-only,
+    /// paper-scale 1152-wide cut). Task hyper-parameters (optimizer,
+    /// lr, λ) come from [`RunConfig::preset`]; the cohort defaults
+    /// shrink to smoke scale and the PQ geometry is sized to the
+    /// variant's cut width (the `stress` geometry's dsub = 8 exercises
+    /// the wide-dot kernel path).
     pub fn native(task: &str, preset: &str) -> anyhow::Result<RunConfig> {
-        anyhow::ensure!(
-            task == "femnist",
-            "the native presets only exist for femnist, not '{task}'"
-        );
+        use crate::runtime::native::NativeModelCfg;
         let mut c = RunConfig::preset(task)?;
         c.preset = preset.into();
-        c.pq = match preset {
+        let cfg = NativeModelCfg::by_task_preset(task, preset).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no native variant '{task}_{preset}' (registered: {:?})",
+                NativeModelCfg::registry()
+                    .iter()
+                    .map(|m| m.variant_key())
+                    .collect::<Vec<_>>()
+            )
+        })?;
+        c.pq = match cfg.cut {
             // d = 32: dsub 4 (the historical tiny geometry, bits unchanged)
-            "tiny" => PqConfig::new(8, 1, 4).with_iters(4),
+            32 => PqConfig::new(8, 1, 4).with_iters(4),
             // d = 64: dsub 4
-            "small" => PqConfig::new(16, 1, 4).with_iters(4),
+            64 => PqConfig::new(16, 1, 4).with_iters(4),
             // d = 1152: dsub 8 — the paper's FEMNIST subvector width
-            "stress" => PqConfig::new(144, 1, 8).with_iters(4),
-            other => anyhow::bail!(
-                "unknown native preset '{other}' (try tiny, small, or stress)"
-            ),
+            1152 => PqConfig::new(144, 1, 8).with_iters(4),
+            d => anyhow::bail!("no default PQ geometry for cut width {d}"),
         };
         c.clients_per_round = 4;
         c.eval_batches = 2;
@@ -383,25 +390,31 @@ mod tests {
         assert_eq!(c.artifacts_dir, "native");
         assert_eq!(c.pq, PqConfig::new(8, 1, 4).with_iters(4));
         assert!(c.validate().is_ok());
-        assert!(RunConfig::tiny("so_tag").is_err());
+        // the SO tasks have native tiny variants of their own now
+        let t = RunConfig::tiny("so_tag").unwrap();
+        assert_eq!(t.variant(), "so_tag_tiny");
+        assert_eq!(t.artifacts_dir, "native");
     }
 
     #[test]
     fn native_presets_match_their_variants() {
-        // every native preset must target a registered engine variant and
-        // carry a PQ geometry that divides its cut width
+        // every registered engine variant must be reachable as a native
+        // preset carrying a PQ geometry that divides its cut width
         use crate::runtime::native::NativeModelCfg;
-        for preset in ["tiny", "small", "stress"] {
-            let c = RunConfig::native("femnist", preset).unwrap();
-            assert_eq!(c.variant(), format!("femnist_{preset}"));
+        for cfg in NativeModelCfg::registry() {
+            let c = RunConfig::native(cfg.task, cfg.preset).unwrap();
+            assert_eq!(c.variant(), cfg.variant_key());
             assert_eq!(c.artifacts_dir, "native");
-            let cfg = NativeModelCfg::by_preset(preset)
-                .unwrap_or_else(|| panic!("preset {preset} not registered"));
             c.pq.validate(cfg.cut).unwrap();
             assert!(c.validate().is_ok());
         }
+        // task hyper-parameters survive the native override
+        let t = RunConfig::native("so_tag", "small").unwrap();
+        assert_eq!(t.optimizer, "adagrad");
+        let n = RunConfig::native("so_nwp", "tiny").unwrap();
+        assert_eq!(n.optimizer, "adam");
         assert!(RunConfig::native("femnist", "paper").is_err());
-        assert!(RunConfig::native("so_tag", "small").is_err());
+        assert!(RunConfig::native("so_tag", "stress").is_err());
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! Gradient correction (paper §4.2, eq. (5)) — host-side reference.
+//! Gradient correction (paper §4.2, eq. (5)).
 //!
-//! The correction itself is baked into the `client_bwd` artifact (the
-//! cotangent `∂h/∂z~ + λ(z − z~)` is formed inside the lowered graph);
-//! this module provides the same computation on the host for tests,
-//! ablations, and the native-quantizer fast path diagnostics.
+//! The split trainer applies [`corrected_cotangent`] host-side to the
+//! wire gradient before `client_bwd` (whose λ input it pins to 0, so the
+//! correction is applied exactly once), and logs [`surrogate_loss`] as
+//! the round CSV's `surrogate_loss` column. The artifact family still
+//! accepts λ for backends that prefer the correction inside the lowered
+//! graph — both paths compute the identical float sequence.
 
 /// Corrected cotangent: `grad_z_tilde + lambda * (z - z_tilde)`.
 pub fn corrected_cotangent(
@@ -60,6 +62,28 @@ mod tests {
         for (ci, (zi, zti)) in c.iter().zip(z.iter().zip(&zt)) {
             assert_eq!(*ci, 0.1 * (zi - zti));
         }
+    }
+
+    #[test]
+    fn correction_is_linear_in_lambda() {
+        // eq. (5) is affine in λ: c(λ) − c(0) scales exactly with λ, and
+        // the λ-dependent part of eq. (6) scales the same way
+        let g = vec![0.4, -1.2, 0.7, 0.0];
+        let z = vec![1.5, -0.25, 0.0, 2.0];
+        let zt = vec![1.0, 0.25, -0.5, 2.0];
+        let base = corrected_cotangent(&g, &z, &zt, 0.0);
+        let c1 = corrected_cotangent(&g, &z, &zt, 0.5);
+        let c2 = corrected_cotangent(&g, &z, &zt, 1.0);
+        for k in 0..g.len() {
+            let d1 = c1[k] - base[k];
+            let d2 = c2[k] - base[k];
+            assert!((d2 - 2.0 * d1).abs() < 1e-6, "k={k}: {d2} vs 2*{d1}");
+            assert!((d1 - 0.5 * (z[k] - zt[k])).abs() < 1e-6);
+        }
+        let s0 = surrogate_loss(&g, &z, &zt, 0.0);
+        let s1 = surrogate_loss(&g, &z, &zt, 0.5);
+        let s2 = surrogate_loss(&g, &z, &zt, 1.0);
+        assert!(((s2 - s0) - 2.0 * (s1 - s0)).abs() < 1e-9);
     }
 
     #[test]

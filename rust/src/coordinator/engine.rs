@@ -168,6 +168,9 @@ pub struct ClientOutput<P> {
     pub metric_sums: Vec<f64>,
     /// Relative quantization error (0 when not quantizing).
     pub quant_rel_err: f64,
+    /// FedLite surrogate objective eq. (6) at this client's cut (0 when
+    /// the algorithm has no cut or the run is unquantized).
+    pub surrogate_loss: f64,
     /// The algorithm-specific survivor payload (gradients, model delta,
     /// …); `None` for dropped and evicted clients, which are excluded
     /// from every aggregate.
@@ -196,6 +199,7 @@ impl<P> ClientOutput<P> {
             loss: 0.0,
             metric_sums: Vec::new(),
             quant_rel_err: 0.0,
+            surrogate_loss: 0.0,
             payload: None,
             bytes,
             dropped: Some(phase),
@@ -323,6 +327,7 @@ struct RoundOutcome<Acc> {
     accum: Acc,
     loss_agg: ScalarAggregator,
     qerr_agg: ScalarAggregator,
+    surr_agg: ScalarAggregator,
     metric_sums: Vec<f64>,
     examples: f64,
     survivors: SurvivorSet,
@@ -415,6 +420,7 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
             cohort_survived: survived,
             dropped: outcome.drops,
             attempts: outcome.attempts,
+            surrogate_loss: outcome.surr_agg.mean(),
             ..Default::default()
         };
         let (eval_every, eval_batches) = {
@@ -455,6 +461,7 @@ fn drive<A: RoundAlgorithm>(
     let mut accum = algo.new_accum();
     let mut loss_agg = ScalarAggregator::new();
     let mut qerr_agg = ScalarAggregator::new();
+    let mut surr_agg = ScalarAggregator::new();
     let mut metric_sums = vec![0.0f64; env.nmetrics];
     let mut examples = 0.0f64;
     let mut survivors = SurvivorSet::new();
@@ -532,6 +539,7 @@ fn drive<A: RoundAlgorithm>(
                 accum = algo.new_accum();
                 loss_agg = ScalarAggregator::new();
                 qerr_agg = ScalarAggregator::new();
+                surr_agg = ScalarAggregator::new();
                 metric_sums = vec![0.0f64; env.nmetrics];
                 examples = 0.0;
                 survivors = SurvivorSet::new();
@@ -568,6 +576,7 @@ fn drive<A: RoundAlgorithm>(
                                 out.payload.expect("surviving client carries a payload");
                             algo.accumulate(&mut accum, payload, out.weight);
                             qerr_agg.add(out.quant_rel_err, 1.0);
+                            surr_agg.add(out.surrogate_loss, out.weight);
                         }
                     }
                 }
@@ -602,6 +611,7 @@ fn drive<A: RoundAlgorithm>(
         accum,
         loss_agg,
         qerr_agg,
+        surr_agg,
         metric_sums,
         examples,
         survivors,
@@ -828,6 +838,7 @@ mod tests {
                 loss: 1.0,
                 metric_sums: Vec::new(),
                 quant_rel_err: 0.0,
+                surrogate_loss: 0.0,
                 payload: Some(()),
                 bytes,
                 dropped: None,

@@ -305,6 +305,7 @@ impl RoundAlgorithm for FedAvgTrainer {
             loss,
             metric_sums,
             quant_rel_err: 0.0,
+            surrogate_loss: 0.0,
             payload: Some(delta_wire),
             bytes,
             dropped: None,

@@ -11,10 +11,14 @@
 //! * **client step** — broadcast download → `client_fwd` → (FedLite)
 //!   quantize → metered wire round-trip (the server trains on the
 //!   *reconstruction from the decoded bytes*) → `server_step` → grad
-//!   download → `client_bwd` (gradient correction eq. (5) inside the
-//!   artifact) → client-grad upload. Fault injection short-circuits this
-//!   pipeline at the scheduled phase: bytes a client sent before failing
-//!   stay metered, its gradients never leave the worker;
+//!   download → gradient correction eq. (5) applied host-side to the
+//!   wire gradient (`coordinator::correction`; the surrogate objective
+//!   eq. (6) is logged per round as the `surrogate_loss` CSV column) →
+//!   `client_bwd` (the artifact's λ input stays 0 so the correction is
+//!   applied exactly once) → client-grad upload. Fault injection
+//!   short-circuits this pipeline at the scheduled phase: bytes a client
+//!   sent before failing stay metered, its gradients never leave the
+//!   worker;
 //! * **accumulate** — fold a survivor's `(w_s, w_c)` gradients into the
 //!   weighted aggregates (weights renormalize over survivors — see
 //!   `aggregator::SurvivorSet`);
@@ -40,6 +44,7 @@ use crate::comm::StarNetwork;
 use crate::config::{Algorithm, RunConfig};
 use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
+use crate::coordinator::correction;
 use crate::coordinator::engine::{
     open_logs, ClientOutput, RoundAlgorithm, RoundEngine, RoundEnv, MAX_SAMPLING_ATTEMPTS,
 };
@@ -192,9 +197,6 @@ impl SplitTrainer {
                 *s += scalar(&outs[1 + k])? as f64;
             }
             examples += self.spec.eval_batch as f64;
-            if self.cfg.task == "so_nwp" {
-                // token metrics carry their own denominator
-            }
         }
         Ok((loss.mean(), self.metric.value(&sums, examples)))
     }
@@ -393,8 +395,8 @@ impl RoundAlgorithm for SplitTrainer {
         let (decoded, n) = self.net.download(ci, round, &gmsg)?;
         down_bytes += n;
         down_msgs += 1;
-        let grad_wire = match decoded {
-            Message::GradDownload { grad, .. } => Array::f32(&[act_b, d], grad),
+        let grad_wire_vec = match decoded {
+            Message::GradDownload { grad, .. } => grad,
             _ => anyhow::bail!("wrong download variant"),
         };
         if plan.drop_at == Some(DropPhase::BeforeGradUpload) {
@@ -414,14 +416,31 @@ impl RoundAlgorithm for SplitTrainer {
             ));
         }
 
-        // 5. client backward (gradient correction inside the artifact)
+        // 5. gradient correction (paper eq. (5)) applied host-side to the
+        //    wire gradient, then the client backward. The artifact still
+        //    takes a λ input but receives 0 here, so the correction is
+        //    applied exactly once — and the float sequence
+        //    `g + λ(z − z̃)` is identical to the in-artifact path the
+        //    golden fixtures were blessed on.
+        let zt = z_tilde
+            .as_f32()
+            .ok_or_else(|| anyhow::anyhow!("z_tilde dtype"))?;
+        let corrected = correction::corrected_cotangent(&grad_wire_vec, &z, zt, lambda);
+        // surrogate objective eq. (6) at this client's cut; only meaningful
+        // when a quantization gap exists (the CSV logs the survivor mean)
+        let surrogate = if self.quantizer.is_some() {
+            correction::surrogate_loss(&grad_wire_vec, &z, zt, lambda)
+        } else {
+            0.0
+        };
+        let grad_wire = Array::f32(&[act_b, d], corrected);
         let src = InputSources {
             wc: Some(&self.wc),
             batch: Some(&batch),
             masks: Some(&masks),
             z_tilde: Some(&z_tilde),
             grad_z: Some(&grad_wire),
-            lambda: Some(lambda),
+            lambda: Some(0.0),
             ..Default::default()
         };
         let bwd = self.rt.run_scratch(
@@ -469,6 +488,7 @@ impl RoundAlgorithm for SplitTrainer {
             loss,
             metric_sums,
             quant_rel_err,
+            surrogate_loss: surrogate,
             payload: Some(SplitPayload { wc_grads: synced, ws_grads }),
             bytes,
             dropped: None,

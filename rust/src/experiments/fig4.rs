@@ -6,6 +6,12 @@
 //! shapes: accuracy ≈ SplitFed at ≥10x compression; λ>0 curves dominate
 //! λ=0, dramatically so at high ratios where λ=0 may diverge (recorded as
 //! `diverged=1` with metric 0).
+//!
+//! With a native `--preset` (tiny/small/stress), the whole sweep runs
+//! end-to-end on the built-in engine — real federated training on any of
+//! the `<task>_<preset>` registry variants, no artifacts directory — and
+//! the quantizer-budget axis comes from the variant's own cut-width
+//! divisors (the paper's q values target the wider PJRT cuts).
 
 use std::sync::Arc;
 
@@ -18,6 +24,9 @@ use crate::util::logging::CsvWriter;
 
 pub struct Fig4Options {
     pub task: String,
+    /// `""` = the task's PJRT preset (needs artifacts); `tiny` / `small`
+    /// / `stress` = the corresponding native registry variant.
+    pub preset: String,
     pub rounds: usize,
     pub out_csv: String,
     /// How many (q, L) points per curve.
@@ -29,6 +38,7 @@ impl Default for Fig4Options {
     fn default() -> Self {
         Fig4Options {
             task: "femnist".into(),
+            preset: String::new(),
             rounds: 60,
             out_csv: String::new(),
             points: 3,
@@ -55,7 +65,12 @@ pub fn paper_ranges(task: &str, cut_dim: usize) -> (Vec<usize>, Vec<usize>, f32)
 }
 
 pub fn run(opts: &Fig4Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
-    let mut base = RunConfig::preset(&opts.task)?;
+    let native = !opts.preset.is_empty();
+    let mut base = if native {
+        RunConfig::native(&opts.task, &opts.preset)?
+    } else {
+        RunConfig::preset(&opts.task)?
+    };
     base.rounds = opts.rounds;
     base.seed = opts.seed;
     base.num_clients = 50;
@@ -64,10 +79,26 @@ pub fn run(opts: &Fig4Options, rt: Arc<Runtime>) -> anyhow::Result<()> {
     let spec = rt.manifest.variant(&base.variant())?.spec.clone();
     let d = spec.cut_dim;
     let act_b = spec.act_batch;
-    let (qs, ls, lam) = paper_ranges(&opts.task, d);
+    let (qs, ls, lam) = if native {
+        // the paper's q values target the PJRT cut widths; the native
+        // cuts are narrower, so the budget axis sweeps the variant's own
+        // divisors, whole-vector PQ down to coarse grouping
+        let mut qs: Vec<usize> = [d, d / 4, (d / 16).max(1)]
+            .into_iter()
+            .filter(|&q| q >= 1 && d % q == 0)
+            .collect();
+        qs.dedup();
+        (qs, vec![2, 4, 8], base.lambda)
+    } else {
+        paper_ranges(&opts.task, d)
+    };
 
     let out_csv = if opts.out_csv.is_empty() {
-        format!("results/fig4_{}.csv", opts.task)
+        if native {
+            format!("results/fig4_{}_{}.csv", opts.task, opts.preset)
+        } else {
+            format!("results/fig4_{}.csv", opts.task)
+        }
     } else {
         opts.out_csv.clone()
     };

@@ -28,8 +28,9 @@ fn cli() -> Cli {
                         "preset",
                         "",
                         "'' = task default (PJRT artifacts); tiny | small | \
-                         stress = built-in native femnist variants (no \
-                         artifacts needed; stress is the paper-scale cut)",
+                         stress = built-in native <task>_<preset> variants \
+                         (no artifacts needed; stress is femnist-only, at \
+                         the paper-scale cut)",
                     ),
                     Flag::opt("algorithm", "fedlite", "fedlite | splitfed | fedavg"),
                     Flag::opt(
@@ -87,6 +88,13 @@ fn cli() -> Cli {
                 flags: vec![
                     Flag::opt("rounds", "0", "training rounds per point (0 = default)"),
                     Flag::opt("task", "femnist", "task for fig4"),
+                    Flag::opt(
+                        "preset",
+                        "",
+                        "fig4: '' = PJRT task preset (needs artifacts); \
+                         tiny | small | stress = native <task>_<preset> \
+                         variant (end-to-end, no artifacts)",
+                    ),
                     Flag::opt("points", "3", "points per curve for fig4"),
                     Flag::opt("seed", "17", "seed"),
                     Flag::opt("artifacts", "artifacts", "artifacts directory"),
@@ -272,9 +280,16 @@ fn cmd_exp(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
             fig3::run(&opts, rt)
         }
         "fig4" => {
-            let rt = Arc::new(Runtime::open(artifacts)?);
+            let preset = args.get("preset").unwrap_or("").to_string();
+            // native presets run on the built-in engine; no artifacts dir
+            let rt = if preset.is_empty() {
+                Arc::new(Runtime::open(artifacts)?)
+            } else {
+                Arc::new(Runtime::native())
+            };
             let mut opts = fig4::Fig4Options {
                 task: args.str("task")?.to_string(),
+                preset,
                 points: args.usize("points")?,
                 seed,
                 ..Default::default()

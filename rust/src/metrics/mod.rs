@@ -80,6 +80,10 @@ pub struct RoundRecord {
     /// Sampling attempts this round took (1 = committed first try; see
     /// `coordinator::engine::RoundDriver`).
     pub attempts: u32,
+    /// Weighted mean of the FedLite surrogate objective eq. (6),
+    /// `⟨g, z⟩ + (λ/2)‖z − z̃‖²`, across surviving split clients.
+    /// 0 for fedavg (no cut, nothing to correct) and unquantized runs.
+    pub surrogate_loss: f64,
 }
 
 impl RoundRecord {
@@ -88,11 +92,11 @@ impl RoundRecord {
     /// against in CI (the cross-trainer schema diff): split and fedavg
     /// logs must carry identical columns and cohort bookkeeping or the
     /// paper's communication comparison is apples-to-oranges.
-    pub const CSV_COLUMNS: [&'static str; 15] = [
+    pub const CSV_COLUMNS: [&'static str; 16] = [
         "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
         "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
         "wall_seconds", "sim_comm_seconds", "cohort_sampled", "cohort_survived",
-        "dropped_at_phase", "round_attempts",
+        "dropped_at_phase", "round_attempts", "surrogate_loss",
     ];
 
     /// Render this record as one CSV row in [`RoundRecord::CSV_COLUMNS`]
@@ -116,6 +120,7 @@ impl RoundRecord {
             self.cohort_survived.to_string(),
             self.dropped.summary(),
             self.attempts.to_string(),
+            format!("{:.6}", self.surrogate_loss),
         ]
     }
 
@@ -140,6 +145,7 @@ impl RoundRecord {
         o.insert("cohort_survived", Value::from_usize(self.cohort_survived));
         o.insert("dropped_at_phase", Value::Str(self.dropped.summary()));
         o.insert("round_attempts", Value::from_usize(self.attempts as usize));
+        o.insert("surrogate_loss", Value::Num(self.surrogate_loss));
         Value::Obj(o)
     }
 }
@@ -290,6 +296,7 @@ mod tests {
             eval_loss: Some(0.5),
             uplink_bytes: 42,
             attempts: 3,
+            surrogate_loss: 0.125,
             ..Default::default()
         };
         let row = r.csv_row();
@@ -300,9 +307,13 @@ mod tests {
         assert_eq!(row[4], "", "absent eval metric renders empty");
         assert_eq!(row[6], "42");
         assert_eq!(row[14], "3");
+        assert_eq!(row[15], "0.125000");
         // the schema itself is load-bearing for the CI cross-trainer diff
         assert_eq!(RoundRecord::CSV_COLUMNS[9], "wall_seconds");
         assert_eq!(RoundRecord::CSV_COLUMNS[13], "dropped_at_phase");
+        // surrogate_loss was appended LAST so fixtures blessed on the old
+        // 15-column schema can be compared by header projection
+        assert_eq!(RoundRecord::CSV_COLUMNS[15], "surrogate_loss");
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //!
 //! * **Native** (always available) — a pure-rust reference engine
 //!   ([`native`]) that executes the built-in split-MLP family
-//!   (`femnist_tiny` / `femnist_small` / `femnist_stress`, see
+//!   (`<task>_<preset>` over FEMNIST / SO tag / SO NWP, see
 //!   [`native::NativeModelCfg::registry`]) through the tiled
 //!   deterministic kernels in [`crate::tensor::gemm`]. It needs no
 //!   artifacts directory, which is what lets CI build, test, and

@@ -11,18 +11,29 @@
 //!
 //! Model shape (every variant): client = dense(input→cut) + ReLU (the
 //! cut layer); server = dense(cut→hidden) + ReLU + dense(hidden→classes)
-//! + softmax cross-entropy, `correct`-count metric. Gradient correction
-//! (paper eq. (5)) is applied in `client_bwd`: the client loss term
-//! λ/2·‖z − z~‖² contributes λ·(z − z~) to the gradient at the cut.
+//! + a per-task head ([`HeadKind`]). The gradient correction (paper
+//! eq. (5)) lives host-side in `coordinator/correction.rs`; `client_bwd`
+//! still accepts a λ input and adds λ·(z − z~) so artifact-side and
+//! host-side application compose (the trainers pass λ = 0 here).
 //!
-//! Registered variants (`femnist_<preset>`; all consume the synthetic
-//! FEMNIST data, x `[B, 28, 28, 1]`, 62 classes):
+//! Registered variants (`<task>_<preset>`):
 //!
-//! | preset | cut | hidden | batch | eval_batch | role |
-//! |---|---|---|---|---|---|
-//! | `tiny` | 32 | 32 | 8 | 32 | CI smoke / golden fixtures (bits unchanged) |
-//! | `small` | 64 | 128 | 32 | 64 | realistic batch, wider cut |
-//! | `stress` | 1152 | 256 | 8 | 16 | paper-scale cut width (the q=1152 PQ geometry) |
+//! | variant | input | cut | hidden | classes | batch | head |
+//! |---|---|---|---|---|---|---|
+//! | `femnist_tiny` | 784 | 32 | 32 | 62 | 8 | softmax CE (CI smoke / golden fixtures, bits unchanged) |
+//! | `femnist_small` | 784 | 64 | 128 | 62 | 32 | softmax CE |
+//! | `femnist_stress` | 784 | 1152 | 256 | 62 | 8 | softmax CE (paper-scale q=1152 PQ geometry) |
+//! | `so_tag_tiny` | 1000 | 32 | 32 | 200 | 8 | sigmoid BCE, Recall@5 sums |
+//! | `so_tag_small` | 1000 | 64 | 128 | 200 | 16 | sigmoid BCE, Recall@5 sums |
+//! | `so_nwp_tiny` | 2004 | 32 | 32 | 2004 | 4·20 rows | PAD-masked token CE |
+//! | `so_nwp_small` | 2004 | 64 | 128 | 2004 | 8·20 rows | PAD-masked token CE |
+//!
+//! FEMNIST consumes images (x `[B, 28, 28, 1]` f32, one class id per
+//! row); SO tag consumes L1-normalized bag-of-words (x `[B, vocab]` f32,
+//! multi-hot tags `[B, tags]` f32); SO NWP consumes token ids (x and y
+//! `[B, T]` s32, PAD = 0) which the engine one-hot expands into the
+//! scratch arena — the dense cut layer then doubles as the embedding
+//! table, so every task runs the same GEMM kernels.
 //!
 //! All dense math runs through the tiled deterministic kernels in
 //! [`crate::tensor::gemm`] — bit-identical to the naive triple loops by
@@ -43,6 +54,7 @@
 
 use std::collections::HashMap;
 
+use crate::data::so_nwp::PAD;
 use crate::data::Array;
 use crate::models::{ModelSpec, ParamSpec, SideSpec};
 use crate::runtime::artifact::{ArtifactMeta, IoSpec, Manifest, Variant};
@@ -53,12 +65,41 @@ use crate::util::json::{Object, Value};
 /// golden fixtures and tests that pin it.
 pub const VARIANT: &str = "femnist_tiny";
 
+/// Loss head + metric family of a native variant. Every head writes
+/// `d(mean loss)/d(logits)` into the scratch's `glogits` and returns
+/// `(mean loss, [metric_sum_0, metric_sum_1])`; how many of the two sums
+/// the artifact exposes is [`HeadKind::metric_names`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadKind {
+    /// Softmax cross-entropy, one class id per row; metric `correct`.
+    SoftmaxCe,
+    /// Per-class sigmoid BCE over multi-hot targets; metrics
+    /// `hits_at_5` / `positives` (the Recall@5 numerator/denominator).
+    SigmoidBce,
+    /// Softmax cross-entropy per sequence position with PAD targets
+    /// masked out; metrics `correct_tokens` / `valid_tokens`.
+    TokenSoftmaxCe,
+}
+
+impl HeadKind {
+    /// Metric output names, in artifact output order.
+    pub fn metric_names(&self) -> &'static [&'static str] {
+        match self {
+            HeadKind::SoftmaxCe => &["correct"],
+            HeadKind::SigmoidBce => &["hits_at_5", "positives"],
+            HeadKind::TokenSoftmaxCe => &["correct_tokens", "valid_tokens"],
+        }
+    }
+}
+
 /// Dimensions of one native split-MLP variant.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct NativeModelCfg {
-    /// Preset name; the manifest key is `femnist_<preset>`.
+    /// Task name; the manifest key is `<task>_<preset>`.
+    pub task: &'static str,
+    /// Preset name (`tiny` / `small` / `stress`).
     pub preset: &'static str,
-    /// Flattened input dim (28·28 — every variant eats FEMNIST images).
+    /// Flattened input dim (pixels for FEMNIST, vocab for the SO tasks).
     pub input: usize,
     /// Cut-layer width d (what the quantizer sees).
     pub cut: usize,
@@ -67,14 +108,21 @@ pub struct NativeModelCfg {
     pub classes: usize,
     pub batch: usize,
     pub eval_batch: usize,
+    /// Sequence length (1 for non-sequence tasks); the engine processes
+    /// `batch · seq` rows per step.
+    pub seq: usize,
+    pub head: HeadKind,
 }
 
-/// The built-in variant family. `tiny` must stay bit-identical to the
-/// pre-family engine (golden fixtures); new variants append here and are
-/// picked up by the manifest, the presets, the generalized tests, and
-/// `bench_engine` automatically.
+/// The built-in variant family. `femnist_tiny` must stay bit-identical
+/// to the pre-family engine (golden fixtures); new variants append here
+/// and are picked up by the manifest, the presets, the generalized
+/// tests, and `bench_engine` automatically. The SO dims mirror
+/// `SoTagConfig::small()` / `SoNwpConfig::small()` — the configs the
+/// data loaders serve for every non-`paper` preset.
 const REGISTRY: &[NativeModelCfg] = &[
     NativeModelCfg {
+        task: "femnist",
         preset: "tiny",
         input: 28 * 28,
         cut: 32,
@@ -82,8 +130,11 @@ const REGISTRY: &[NativeModelCfg] = &[
         classes: 62,
         batch: 8,
         eval_batch: 32,
+        seq: 1,
+        head: HeadKind::SoftmaxCe,
     },
     NativeModelCfg {
+        task: "femnist",
         preset: "small",
         input: 28 * 28,
         cut: 64,
@@ -91,8 +142,11 @@ const REGISTRY: &[NativeModelCfg] = &[
         classes: 62,
         batch: 32,
         eval_batch: 64,
+        seq: 1,
+        head: HeadKind::SoftmaxCe,
     },
     NativeModelCfg {
+        task: "femnist",
         preset: "stress",
         input: 28 * 28,
         cut: 1152,
@@ -100,6 +154,56 @@ const REGISTRY: &[NativeModelCfg] = &[
         classes: 62,
         batch: 8,
         eval_batch: 16,
+        seq: 1,
+        head: HeadKind::SoftmaxCe,
+    },
+    NativeModelCfg {
+        task: "so_tag",
+        preset: "tiny",
+        input: 1000,
+        cut: 32,
+        hidden: 32,
+        classes: 200,
+        batch: 8,
+        eval_batch: 32,
+        seq: 1,
+        head: HeadKind::SigmoidBce,
+    },
+    NativeModelCfg {
+        task: "so_tag",
+        preset: "small",
+        input: 1000,
+        cut: 64,
+        hidden: 128,
+        classes: 200,
+        batch: 16,
+        eval_batch: 32,
+        seq: 1,
+        head: HeadKind::SigmoidBce,
+    },
+    NativeModelCfg {
+        task: "so_nwp",
+        preset: "tiny",
+        input: 2004,
+        cut: 32,
+        hidden: 32,
+        classes: 2004,
+        batch: 4,
+        eval_batch: 8,
+        seq: 20,
+        head: HeadKind::TokenSoftmaxCe,
+    },
+    NativeModelCfg {
+        task: "so_nwp",
+        preset: "small",
+        input: 2004,
+        cut: 64,
+        hidden: 128,
+        classes: 2004,
+        batch: 8,
+        eval_batch: 16,
+        seq: 20,
+        head: HeadKind::TokenSoftmaxCe,
     },
 ];
 
@@ -111,17 +215,28 @@ impl NativeModelCfg {
 
     /// Manifest key for this variant.
     pub fn variant_key(&self) -> String {
-        format!("femnist_{}", self.preset)
+        format!("{}_{}", self.task, self.preset)
     }
 
-    /// Look a variant up by manifest key (`femnist_<preset>`).
+    /// Rows per pass for a batch of `b` examples (`b·seq`).
+    pub fn rows(&self, b: usize) -> usize {
+        b * self.seq
+    }
+
+    /// Look a variant up by manifest key (`<task>_<preset>`).
     pub fn by_variant(variant: &str) -> Option<&'static NativeModelCfg> {
         REGISTRY.iter().find(|c| c.variant_key() == variant)
     }
 
-    /// Look a variant up by preset name (`tiny` / `small` / `stress`).
+    /// Look a FEMNIST variant up by preset name (`tiny` / `small` /
+    /// `stress`) — the historical single-task accessor.
     pub fn by_preset(preset: &str) -> Option<&'static NativeModelCfg> {
-        REGISTRY.iter().find(|c| c.preset == preset)
+        Self::by_task_preset("femnist", preset)
+    }
+
+    /// Look a variant up by task + preset.
+    pub fn by_task_preset(task: &str, preset: &str) -> Option<&'static NativeModelCfg> {
+        REGISTRY.iter().find(|c| c.task == task && c.preset == preset)
     }
 }
 
@@ -156,6 +271,9 @@ pub struct EngineScratch {
     pub g_b2: Vec<f32>,
     pub g_w3: Vec<f32>,
     pub g_b3: Vec<f32>,
+    /// One-hot expansion of token inputs `[m, input]` (sequence tasks
+    /// only; empty otherwise).
+    pub xoh: Vec<f32>,
 }
 
 impl EngineScratch {
@@ -180,6 +298,8 @@ impl EngineScratch {
         self.g_b2.resize(cfg.hidden, 0.0);
         self.g_w3.resize(cfg.hidden * cfg.classes, 0.0);
         self.g_b3.resize(cfg.classes, 0.0);
+        let oh = if cfg.seq > 1 { m * cfg.input } else { 0 };
+        self.xoh.resize(oh, 0.0);
     }
 
     /// Capacity fingerprint (pointer + capacity per buffer) — the
@@ -189,7 +309,7 @@ impl EngineScratch {
         [
             &self.zpre, &self.z, &self.h1pre, &self.h1, &self.logits, &self.glogits,
             &self.gz, &self.dh1, &self.g_w1, &self.g_b1, &self.g_w2, &self.g_b2,
-            &self.g_w3, &self.g_b3,
+            &self.g_w3, &self.g_b3, &self.xoh,
         ]
         .iter()
         .map(|v| (v.as_ptr() as usize, v.capacity()))
@@ -264,12 +384,24 @@ impl NativeEngine {
             )
         })?;
         let p = self.policy;
+        let nmetrics = cfg.head.metric_names().len();
+        // helper: loss scalar + per-head metric sums, in output order
+        let scalars = |loss: f64, sums: [f64; 2]| {
+            let mut outs = Vec::with_capacity(nmetrics + 6);
+            outs.push(Array::f32(&[], vec![loss as f32]));
+            for sum in sums.iter().take(nmetrics) {
+                outs.push(Array::f32(&[], vec![*sum as f32]));
+            }
+            outs
+        };
         match name {
             "client_fwd" => {
-                let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
-                let m = cfg.batch;
+                let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
+                let m = cfg.rows(cfg.batch);
                 s.prepare(cfg, m);
-                client_fwd_into(cfg, p, w1, b1, x, s);
+                with_dense_x(cfg, &inputs[2], s, |x, s| {
+                    client_fwd_into(cfg, p, w1, b1, x, s)
+                })?;
                 Ok(vec![Array::f32(&[m, cfg.cut], s.z.clone())])
             }
             "server_step" => {
@@ -279,28 +411,28 @@ impl NativeEngine {
                     f32s(&inputs[2])?,
                     f32s(&inputs[3])?,
                 );
-                let y = i32s(&inputs[4])?;
+                let y = labels(&inputs[4]);
                 let zt = f32s(&inputs[5])?;
-                let m = cfg.batch;
+                let m = cfg.rows(cfg.batch);
                 s.prepare(cfg, m);
-                let (loss, correct) = server_step_into(cfg, p, w2, b2, w3, b3, y, zt, s)?;
-                Ok(vec![
-                    Array::f32(&[], vec![loss as f32]),
-                    Array::f32(&[], vec![correct as f32]),
-                    Array::f32(&[m, cfg.cut], s.gz.clone()),
-                    Array::f32(&[cfg.cut, cfg.hidden], s.g_w2.clone()),
-                    Array::f32(&[cfg.hidden], s.g_b2.clone()),
-                    Array::f32(&[cfg.hidden, cfg.classes], s.g_w3.clone()),
-                    Array::f32(&[cfg.classes], s.g_b3.clone()),
-                ])
+                let (loss, sums) = server_step_into(cfg, p, w2, b2, w3, b3, y, zt, s)?;
+                let mut outs = scalars(loss, sums);
+                outs.push(Array::f32(&[m, cfg.cut], s.gz.clone()));
+                outs.push(Array::f32(&[cfg.cut, cfg.hidden], s.g_w2.clone()));
+                outs.push(Array::f32(&[cfg.hidden], s.g_b2.clone()));
+                outs.push(Array::f32(&[cfg.hidden, cfg.classes], s.g_w3.clone()));
+                outs.push(Array::f32(&[cfg.classes], s.g_b3.clone()));
+                Ok(outs)
             }
             "client_bwd" => {
-                let (w1, b1, x) = (f32s(&inputs[0])?, f32s(&inputs[1])?, f32s(&inputs[2])?);
+                let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
                 let zt = f32s(&inputs[3])?;
                 let grad_z = f32s(&inputs[4])?;
                 let lambda = f32s(&inputs[5])?[0];
-                s.prepare(cfg, cfg.batch);
-                let qerr = client_bwd_into(cfg, p, w1, b1, x, zt, grad_z, lambda, s);
+                s.prepare(cfg, cfg.rows(cfg.batch));
+                let qerr = with_dense_x(cfg, &inputs[2], s, |x, s| {
+                    client_bwd_into(cfg, p, w1, b1, x, zt, grad_z, lambda, s)
+                })?;
                 Ok(vec![
                     Array::f32(&[cfg.input, cfg.cut], s.g_w1.clone()),
                     Array::f32(&[cfg.cut], s.g_b1.clone()),
@@ -315,21 +447,19 @@ impl NativeEngine {
                     f32s(&inputs[4])?,
                     f32s(&inputs[5])?,
                 );
-                let x = f32s(&inputs[6])?;
-                let y = i32s(&inputs[7])?;
-                s.prepare(cfg, cfg.batch);
-                let (loss, correct) =
-                    full_grad_into(cfg, p, w1, b1, w2, b2, w3, b3, x, y, s)?;
-                Ok(vec![
-                    Array::f32(&[], vec![loss as f32]),
-                    Array::f32(&[], vec![correct as f32]),
-                    Array::f32(&[cfg.input, cfg.cut], s.g_w1.clone()),
-                    Array::f32(&[cfg.cut], s.g_b1.clone()),
-                    Array::f32(&[cfg.cut, cfg.hidden], s.g_w2.clone()),
-                    Array::f32(&[cfg.hidden], s.g_b2.clone()),
-                    Array::f32(&[cfg.hidden, cfg.classes], s.g_w3.clone()),
-                    Array::f32(&[cfg.classes], s.g_b3.clone()),
-                ])
+                let y = labels(&inputs[7]);
+                s.prepare(cfg, cfg.rows(cfg.batch));
+                let (loss, sums) = with_dense_x(cfg, &inputs[6], s, |x, s| {
+                    full_grad_into(cfg, p, w1, b1, w2, b2, w3, b3, x, y, s)
+                })??;
+                let mut outs = scalars(loss, sums);
+                outs.push(Array::f32(&[cfg.input, cfg.cut], s.g_w1.clone()));
+                outs.push(Array::f32(&[cfg.cut], s.g_b1.clone()));
+                outs.push(Array::f32(&[cfg.cut, cfg.hidden], s.g_w2.clone()));
+                outs.push(Array::f32(&[cfg.hidden], s.g_b2.clone()));
+                outs.push(Array::f32(&[cfg.hidden, cfg.classes], s.g_w3.clone()));
+                outs.push(Array::f32(&[cfg.classes], s.g_b3.clone()));
+                Ok(outs)
             }
             "full_eval" => {
                 let (w1, b1) = (f32s(&inputs[0])?, f32s(&inputs[1])?);
@@ -339,16 +469,13 @@ impl NativeEngine {
                     f32s(&inputs[4])?,
                     f32s(&inputs[5])?,
                 );
-                let x = f32s(&inputs[6])?;
-                let y = i32s(&inputs[7])?;
-                let m = cfg.eval_batch;
+                let y = labels(&inputs[7]);
+                let m = cfg.rows(cfg.eval_batch);
                 s.prepare(cfg, m);
-                let (loss, correct) =
-                    full_eval_into(cfg, p, w1, b1, w2, b2, w3, b3, x, y, m, s)?;
-                Ok(vec![
-                    Array::f32(&[], vec![loss as f32]),
-                    Array::f32(&[], vec![correct as f32]),
-                ])
+                let (loss, sums) = with_dense_x(cfg, &inputs[6], s, |x, s| {
+                    full_eval_into(cfg, p, w1, b1, w2, b2, w3, b3, x, y, m, s)
+                })??;
+                Ok(scalars(loss, sums))
             }
             other => anyhow::bail!("native engine has no artifact '{other}'"),
         }
@@ -398,6 +525,65 @@ struct ServerBufs<'a> {
     g_b3: &'a mut [f32],
 }
 
+/// Borrowed label view, dispatched to the variant's [`HeadKind`].
+#[derive(Clone, Copy)]
+pub enum Labels<'a> {
+    /// One class/token id per row (`[m]` s32; token heads mask PAD).
+    Classes(&'a [i32]),
+    /// Multi-hot targets (`[m, classes]` f32).
+    MultiHot(&'a [f32]),
+}
+
+/// View an input array as labels (dtype picks the variant; the head
+/// dispatch rejects mismatches).
+fn labels(a: &Array) -> Labels<'_> {
+    match a {
+        Array::F32 { data, .. } => Labels::MultiHot(data),
+        Array::I32 { data, .. } => Labels::Classes(data),
+    }
+}
+
+/// Run `f` against a dense `x` view: f32 inputs pass straight through;
+/// s32 token inputs are one-hot expanded into the scratch's `xoh` buffer
+/// first (moved out for the call so the borrows split; no allocation —
+/// `prepare` already sized it).
+fn with_dense_x<R>(
+    cfg: &NativeModelCfg,
+    x: &Array,
+    s: &mut EngineScratch,
+    f: impl FnOnce(&[f32], &mut EngineScratch) -> R,
+) -> anyhow::Result<R> {
+    match x {
+        Array::F32 { data, .. } => Ok(f(data, s)),
+        Array::I32 { data, .. } => {
+            let mut xoh = std::mem::take(&mut s.xoh);
+            let r = one_hot_into(data, cfg.input, &mut xoh).map(|()| f(&xoh, s));
+            s.xoh = xoh;
+            r
+        }
+    }
+}
+
+/// One-hot expand token ids into `out` (`[tokens.len(), vocab]`, fully
+/// overwritten). Errors on an out-of-range token id.
+fn one_hot_into(tokens: &[i32], vocab: usize, out: &mut [f32]) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        out.len() == tokens.len() * vocab,
+        "one-hot buffer sized {} for {} tokens of vocab {vocab}",
+        out.len(),
+        tokens.len()
+    );
+    out.fill(0.0);
+    for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(
+            t >= 0 && (t as usize) < vocab,
+            "token {t} at row {i} out of range for vocab {vocab}"
+        );
+        out[i * vocab + t as usize] = 1.0;
+    }
+    Ok(())
+}
+
 /// The server forward + loss + backward sequence, shared verbatim by
 /// [`server_step_into`] and [`full_grad_into`] — one copy, so the
 /// split-vs-monolithic exactness contract has a single source of truth.
@@ -409,17 +595,17 @@ fn server_pass(
     b2: &[f32],
     w3: &[f32],
     b3: &[f32],
-    y: &[i32],
+    y: Labels<'_>,
     zt: &[f32],
     m: usize,
     b: ServerBufs<'_>,
-) -> anyhow::Result<(f64, f64)> {
+) -> anyhow::Result<(f64, [f64; 2])> {
     let ServerBufs { h1pre, h1, logits, glogits, dh1, gz, g_w2, g_b2, g_w3, g_b3 } = b;
     // forward
     gemm::dense_into(zt, w2, b2, m, cfg.cut, cfg.hidden, h1pre, p);
     relu_into(h1pre, h1);
     gemm::dense_into(h1, w3, b3, m, cfg.hidden, cfg.classes, logits, p);
-    let (loss, correct) = softmax_ce_into(logits, y, m, cfg.classes, glogits)?;
+    let (loss, sums) = head_loss_into(cfg, logits, y, m, glogits)?;
     // backward
     gemm::matmul_at_b_into(h1, glogits, m, cfg.hidden, cfg.classes, g_w3, p);
     gemm::colsum_into(glogits, m, cfg.classes, g_b3);
@@ -428,12 +614,12 @@ fn server_pass(
     gemm::matmul_at_b_into(zt, dh1, m, cfg.cut, cfg.hidden, g_w2, p);
     gemm::colsum_into(dh1, m, cfg.hidden, g_b2);
     gemm::matmul_a_bt_into(dh1, w2, m, cfg.hidden, cfg.cut, gz, p);
-    Ok((loss, correct))
+    Ok((loss, sums))
 }
 
 /// Server forward + loss + backward off the (possibly quantized) cut
 /// activations `zt`. Fills `gz` (grad at the cut) and the server grads;
-/// returns `(mean loss, correct count)`. Errors on an out-of-range label.
+/// returns `(mean loss, metric sums)`. Errors on an out-of-range label.
 #[allow(clippy::too_many_arguments)]
 pub fn server_step_into(
     cfg: &NativeModelCfg,
@@ -442,10 +628,10 @@ pub fn server_step_into(
     b2: &[f32],
     w3: &[f32],
     b3: &[f32],
-    y: &[i32],
+    y: Labels<'_>,
     zt: &[f32],
     s: &mut EngineScratch,
-) -> anyhow::Result<(f64, f64)> {
+) -> anyhow::Result<(f64, [f64; 2])> {
     let m = s.h1pre.len() / cfg.hidden;
     let bufs = ServerBufs {
         h1pre: &mut s.h1pre,
@@ -495,7 +681,7 @@ pub fn client_bwd_into(
 
 /// Monolithic forward+backward: identical composition to the split path
 /// with `z~ = z` and `λ = 0`, so split-vs-monolithic agreement is exact
-/// by construction. Fills every gradient buffer; returns (loss, correct).
+/// by construction. Fills every gradient buffer; returns (loss, sums).
 #[allow(clippy::too_many_arguments)]
 pub fn full_grad_into(
     cfg: &NativeModelCfg,
@@ -507,9 +693,9 @@ pub fn full_grad_into(
     w3: &[f32],
     b3: &[f32],
     x: &[f32],
-    y: &[i32],
+    y: Labels<'_>,
     s: &mut EngineScratch,
-) -> anyhow::Result<(f64, f64)> {
+) -> anyhow::Result<(f64, [f64; 2])> {
     let m = s.zpre.len() / cfg.cut;
     client_fwd_into(cfg, p, w1, b1, x, s);
     // destructure the arena to split the borrows: the scratch-resident z
@@ -517,7 +703,7 @@ pub fn full_grad_into(
     // lent, exactly the server_step_into sequence (one copy of the math)
     let EngineScratch {
         zpre, z, h1pre, h1, logits, glogits, gz, dh1,
-        g_w1, g_b1, g_w2, g_b2, g_w3, g_b3,
+        g_w1, g_b1, g_w2, g_b2, g_w3, g_b3, xoh: _,
     } = s;
     let bufs = ServerBufs {
         h1pre,
@@ -531,14 +717,14 @@ pub fn full_grad_into(
         g_w3,
         g_b3,
     };
-    let (loss, correct) = server_pass(cfg, p, w2, b2, w3, b3, y, z, m, bufs)?;
+    let (loss, sums) = server_pass(cfg, p, w2, b2, w3, b3, y, z, m, bufs)?;
     relu_backward(gz, zpre);
     gemm::matmul_at_b_into(x, gz, m, cfg.input, cfg.cut, g_w1, p);
     gemm::colsum_into(gz, m, cfg.cut, g_b1);
-    Ok((loss, correct))
+    Ok((loss, sums))
 }
 
-/// Forward-only eval over `m` rows; returns (loss, correct). The loss
+/// Forward-only eval over `m` rows; returns (loss, sums). The loss
 /// gradient is still computed into the scratch (same arithmetic as the
 /// historical engine) but unused.
 #[allow(clippy::too_many_arguments)]
@@ -552,23 +738,31 @@ pub fn full_eval_into(
     w3: &[f32],
     b3: &[f32],
     x: &[f32],
-    y: &[i32],
+    y: Labels<'_>,
     m: usize,
     s: &mut EngineScratch,
-) -> anyhow::Result<(f64, f64)> {
+) -> anyhow::Result<(f64, [f64; 2])> {
     gemm::dense_into(x, w1, b1, m, cfg.input, cfg.cut, &mut s.zpre, p);
     relu_into(&s.zpre, &mut s.z);
     gemm::dense_into(&s.z, w2, b2, m, cfg.cut, cfg.hidden, &mut s.h1pre, p);
     relu_into(&s.h1pre, &mut s.h1);
     gemm::dense_into(&s.h1, w3, b3, m, cfg.hidden, cfg.classes, &mut s.logits, p);
-    softmax_ce_into(&s.logits, y, m, cfg.classes, &mut s.glogits)
+    head_loss_into(cfg, &s.logits, y, m, &mut s.glogits)
 }
 
 // -- manifest construction ---------------------------------------------------
 
 fn variant_for(cfg: &NativeModelCfg) -> Variant {
-    let x = |b: usize| io("x", &[b, 28, 28, 1], "f32", "data");
-    let y = |b: usize| io("y", &[b], "s32", "data");
+    let x = |b: usize| match cfg.task {
+        "femnist" => io("x", &[b, 28, 28, 1], "f32", "data"),
+        "so_nwp" => io("x", &[b, cfg.seq], "s32", "data"),
+        _ => io("x", &[b, cfg.input], "f32", "data"),
+    };
+    let y = |b: usize| match cfg.head {
+        HeadKind::SoftmaxCe => io("y", &[b], "s32", "data"),
+        HeadKind::SigmoidBce => io("y", &[b, cfg.classes], "f32", "data"),
+        HeadKind::TokenSoftmaxCe => io("y", &[b, cfg.seq], "s32", "data"),
+    };
     let client_params = || {
         vec![
             io("w1", &[cfg.input, cfg.cut], "f32", "param_client"),
@@ -584,29 +778,43 @@ fn variant_for(cfg: &NativeModelCfg) -> Variant {
         ]
     };
 
+    let metric_names = cfg.head.metric_names();
+    let with_metrics = |tail: &[&str]| -> Vec<String> {
+        std::iter::once("loss")
+            .chain(metric_names.iter().copied())
+            .chain(tail.iter().copied())
+            .map(str::to_string)
+            .collect()
+    };
+    let rows = cfg.rows(cfg.batch);
+
     let mut artifacts = HashMap::new();
     let mut add = |meta: ArtifactMeta| {
         artifacts.insert(meta.name.clone(), meta);
     };
     let mut inputs = client_params();
     inputs.push(x(cfg.batch));
-    add(art("client_fwd", inputs, &["z"]));
+    add(art("client_fwd", inputs, vec!["z".to_string()]));
 
     let mut inputs = server_params();
     inputs.push(y(cfg.batch));
-    inputs.push(io("z_tilde", &[cfg.batch, cfg.cut], "f32", "cut"));
+    inputs.push(io("z_tilde", &[rows, cfg.cut], "f32", "cut"));
     add(art(
         "server_step",
         inputs,
-        &["loss", "correct", "grad_z", "g_w2", "g_b2", "g_w3", "g_b3"],
+        with_metrics(&["grad_z", "g_w2", "g_b2", "g_w3", "g_b3"]),
     ));
 
     let mut inputs = client_params();
     inputs.push(x(cfg.batch));
-    inputs.push(io("z_tilde", &[cfg.batch, cfg.cut], "f32", "cut"));
-    inputs.push(io("grad_z", &[cfg.batch, cfg.cut], "f32", "grad_cut"));
+    inputs.push(io("z_tilde", &[rows, cfg.cut], "f32", "cut"));
+    inputs.push(io("grad_z", &[rows, cfg.cut], "f32", "grad_cut"));
     inputs.push(io("lambda", &[], "f32", "hyper"));
-    add(art("client_bwd", inputs, &["g_w1", "g_b1", "qerr"]));
+    add(art(
+        "client_bwd",
+        inputs,
+        vec!["g_w1".to_string(), "g_b1".to_string(), "qerr".to_string()],
+    ));
 
     let mut inputs = client_params();
     inputs.extend(server_params());
@@ -615,25 +823,23 @@ fn variant_for(cfg: &NativeModelCfg) -> Variant {
     add(art(
         "full_grad",
         inputs,
-        &[
-            "loss", "correct", "g_w1", "g_b1", "g_w2", "g_b2", "g_w3", "g_b3",
-        ],
+        with_metrics(&["g_w1", "g_b1", "g_w2", "g_b2", "g_w3", "g_b3"]),
     ));
 
     let mut inputs = client_params();
     inputs.extend(server_params());
     inputs.push(x(cfg.eval_batch));
     inputs.push(y(cfg.eval_batch));
-    add(art("full_eval", inputs, &["loss", "correct"]));
+    add(art("full_eval", inputs, with_metrics(&[])));
 
     let mut config = Object::new();
     config.insert("batch", Value::from_usize(cfg.batch));
     config.insert("eval_batch", Value::from_usize(cfg.eval_batch));
     let spec = ModelSpec {
-        task: "femnist".to_string(),
+        task: cfg.task.to_string(),
         preset: cfg.preset.to_string(),
         cut_dim: cfg.cut,
-        act_batch: cfg.batch,
+        act_batch: rows,
         batch: cfg.batch,
         eval_batch: cfg.eval_batch,
         client: SideSpec {
@@ -656,7 +862,7 @@ fn variant_for(cfg: &NativeModelCfg) -> Variant {
                 param("b3", &[cfg.classes], "zeros", cfg.hidden, cfg.classes),
             ],
         },
-        metrics: vec!["correct".to_string()],
+        metrics: metric_names.iter().map(|m| m.to_string()).collect(),
         client_args: vec!["x".to_string()],
         server_args: vec!["y".to_string()],
         config: Value::Obj(config),
@@ -673,12 +879,12 @@ fn io(name: &str, shape: &[usize], dtype: &str, role: &str) -> IoSpec {
     }
 }
 
-fn art(name: &str, inputs: Vec<IoSpec>, outputs: &[&str]) -> ArtifactMeta {
+fn art(name: &str, inputs: Vec<IoSpec>, outputs: Vec<String>) -> ArtifactMeta {
     ArtifactMeta {
         name: name.to_string(),
         path: format!("native/{name}"),
         inputs,
-        outputs: outputs.iter().map(|o| o.to_string()).collect(),
+        outputs,
         meta: Value::Null,
     }
 }
@@ -775,6 +981,166 @@ fn softmax_ce_into(
     Ok((loss / m as f64, correct))
 }
 
+/// Dispatch the loss + metric computation to the variant's head. The
+/// two-slot sums array carries up to two metric sums in
+/// [`HeadKind::metric_names`] order (unused slots stay 0).
+fn head_loss_into(
+    cfg: &NativeModelCfg,
+    logits: &[f32],
+    y: Labels<'_>,
+    m: usize,
+    grad: &mut [f32],
+) -> anyhow::Result<(f64, [f64; 2])> {
+    match (cfg.head, y) {
+        (HeadKind::SoftmaxCe, Labels::Classes(y)) => {
+            let (loss, correct) = softmax_ce_into(logits, y, m, cfg.classes, grad)?;
+            Ok((loss, [correct, 0.0]))
+        }
+        (HeadKind::SigmoidBce, Labels::MultiHot(y)) => {
+            sigmoid_bce_into(logits, y, m, cfg.classes, grad)
+        }
+        (HeadKind::TokenSoftmaxCe, Labels::Classes(y)) => {
+            token_softmax_ce_into(logits, y, m, cfg.classes, grad)
+        }
+        _ => anyhow::bail!(
+            "label dtype does not match the {:?} head of '{}'",
+            cfg.head,
+            cfg.variant_key()
+        ),
+    }
+}
+
+/// Per-class sigmoid binary cross-entropy over multi-hot targets,
+/// summed over classes and averaged over the `m` rows; gradient
+/// `(σ(l) − y)/m` written into `grad`. Returns
+/// `(mean loss, [hits_at_5, positives])` — the Recall@5 sums: how many
+/// true tags land in the row's top-5 logits (deterministic: strict `>`
+/// comparison, so ties keep the lowest class index) over how many true
+/// tags there are.
+fn sigmoid_bce_into(
+    logits: &[f32],
+    y: &[f32],
+    m: usize,
+    c: usize,
+    grad: &mut [f32],
+) -> anyhow::Result<(f64, [f64; 2])> {
+    debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(grad.len(), m * c);
+    anyhow::ensure!(
+        y.len() == m * c,
+        "got {} targets for a [{m}, {c}] multi-hot batch",
+        y.len()
+    );
+    let top = c.min(5);
+    let mut loss = 0.0f64;
+    let mut hits = 0.0f64;
+    let mut positives = 0.0f64;
+    let inv_m = 1.0 / m as f32;
+    for i in 0..m {
+        let row = &logits[i * c..(i + 1) * c];
+        let yr = &y[i * c..(i + 1) * c];
+        let g = &mut grad[i * c..(i + 1) * c];
+        // stable BCE-with-logits: max(l,0) − l·t + ln(1 + e^{−|l|})
+        for j in 0..c {
+            let l = row[j];
+            let t = yr[j];
+            loss += (l.max(0.0) - l * t + (-l.abs()).exp().ln_1p()) as f64;
+            let sig = 1.0 / (1.0 + (-l).exp());
+            g[j] = (sig - t) * inv_m;
+        }
+        // deterministic top-5: descending values, lowest index on ties
+        let mut top_idx = [usize::MAX; 5];
+        let mut top_val = [f32::NEG_INFINITY; 5];
+        for (j, &v) in row.iter().enumerate() {
+            let mut k = top;
+            while k > 0 && v > top_val[k - 1] {
+                k -= 1;
+            }
+            if k < top {
+                for s in (k + 1..top).rev() {
+                    top_val[s] = top_val[s - 1];
+                    top_idx[s] = top_idx[s - 1];
+                }
+                top_val[k] = v;
+                top_idx[k] = j;
+            }
+        }
+        for &j in top_idx.iter().take(top) {
+            if yr[j] > 0.0 {
+                hits += 1.0;
+            }
+        }
+        for &t in yr {
+            if t > 0.0 {
+                positives += 1.0;
+            }
+        }
+    }
+    Ok((loss / m as f64, [hits, positives]))
+}
+
+/// Softmax cross-entropy per sequence position with PAD targets masked
+/// out: masked rows contribute no loss and a zero gradient row, and the
+/// mean normalizes by the count of valid (non-PAD) targets. Returns
+/// `(mean loss, [correct_tokens, valid_tokens])`.
+fn token_softmax_ce_into(
+    logits: &[f32],
+    y: &[i32],
+    m: usize,
+    c: usize,
+    grad: &mut [f32],
+) -> anyhow::Result<(f64, [f64; 2])> {
+    debug_assert_eq!(logits.len(), m * c);
+    debug_assert_eq!(grad.len(), m * c);
+    anyhow::ensure!(y.len() == m, "got {} targets for {m} token rows", y.len());
+    for (i, &yv) in y.iter().enumerate() {
+        anyhow::ensure!(
+            yv >= 0 && (yv as usize) < c,
+            "label {yv} at row {i} out of range for {c} classes"
+        );
+    }
+    let valid = y.iter().filter(|&&yv| yv != PAD).count();
+    if valid == 0 {
+        grad.fill(0.0);
+        return Ok((0.0, [0.0, 0.0]));
+    }
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    for i in 0..m {
+        let g = &mut grad[i * c..(i + 1) * c];
+        if y[i] == PAD {
+            g.fill(0.0);
+            continue;
+        }
+        let row = &logits[i * c..(i + 1) * c];
+        let mut maxv = f32::NEG_INFINITY;
+        let mut argmax = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > maxv {
+                maxv = v;
+                argmax = j;
+            }
+        }
+        let mut sum = 0.0f32;
+        for (gv, &v) in g.iter_mut().zip(row) {
+            let e = (v - maxv).exp();
+            *gv = e;
+            sum += e;
+        }
+        let yi = y[i] as usize;
+        loss -= (row[yi] - maxv) as f64 - (sum as f64).ln();
+        if argmax == yi {
+            correct += 1.0;
+        }
+        let inv = 1.0 / (sum * valid as f32);
+        for gv in g.iter_mut() {
+            *gv *= inv;
+        }
+        g[yi] -= 1.0 / valid as f32;
+    }
+    Ok((loss / valid as f64, [correct, valid as f64]))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -789,15 +1155,40 @@ mod tests {
         let wc = spec.client.init_tensors(&mut rng.fork(1));
         let ws = spec.server.init_tensors(&mut rng.fork(2));
         let mut r = rng.fork(3);
-        let x = r.uniform_vec(cfg.batch * cfg.input, 0.0, 1.0);
-        let y: Vec<i32> = (0..cfg.batch).map(|_| r.below(cfg.classes) as i32).collect();
+        let b = cfg.batch;
+        let x = match cfg.task {
+            "femnist" => Array::f32(&[b, 28, 28, 1], r.uniform_vec(b * cfg.input, 0.0, 1.0)),
+            "so_nwp" => Array::i32(
+                &[b, cfg.seq],
+                (0..b * cfg.seq).map(|_| r.below(cfg.input) as i32).collect(),
+            ),
+            _ => Array::f32(&[b, cfg.input], r.uniform_vec(b * cfg.input, 0.0, 1.0)),
+        };
+        let y = match cfg.head {
+            HeadKind::SoftmaxCe => {
+                Array::i32(&[b], (0..b).map(|_| r.below(cfg.classes) as i32).collect())
+            }
+            HeadKind::SigmoidBce => {
+                let mut t = vec![0.0f32; b * cfg.classes];
+                for row in 0..b {
+                    for _ in 0..3 {
+                        t[row * cfg.classes + r.below(cfg.classes)] = 1.0;
+                    }
+                }
+                Array::f32(&[b, cfg.classes], t)
+            }
+            HeadKind::TokenSoftmaxCe => Array::i32(
+                &[b, cfg.seq],
+                (0..b * cfg.seq).map(|_| r.below(cfg.classes) as i32).collect(),
+            ),
+        };
         let p = |t: &crate::tensor::Tensor| Array::f32(t.shape(), t.data().to_vec());
         let mut full: Vec<Array> = wc.tensors.iter().map(&p).collect();
         full.extend(ws.tensors.iter().map(&p));
-        full.push(Array::f32(&[cfg.batch, 28, 28, 1], x.clone()));
-        full.push(Array::i32(&[cfg.batch], y));
+        full.push(x.clone());
+        full.push(y);
         let mut fwd: Vec<Array> = wc.tensors.iter().map(&p).collect();
-        fwd.push(Array::f32(&[cfg.batch, 28, 28, 1], x));
+        fwd.push(x);
         (full, fwd)
     }
 
@@ -831,6 +1222,7 @@ mod tests {
     fn split_composition_equals_full_grad_exactly_on_every_variant() {
         for cfg in NativeModelCfg::registry() {
             let key = cfg.variant_key();
+            let nm = cfg.head.metric_names().len();
             let engine = NativeEngine::new();
             let (full_in, fwd_in) = rand_inputs(cfg, 11);
             let full = engine.run(&key, "full_grad", &full_in).unwrap();
@@ -850,21 +1242,27 @@ mod tests {
                 full_in[1].clone(),         // b1
                 full_in[6].clone(),         // x
                 z,                          // z_tilde = z
-                step[2].clone(),            // grad_z
+                step[1 + nm].clone(),       // grad_z
                 Array::f32(&[], vec![0.0]), // lambda = 0
             ];
             let bwd = engine.run(&key, "client_bwd", &bwd_in).unwrap();
 
             // z~ == z, λ == 0 → zero correction error and bit-identical grads
             assert_eq!(bwd[2].as_f32().unwrap()[0], 0.0, "{key} qerr");
-            assert_eq!(step[0].as_f32().unwrap(), full[0].as_f32().unwrap(), "{key} loss");
-            assert_eq!(step[1].as_f32().unwrap(), full[1].as_f32().unwrap(), "{key} correct");
-            assert_eq!(bwd[0].as_f32().unwrap(), full[2].as_f32().unwrap(), "{key} g_w1");
-            assert_eq!(bwd[1].as_f32().unwrap(), full[3].as_f32().unwrap(), "{key} g_b1");
+            // loss + every metric sum agree
+            for k in 0..=nm {
+                assert_eq!(
+                    step[k].as_f32().unwrap(),
+                    full[k].as_f32().unwrap(),
+                    "{key} scalar {k}"
+                );
+            }
+            assert_eq!(bwd[0].as_f32().unwrap(), full[1 + nm].as_f32().unwrap(), "{key} g_w1");
+            assert_eq!(bwd[1].as_f32().unwrap(), full[2 + nm].as_f32().unwrap(), "{key} g_b1");
             for (k, out) in ["g_w2", "g_b2", "g_w3", "g_b3"].iter().enumerate() {
                 assert_eq!(
-                    step[3 + k].as_f32().unwrap(),
-                    full[4 + k].as_f32().unwrap(),
+                    step[2 + nm + k].as_f32().unwrap(),
+                    full[3 + nm + k].as_f32().unwrap(),
                     "{key} {out}"
                 );
             }
@@ -875,11 +1273,13 @@ mod tests {
     fn gradients_match_finite_differences_on_every_variant() {
         for cfg in NativeModelCfg::registry() {
             let key = cfg.variant_key();
+            let nm = cfg.head.metric_names().len();
             let engine = NativeEngine::new();
             let (full_in, _) = rand_inputs(cfg, 5);
             let outs = engine.run(&key, "full_grad", &full_in).unwrap();
             // probe the max-|grad| coordinate of each parameter tensor
-            for (pi, gi) in [(0usize, 2usize), (1, 3), (2, 4), (3, 5), (4, 6), (5, 7)] {
+            for pi in 0..6usize {
+                let gi = 1 + nm + pi;
                 let grads = outs[gi].as_f32().unwrap();
                 let (idx, &g) = grads
                     .iter()
@@ -1051,5 +1451,98 @@ mod tests {
         assert!(rt.run(VARIANT, "client_fwd", &bad).is_err());
         assert!(rt.run("nope", "client_fwd", &bad).is_err());
         assert!(rt.run(VARIANT, "nope", &bad).is_err());
+    }
+
+    /// The SO registry dims are pinned to the data-loader configs the
+    /// trainers will actually serve (`small()` for every non-`paper`
+    /// preset) — a drift here would fail shape checks mid-round.
+    #[test]
+    fn so_variant_dims_match_data_loader_configs() {
+        use crate::data::{so_nwp::SoNwpConfig, so_tag::SoTagConfig};
+        let tag = SoTagConfig::small();
+        for preset in ["tiny", "small"] {
+            let c = NativeModelCfg::by_task_preset("so_tag", preset).unwrap();
+            assert_eq!(c.input, tag.vocab, "so_tag_{preset} input");
+            assert_eq!(c.classes, tag.tags, "so_tag_{preset} classes");
+            assert_eq!(c.seq, 1);
+            assert_eq!(c.head, HeadKind::SigmoidBce);
+        }
+        let nwp = SoNwpConfig::small();
+        for preset in ["tiny", "small"] {
+            let c = NativeModelCfg::by_task_preset("so_nwp", preset).unwrap();
+            assert_eq!(c.input, nwp.vocab, "so_nwp_{preset} input");
+            assert_eq!(c.classes, nwp.vocab, "so_nwp_{preset} classes");
+            assert_eq!(c.seq, nwp.seq, "so_nwp_{preset} seq");
+            assert_eq!(c.head, HeadKind::TokenSoftmaxCe);
+        }
+        // femnist keyed lookups are unchanged by the multi-task registry
+        assert_eq!(NativeModelCfg::by_preset("small").unwrap().task, "femnist");
+    }
+
+    #[test]
+    fn recall_at_5_counts_true_tags_in_top5() {
+        // 1 row, 8 classes; top-5 by logit are indices 0..5 descending;
+        // true tags at 1 (inside the top-5) and 7 (outside)
+        let logits = vec![5.0, 4.0, 3.0, 2.0, 1.0, 0.0, -1.0, -2.0];
+        let mut y = vec![0.0f32; 8];
+        y[1] = 1.0;
+        y[7] = 1.0;
+        let mut grad = vec![0.0f32; 8];
+        let (loss, [hits, pos]) = sigmoid_bce_into(&logits, &y, 1, 8, &mut grad).unwrap();
+        assert_eq!(hits, 1.0);
+        assert_eq!(pos, 2.0);
+        assert!(loss > 0.0);
+        // gradient is σ(l) − y: positive where y = 0, negative where the
+        // logit underestimates a true tag
+        assert!(grad[0] > 0.0 && grad[1] < 0.0 && grad[7] < 0.0);
+    }
+
+    #[test]
+    fn top5_ties_resolve_to_lowest_index() {
+        // all-equal logits: the deterministic top-5 must be 0..5
+        let logits = vec![1.0f32; 10];
+        let mut y = vec![0.0f32; 10];
+        y[4] = 1.0; // inside 0..5
+        y[9] = 1.0; // outside
+        let mut grad = vec![0.0f32; 10];
+        let (_, [hits, pos]) = sigmoid_bce_into(&logits, &y, 1, 10, &mut grad).unwrap();
+        assert_eq!(hits, 1.0);
+        assert_eq!(pos, 2.0);
+    }
+
+    #[test]
+    fn token_head_masks_padding_rows() {
+        // 4 rows, 3 classes; rows 1 and 3 are PAD targets
+        let logits = vec![
+            1.0, 2.0, 0.5, //
+            9.0, 9.0, 9.0, //
+            0.1, 0.2, 3.0, //
+            9.0, 9.0, 9.0, //
+        ];
+        let y: Vec<i32> = vec![1, PAD, 2, PAD];
+        let mut grad = vec![7.0f32; 12];
+        let (loss, [correct, valid]) =
+            token_softmax_ce_into(&logits, &y, 4, 3, &mut grad).unwrap();
+        assert_eq!(valid, 2.0);
+        assert_eq!(correct, 2.0);
+        assert!(loss > 0.0);
+        assert!(grad[3..6].iter().all(|&g| g == 0.0), "PAD row grad not zeroed");
+        assert!(grad[9..12].iter().all(|&g| g == 0.0), "PAD row grad not zeroed");
+        // a valid softmax-CE gradient row sums to ~0
+        let s: f32 = grad[0..3].iter().sum();
+        assert!(s.abs() < 1e-6, "row grad sums to {s}");
+    }
+
+    #[test]
+    fn out_of_range_tokens_error_instead_of_panicking() {
+        let cfg = NativeModelCfg::by_task_preset("so_nwp", "tiny").unwrap();
+        let key = cfg.variant_key();
+        let engine = NativeEngine::new();
+        let (mut full_in, _) = rand_inputs(cfg, 3);
+        if let Array::I32 { data, .. } = &mut full_in[6] {
+            data[0] = cfg.input as i32; // x token beyond the vocab
+        }
+        let err = engine.run(&key, "full_grad", &full_in).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 }

@@ -29,7 +29,8 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use fedlite::quantizer::pq::{GroupedPq, PqConfig, PqOutput, QuantizeScratch};
 use fedlite::runtime::native::{
-    client_bwd_into, client_fwd_into, server_step_into, EngineScratch, NativeModelCfg,
+    client_bwd_into, client_fwd_into, server_step_into, EngineScratch, Labels,
+    NativeModelCfg,
 };
 use fedlite::tensor::gemm::GemmPolicy;
 use fedlite::util::rng::Rng;
@@ -136,9 +137,10 @@ fn client_path_steady_state() {
             // 2. quantize the cut activations (FedLite upload)
             pq.quantize_into(&es.z, m, qrng, qs, out);
             // 3. server trains on z~; grad_z lands in es.gz
-            let (loss, _) =
-                server_step_into(cfg, p, &w2, &b2, &w3, &b3, &y, &out.z_tilde, es)
-                    .unwrap();
+            let (loss, _) = server_step_into(
+                cfg, p, &w2, &b2, &w3, &b3, Labels::Classes(&y), &out.z_tilde, es,
+            )
+            .unwrap();
             // 4. grad hand-off (the wire round-trip's buffer reuse)
             grad_z.resize(es.gz.len(), 0.0);
             grad_z.copy_from_slice(&es.gz);
