@@ -16,22 +16,27 @@ use crate::comm::channel::{Link, LinkSpec};
 use crate::comm::message::Message;
 
 /// The simulated star network.
+///
+/// State is O(1) in the population: every client shares one uplink and
+/// one downlink descriptor per direction (the links are stateless spec +
+/// meter handles — `Link::send` takes `&self` and meters through
+/// atomics, and all clients always carried identical specs). The old
+/// layout held two `Vec<Link>`s, an O(population) allocation that a
+/// million-client run would pay for links that are never touched (only
+/// the cohort's messages cross the wire).
 pub struct StarNetwork {
-    uplinks: Vec<Link>,
-    downlinks: Vec<Link>,
+    clients: usize,
+    uplink: Link,
+    downlink: Link,
     pub meter: Arc<ByteMeter>,
 }
 
 impl StarNetwork {
     pub fn new(clients: usize, up: LinkSpec, down: LinkSpec) -> Self {
         let meter = Arc::new(ByteMeter::new());
-        let uplinks = (0..clients)
-            .map(|_| Link::new(up, Direction::Uplink, Arc::clone(&meter)))
-            .collect();
-        let downlinks = (0..clients)
-            .map(|_| Link::new(down, Direction::Downlink, Arc::clone(&meter)))
-            .collect();
-        StarNetwork { uplinks, downlinks, meter }
+        let uplink = Link::new(up, Direction::Uplink, Arc::clone(&meter));
+        let downlink = Link::new(down, Direction::Downlink, Arc::clone(&meter));
+        StarNetwork { clients, uplink, downlink, meter }
     }
 
     pub fn with_defaults(clients: usize) -> Self {
@@ -39,7 +44,7 @@ impl StarNetwork {
     }
 
     pub fn num_clients(&self) -> usize {
-        self.uplinks.len()
+        self.clients
     }
 
     /// Client -> server transfer. Returns decoded message (round-tripped
@@ -50,7 +55,8 @@ impl StarNetwork {
         round: u32,
         msg: &Message,
     ) -> anyhow::Result<(Message, usize)> {
-        let bytes = self.uplinks[client].send(msg, round, client as u32);
+        debug_assert!(client < self.clients, "client {client} out of range");
+        let bytes = self.uplink.send(msg, round, client as u32);
         let n = bytes.len();
         let (decoded, _, _) = Message::decode(&bytes)?;
         Ok((decoded, n))
@@ -63,7 +69,8 @@ impl StarNetwork {
         round: u32,
         msg: &Message,
     ) -> anyhow::Result<(Message, usize)> {
-        let bytes = self.downlinks[client].send(msg, round, client as u32);
+        debug_assert!(client < self.clients, "client {client} out of range");
+        let bytes = self.downlink.send(msg, round, client as u32);
         let n = bytes.len();
         let (decoded, _, _) = Message::decode(&bytes)?;
         Ok((decoded, n))
@@ -99,8 +106,8 @@ impl StarNetwork {
         per_client
             .iter()
             .map(|&(up_bytes, down_bytes, delay)| {
-                let t = self.uplinks[0].spec().transfer_time(up_bytes)
-                    + self.downlinks[0].spec().transfer_time(down_bytes)
+                let t = self.uplink.spec().transfer_time(up_bytes)
+                    + self.downlink.spec().transfer_time(down_bytes)
                     + delay;
                 if deadline > 0.0 && delay > deadline {
                     // evicted straggler: the coordinator stopped waiting
@@ -178,5 +185,17 @@ mod tests {
         let msg = Message::ClientGrads { grads: vec![vec![1.5, -2.0]] };
         let (decoded, _) = net.upload(0, 5, &msg).unwrap();
         assert_eq!(decoded, msg);
+    }
+
+    #[test]
+    fn million_client_network_is_o1_state() {
+        // shared link descriptors: population size only sets the id range
+        let net = StarNetwork::with_defaults(1_000_000);
+        assert_eq!(net.num_clients(), 1_000_000);
+        net.begin_round();
+        let msg = Message::ActivationUpload { z: vec![0.0; 8], b: 1, d: 8 };
+        let (_, n) = net.upload(999_999, 0, &msg).unwrap();
+        assert!(n > 0);
+        assert_eq!(net.end_round().up, n as u64);
     }
 }

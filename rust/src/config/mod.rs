@@ -98,6 +98,10 @@ pub struct RunConfig {
     /// [`crate::util::pool::ThreadPool::default_size`]). `1` recovers the
     /// serial round loop; results are bit-identical at any value.
     pub workers: usize,
+    /// Independent cohort shards per round (`--shards`, >= 1). Each shard
+    /// draws its own fault plans and runs its own worker fan-out; shard
+    /// partials merge exactly, so results are bit-identical at any value.
+    pub shards: usize,
 }
 
 impl Default for RunConfig {
@@ -129,6 +133,7 @@ impl Default for RunConfig {
             round_deadline: 0.0,
             min_survivors: 0,
             workers: 0,
+            shards: 1,
         }
     }
 }
@@ -282,6 +287,7 @@ impl RunConfig {
         o.insert("round_deadline", Value::Num(self.round_deadline));
         o.insert("min_survivors", Value::from_usize(self.min_survivors));
         o.insert("workers", Value::from_usize(self.workers));
+        o.insert("shards", Value::from_usize(self.shards));
         Value::Obj(o)
     }
 
@@ -326,6 +332,7 @@ impl RunConfig {
         c.round_deadline = get_f("round_deadline", c.round_deadline);
         c.min_survivors = get_us("min_survivors", c.min_survivors);
         c.workers = get_us("workers", c.workers);
+        c.shards = get_us("shards", c.shards);
         Ok(c)
     }
 
@@ -360,6 +367,7 @@ impl RunConfig {
             self.min_survivors,
             self.clients_per_round
         );
+        anyhow::ensure!(self.shards >= 1, "need >= 1 shard");
         Ok(())
     }
 }
@@ -444,6 +452,9 @@ mod tests {
         c.round_deadline = 0.0;
         c.min_survivors = c.clients_per_round + 1;
         assert!(c.validate().is_err());
+        c.min_survivors = 0;
+        c.shards = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]
@@ -452,6 +463,7 @@ mod tests {
         c.rounds = 321;
         c.lambda = 5e-4;
         c.workers = 6;
+        c.shards = 4;
         c.algorithm = Algorithm::SplitFed;
         c.quantizer = QuantizerEngine::Pjrt;
         c.drop_prob = 0.25;
@@ -462,6 +474,7 @@ mod tests {
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.rounds, 321);
         assert_eq!(back.workers, 6);
+        assert_eq!(back.shards, 4);
         assert!((back.drop_prob - 0.25).abs() < 1e-12);
         assert!((back.straggler_frac - 0.75).abs() < 1e-12);
         assert!((back.round_deadline - 3.5).abs() < 1e-12);

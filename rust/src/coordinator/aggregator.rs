@@ -130,6 +130,16 @@ impl SurvivorSet {
         self.weights.iter().sum()
     }
 
+    /// Append another shard's bookkeeping after this one — equivalent to
+    /// replaying `other`'s `survivor`/`dropped` calls in order. Both the
+    /// counts (integer adds) and the weight list (concatenation) are
+    /// exact, so merging per-shard partials in shard order reproduces the
+    /// unsharded slot-order recording bit-for-bit.
+    pub fn merge(&mut self, other: SurvivorSet) {
+        self.weights.extend(other.weights);
+        self.sampled += other.sampled;
+    }
+
     /// Survivor weights renormalized over the surviving cohort; empty when
     /// nobody survived *or* the surviving weight mass is zero (no convex
     /// combination exists to renormalize into).

@@ -24,9 +24,17 @@
 //! Engine invariants, enforced here for every algorithm:
 //!
 //! * **Determinism** — all RNG keys are pure functions of
-//!   `(round, attempt, client)` — never wall-clock or thread identity —
-//!   and every reduction runs in cohort-slot order, so round records are
-//!   bit-identical at any `--workers` count (`rust/tests/determinism.rs`).
+//!   `(round, attempt, client)` — never wall-clock, thread, or shard
+//!   identity — and every floating-point reduction runs in flat
+//!   cohort-slot order, so round records are bit-identical at any
+//!   `--workers` *and* `--shards` count (`rust/tests/determinism.rs`).
+//! * **Sharded fan-out** — the sampled cohort is partitioned into
+//!   `RoundEnv::shards` contiguous slices; each shard draws its own fault
+//!   plans and runs its own worker fan-out, and only *exact* partials
+//!   (survivor sets, drop tallies, byte counts, a max-time) merge
+//!   shard-by-shard. Floats never reduce per shard — float addition is
+//!   non-associative, and per-shard float sums would tie the bits to the
+//!   shard count.
 //! * **Metered exits** — `net.begin_round()`/`end_round()` bracket the
 //!   round on *every* exit path, including a client step failing with an
 //!   error mid-attempt. (Before the engine existed, each trainer's `?` on
@@ -155,6 +163,20 @@ pub fn client_stream_key(tag: u64, round: u64, client: usize, attempt: u32) -> u
     ((round << 20) ^ (client as u64) ^ tag) ^ (((attempt as u64) - 1) << 52)
 }
 
+/// The contiguous cohort slice owned by shard `g` of `shards`: the
+/// balanced partition `[g·len/shards, (g+1)·len/shards)`. Shard counts
+/// beyond the cohort size yield empty slices, so any `--shards` value is
+/// safe. Note what is deliberately *absent*: no shard-keyed RNG. A
+/// per-shard fork feeding fault or client streams would make the bits a
+/// function of the shard count; deriving every draw from the same pure
+/// `(round, attempt, client)` keys makes shard identity irrelevant to
+/// the bits, which is the stronger property (`--shards 1` ≡ `--shards G`,
+/// enforced in `rust/tests/determinism.rs`).
+pub fn shard_bounds(len: usize, shards: usize, g: usize) -> (usize, usize) {
+    debug_assert!(g < shards, "shard {g} out of {shards}");
+    (g * len / shards, (g + 1) * len / shards)
+}
+
 /// The algorithm-independent slice of one client's round contribution:
 /// produced on a worker thread by [`RoundAlgorithm::client_step`], reduced
 /// on the coordinator thread in cohort-slot order by the engine.
@@ -226,6 +248,14 @@ pub struct RoundEnv<'a> {
     pub nmetrics: usize,
     /// Cohort fan-out width (resolved `--workers`).
     pub workers: usize,
+    /// Independent cohort shards per round (`--shards`, >= 1). The cohort
+    /// is partitioned into `shards` contiguous slices; each slice draws
+    /// its own fault plans and runs its own worker fan-out, and the
+    /// engine merges the shards' exact partials (survivors, drops, bytes,
+    /// max-time) in shard order. All RNG keys stay pure functions of
+    /// `(round, attempt, client)` — shard identity never feeds a key —
+    /// so records are bit-identical at any shard count.
+    pub shards: usize,
     /// Total rounds in the run (drives [`RoundEngine::run`]).
     pub rounds: usize,
     pub eval_every: usize,
@@ -447,6 +477,7 @@ fn drive<A: RoundAlgorithm>(
     scratches: &mut Vec<A::Scratch>,
 ) -> anyhow::Result<RoundOutcome<A::Accum>> {
     let env = algo.env();
+    let shards = env.shards.max(1);
     let mut driver = RoundDriver::with_max_attempts(env.max_attempts);
     // carried across phases within one attempt
     let mut cohort: Vec<usize> = Vec::new();
@@ -470,12 +501,29 @@ fn drive<A: RoundAlgorithm>(
     loop {
         match driver.phase() {
             RoundPhase::Sampling => {
+                // the cohort is sampled *globally* (one stream, unchanged
+                // keys) and then partitioned into contiguous shard slices;
+                // per-shard sampling would make membership depend on the
+                // shard count and break `--shards` invariance
                 let attempt = driver.attempt();
                 cohort = env.sampler.sample(
                     &mut env.rng.fork(sample_key(round as u64, attempt)),
                     &[],
                 );
-                plans = env.faults.plans(env.rng, round as u64, attempt, &cohort);
+                // each shard draws its own slice's fault plans; per-client
+                // plans are pure functions of (round, attempt, client), so
+                // the concatenation over slices is bit-identical to one
+                // cohort-wide draw
+                plans.clear();
+                for g in 0..shards {
+                    let (s, e) = shard_bounds(cohort.len(), shards, g);
+                    plans.extend(env.faults.plans(
+                        env.rng,
+                        round as u64,
+                        attempt,
+                        &cohort[s..e],
+                    ));
+                }
                 driver.advance();
             }
             RoundPhase::Broadcast => {
@@ -490,99 +538,137 @@ fn drive<A: RoundAlgorithm>(
             RoundPhase::ClientCompute => {
                 // Per-client RNG streams use pure (round, attempt, client)
                 // fork keys; `fork` never advances the root stream, so the
-                // fan-out is behavior-preserving at any worker count.
+                // fan-out is behavior-preserving at any worker and shard
+                // count. Shards run their slices one after another, each
+                // with its own worker fan-out, and hand back exact partials
+                // (survivor/drop/byte counts, a max-time) that merge in
+                // shard order. Floats that *sum* (losses, metrics,
+                // payloads) are deliberately left to the Aggregate phase's
+                // flat slot-order loop: float addition is non-associative,
+                // so per-shard float partials would make the bits a
+                // function of the shard count.
                 let attempt = driver.attempt();
-                // lend one warm scratch per cohort slot (the pool grows to
-                // the largest cohort once, then persists across rounds)
-                while scratches.len() < cohort.len() {
-                    scratches.push(A::Scratch::default());
+                // attempt-scoped exact partials (bytes/time accumulate
+                // across attempts and are merged below instead)
+                survivors = SurvivorSet::new();
+                drops = DropCounts::default();
+                let mut attempt_sim = 0.0f64;
+                results = Vec::with_capacity(cohort.len());
+                let mut per_client: Vec<(usize, usize, f64)> = Vec::new();
+                for g in 0..shards {
+                    let (s, e) = shard_bounds(cohort.len(), shards, g);
+                    let shard_cohort = &cohort[s..e];
+                    // lend one warm scratch per shard slot (the pool grows
+                    // to the largest shard slice once, then persists across
+                    // shards and rounds)
+                    while scratches.len() < shard_cohort.len() {
+                        scratches.push(A::Scratch::default());
+                    }
+                    let mut lent = std::mem::take(scratches);
+                    let spare = lent.split_off(shard_cohort.len());
+                    let tasks: Vec<(usize, Rng, FaultPlan, A::Scratch)> = shard_cohort
+                        .iter()
+                        .zip(&plans[s..e])
+                        .zip(lent)
+                        .map(|((&ci, &plan), scratch)| {
+                            let key = client_stream_key(
+                                algo.stream_tag(),
+                                round as u64,
+                                ci,
+                                attempt,
+                            );
+                            (ci, env.rng.fork(key), plan, scratch)
+                        })
+                        .collect();
+                    let msg = broadcast.as_ref().expect("broadcast built");
+                    // fan the shard across the worker threads; collection
+                    // is the shard barrier
+                    let pairs = scoped_parallel_map(
+                        env.workers,
+                        tasks,
+                        |_slot, (ci, mut crng, plan, mut scratch)| {
+                            let out = algo.client_step(
+                                prep, msg, round as u32, ci, &mut crng, &plan, &mut scratch,
+                            );
+                            (out, scratch)
+                        },
+                    );
+                    // recover the scratches (slot order) and fold this
+                    // shard's exact partials: integer counts, a weight-list
+                    // concatenation, u64 byte sums, and an f64 max — all
+                    // order-exact, so the shard merge replays the unsharded
+                    // slot-order reduction bit-for-bit
+                    let mut shard_survivors = SurvivorSet::new();
+                    let mut shard_drops = DropCounts::default();
+                    let mut shard_bytes = RoundBytes::default();
+                    per_client.clear();
+                    for (out, scratch) in pairs {
+                        if let Ok(o) = &out {
+                            shard_bytes.merge(&o.bytes);
+                            per_client.push((
+                                o.bytes.up as usize,
+                                o.bytes.down as usize,
+                                o.delay_seconds,
+                            ));
+                            match o.dropped {
+                                Some(phase) => {
+                                    shard_drops.add(phase);
+                                    shard_survivors.dropped();
+                                }
+                                None => shard_survivors.survivor(o.weight),
+                            }
+                        }
+                        results.push(out);
+                        scratches.push(scratch);
+                    }
+                    scratches.extend(spare);
+                    // a synchronous round waits for its slowest client, so
+                    // the global round time is the max over the shard maxima
+                    let shard_sim = env
+                        .net
+                        .estimate_round_time_with_delays(&per_client, env.faults.round_deadline);
+                    survivors.merge(shard_survivors);
+                    drops.merge(&shard_drops);
+                    bytes.merge(&shard_bytes);
+                    attempt_sim = attempt_sim.max(shard_sim);
                 }
-                let mut lent = std::mem::take(scratches);
-                let spare = lent.split_off(cohort.len());
-                let tasks: Vec<(usize, Rng, FaultPlan, A::Scratch)> = cohort
-                    .iter()
-                    .zip(&plans)
-                    .zip(lent)
-                    .map(|((&ci, &plan), scratch)| {
-                        let key =
-                            client_stream_key(algo.stream_tag(), round as u64, ci, attempt);
-                        (ci, env.rng.fork(key), plan, scratch)
-                    })
-                    .collect();
-                let msg = broadcast.as_ref().expect("broadcast built");
-                // fan the cohort across the worker threads; collection is
-                // the round barrier
-                let pairs = scoped_parallel_map(
-                    env.workers,
-                    tasks,
-                    |_slot, (ci, mut crng, plan, mut scratch)| {
-                        let out = algo.client_step(
-                            prep, msg, round as u32, ci, &mut crng, &plan, &mut scratch,
-                        );
-                        (out, scratch)
-                    },
-                );
-                // recover the scratches (slot order) before reducing
-                results = Vec::with_capacity(pairs.len());
-                for (out, scratch) in pairs {
-                    results.push(out);
-                    scratches.push(scratch);
-                }
-                scratches.extend(spare);
+                sim_seconds += attempt_sim;
                 driver.advance();
             }
             RoundPhase::Aggregate => {
-                // reduce the partials in cohort-slot order: every
-                // accumulation below happens in the same order the serial
-                // loop used, so the records are bit-identical at any
-                // worker count
+                // reduce the floating-point partials in flat cohort-slot
+                // order — the one order every shard count shares. The exact
+                // bookkeeping (survivors, drops, bytes, time) was already
+                // merged shard-by-shard in ClientCompute; everything that
+                // sums in f64/f32 reduces here, so the records are
+                // bit-identical at any worker *and* shard count.
                 accum = algo.new_accum();
                 loss_agg = ScalarAggregator::new();
                 qerr_agg = ScalarAggregator::new();
                 surr_agg = ScalarAggregator::new();
                 metric_sums = vec![0.0f64; env.nmetrics];
                 examples = 0.0;
-                survivors = SurvivorSet::new();
-                drops = DropCounts::default();
-                let mut per_client: Vec<(usize, usize, f64)> =
-                    Vec::with_capacity(cohort.len());
                 for result in std::mem::take(&mut results) {
                     let out = result?;
-                    per_client.push((
-                        out.bytes.up as usize,
-                        out.bytes.down as usize,
-                        out.delay_seconds,
-                    ));
-                    bytes.merge(&out.bytes);
-                    match out.dropped {
-                        Some(phase) => {
-                            drops.add(phase);
-                            survivors.dropped();
+                    if out.dropped.is_none() {
+                        debug_assert_eq!(
+                            out.metric_sums.len(),
+                            env.nmetrics,
+                            "RoundAlgorithm contract: a surviving client's \
+                             metric_sums must have exactly env().nmetrics entries"
+                        );
+                        loss_agg.add(out.loss, out.weight);
+                        for (k, s) in metric_sums.iter_mut().enumerate() {
+                            *s += out.metric_sums[k];
                         }
-                        None => {
-                            debug_assert_eq!(
-                                out.metric_sums.len(),
-                                env.nmetrics,
-                                "RoundAlgorithm contract: a surviving client's \
-                                 metric_sums must have exactly env().nmetrics entries"
-                            );
-                            survivors.survivor(out.weight);
-                            loss_agg.add(out.loss, out.weight);
-                            for (k, s) in metric_sums.iter_mut().enumerate() {
-                                *s += out.metric_sums[k];
-                            }
-                            examples += env.batch_examples;
-                            let payload =
-                                out.payload.expect("surviving client carries a payload");
-                            algo.accumulate(&mut accum, payload, out.weight);
-                            qerr_agg.add(out.quant_rel_err, 1.0);
-                            surr_agg.add(out.surrogate_loss, out.weight);
-                        }
+                        examples += env.batch_examples;
+                        let payload =
+                            out.payload.expect("surviving client carries a payload");
+                        algo.accumulate(&mut accum, payload, out.weight);
+                        qerr_agg.add(out.quant_rel_err, 1.0);
+                        surr_agg.add(out.surrogate_loss, out.weight);
                     }
                 }
-                sim_seconds += env
-                    .net
-                    .estimate_round_time_with_delays(&per_client, env.faults.round_deadline);
                 // survivor weights renormalize to a convex combination
                 // (except the zero-mass degenerate case, which commits
                 // degraded instead of dividing by zero)
@@ -744,6 +830,7 @@ mod tests {
         faults: FaultConfig,
         rng: Rng,
         max_attempts: u32,
+        shards: usize,
         /// Client index whose step fails with an error (the error path).
         fail_client: Option<usize>,
         /// Aggregation weight every survivor carries.
@@ -762,6 +849,7 @@ mod tests {
                 faults,
                 rng: Rng::new(0x7E57),
                 max_attempts,
+                shards: 1,
                 fail_client: None,
                 weight: 1.0,
                 committed: Vec::new(),
@@ -795,6 +883,7 @@ mod tests {
                 batch_examples: 1.0,
                 nmetrics: 0,
                 workers: 1,
+                shards: self.shards,
                 rounds: 1,
                 eval_every: 0,
                 eval_batches: 0,
@@ -960,5 +1049,55 @@ mod tests {
         let expect = 4 * COHORT as u64 * MockAlgo::broadcast_wire_len();
         assert_eq!(rec.downlink_bytes, expect);
         assert_eq!(m.net.meter.per_round()[0].down, expect);
+    }
+
+    #[test]
+    fn shard_bounds_partition_the_cohort() {
+        for (len, shards) in [(10usize, 3usize), (4, 4), (4, 7), (0, 2), (100, 1)] {
+            let mut covered = 0;
+            for g in 0..shards {
+                let (s, e) = shard_bounds(len, shards, g);
+                assert!(s <= e && e <= len, "bad slice {s}..{e} of {len}");
+                assert_eq!(s, covered, "gap or overlap at shard {g}");
+                covered = e;
+            }
+            assert_eq!(covered, len, "partition must cover the cohort");
+        }
+    }
+
+    /// The tentpole invariance at engine level: a faulty round produces
+    /// bit-identical records at any shard count, including shard counts
+    /// beyond the cohort size (empty slices).
+    #[test]
+    fn shard_count_leaves_round_records_bit_identical() {
+        let faults = FaultConfig {
+            drop_prob: 0.4,
+            straggler_frac: 0.5,
+            round_deadline: 0.05,
+            min_survivors: 1,
+        };
+        let run = |shards: usize| {
+            let mut m = MockAlgo::new(faults, 4);
+            m.shards = shards;
+            let rec = RoundEngine::new(&mut m).round(0).unwrap();
+            (rec, m.committed)
+        };
+        let (base, base_committed) = run(1);
+        for shards in [2, 3, COHORT, COHORT + 5] {
+            let (rec, committed) = run(shards);
+            assert_eq!(rec.train_loss.to_bits(), base.train_loss.to_bits());
+            assert_eq!(
+                rec.sim_comm_seconds.to_bits(),
+                base.sim_comm_seconds.to_bits(),
+                "round time must merge exactly across {shards} shards"
+            );
+            assert_eq!(rec.uplink_bytes, base.uplink_bytes);
+            assert_eq!(rec.downlink_bytes, base.downlink_bytes);
+            assert_eq!(rec.cohort_sampled, base.cohort_sampled);
+            assert_eq!(rec.cohort_survived, base.cohort_survived);
+            assert_eq!(rec.dropped, base.dropped);
+            assert_eq!(rec.attempts, base.attempts);
+            assert_eq!(committed, base_committed);
+        }
     }
 }

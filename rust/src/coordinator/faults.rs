@@ -198,6 +198,15 @@ impl DropCounts {
         self.after_fwd + self.after_upload + self.before_grad_upload + self.deadline
     }
 
+    /// Fold another tally into this one (integer sums — exact in any
+    /// order). Combinator for merging per-shard round partials.
+    pub fn merge(&mut self, other: &DropCounts) {
+        self.after_fwd += other.after_fwd;
+        self.after_upload += other.after_upload;
+        self.before_grad_upload += other.before_grad_upload;
+        self.deadline += other.deadline;
+    }
+
     /// Compact log form: `"after_fwd:1;deadline:2"`; empty when nothing
     /// dropped. Uses `;` so the value stays a single CSV cell.
     pub fn summary(&self) -> String {

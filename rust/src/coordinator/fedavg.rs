@@ -178,6 +178,7 @@ impl RoundAlgorithm for FedAvgTrainer {
             batch_examples: self.spec.batch as f64,
             nmetrics: self.spec.metrics.len(),
             workers: self.cfg.resolved_workers(),
+            shards: self.cfg.shards,
             rounds: self.cfg.rounds,
             eval_every: self.cfg.eval_every,
             eval_batches: self.cfg.eval_batches,

@@ -42,6 +42,7 @@ use crate::data::FederatedDataset;
 use crate::data::{femnist::SyntheticFemnist, so_nwp, so_tag};
 use crate::metrics::RunLog;
 use crate::runtime::Runtime;
+use crate::util::rng::Rng;
 
 /// Common trainer interface.
 pub trait Trainer {
@@ -49,17 +50,38 @@ pub trait Trainer {
     fn run(&mut self) -> anyhow::Result<RunLog>;
 }
 
+/// Population size above which [`build_dataset`] switches from dense
+/// (materialized per-client state) to streamed (forked-on-demand)
+/// populations. Aligned with [`Rng::CHOOSE_K_DENSE_MAX`] so the sampler's
+/// O(cohort) Floyd's path and the datasets' O(1) per-client shards cut
+/// over at the same population scale: at or below the threshold every run
+/// reproduces the historical dense bits (presets and goldens live orders
+/// of magnitude below it); above it a round is O(cohort) end to end, and
+/// a million-client population costs nothing to construct.
+pub const STREAMED_POPULATION_MIN: usize = Rng::CHOOSE_K_DENSE_MAX;
+
 /// Build the dataset a config asks for.
 pub fn build_dataset(cfg: &RunConfig) -> anyhow::Result<Arc<dyn FederatedDataset>> {
+    let streamed = cfg.num_clients > STREAMED_POPULATION_MIN;
     Ok(match cfg.task.as_str() {
-        "femnist" => Arc::new(SyntheticFemnist::new(cfg.seed, cfg.num_clients, cfg.alpha)),
+        "femnist" => {
+            if streamed {
+                Arc::new(SyntheticFemnist::streamed(cfg.seed, cfg.num_clients, cfg.alpha))
+            } else {
+                Arc::new(SyntheticFemnist::new(cfg.seed, cfg.num_clients, cfg.alpha))
+            }
+        }
         "so_tag" => {
             let c = if cfg.preset == "paper" {
                 so_tag::SoTagConfig::paper()
             } else {
                 so_tag::SoTagConfig::small()
             };
-            Arc::new(so_tag::SyntheticSoTag::new(cfg.seed, cfg.num_clients, c))
+            if streamed {
+                Arc::new(so_tag::SyntheticSoTag::streamed(cfg.seed, cfg.num_clients, c))
+            } else {
+                Arc::new(so_tag::SyntheticSoTag::new(cfg.seed, cfg.num_clients, c))
+            }
         }
         "so_nwp" => {
             let c = if cfg.preset == "paper" {
@@ -67,7 +89,11 @@ pub fn build_dataset(cfg: &RunConfig) -> anyhow::Result<Arc<dyn FederatedDataset
             } else {
                 so_nwp::SoNwpConfig::small()
             };
-            Arc::new(so_nwp::SyntheticSoNwp::new(cfg.seed, cfg.num_clients, c))
+            if streamed {
+                Arc::new(so_nwp::SyntheticSoNwp::streamed(cfg.seed, cfg.num_clients, c))
+            } else {
+                Arc::new(so_nwp::SyntheticSoNwp::new(cfg.seed, cfg.num_clients, c))
+            }
         }
         other => anyhow::bail!("unknown task '{other}'"),
     })
@@ -87,4 +113,35 @@ pub fn build_trainer(
             Box::new(split::SplitTrainer::new(cfg, rt, data)?)
         }
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Past the streamed threshold, every task's dataset constructs
+    /// without materializing the population — a million-client femnist
+    /// (the heaviest dense constructor: per-client styles *and* Dirichlet
+    /// rows) builds instantly and still serves its last client.
+    #[test]
+    fn million_client_configs_build_streamed_datasets() {
+        for task in ["femnist", "so_tag", "so_nwp"] {
+            let mut cfg = RunConfig::default();
+            cfg.task = task.into();
+            cfg.num_clients = 1_000_000;
+            let t0 = std::time::Instant::now();
+            let ds = build_dataset(&cfg).unwrap();
+            assert!(
+                t0.elapsed().as_secs_f64() < 5.0,
+                "{task}: streamed construction must not scale with clients"
+            );
+            assert_eq!(ds.num_clients(), 1_000_000);
+            assert!(ds.client_weight(999_999) > 0.0);
+        }
+        // at or below the threshold the historical dense path is used
+        // (golden configs run 8–100 clients and must keep their bits)
+        let cfg = RunConfig::default();
+        assert!(cfg.num_clients <= STREAMED_POPULATION_MIN);
+        assert!(build_dataset(&cfg).is_ok());
+    }
 }

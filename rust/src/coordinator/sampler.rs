@@ -23,24 +23,34 @@ pub struct ClientSampler {
 
 impl ClientSampler {
     pub fn uniform(population: usize, per_round: usize) -> Self {
-        assert!(per_round <= population);
+        assert!(per_round <= population, "cohort {per_round} > population {population}");
         ClientSampler { population, per_round, strategy: Strategy::UniformWithoutReplacement }
     }
 
     pub fn weighted(population: usize, per_round: usize) -> Self {
+        // with-replacement sampling has no structural k <= n requirement,
+        // but a cohort larger than the population is a config error here
+        // just as it is for the uniform strategy
+        assert!(per_round <= population, "cohort {per_round} > population {population}");
         ClientSampler { population, per_round, strategy: Strategy::WeightedWithReplacement }
     }
 
     /// Sample the round's cohort. `weights` are the p_i (only used by the
-    /// weighted strategy).
+    /// weighted strategy, which requires exactly one weight per client —
+    /// a longer vector used to silently yield out-of-range client ids).
     pub fn sample(&self, rng: &mut Rng, weights: &[f64]) -> Vec<usize> {
         match self.strategy {
             Strategy::UniformWithoutReplacement => {
                 rng.choose_k(self.population, self.per_round)
             }
-            Strategy::WeightedWithReplacement => (0..self.per_round)
-                .map(|_| rng.categorical(weights))
-                .collect(),
+            Strategy::WeightedWithReplacement => {
+                assert_eq!(
+                    weights.len(),
+                    self.population,
+                    "weighted sampling needs one weight per client"
+                );
+                (0..self.per_round).map(|_| rng.categorical(weights)).collect()
+            }
         }
     }
 }
@@ -86,5 +96,66 @@ mod tests {
             counts[s.sample(&mut rng, &w)[0]] += 1;
         }
         assert!(counts[0] > 700, "{counts:?}");
+    }
+
+    #[test]
+    fn cohort_equal_to_population_selects_everyone() {
+        let s = ClientSampler::uniform(6, 6);
+        let mut rng = Rng::new(3);
+        let mut c = s.sample(&mut rng, &[]);
+        c.sort_unstable();
+        assert_eq!(c, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn population_of_one() {
+        let u = ClientSampler::uniform(1, 1);
+        let w = ClientSampler::weighted(1, 1);
+        let mut rng = Rng::new(4);
+        assert_eq!(u.sample(&mut rng, &[]), vec![0]);
+        assert_eq!(w.sample(&mut rng, &[2.5]), vec![0]);
+    }
+
+    #[test]
+    fn weighted_never_selects_zero_weight_clients() {
+        let s = ClientSampler::weighted(4, 2);
+        let w = vec![0.5, 0.0, 0.25, 0.25];
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            for i in s.sample(&mut rng, &w) {
+                assert_ne!(i, 1, "sampled a zero-weight client");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one weight per client")]
+    fn weighted_rejects_mismatched_weight_vector() {
+        // a weights vector longer than the population used to yield
+        // client ids beyond the registry
+        let s = ClientSampler::weighted(3, 2);
+        let mut rng = Rng::new(6);
+        s.sample(&mut rng, &[1.0, 1.0, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cohort 5 > population 3")]
+    fn weighted_rejects_cohort_beyond_population() {
+        ClientSampler::weighted(3, 5);
+    }
+
+    #[test]
+    fn uniform_large_population_stays_in_range_and_distinct() {
+        // exercises choose_k's Floyd's path through the sampler API
+        let n = Rng::CHOOSE_K_DENSE_MAX * 8;
+        let s = ClientSampler::uniform(n, 16);
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let mut c = s.sample(&mut rng, &[]);
+            assert!(c.iter().all(|&i| i < n));
+            c.sort_unstable();
+            c.dedup();
+            assert_eq!(c.len(), 16);
+        }
     }
 }

@@ -33,22 +33,87 @@ struct WriterStyle {
     intensity: f32,
 }
 
+/// How per-client state is realized.
+///
+/// `Dense` is the historical mode: styles, label distributions, and
+/// sampling weights are materialized for the whole population at
+/// construction (O(population) state; bits pinned by the golden
+/// fixtures). `Streamed` is the million-client mode: every per-client
+/// quantity is a pure function of `(root_seed, client_id)` — a two-level
+/// RNG fork per domain — derived on demand, so the dataset holds only
+/// O(classes) shared state no matter how many client ids exist.
+enum Population {
+    Dense {
+        styles: Vec<WriterStyle>,
+        label_dist: Vec<Vec<f64>>,
+        weights: Vec<f64>,
+    },
+    Streamed {
+        alpha: f64,
+        sizes: partition::StreamedSizes,
+    },
+}
+
+/// Fork domain for streamed per-client writer styles.
+const STYLE_DOMAIN: u64 = 0x57E1;
+/// Fork domain for streamed per-client label distributions.
+const DIST_DOMAIN: u64 = 0xD157;
+
 /// The synthetic federated FEMNIST generator.
 pub struct SyntheticFemnist {
     seed: u64,
     clients: usize,
+    root: Rng,
     glyphs: Vec<Vec<Stroke>>,
-    styles: Vec<WriterStyle>,
-    label_dist: Vec<Vec<f64>>,
-    weights: Vec<f64>,
+    population: Population,
 }
 
 impl SyntheticFemnist {
     /// `alpha` controls label skew (paper-style non-IID: ~0.3).
     pub fn new(seed: u64, clients: usize, alpha: f64) -> Self {
         let root = Rng::new(seed);
-        // class prototypes (shared by all writers)
-        let glyphs = (0..CLASSES)
+        let glyphs = Self::build_glyphs(&root);
+        let styles = (0..clients)
+            .map(|i| Self::style_from(&mut root.fork(2000 + i as u64)))
+            .collect();
+        let mut r = root.fork(3000);
+        let label_dist = partition::dirichlet_label_skew(clients, CLASSES, alpha, &mut r);
+        let mut rs = root.fork(4000);
+        let sizes = partition::zipf_client_sizes(clients, 120, 1.1, 10, &mut rs);
+        let weights = partition::weights_from_sizes(&sizes);
+        SyntheticFemnist {
+            seed,
+            clients,
+            root,
+            glyphs,
+            population: Population::Dense { styles, label_dist, weights },
+        }
+    }
+
+    /// Streamed population: `clients` ids exist, none are resident.
+    /// Construction is O(classes); every per-client shard (style, label
+    /// distribution, dataset size/weight) is forked from
+    /// `(root_seed, client_id)` when a round touches that client. Sizes
+    /// use the mean-honoring [`partition::StreamedSizes`] scheme, not the
+    /// dense path's clamped zipf (see `zipf_client_sizes`' doc).
+    pub fn streamed(seed: u64, clients: usize, alpha: f64) -> Self {
+        let root = Rng::new(seed);
+        let glyphs = Self::build_glyphs(&root);
+        SyntheticFemnist {
+            seed,
+            clients,
+            root,
+            glyphs,
+            population: Population::Streamed {
+                alpha,
+                sizes: partition::StreamedSizes::new(120, 1.1, 10),
+            },
+        }
+    }
+
+    /// Class prototypes (shared by all writers in either mode).
+    fn build_glyphs(root: &Rng) -> Vec<Vec<Stroke>> {
+        (0..CLASSES)
             .map(|c| {
                 let mut r = root.fork(1000 + c as u64);
                 let strokes = 3 + r.below(4);
@@ -61,26 +126,20 @@ impl SyntheticFemnist {
                     })
                     .collect()
             })
-            .collect();
-        let styles = (0..clients)
-            .map(|i| {
-                let mut r = root.fork(2000 + i as u64);
-                WriterStyle {
-                    dx: r.uniform_in(-0.08, 0.08) as f32,
-                    dy: r.uniform_in(-0.08, 0.08) as f32,
-                    rot: r.uniform_in(-0.25, 0.25) as f32,
-                    scale: r.uniform_in(0.85, 1.15) as f32,
-                    thickness: r.uniform_in(0.035, 0.075) as f32,
-                    intensity: r.uniform_in(0.7, 1.0) as f32,
-                }
-            })
-            .collect();
-        let mut r = root.fork(3000);
-        let label_dist = partition::dirichlet_label_skew(clients, CLASSES, alpha, &mut r);
-        let mut rs = root.fork(4000);
-        let sizes = partition::zipf_client_sizes(clients, 120, 1.1, 10, &mut rs);
-        let weights = partition::weights_from_sizes(&sizes);
-        SyntheticFemnist { seed, clients, glyphs, styles, label_dist, weights }
+            .collect()
+    }
+
+    /// Draw a writer style from `r` (the draw order is part of the dense
+    /// mode's bit contract — both modes share it).
+    fn style_from(r: &mut Rng) -> WriterStyle {
+        WriterStyle {
+            dx: r.uniform_in(-0.08, 0.08) as f32,
+            dy: r.uniform_in(-0.08, 0.08) as f32,
+            rot: r.uniform_in(-0.25, 0.25) as f32,
+            scale: r.uniform_in(0.85, 1.15) as f32,
+            thickness: r.uniform_in(0.035, 0.075) as f32,
+            intensity: r.uniform_in(0.7, 1.0) as f32,
+        }
     }
 
     /// Render one example of `class` with `style` + per-example jitter.
@@ -174,11 +233,32 @@ impl FederatedDataset for SyntheticFemnist {
     }
 
     fn client_weight(&self, client: usize) -> f64 {
-        self.weights[client]
+        match &self.population {
+            Population::Dense { weights, .. } => weights[client],
+            Population::Streamed { sizes, .. } => {
+                sizes.weight(&self.root, client as u64, self.clients)
+            }
+        }
     }
 
     fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch {
-        self.batch_from_dist(&self.label_dist[client], &self.styles[client], batch, rng)
+        match &self.population {
+            Population::Dense { styles, label_dist, .. } => {
+                self.batch_from_dist(&label_dist[client], &styles[client], batch, rng)
+            }
+            Population::Streamed { alpha, .. } => {
+                // the client's shard, forked on demand — O(1) state
+                let style = Self::style_from(
+                    &mut self.root.fork(STYLE_DOMAIN).fork(client as u64),
+                );
+                let dist = self
+                    .root
+                    .fork(DIST_DOMAIN)
+                    .fork(client as u64)
+                    .dirichlet_sym(*alpha, CLASSES);
+                self.batch_from_dist(&dist, &style, batch, rng)
+            }
+        }
     }
 
     fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
@@ -236,7 +316,10 @@ mod tests {
     #[test]
     fn same_class_same_writer_similar_different_class_different() {
         let d = ds();
-        let style = d.styles[0];
+        let style = match &d.population {
+            Population::Dense { styles, .. } => styles[0],
+            Population::Streamed { .. } => unreachable!("ds() is dense"),
+        };
         let mut render = |class: usize, seed: u64| {
             let mut r = Rng::new(seed);
             let mut img = vec![0.0f32; 784];
@@ -293,5 +376,58 @@ mod tests {
         let b2 = d2.train_batch(4, 3, &mut Rng::new(42));
         assert_eq!(b1.x.as_f32().unwrap(), b2.x.as_f32().unwrap());
         assert_eq!(b1.y.as_i32().unwrap(), b2.y.as_i32().unwrap());
+    }
+
+    #[test]
+    fn streamed_million_client_construction_is_o_classes() {
+        // constructing a 1M-client population must not materialize any
+        // per-client vector — this finishing at all (instantly, with tiny
+        // memory) is the point; the batch below proves a tail client is
+        // reachable without touching the other 999_999
+        let d = SyntheticFemnist::streamed(7, 1_000_000, 0.3);
+        assert_eq!(d.num_clients(), 1_000_000);
+        let b = d.train_batch(999_999, 2, &mut Rng::new(0));
+        assert_eq!(b.x.shape(), &[2, 28, 28, 1]);
+        assert!(d.client_weight(999_999) > 0.0);
+    }
+
+    #[test]
+    fn streamed_shards_are_pure_functions_of_seed_and_id() {
+        let d1 = SyntheticFemnist::streamed(7, 1 << 20, 0.3);
+        let d2 = SyntheticFemnist::streamed(7, 1 << 20, 0.3);
+        let b1 = d1.train_batch(123_456, 3, &mut Rng::new(42));
+        let b2 = d2.train_batch(123_456, 3, &mut Rng::new(42));
+        assert_eq!(b1.x.as_f32().unwrap(), b2.x.as_f32().unwrap());
+        assert_eq!(b1.y.as_i32().unwrap(), b2.y.as_i32().unwrap());
+        assert_eq!(d1.client_weight(55_555), d2.client_weight(55_555));
+        // ... and distinct across clients: styles are continuous draws, so
+        // two different shards can't render identical pixels
+        let b3 = d1.train_batch(123_457, 3, &mut Rng::new(42));
+        assert_ne!(b1.x.as_f32().unwrap(), b3.x.as_f32().unwrap());
+    }
+
+    #[test]
+    fn streamed_clients_are_heterogeneous() {
+        // label skew survives the streamed derivation: two clients' label
+        // histograms should concentrate differently
+        let d = SyntheticFemnist::streamed(3, 1 << 18, 0.1);
+        let mut rng = Rng::new(5);
+        let mut hist = |c: usize| {
+            let mut h = vec![0usize; CLASSES];
+            for _ in 0..5 {
+                let b = d.train_batch(c, 20, &mut rng);
+                for &y in b.y.as_i32().unwrap() {
+                    h[y as usize] += 1;
+                }
+            }
+            h
+        };
+        let h0 = hist(1000);
+        let h1 = hist(200_000);
+        let top0 = h0.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        let top1 = h1.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        let conc0 = *h0.iter().max().unwrap() as f64 / 100.0;
+        assert!(conc0 > 0.1, "client not skewed: {conc0}");
+        assert!(top0 != top1 || conc0 < 0.9);
     }
 }

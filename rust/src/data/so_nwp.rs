@@ -36,13 +36,34 @@ impl SoNwpConfig {
     }
 }
 
+/// Dense (materialized) vs streamed (forked-on-demand) per-client state;
+/// see `femnist::Population` for the model.
+///
+/// The dense dialect table is the one per-client quantity in this crate
+/// that was *not* independently forkable — it is a single sequential
+/// stream (`fork(1)` drawn `clients` times), so client `i`'s dialect
+/// depends on position, not identity. The streamed mode derives each
+/// dialect from `(root_seed, client_id)` instead.
+enum Population {
+    Dense {
+        /// Per-client dialect offsets into the successor table.
+        dialect_shift: Vec<usize>,
+        weights: Vec<f64>,
+    },
+    Streamed {
+        sizes: partition::StreamedSizes,
+    },
+}
+
+/// Fork domain for streamed per-client dialect draws.
+const DIALECT_DOMAIN: u64 = 0xD1A1;
+
 pub struct SyntheticSoNwp {
     cfg: SoNwpConfig,
     clients: usize,
     seed: u64,
-    /// Per-client dialect offsets into the successor table.
-    dialect_shift: Vec<usize>,
-    weights: Vec<f64>,
+    root: Rng,
+    population: Population,
 }
 
 impl SyntheticSoNwp {
@@ -53,7 +74,28 @@ impl SyntheticSoNwp {
         let mut rs = root.fork(2);
         let sizes = partition::zipf_client_sizes(clients, 300, 1.2, 20, &mut rs);
         let weights = partition::weights_from_sizes(&sizes);
-        SyntheticSoNwp { cfg, clients, seed, dialect_shift, weights }
+        SyntheticSoNwp {
+            cfg,
+            clients,
+            seed,
+            root,
+            population: Population::Dense { dialect_shift, weights },
+        }
+    }
+
+    /// Streamed population: O(1) resident per-client state; dialects and
+    /// sizes are pure functions of `(root_seed, client_id)`.
+    pub fn streamed(seed: u64, clients: usize, cfg: SoNwpConfig) -> Self {
+        let root = Rng::new(seed);
+        SyntheticSoNwp {
+            cfg,
+            clients,
+            seed,
+            root,
+            population: Population::Streamed {
+                sizes: partition::StreamedSizes::new(300, 1.2, 20),
+            },
+        }
     }
 
     /// k-th successor of `token` in the global chain (deterministic hash).
@@ -134,11 +176,24 @@ impl FederatedDataset for SyntheticSoNwp {
     }
 
     fn client_weight(&self, client: usize) -> f64 {
-        self.weights[client]
+        match &self.population {
+            Population::Dense { weights, .. } => weights[client],
+            Population::Streamed { sizes } => {
+                sizes.weight(&self.root, client as u64, self.clients)
+            }
+        }
     }
 
     fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch {
-        self.batch_with_shift(self.dialect_shift[client], batch, rng)
+        let shift = match &self.population {
+            Population::Dense { dialect_shift, .. } => dialect_shift[client],
+            Population::Streamed { .. } => self
+                .root
+                .fork(DIALECT_DOMAIN)
+                .fork(client as u64)
+                .below(self.cfg.branch),
+        };
+        self.batch_with_shift(shift, batch, rng)
     }
 
     fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
@@ -243,5 +298,21 @@ mod tests {
         let b1 = ds().train_batch(2, 3, &mut Rng::new(9));
         let b2 = ds().train_batch(2, 3, &mut Rng::new(9));
         assert_eq!(b1.x.as_i32().unwrap(), b2.x.as_i32().unwrap());
+    }
+
+    #[test]
+    fn streamed_dialects_are_identity_keyed_not_positional() {
+        // in streamed mode a client's dialect is a pure function of its
+        // id: the same id yields the same batch across instances, and the
+        // population size doesn't perturb it (the dense mode's sequential
+        // stream can't offer either property)
+        let small = SyntheticSoNwp::streamed(5, 1 << 18, SoNwpConfig::small());
+        let large = SyntheticSoNwp::streamed(5, 1 << 21, SoNwpConfig::small());
+        let b1 = small.train_batch(99_999, 3, &mut Rng::new(9));
+        let b2 = large.train_batch(99_999, 3, &mut Rng::new(9));
+        assert_eq!(b1.x.as_i32().unwrap(), b2.x.as_i32().unwrap());
+        assert_eq!(b1.y.as_i32().unwrap(), b2.y.as_i32().unwrap());
+        assert_eq!(large.num_clients(), 1 << 21);
+        assert!(large.client_weight(2_000_000) > 0.0);
     }
 }

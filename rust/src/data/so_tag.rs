@@ -43,18 +43,63 @@ struct Topic {
     tags: Vec<usize>,
 }
 
+/// Dense (materialized) vs streamed (forked-on-demand) per-client state;
+/// see `femnist::Population` for the model.
+enum Population {
+    Dense { client_mixture: Vec<Vec<f64>>, weights: Vec<f64> },
+    Streamed { sizes: partition::StreamedSizes },
+}
+
+/// Fork domain for streamed per-client topic mixtures.
+const MIXTURE_DOMAIN: u64 = 0xD157;
+
 pub struct SyntheticSoTag {
     cfg: SoTagConfig,
     clients: usize,
+    root: Rng,
     topics: Vec<Topic>,
-    client_mixture: Vec<Vec<f64>>,
-    weights: Vec<f64>,
+    population: Population,
 }
 
 impl SyntheticSoTag {
     pub fn new(seed: u64, clients: usize, cfg: SoTagConfig) -> Self {
         let root = Rng::new(seed);
-        let topics = (0..cfg.topics)
+        let topics = Self::build_topics(&root, &cfg);
+        let mut r = root.fork(7);
+        let client_mixture =
+            partition::dirichlet_label_skew(clients, cfg.topics, cfg.alpha, &mut r);
+        let mut rs = root.fork(8);
+        let sizes = partition::zipf_client_sizes(clients, 200, 1.2, 10, &mut rs);
+        let weights = partition::weights_from_sizes(&sizes);
+        SyntheticSoTag {
+            cfg,
+            clients,
+            root,
+            topics,
+            population: Population::Dense { client_mixture, weights },
+        }
+    }
+
+    /// Streamed population: O(topics) resident state regardless of
+    /// `clients`; per-client mixtures and sizes fork from
+    /// `(root_seed, client_id)` on demand.
+    pub fn streamed(seed: u64, clients: usize, cfg: SoTagConfig) -> Self {
+        let root = Rng::new(seed);
+        let topics = Self::build_topics(&root, &cfg);
+        SyntheticSoTag {
+            cfg,
+            clients,
+            root,
+            topics,
+            population: Population::Streamed {
+                sizes: partition::StreamedSizes::new(200, 1.2, 10),
+            },
+        }
+    }
+
+    /// Latent topics (shared global state in either mode).
+    fn build_topics(root: &Rng, cfg: &SoTagConfig) -> Vec<Topic> {
+        (0..cfg.topics)
             .map(|t| {
                 let mut r = root.fork(100 + t as u64);
                 // each topic uses a contiguous-ish slice of the vocab plus
@@ -71,14 +116,7 @@ impl SyntheticSoTag {
                     .collect();
                 Topic { words, tags }
             })
-            .collect();
-        let mut r = root.fork(7);
-        let client_mixture =
-            partition::dirichlet_label_skew(clients, cfg.topics, cfg.alpha, &mut r);
-        let mut rs = root.fork(8);
-        let sizes = partition::zipf_client_sizes(clients, 200, 1.2, 10, &mut rs);
-        let weights = partition::weights_from_sizes(&sizes);
-        SyntheticSoTag { cfg, clients, topics, client_mixture, weights }
+            .collect()
     }
 
     fn sample_post(&self, mixture: &[f64], rng: &mut Rng) -> (Vec<f32>, Vec<f32>) {
@@ -150,11 +188,28 @@ impl FederatedDataset for SyntheticSoTag {
     }
 
     fn client_weight(&self, client: usize) -> f64 {
-        self.weights[client]
+        match &self.population {
+            Population::Dense { weights, .. } => weights[client],
+            Population::Streamed { sizes } => {
+                sizes.weight(&self.root, client as u64, self.clients)
+            }
+        }
     }
 
     fn train_batch(&self, client: usize, batch: usize, rng: &mut Rng) -> Batch {
-        self.batch_from_mixture(&self.client_mixture[client], batch, rng)
+        match &self.population {
+            Population::Dense { client_mixture, .. } => {
+                self.batch_from_mixture(&client_mixture[client], batch, rng)
+            }
+            Population::Streamed { .. } => {
+                let mixture = self
+                    .root
+                    .fork(MIXTURE_DOMAIN)
+                    .fork(client as u64)
+                    .dirichlet_sym(self.cfg.alpha, self.cfg.topics);
+                self.batch_from_mixture(&mixture, batch, rng)
+            }
+        }
     }
 
     fn eval_batch(&self, batch: usize, rng: &mut Rng) -> Batch {
@@ -224,9 +279,13 @@ mod tests {
     #[test]
     fn clients_have_distinct_mixtures() {
         let d = ds();
-        let m0 = &d.client_mixture[0];
-        let m1 = &d.client_mixture[1];
-        let dist: f64 = m0.iter().zip(m1).map(|(a, b)| (a - b).abs()).sum();
+        let (m0, m1) = match &d.population {
+            Population::Dense { client_mixture, .. } => {
+                (client_mixture[0].clone(), client_mixture[1].clone())
+            }
+            Population::Streamed { .. } => unreachable!("ds() is dense"),
+        };
+        let dist: f64 = m0.iter().zip(&m1).map(|(a, b)| (a - b).abs()).sum();
         assert!(dist > 0.5, "mixtures too similar: {dist}");
     }
 
@@ -235,5 +294,15 @@ mod tests {
         let b1 = ds().train_batch(5, 4, &mut Rng::new(3));
         let b2 = ds().train_batch(5, 4, &mut Rng::new(3));
         assert_eq!(b1.x.as_f32().unwrap(), b2.x.as_f32().unwrap());
+    }
+
+    #[test]
+    fn streamed_population_is_lazy_and_deterministic() {
+        let d = SyntheticSoTag::streamed(11, 2_000_000, SoTagConfig::small());
+        assert_eq!(d.num_clients(), 2_000_000);
+        let b1 = d.train_batch(1_999_999, 4, &mut Rng::new(3));
+        let b2 = d.train_batch(1_999_999, 4, &mut Rng::new(3));
+        assert_eq!(b1.x.as_f32().unwrap(), b2.x.as_f32().unwrap());
+        assert!(d.client_weight(1_999_999) > 0.0);
     }
 }

@@ -39,6 +39,13 @@ fn cli() -> Cli {
                         "cohort worker threads; 0 = one per core, 1 = serial \
                          (results are bit-identical at any value)",
                     ),
+                    Flag::opt(
+                        "shards",
+                        "1",
+                        "independent cohort shards per round, each with its \
+                         own fault plans and worker fan-out (results are \
+                         bit-identical at any value)",
+                    ),
                     Flag::opt("rounds", "100", "number of federated rounds"),
                     Flag::opt("clients", "100", "population size M"),
                     Flag::opt("clients-per-round", "0", "cohort size S (0 = preset)"),
@@ -167,6 +174,7 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     };
     cfg.algorithm = Algorithm::parse(args.str("algorithm")?)?;
     cfg.workers = args.usize("workers")?;
+    cfg.shards = args.usize("shards")?;
     cfg.rounds = args.usize("rounds")?;
     cfg.num_clients = args.usize("clients")?;
     let s = args.usize("clients-per-round")?;
@@ -210,11 +218,11 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
 
     let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
     log::info!(
-        "platform={} task={} algo={} rounds={} S={}/{} workers={} q={} L={} R={} \
-         lambda={} quantizer={:?}",
+        "platform={} task={} algo={} rounds={} S={}/{} workers={} shards={} q={} \
+         L={} R={} lambda={} quantizer={:?}",
         rt.platform(), cfg.task, cfg.algorithm.name(), cfg.rounds,
         cfg.clients_per_round, cfg.num_clients, cfg.resolved_workers(),
-        cfg.pq.q, cfg.pq.l, cfg.pq.r, cfg.lambda, cfg.quantizer
+        cfg.shards, cfg.pq.q, cfg.pq.l, cfg.pq.r, cfg.lambda, cfg.quantizer
     );
     if cfg.drop_prob > 0.0 || cfg.straggler_frac > 0.0 || cfg.min_survivors > 0 {
         log::info!(

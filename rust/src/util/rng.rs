@@ -210,19 +210,49 @@ impl Rng {
         idx
     }
 
+    /// Populations at or below this size use the legacy partial
+    /// Fisher–Yates path in [`Rng::choose_k_into`] (O(n) scratch, the
+    /// stream every base-blessed golden fixture was produced with);
+    /// larger populations switch to Floyd's O(k) algorithm. The cutover
+    /// sits far above every committed preset/scenario population (the
+    /// presets default to 100 clients; the golden scenarios use 8), so
+    /// existing emitted bits are untouched while million-client configs
+    /// never materialize `0..n`.
+    pub const CHOOSE_K_DENSE_MAX: usize = 1 << 16;
+
     /// Allocation-free [`Rng::choose_k`]: leaves the `k` chosen indices in
-    /// `scratch[..k]`, reusing its capacity. Consumes exactly the same RNG
-    /// stream (`k` draws of `below`), so the two are interchangeable on
-    /// any reproducibility-sensitive path.
+    /// `scratch[..k]`, reusing its capacity.
+    ///
+    /// Stream contract: for `n <= CHOOSE_K_DENSE_MAX` this consumes
+    /// exactly the legacy stream (`k` draws of `below`) via partial
+    /// Fisher–Yates over a materialized `0..n` — bit-compatible with
+    /// every fixture blessed before the Floyd's path existed. For larger
+    /// `n` it runs Floyd's algorithm instead: still exactly `k` draws of
+    /// `below`, but a *different* stream (and O(k) time/space, never
+    /// touching the full range). Both paths yield uniform k-subsets.
     pub fn choose_k_into(&mut self, n: usize, k: usize, scratch: &mut Vec<usize>) {
         assert!(k <= n, "choose_k({k}) from {n}");
         scratch.clear();
-        scratch.extend(0..n);
-        for i in 0..k {
-            let j = i + self.below(n - i);
-            scratch.swap(i, j);
+        if n <= Self::CHOOSE_K_DENSE_MAX {
+            scratch.extend(0..n);
+            for i in 0..k {
+                let j = i + self.below(n - i);
+                scratch.swap(i, j);
+            }
+            scratch.truncate(k);
+        } else {
+            // Floyd's uniform k-subset sampling: O(k) with a warm scratch.
+            // The linear `contains` scan is fine at cohort scale (k is the
+            // per-round cohort, not the population).
+            for j in (n - k)..n {
+                let t = self.below(j + 1);
+                if scratch.contains(&t) {
+                    scratch.push(j);
+                } else {
+                    scratch.push(t);
+                }
+            }
         }
-        scratch.truncate(k);
     }
 
     /// Fill a slice with scaled Bernoulli dropout mask values
@@ -339,6 +369,62 @@ mod tests {
             ks.dedup();
             assert_eq!(ks.len(), 10);
         }
+    }
+
+    #[test]
+    fn choose_k_dense_stream_is_the_legacy_partial_fisher_yates() {
+        // the exact draw sequence golden fixtures depend on: materialize
+        // 0..n, then k swaps driven by below(n - i)
+        let n = 12;
+        let k = 5;
+        let mut r = Rng::new(77);
+        let got = r.choose_k(n, k);
+        let mut expect: Vec<usize> = (0..n).collect();
+        let mut r2 = Rng::new(77);
+        for i in 0..k {
+            let j = i + r2.below(n - i);
+            expect.swap(i, j);
+        }
+        expect.truncate(k);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn choose_k_floyds_path_distinct_in_range_and_o_cohort() {
+        // above the dense cutover: Floyd's path, still k distinct indices
+        // drawn uniformly from [0, n) without touching the full range
+        let n = Rng::CHOOSE_K_DENSE_MAX + 1_000_000;
+        let k = 64;
+        let mut r = Rng::new(13);
+        let mut scratch = Vec::new();
+        for round in 0..20 {
+            r.choose_k_into(n, k, &mut scratch);
+            assert_eq!(scratch.len(), k, "round {round}");
+            assert!(scratch.capacity() < 4 * k, "Floyd's path grew O(n) scratch");
+            assert!(scratch.iter().all(|&c| c < n));
+            let mut sorted = scratch.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in round {round}");
+        }
+    }
+
+    #[test]
+    fn choose_k_floyds_path_covers_the_range() {
+        // ids from every region of a large population should appear: the
+        // sampler is not confined to the tail window Floyd's iterates over
+        let n = Rng::CHOOSE_K_DENSE_MAX * 16;
+        let mut r = Rng::new(14);
+        let mut scratch = Vec::new();
+        let mut low = 0usize; // ids in the first half of the range
+        let mut draws = 0usize;
+        for _ in 0..200 {
+            r.choose_k_into(n, 32, &mut scratch);
+            low += scratch.iter().filter(|&&c| c < n / 2).count();
+            draws += scratch.len();
+        }
+        let frac = low as f64 / draws as f64;
+        assert!((frac - 0.5).abs() < 0.05, "first-half fraction {frac}");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Steady-state allocation audit for the client-side hot path.
 //!
-//! A counting global allocator wraps `System`. Two phases, one contract:
+//! A counting global allocator wraps `System`. Three phases, one contract:
 //!
 //! 1. **Quantizer only** (the PR 4 guarantee): after one warm-up call at
 //!    a fixed shape, repeated `quantize_into` calls perform **zero** heap
@@ -14,6 +14,11 @@
 //!    pool lends per cohort slot (`Runtime::run_scratch`); the remaining
 //!    steady-state allocations in a real round are the runtime-API
 //!    `Array` outputs and the wire messages, not the kernels.
+//! 3. **O(cohort) sampling** (the PR 7 guarantee): drawing a cohort from
+//!    a million-client population with a warm scratch performs **zero**
+//!    heap allocations — Floyd's sampling never materializes the
+//!    population, so the scratch stays O(cohort) no matter how large the
+//!    id range grows.
 //!
 //! Everything runs at `workers = 1` — exactly what the round engine's
 //! cohort workers use, since the engine already fans out over clients.
@@ -171,8 +176,38 @@ fn client_path_steady_state() {
     }
 }
 
+/// Phase 3: cohort sampling from a million-client population. The dense
+/// legacy path would allocate (and touch) an O(population) index vector
+/// per draw; Floyd's path must stay allocation-free with a warm scratch
+/// and never grow it past O(cohort).
+fn million_client_sampling_steady_state() {
+    let population = 1_000_000usize;
+    let cohort = 64usize;
+    assert!(population > Rng::CHOOSE_K_DENSE_MAX, "must exercise Floyd's path");
+    let mut rng = Rng::new(0xC0_0117);
+    let mut scratch = Vec::new();
+    // warm-up draw: the scratch reaches its O(cohort) steady state
+    rng.choose_k_into(population, cohort, &mut scratch);
+    let cap = scratch.capacity();
+    assert!(cap <= 4 * cohort, "scratch capacity {cap} is not O(cohort)");
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..10 {
+        rng.choose_k_into(population, cohort, &mut scratch);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "million-client cohort sampling allocated on the warm path"
+    );
+    assert_eq!(scratch.capacity(), cap, "sampling scratch reallocated");
+    assert_eq!(scratch.len(), cohort);
+    std::hint::black_box(&scratch);
+}
+
 #[test]
 fn client_hot_paths_steady_state_perform_zero_allocations() {
     quantizer_steady_state();
     client_path_steady_state();
+    million_client_sampling_steady_state();
 }

@@ -1,8 +1,11 @@
-//! Workers-invariance + golden bit-identity tests for the round engine.
+//! Workers/shards-invariance + golden bit-identity tests for the round
+//! engine.
 //!
-//! The generic `RoundEngine` fans each cohort across `cfg.workers`
-//! threads and reduces the per-client partials in cohort-slot order, so
-//! the round records must be **bit-identical at any worker count**. These
+//! The generic `RoundEngine` partitions each cohort into `cfg.shards`
+//! contiguous slices, fans each slice across `cfg.workers` threads, and
+//! reduces the floating-point partials in flat cohort-slot order (only
+//! exact quantities merge per shard), so the round records must be
+//! **bit-identical at any worker and shard count**. These
 //! tests run the native engines (no artifacts needed) — `femnist_tiny`
 //! through all three trainers (FedLite / SplitFed / FedAvg), plus the
 //! `so_tag_tiny` / `so_nwp_tiny` text variants and a `--lambda 0` run —
@@ -60,6 +63,18 @@ fn run_faulty(algo: Algorithm, workers: usize, seed: u64) -> RunLog {
     cfg.straggler_frac = 0.5;
     cfg.round_deadline = 0.05;
     cfg.min_survivors = 1;
+    run_cfg(cfg)
+}
+
+fn run_sharded(algo: Algorithm, shards: usize, seed: u64, faulty: bool) -> RunLog {
+    let mut cfg = base_cfg(algo, 2, seed);
+    cfg.shards = shards;
+    if faulty {
+        cfg.drop_prob = 0.3;
+        cfg.straggler_frac = 0.5;
+        cfg.round_deadline = 0.05;
+        cfg.min_survivors = 1;
+    }
     run_cfg(cfg)
 }
 
@@ -158,6 +173,42 @@ fn faulty_fedavg_records_invariant_to_worker_count() {
     let serial = run_faulty(Algorithm::FedAvg, 1, 33);
     for workers in [2, 4] {
         assert_identical(&serial, &run_faulty(Algorithm::FedAvg, workers, 33));
+    }
+}
+
+/// Shard-count invariance, the sharded coordinator's acceptance bar:
+/// `--shards 1` and `--shards 4` (and a shard count beyond the cohort
+/// size, which leaves some shards empty) must produce bit-identical
+/// round records. The cohort is sampled globally and every float reduces
+/// in flat slot order, so shard identity never feeds a bit.
+#[test]
+fn records_invariant_to_shard_count() {
+    for (algo, seed) in [
+        (Algorithm::FedLite, 41u64),
+        (Algorithm::SplitFed, 42),
+        (Algorithm::FedAvg, 43),
+    ] {
+        let unsharded = run_sharded(algo, 1, seed, false);
+        for shards in [2, 4, 7] {
+            assert_identical(&unsharded, &run_sharded(algo, shards, seed, false));
+        }
+    }
+}
+
+/// Fault plans are drawn shard-by-shard from pure per-client keys, so a
+/// faulty run (dropout + stragglers + deadline + survivor floor, with
+/// resampling live) must also be shard-count invariant.
+#[test]
+fn faulty_records_invariant_to_shard_count() {
+    for (algo, seed) in [
+        (Algorithm::FedLite, 44u64),
+        (Algorithm::SplitFed, 45),
+        (Algorithm::FedAvg, 46),
+    ] {
+        let unsharded = run_sharded(algo, 1, seed, true);
+        for shards in [4, 7] {
+            assert_identical(&unsharded, &run_sharded(algo, shards, seed, true));
+        }
     }
 }
 
