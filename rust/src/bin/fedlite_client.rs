@@ -1,0 +1,59 @@
+//! `fedlite-client` — standalone replica worker for networked runs.
+//!
+//! Connects to a `fedlite serve` coordinator, rebuilds the run from the
+//! `Welcome` config, and serves client steps over the socket until the
+//! run ends (or `--max-rounds` rounds have been served, after which it
+//! leaves gracefully between rounds). See
+//! `fedlite::coordinator::worker` for the protocol.
+
+use fedlite::util::logging;
+
+const USAGE: &str = "\
+fedlite-client — replica worker for a `fedlite serve` coordinator
+
+USAGE:
+    fedlite-client [--connect <addr>] [--max-rounds <n>] [--log <level>]
+
+FLAGS:
+    --connect <addr>    coordinator address [default: 127.0.0.1:7878]
+    --max-rounds <n>    leave after serving n rounds; 0 = serve until the
+                        coordinator shuts the run down [default: 0]
+    --log <level>       log level [default: info]
+    --help              print this help
+";
+
+fn main() {
+    let mut connect = String::from("127.0.0.1:7878");
+    let mut max_rounds = 0usize;
+    let mut level = String::from("info");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        let mut val = |flag: &str| {
+            args.next()
+                .ok_or_else(|| format!("{flag} needs a value"))
+        };
+        let r = match a.as_str() {
+            "--connect" => val("--connect").map(|v| connect = v),
+            "--max-rounds" => val("--max-rounds").and_then(|v| {
+                v.parse()
+                    .map(|n| max_rounds = n)
+                    .map_err(|_| format!("--max-rounds: bad count '{v}'"))
+            }),
+            "--log" => val("--log").map(|v| level = v),
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return;
+            }
+            other => Err(format!("unknown flag '{other}'")),
+        };
+        if let Err(msg) = r {
+            eprintln!("{msg}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    logging::init(&level);
+    if let Err(e) = fedlite::coordinator::worker::run_worker(&connect, max_rounds) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -80,6 +80,17 @@ impl ByteMeter {
         }
     }
 
+    /// Fold a remotely-metered delta into the cumulative counters (bytes
+    /// *and* message counts). Used by socket deployments to replay worker
+    /// processes' transfers into the coordinator's meter; falls inside
+    /// whatever round window is open, like any other `record`.
+    pub fn absorb(&self, rb: &RoundBytes) {
+        self.up.fetch_add(rb.up, Ordering::Relaxed);
+        self.down.fetch_add(rb.down, Ordering::Relaxed);
+        self.up_msgs.fetch_add(rb.up_msgs, Ordering::Relaxed);
+        self.down_msgs.fetch_add(rb.down_msgs, Ordering::Relaxed);
+    }
+
     /// Snapshot of cumulative totals.
     pub fn totals(&self) -> RoundBytes {
         RoundBytes {

@@ -8,7 +8,7 @@
 //! [`super::ByteMeter`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::comm::accounting::{ByteMeter, Direction};
 use crate::comm::message::Message;
@@ -43,11 +43,23 @@ pub struct Link {
     meter: Arc<ByteMeter>,
     /// Accumulated simulated busy time, in microseconds.
     busy_us: AtomicU64,
+    /// Reused encode buffer for [`Link::transfer`]: the hot round path
+    /// serializes every message into this scratch instead of allocating a
+    /// fresh `Vec<u8>` per send. Contended callers (concurrent cohort
+    /// workers) fall back to a local buffer rather than serializing on
+    /// the lock.
+    scratch: Mutex<Vec<u8>>,
 }
 
 impl Link {
     pub fn new(spec: LinkSpec, direction: Direction, meter: Arc<ByteMeter>) -> Self {
-        Link { spec, direction, meter, busy_us: AtomicU64::new(0) }
+        Link {
+            spec,
+            direction,
+            meter,
+            busy_us: AtomicU64::new(0),
+            scratch: Mutex::new(Vec::new()),
+        }
     }
 
     /// "Transmit" a message: meter the bytes, charge simulated time, and
@@ -60,6 +72,42 @@ impl Link {
         self.busy_us
             .fetch_add((t * 1e6) as u64, Ordering::Relaxed);
         bytes
+    }
+
+    /// Full simulated transfer: encode into the link's scratch buffer,
+    /// meter + charge time, and decode the receiver's view from those
+    /// exact bytes. Same wire bytes and accounting as
+    /// `send` + `Message::decode`, minus the per-message allocation — the
+    /// warm path is allocation-free on the encode side
+    /// (`tests/alloc.rs` counts it).
+    pub fn transfer(
+        &self,
+        msg: &Message,
+        round: u32,
+        client: u32,
+    ) -> anyhow::Result<(Message, usize)> {
+        match self.scratch.try_lock() {
+            Ok(mut buf) => self.transfer_with(&mut buf, msg, round, client),
+            // another worker holds the scratch: a fresh buffer beats
+            // serializing the whole cohort on one mutex
+            Err(_) => self.transfer_with(&mut Vec::new(), msg, round, client),
+        }
+    }
+
+    fn transfer_with(
+        &self,
+        buf: &mut Vec<u8>,
+        msg: &Message,
+        round: u32,
+        client: u32,
+    ) -> anyhow::Result<(Message, usize)> {
+        msg.encode_into(round, client, buf);
+        self.meter.record(self.direction, buf.len());
+        let t = self.spec.transfer_time(buf.len());
+        self.busy_us.fetch_add((t * 1e6) as u64, Ordering::Relaxed);
+        let n = buf.len();
+        let (decoded, _, _) = Message::decode(buf)?;
+        Ok((decoded, n))
     }
 
     /// Total simulated seconds this link has been busy.
@@ -100,6 +148,32 @@ mod tests {
         let (back, round, client) = Message::decode(&bytes).unwrap();
         assert_eq!(back, msg);
         assert_eq!((round, client), (1, 2));
+    }
+
+    /// `transfer` must be observationally identical to
+    /// `send` + `decode`: same decoded message, same byte count, same
+    /// meter and busy-time charges — only the allocation differs.
+    #[test]
+    fn transfer_matches_send_plus_decode() {
+        let spec = LinkSpec { bandwidth_bps: 1e6, latency_s: 0.01 };
+        let msg = Message::ClientGrads { grads: vec![vec![1.0, -2.5], vec![0.25]] };
+
+        let meter_a = Arc::new(ByteMeter::new());
+        let a = Link::new(spec, Direction::Uplink, Arc::clone(&meter_a));
+        let bytes = a.send(&msg, 3, 4);
+        let (dec_a, _, _) = Message::decode(&bytes).unwrap();
+
+        let meter_b = Arc::new(ByteMeter::new());
+        let b = Link::new(spec, Direction::Uplink, Arc::clone(&meter_b));
+        let (dec_b, n) = b.transfer(&msg, 3, 4).unwrap();
+
+        assert_eq!(dec_b, dec_a);
+        assert_eq!(n, bytes.len());
+        assert_eq!(meter_b.totals(), meter_a.totals());
+        assert_eq!(b.busy_seconds().to_bits(), a.busy_seconds().to_bits());
+        // the scratch persists: a second transfer reuses its capacity
+        let (_, n2) = b.transfer(&msg, 3, 5).unwrap();
+        assert_eq!(n2, n);
     }
 
     #[test]

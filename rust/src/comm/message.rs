@@ -5,6 +5,13 @@
 //! of [`crate::quantizer::packing`]. Encode/decode round-trips are tested
 //! for every variant — the byte length of `encode()` is the number that
 //! feeds the communication meters.
+//!
+//! Decoding is hardened against adversarial frames: every declared
+//! element count is capped against the bytes actually remaining in the
+//! buffer *before* any allocation sized from it, so a corrupt or
+//! malicious length field can never trigger a huge `Vec` pre-allocation.
+//! This matters once frames arrive over real sockets
+//! ([`crate::comm::transport`]) instead of in-process buffers.
 
 use crate::quantizer::packing;
 use crate::quantizer::pq::PqConfig;
@@ -82,7 +89,18 @@ impl Message {
 
     /// Serialize to wire bytes.
     pub fn encode(&self, round: u32, client: u32) -> Vec<u8> {
-        let mut w = Writer::new();
+        let mut out = Vec::with_capacity(self.wire_len());
+        self.encode_into(round, client, &mut out);
+        out
+    }
+
+    /// Serialize into a caller-owned buffer (cleared first). Produces
+    /// byte-for-byte the same output as [`Message::encode`]; the hot
+    /// transfer path ([`crate::comm::Link`]) uses this with a reused
+    /// scratch buffer so steady-state sends perform no allocation.
+    pub fn encode_into(&self, round: u32, client: u32, out: &mut Vec<u8>) {
+        out.clear();
+        let mut w = Writer::new(out);
         w.u32(MAGIC);
         w.u8(self.type_id());
         w.u32(round);
@@ -106,19 +124,12 @@ impl Message {
                 w.f32s(grad);
             }
             Message::ClientGrads { grads } => {
-                w.u32(grads.len() as u32);
-                for g in grads {
-                    w.f32s(g);
-                }
+                w.f32_lists(grads);
             }
             Message::ModelBroadcast { params } => {
-                w.u32(params.len() as u32);
-                for p in params {
-                    w.f32s(p);
-                }
+                w.f32_lists(params);
             }
         }
-        w.out
     }
 
     /// Deserialize; returns `(message, round, client)`.
@@ -157,16 +168,8 @@ impl Message {
                 let d = r.u32()? as usize;
                 Message::GradDownload { grad: r.f32s()?, b, d }
             }
-            4 => {
-                let n = r.u32()? as usize;
-                let grads = (0..n).map(|_| r.f32s()).collect::<anyhow::Result<_>>()?;
-                Message::ClientGrads { grads }
-            }
-            5 => {
-                let n = r.u32()? as usize;
-                let params = (0..n).map(|_| r.f32s()).collect::<anyhow::Result<_>>()?;
-                Message::ModelBroadcast { params }
-            }
+            4 => Message::ClientGrads { grads: r.f32_lists()? },
+            5 => Message::ModelBroadcast { params: r.f32_lists()? },
             t => anyhow::bail!("unknown message type {t}"),
         };
         anyhow::ensure!(r.at_end(), "trailing bytes in message");
@@ -213,63 +216,121 @@ pub fn payload_to_tensors(
     TensorList::new(names.to_vec(), tensors)
 }
 
-struct Writer {
-    out: Vec<u8>,
+/// Little-endian wire writer over a caller-owned buffer. Shared with the
+/// socket transport layer ([`crate::comm::transport`]) so control frames
+/// and protocol messages use one codec.
+pub(crate) struct Writer<'a> {
+    out: &'a mut Vec<u8>,
 }
 
-impl Writer {
-    fn new() -> Self {
-        Writer { out: Vec::new() }
+impl<'a> Writer<'a> {
+    pub(crate) fn new(out: &'a mut Vec<u8>) -> Self {
+        Writer { out }
     }
 
-    fn u8(&mut self, v: u8) {
+    pub(crate) fn u8(&mut self, v: u8) {
         self.out.push(v);
     }
 
-    fn u32(&mut self, v: u32) {
+    pub(crate) fn u32(&mut self, v: u32) {
         self.out.extend_from_slice(&v.to_le_bytes());
     }
 
-    fn f32s(&mut self, v: &[f32]) {
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f64 as its IEEE-754 bit pattern — the round-trip is bit-exact, so
+    /// losses/weights computed remotely reduce to the same bits as local.
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub(crate) fn f32s(&mut self, v: &[f32]) {
         self.u32(v.len() as u32);
         for x in v {
             self.out.extend_from_slice(&x.to_le_bytes());
         }
     }
 
-    fn bytes(&mut self, v: &[u8]) {
+    pub(crate) fn f64s(&mut self, v: &[f64]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.f64(*x);
+        }
+    }
+
+    pub(crate) fn f32_lists(&mut self, lists: &[Vec<f32>]) {
+        self.u32(lists.len() as u32);
+        for l in lists {
+            self.f32s(l);
+        }
+    }
+
+    pub(crate) fn bytes(&mut self, v: &[u8]) {
         self.u32(v.len() as u32);
         self.out.extend_from_slice(v);
     }
+
+    pub(crate) fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
 }
 
-struct Reader<'a> {
+/// Bounds-checked little-endian reader. Every length-prefixed read caps
+/// the declared count against the bytes remaining *before* allocating.
+pub(crate) struct Reader<'a> {
     b: &'a [u8],
     i: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn new(b: &'a [u8]) -> Self {
+    pub(crate) fn new(b: &'a [u8]) -> Self {
         Reader { b, i: 0 }
     }
 
+    pub(crate) fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
     fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
-        anyhow::ensure!(self.i + n <= self.b.len(), "message truncated");
+        anyhow::ensure!(n <= self.remaining(), "message truncated");
         let s = &self.b[self.i..self.i + n];
         self.i += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> anyhow::Result<u8> {
+    /// Read a declared element count, rejecting counts that could not
+    /// possibly fit in the remaining buffer at `min_elem_bytes` each.
+    /// This runs before any count-sized allocation.
+    fn count(&mut self, min_elem_bytes: usize) -> anyhow::Result<usize> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(
+            n <= self.remaining() / min_elem_bytes,
+            "declared count {n} exceeds remaining {} bytes",
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    pub(crate) fn u8(&mut self) -> anyhow::Result<u8> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> anyhow::Result<u32> {
+    pub(crate) fn u32(&mut self) -> anyhow::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
-        let n = self.u32()? as usize;
+    pub(crate) fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn f32s(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.count(4)?;
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
@@ -277,12 +338,30 @@ impl<'a> Reader<'a> {
             .collect())
     }
 
-    fn bytes(&mut self) -> anyhow::Result<Vec<u8>> {
-        let n = self.u32()? as usize;
+    pub(crate) fn f64s(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    /// A list of f32 vectors (each inner vector needs at least its own
+    /// 4-byte length on the wire, so the outer count is capped at
+    /// `remaining / 4`).
+    pub(crate) fn f32_lists(&mut self) -> anyhow::Result<Vec<Vec<f32>>> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.f32s()).collect()
+    }
+
+    pub(crate) fn bytes(&mut self) -> anyhow::Result<Vec<u8>> {
+        let n = self.count(1)?;
         Ok(self.take(n)?.to_vec())
     }
 
-    fn at_end(&self) -> bool {
+    pub(crate) fn str(&mut self) -> anyhow::Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|_| anyhow::anyhow!("invalid utf-8 string"))
+    }
+
+    pub(crate) fn at_end(&self) -> bool {
         self.i == self.b.len()
     }
 }
@@ -317,6 +396,14 @@ mod tests {
             codebooks: vec![0.25; 12],
             packed_codes: vec![0xAB, 0xCD, 0x01],
         });
+    }
+
+    #[test]
+    fn encode_into_matches_encode() {
+        let m = Message::ClientGrads { grads: vec![vec![1.5, -2.0], vec![], vec![9.0]] };
+        let mut buf = vec![0xFFu8; 3]; // stale contents must be cleared
+        m.encode_into(4, 9, &mut buf);
+        assert_eq!(buf, m.encode(4, 9));
     }
 
     #[test]
@@ -367,5 +454,73 @@ mod tests {
         let mut bytes2 = m.encode(0, 0);
         bytes2.push(0); // trailing
         assert!(Message::decode(&bytes2).is_err());
+    }
+
+    /// A frame cut off inside the 13-byte header must error, not panic.
+    #[test]
+    fn decode_rejects_truncated_header() {
+        let bytes = Message::ModelBroadcast { params: vec![vec![1.0]] }.encode(0, 0);
+        for cut in 0..13 {
+            assert!(
+                Message::decode(&bytes[..cut]).is_err(),
+                "truncated header at {cut} bytes must be rejected"
+            );
+        }
+    }
+
+    /// An adversarial length field (u32::MAX elements declared in a short
+    /// frame) must be rejected by the remaining-bytes cap before any
+    /// count-sized allocation happens — for both the outer vec-of-vecs
+    /// count and the inner f32 counts.
+    #[test]
+    fn decode_rejects_oversized_declared_lengths() {
+        // outer count of ClientGrads / ModelBroadcast
+        for ty in [4u8, 5u8] {
+            let mut bytes = Vec::new();
+            let mut w = Writer::new(&mut bytes);
+            w.u32(MAGIC);
+            w.u8(ty);
+            w.u32(0);
+            w.u32(0);
+            w.u32(u32::MAX); // declares ~4G inner vectors in a 17-byte frame
+            let err = Message::decode(&bytes).unwrap_err().to_string();
+            assert!(err.contains("exceeds remaining"), "got: {err}");
+        }
+        // inner f32 count (GradDownload payload)
+        let mut bytes = Vec::new();
+        let mut w = Writer::new(&mut bytes);
+        w.u32(MAGIC);
+        w.u8(3);
+        w.u32(0);
+        w.u32(0);
+        w.u32(1); // b
+        w.u32(4); // d
+        w.u32(u32::MAX); // declares ~4G floats with no payload bytes
+        assert!(Message::decode(&bytes).is_err());
+        // packed-codes byte count of QuantizedUpload
+        let m = Message::QuantizedUpload {
+            q: 1,
+            r: 1,
+            l: 2,
+            b: 1,
+            d: 4,
+            ng: 1,
+            codebooks: vec![0.0; 8],
+            packed_codes: vec![0x01],
+        };
+        let mut bytes = m.encode(0, 0);
+        let cb_end = bytes.len() - 1 - 4; // packed_codes = 1 byte + u32 len
+        bytes[cb_end..cb_end + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Message::decode(&bytes).is_err());
+    }
+
+    /// Unknown type tags are rejected with the offending tag named.
+    #[test]
+    fn decode_rejects_bad_tag() {
+        let m = Message::GradDownload { grad: vec![1.0; 2], b: 1, d: 2 };
+        let mut bytes = m.encode(0, 0);
+        bytes[4] = 99; // type byte lives right after the magic
+        let err = Message::decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("unknown message type 99"), "got: {err}");
     }
 }

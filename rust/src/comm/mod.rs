@@ -7,12 +7,18 @@
 //! byte-accurate rather than formula-only: Figure 6's x-axis integrates
 //! these meters.
 
+//! The [`transport`] module carries the same [`message::Message`] bytes
+//! over real sockets (length-prefixed frames + the serve/join control
+//! protocol) for the loopback deployment mode.
+
 pub mod accounting;
 pub mod channel;
 pub mod message;
 pub mod network;
+pub mod transport;
 
 pub use accounting::{ByteMeter, Direction, RoundBytes};
 pub use channel::{Link, LinkSpec};
 pub use message::Message;
 pub use network::StarNetwork;
+pub use transport::Frame;

@@ -48,7 +48,9 @@ impl StarNetwork {
     }
 
     /// Client -> server transfer. Returns decoded message (round-tripped
-    /// through the wire bytes) and its wire size.
+    /// through the wire bytes) and its wire size. Encodes through the
+    /// uplink's reused scratch buffer (no per-message allocation on the
+    /// encode side).
     pub fn upload(
         &self,
         client: usize,
@@ -56,10 +58,7 @@ impl StarNetwork {
         msg: &Message,
     ) -> anyhow::Result<(Message, usize)> {
         debug_assert!(client < self.clients, "client {client} out of range");
-        let bytes = self.uplink.send(msg, round, client as u32);
-        let n = bytes.len();
-        let (decoded, _, _) = Message::decode(&bytes)?;
-        Ok((decoded, n))
+        self.uplink.transfer(msg, round, client as u32)
     }
 
     /// Server -> client transfer.
@@ -70,10 +69,17 @@ impl StarNetwork {
         msg: &Message,
     ) -> anyhow::Result<(Message, usize)> {
         debug_assert!(client < self.clients, "client {client} out of range");
-        let bytes = self.downlink.send(msg, round, client as u32);
-        let n = bytes.len();
-        let (decoded, _, _) = Message::decode(&bytes)?;
-        Ok((decoded, n))
+        self.downlink.transfer(msg, round, client as u32)
+    }
+
+    /// Fold a remotely-metered delta into this network's meter. Socket
+    /// deployments run `client_step` on worker processes whose transfers
+    /// hit the *worker's* meter; the coordinator absorbs each returned
+    /// [`RoundBytes`] so its own per-round deltas, cumulative totals, and
+    /// the engine's meter-vs-partials assertion match the in-process run
+    /// byte-for-byte.
+    pub fn absorb(&self, bytes: &RoundBytes) {
+        self.meter.absorb(bytes);
     }
 
     /// Simulated transfer seconds for a synchronous round over `selected`

@@ -1,0 +1,490 @@
+//! Socket transport: length-prefixed frames + the coordinator⇄client
+//! control protocol.
+//!
+//! The simulator's [`super::message::Message`] bytes already have an
+//! exact wire contract (`wire_len`); this module is what carries those
+//! same bytes over *real* sockets. A frame is `len: u32 (LE) | body`,
+//! where `body[0]` is a [`Frame`] tag and the rest uses the same
+//! little-endian codec as `message.rs` (one `Writer`/`Reader`, one set
+//! of adversarial-length caps).
+//!
+//! Protocol (loopback deployment mode, PR 8):
+//!
+//! ```text
+//! client                          coordinator
+//!   │ ── Join{version} ─────────────▶ │   WaitingForMembers
+//!   │ ◀───────── Welcome{config} ──── │
+//!   │    (build replica trainer)      │   Warmup
+//!   │ ── Ready ─────────────────────▶ │
+//!   │                                 │   Training (roster ≥ min_clients)
+//!   │ ◀─ RoundState{ws} ───────────── │ ┐
+//!   │ ◀─ Broadcast{Message bytes} ─── │ │ once per round
+//!   │ ◀─ StepAssign{client, plan} ─── │ │ per assigned cohort slot
+//!   │ ── StepResult{...} ───────────▶ │ │
+//!   │ ◀─ RoundEnd{round} ──────────── │ ┘
+//!   │ ── Leave ─────────────────────▶ │   (between rounds only)
+//!   │ ◀─ Shutdown ─────────────────── │   (run finished / aborted)
+//! ```
+//!
+//! Every numeric result field crosses the wire as its exact bit pattern
+//! (f64 via `to_bits`), so a remote client step reduces to the same bits
+//! as the in-process fan-out — the property the CI loopback byte-diff
+//! locks.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::accounting::RoundBytes;
+use super::message::{Reader, Writer};
+use crate::coordinator::faults::{DropPhase, FaultPlan};
+
+/// Bumped on any frame-layout change; [`Frame::Join`] carries it so a
+/// stale client fails the handshake instead of desyncing mid-round.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Upper bound on a single frame body. Large enough for a stress-preset
+/// model broadcast with room to spare; small enough that a corrupt or
+/// hostile length prefix cannot trigger a multi-GiB allocation.
+pub const MAX_FRAME_LEN: usize = 256 << 20;
+
+/// One client's step outcome, shipped back to the coordinator. Mirrors
+/// [`crate::coordinator::engine::ClientOutput`] field-for-field, with the
+/// algorithm payload flattened by `RoundAlgorithm::payload_to_wire`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StepResult {
+    pub client: u64,
+    pub weight: f64,
+    pub loss: f64,
+    pub metric_sums: Vec<f64>,
+    pub quant_rel_err: f64,
+    pub surrogate_loss: f64,
+    pub dropped: Option<DropPhase>,
+    pub delay_seconds: f64,
+    /// The transfers this client's step metered on the *worker's* side;
+    /// the coordinator absorbs them into its own meter
+    /// ([`super::StarNetwork::absorb`]) so byte accounting matches the
+    /// in-process run exactly.
+    pub bytes: RoundBytes,
+    /// Flattened survivor payload; `None` for dropped/evicted clients.
+    pub payload: Option<Vec<Vec<f32>>>,
+}
+
+/// Control frames of the loopback deployment protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// client → coordinator: first frame on a fresh connection.
+    Join { version: u32 },
+    /// coordinator → client: the run's full [`crate::config::RunConfig`]
+    /// as JSON. The client builds a deterministic replica trainer from it
+    /// (same seed ⇒ same init, same synthetic dataset).
+    Welcome { config_json: String },
+    /// client → coordinator: replica built, ready for assignments.
+    Ready,
+    /// coordinator → client: server-side round state to install before
+    /// this round's steps (split: the server-model parameters; fedavg:
+    /// empty — everything travels in the broadcast).
+    RoundState { round: u32, tensors: Vec<Vec<f32>> },
+    /// coordinator → client: the round's model broadcast, as the exact
+    /// [`super::message::Message::encode`] bytes.
+    Broadcast { round: u32, message: Vec<u8> },
+    /// coordinator → client: run one client's step. The fault plan
+    /// travels with the assignment, so drops/stragglers/eviction apply
+    /// identically to remote clients.
+    StepAssign { round: u32, attempt: u32, client: u64, plan: FaultPlan },
+    /// client → coordinator: the step's outcome.
+    StepResult(StepResult),
+    /// client → coordinator: the step failed with an error.
+    StepError { client: u64, error: String },
+    /// coordinator → client: the round committed; clients wanting to
+    /// leave may do so now (before the next round's roster is fixed).
+    RoundEnd { round: u32 },
+    /// client → coordinator: graceful departure (between rounds).
+    Leave,
+    /// coordinator → client: the run is over; close the connection.
+    Shutdown,
+}
+
+fn drop_phase_to_u8(p: Option<DropPhase>) -> u8 {
+    match p {
+        None => 0,
+        Some(DropPhase::AfterFwd) => 1,
+        Some(DropPhase::AfterUpload) => 2,
+        Some(DropPhase::BeforeGradUpload) => 3,
+        Some(DropPhase::Deadline) => 4,
+    }
+}
+
+fn drop_phase_from_u8(v: u8) -> anyhow::Result<Option<DropPhase>> {
+    Ok(match v {
+        0 => None,
+        1 => Some(DropPhase::AfterFwd),
+        2 => Some(DropPhase::AfterUpload),
+        3 => Some(DropPhase::BeforeGradUpload),
+        4 => Some(DropPhase::Deadline),
+        t => anyhow::bail!("bad drop-phase tag {t}"),
+    })
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Join { .. } => 1,
+            Frame::Welcome { .. } => 2,
+            Frame::Ready => 3,
+            Frame::RoundState { .. } => 4,
+            Frame::Broadcast { .. } => 5,
+            Frame::StepAssign { .. } => 6,
+            Frame::StepResult(_) => 7,
+            Frame::StepError { .. } => 8,
+            Frame::RoundEnd { .. } => 9,
+            Frame::Leave => 10,
+            Frame::Shutdown => 11,
+        }
+    }
+
+    /// Short name for protocol-error messages.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Join { .. } => "Join",
+            Frame::Welcome { .. } => "Welcome",
+            Frame::Ready => "Ready",
+            Frame::RoundState { .. } => "RoundState",
+            Frame::Broadcast { .. } => "Broadcast",
+            Frame::StepAssign { .. } => "StepAssign",
+            Frame::StepResult(_) => "StepResult",
+            Frame::StepError { .. } => "StepError",
+            Frame::RoundEnd { .. } => "RoundEnd",
+            Frame::Leave => "Leave",
+            Frame::Shutdown => "Shutdown",
+        }
+    }
+
+    /// Serialize the frame body (no length prefix) into `out`.
+    fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        let mut w = Writer::new(out);
+        w.u8(self.tag());
+        match self {
+            Frame::Join { version } => w.u32(*version),
+            Frame::Welcome { config_json } => w.str(config_json),
+            Frame::Ready | Frame::Leave | Frame::Shutdown => {}
+            Frame::RoundState { round, tensors } => {
+                w.u32(*round);
+                w.f32_lists(tensors);
+            }
+            Frame::Broadcast { round, message } => {
+                w.u32(*round);
+                w.bytes(message);
+            }
+            Frame::StepAssign { round, attempt, client, plan } => {
+                w.u32(*round);
+                w.u32(*attempt);
+                w.u64(*client);
+                w.u8(drop_phase_to_u8(plan.drop_at));
+                w.f64(plan.delay_seconds);
+                w.u8(plan.evicted as u8);
+            }
+            Frame::StepResult(r) => {
+                w.u64(r.client);
+                w.f64(r.weight);
+                w.f64(r.loss);
+                w.f64s(&r.metric_sums);
+                w.f64(r.quant_rel_err);
+                w.f64(r.surrogate_loss);
+                w.u8(drop_phase_to_u8(r.dropped));
+                w.f64(r.delay_seconds);
+                w.u64(r.bytes.up);
+                w.u64(r.bytes.down);
+                w.u64(r.bytes.up_msgs);
+                w.u64(r.bytes.down_msgs);
+                match &r.payload {
+                    None => w.u8(0),
+                    Some(p) => {
+                        w.u8(1);
+                        w.f32_lists(p);
+                    }
+                }
+            }
+            Frame::StepError { client, error } => {
+                w.u64(*client);
+                w.str(error);
+            }
+            Frame::RoundEnd { round } => w.u32(*round),
+        }
+    }
+
+    /// Parse a frame body (no length prefix).
+    pub fn decode(body: &[u8]) -> anyhow::Result<Frame> {
+        let mut r = Reader::new(body);
+        let tag = r.u8()?;
+        let frame = match tag {
+            1 => Frame::Join { version: r.u32()? },
+            2 => Frame::Welcome { config_json: r.str()? },
+            3 => Frame::Ready,
+            4 => Frame::RoundState { round: r.u32()?, tensors: r.f32_lists()? },
+            5 => Frame::Broadcast { round: r.u32()?, message: r.bytes()? },
+            6 => {
+                let round = r.u32()?;
+                let attempt = r.u32()?;
+                let client = r.u64()?;
+                let drop_at = drop_phase_from_u8(r.u8()?)?;
+                anyhow::ensure!(
+                    drop_at != Some(DropPhase::Deadline),
+                    "plans never carry Deadline directly"
+                );
+                let delay_seconds = r.f64()?;
+                let evicted = match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    t => anyhow::bail!("bad bool tag {t}"),
+                };
+                Frame::StepAssign {
+                    round,
+                    attempt,
+                    client,
+                    plan: FaultPlan { drop_at, delay_seconds, evicted },
+                }
+            }
+            7 => {
+                let client = r.u64()?;
+                let weight = r.f64()?;
+                let loss = r.f64()?;
+                let metric_sums = r.f64s()?;
+                let quant_rel_err = r.f64()?;
+                let surrogate_loss = r.f64()?;
+                let dropped = drop_phase_from_u8(r.u8()?)?;
+                let delay_seconds = r.f64()?;
+                let bytes = RoundBytes {
+                    up: r.u64()?,
+                    down: r.u64()?,
+                    up_msgs: r.u64()?,
+                    down_msgs: r.u64()?,
+                };
+                let payload = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.f32_lists()?),
+                    t => anyhow::bail!("bad option tag {t}"),
+                };
+                Frame::StepResult(StepResult {
+                    client,
+                    weight,
+                    loss,
+                    metric_sums,
+                    quant_rel_err,
+                    surrogate_loss,
+                    dropped,
+                    delay_seconds,
+                    bytes,
+                    payload,
+                })
+            }
+            8 => Frame::StepError { client: r.u64()?, error: r.str()? },
+            9 => Frame::RoundEnd { round: r.u32()? },
+            10 => Frame::Leave,
+            11 => Frame::Shutdown,
+            t => anyhow::bail!("unknown frame tag {t}"),
+        };
+        anyhow::ensure!(r.at_end(), "trailing bytes in {} frame", frame.name());
+        Ok(frame)
+    }
+
+    /// Write this frame, length-prefixed, to a stream (flushes).
+    pub fn write_to(&self, w: &mut impl Write) -> anyhow::Result<()> {
+        let mut body = Vec::new();
+        self.encode_into(&mut body);
+        anyhow::ensure!(body.len() <= MAX_FRAME_LEN, "frame exceeds MAX_FRAME_LEN");
+        w.write_all(&(body.len() as u32).to_le_bytes())?;
+        w.write_all(&body)?;
+        w.flush()?;
+        Ok(())
+    }
+
+    /// Read one length-prefixed frame from a stream. The declared length
+    /// is capped at [`MAX_FRAME_LEN`] before the body buffer is sized, so
+    /// a hostile peer cannot force a huge allocation.
+    pub fn read_from(r: &mut impl Read) -> anyhow::Result<Frame> {
+        let mut lenb = [0u8; 4];
+        r.read_exact(&mut lenb)?;
+        let len = u32::from_le_bytes(lenb) as usize;
+        anyhow::ensure!(len >= 1, "empty frame");
+        anyhow::ensure!(len <= MAX_FRAME_LEN, "frame length {len} exceeds cap");
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Frame::decode(&body)
+    }
+}
+
+/// Apply the transport's socket options: no Nagle batching (frames are
+/// the unit of latency here) and the given read deadline.
+pub fn configure_stream(
+    s: &TcpStream,
+    read_timeout: Option<Duration>,
+) -> anyhow::Result<()> {
+    s.set_nodelay(true)?;
+    s.set_read_timeout(read_timeout)?;
+    Ok(())
+}
+
+/// The per-connection read deadline, derived from the fault layer's
+/// `round_deadline` knob so one setting governs both simulated eviction
+/// and real socket timeouts. Simulated deadlines are routinely
+/// sub-second — far shorter than real process scheduling on a loaded CI
+/// box — so the real timeout is floored at [`MIN_SOCKET_DEADLINE`];
+/// with no deadline configured it falls back to
+/// [`DEFAULT_SOCKET_DEADLINE`] (a liveness backstop, not a latency SLA).
+pub fn socket_deadline(round_deadline: f64) -> Duration {
+    if round_deadline > 0.0 {
+        Duration::from_secs_f64(round_deadline.max(MIN_SOCKET_DEADLINE))
+    } else {
+        Duration::from_secs_f64(DEFAULT_SOCKET_DEADLINE)
+    }
+}
+
+/// Floor for real-socket read deadlines (seconds).
+pub const MIN_SOCKET_DEADLINE: f64 = 30.0;
+
+/// Read deadline when no `round_deadline` is configured (seconds).
+pub const DEFAULT_SOCKET_DEADLINE: f64 = 600.0;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(f: Frame) {
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn all_frames_roundtrip() {
+        roundtrip(Frame::Join { version: PROTOCOL_VERSION });
+        roundtrip(Frame::Welcome { config_json: "{\"seed\":7}".into() });
+        roundtrip(Frame::Ready);
+        roundtrip(Frame::RoundState { round: 3, tensors: vec![vec![1.5, -2.0], vec![]] });
+        roundtrip(Frame::Broadcast { round: 3, message: vec![0xFE, 0xD1, 0x17, 0xE0] });
+        roundtrip(Frame::StepAssign {
+            round: 2,
+            attempt: 3,
+            client: 99,
+            plan: FaultPlan {
+                drop_at: Some(DropPhase::AfterUpload),
+                delay_seconds: 1.25,
+                evicted: false,
+            },
+        });
+        roundtrip(Frame::StepAssign {
+            round: 0,
+            attempt: 1,
+            client: 0,
+            plan: FaultPlan { drop_at: None, delay_seconds: 7.5, evicted: true },
+        });
+        roundtrip(Frame::StepResult(StepResult {
+            client: 12,
+            weight: 0.125,
+            loss: 2.5,
+            metric_sums: vec![3.0, 4.0],
+            quant_rel_err: 0.01,
+            surrogate_loss: -1.0,
+            dropped: None,
+            delay_seconds: 0.0,
+            bytes: RoundBytes { up: 100, down: 200, up_msgs: 2, down_msgs: 3 },
+            payload: Some(vec![vec![1.0], vec![2.0, 3.0]]),
+        }));
+        roundtrip(Frame::StepResult(StepResult {
+            client: 5,
+            weight: 0.5,
+            loss: 0.0,
+            metric_sums: vec![],
+            quant_rel_err: 0.0,
+            surrogate_loss: 0.0,
+            dropped: Some(DropPhase::Deadline),
+            delay_seconds: 9.75,
+            bytes: RoundBytes::default(),
+            payload: None,
+        }));
+        roundtrip(Frame::StepError { client: 4, error: "boom".into() });
+        roundtrip(Frame::RoundEnd { round: 9 });
+        roundtrip(Frame::Leave);
+        roundtrip(Frame::Shutdown);
+    }
+
+    /// f64 fields survive bit-exactly — the loopback byte-identity
+    /// contract depends on it.
+    #[test]
+    fn f64_fields_are_bit_exact() {
+        for v in [0.1f64, -0.0, f64::MIN_POSITIVE, 1.0 / 3.0, 1e300] {
+            let mut buf = Vec::new();
+            Frame::StepError { client: 0, error: String::new() }.write_to(&mut buf).unwrap();
+            buf.clear();
+            let f = Frame::StepResult(StepResult {
+                client: 0,
+                weight: v,
+                loss: v,
+                metric_sums: vec![v],
+                quant_rel_err: v,
+                surrogate_loss: v,
+                dropped: None,
+                delay_seconds: v,
+                bytes: RoundBytes::default(),
+                payload: None,
+            });
+            f.write_to(&mut buf).unwrap();
+            match Frame::read_from(&mut Cursor::new(&buf)).unwrap() {
+                Frame::StepResult(r) => {
+                    assert_eq!(r.weight.to_bits(), v.to_bits());
+                    assert_eq!(r.loss.to_bits(), v.to_bits());
+                    assert_eq!(r.metric_sums[0].to_bits(), v.to_bits());
+                    assert_eq!(r.delay_seconds.to_bits(), v.to_bits());
+                }
+                other => panic!("wrong frame {}", other.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn malformed_frames_rejected() {
+        // declared length over the cap: rejected before any allocation
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(Frame::read_from(&mut Cursor::new(&huge)).is_err());
+        // empty frame
+        let empty = 0u32.to_le_bytes().to_vec();
+        assert!(Frame::read_from(&mut Cursor::new(&empty)).is_err());
+        // truncated body
+        let mut buf = Vec::new();
+        Frame::RoundEnd { round: 1 }.write_to(&mut buf).unwrap();
+        assert!(Frame::read_from(&mut Cursor::new(&buf[..buf.len() - 1])).is_err());
+        // unknown tag
+        let bad = [1u32.to_le_bytes().to_vec(), vec![0xEE]].concat();
+        let err = Frame::read_from(&mut Cursor::new(&bad)).unwrap_err().to_string();
+        assert!(err.contains("unknown frame tag"), "got: {err}");
+        // trailing bytes inside a frame body
+        let mut body = Vec::new();
+        Frame::Leave.encode_into(&mut body);
+        body.push(0);
+        assert!(Frame::decode(&body).is_err());
+        // adversarial inner count: RoundState declaring 4G tensors
+        let mut body = Vec::new();
+        {
+            let mut w = Writer::new(&mut body);
+            w.u8(4); // RoundState
+            w.u32(0);
+            w.u32(u32::MAX);
+        }
+        let err = Frame::decode(&body).unwrap_err().to_string();
+        assert!(err.contains("exceeds remaining"), "got: {err}");
+    }
+
+    #[test]
+    fn socket_deadline_reuses_fault_semantics() {
+        // configured deadlines pass through, floored for real sockets
+        assert_eq!(socket_deadline(120.0), Duration::from_secs_f64(120.0));
+        assert_eq!(socket_deadline(0.5), Duration::from_secs_f64(MIN_SOCKET_DEADLINE));
+        // unconfigured: liveness backstop only
+        assert_eq!(socket_deadline(0.0), Duration::from_secs_f64(DEFAULT_SOCKET_DEADLINE));
+    }
+}

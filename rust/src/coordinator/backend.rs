@@ -1,0 +1,516 @@
+//! Client fan-out backends: where `client_step` actually runs.
+//!
+//! The round engine's phase machine decides *what* to compute each round
+//! — cohort, fault plans, broadcast, reduction order — but is agnostic to
+//! *where* the per-client work executes. A [`ClientBackend`] owns that
+//! placement: the engine hands it one shard's `(client, plan)` set plus
+//! the broadcast, and gets back slot-ordered [`ClientOutput`]s it folds
+//! exactly as before.
+//!
+//! Two placements exist:
+//!
+//! * [`InProcessBackend`] — the scoped-thread fan-out the engine always
+//!   had, extracted verbatim. This is the default; every golden, the
+//!   worker/shard-invariance suite, and the zero-allocation contracts run
+//!   through it unchanged.
+//! * [`SocketBackend`] — real TCP loopback. Each shard's assignments are
+//!   framed over per-member connections to standalone `fedlite-client`
+//!   processes ([`crate::coordinator::worker`]), which run the *same*
+//!   `client_step` against a replica trainer and stream results back.
+//!   Fault plans travel with the assignments and all RNG keys stay pure
+//!   in `(round, attempt, client)`, so a socket run's records are
+//!   byte-identical to the in-process run of the same config (CI diffs
+//!   them).
+//!
+//! Membership is a small state machine on the coordinator side:
+//!
+//! ```text
+//! WaitingForMembers ──(roster ≥ min_clients)──▶ Warmup ──▶ Training
+//!         ▲                                                   │
+//!         └── roster shrank below the floor between rounds ◀──┘
+//! ```
+//!
+//! Joins are admitted and leaves reaped only *between* rounds (before the
+//! next round's roster is fixed), so a round's membership is stable for
+//! its whole duration and slot→member assignment stays deterministic.
+//! After each `RoundEnd` every member replies `Ready` (staying) or
+//! `Leave` (departing), so graceful departures are observed
+//! synchronously; the nonblocking sweep before each round additionally
+//! reaps crashed connections and pre-first-round leaves.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::comm::message::Message;
+use crate::comm::transport::{self, Frame, PROTOCOL_VERSION};
+use crate::config::RunConfig;
+use crate::coordinator::engine::{client_stream_key, ClientOutput, RoundAlgorithm};
+use crate::coordinator::faults::FaultPlan;
+use crate::util::pool::scoped_parallel_map;
+use crate::util::rng::Rng;
+
+/// Where one shard's client steps execute. The engine calls
+/// [`ClientBackend::run_shard`] once per shard per attempt and folds the
+/// returned outputs in slot order; everything about *what* to run (keys,
+/// plans, broadcast) is decided by the engine, everything about *where*
+/// by the backend.
+pub trait ClientBackend<A: RoundAlgorithm> {
+    /// Execute `client_step` for every client in `shard` (paired with
+    /// `plans`, same length) and return their outputs in shard-slot
+    /// order. `scratches` is the engine's warm per-slot pool: in-process
+    /// backends lend from it and must return every borrowed scratch;
+    /// remote backends leave it untouched.
+    #[allow(clippy::too_many_arguments)]
+    fn run_shard(
+        &mut self,
+        algo: &A,
+        prep: &A::Prep,
+        broadcast: &Message,
+        round: usize,
+        attempt: u32,
+        shard: &[usize],
+        plans: &[FaultPlan],
+        scratches: &mut Vec<A::Scratch>,
+    ) -> Vec<anyhow::Result<ClientOutput<A::Payload>>>;
+
+    /// The round committed. Socket backends notify members here (the
+    /// window in which clients may leave); in-process backends need not
+    /// do anything.
+    fn round_complete(&mut self, _round: usize) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// The scoped-thread fan-out the engine always used, now behind the
+/// backend seam. Behavior-preserving by construction: same
+/// `client_stream_key` forks, same `scoped_parallel_map` slot order, same
+/// scratch lend/recover discipline.
+pub struct InProcessBackend;
+
+impl<A: RoundAlgorithm> ClientBackend<A> for InProcessBackend {
+    fn run_shard(
+        &mut self,
+        algo: &A,
+        prep: &A::Prep,
+        broadcast: &Message,
+        round: usize,
+        attempt: u32,
+        shard: &[usize],
+        plans: &[FaultPlan],
+        scratches: &mut Vec<A::Scratch>,
+    ) -> Vec<anyhow::Result<ClientOutput<A::Payload>>> {
+        debug_assert_eq!(shard.len(), plans.len(), "one plan per shard client");
+        let env = algo.env();
+        // lend one warm scratch per shard slot (the pool grows to the
+        // largest shard slice once, then persists across shards and
+        // rounds)
+        while scratches.len() < shard.len() {
+            scratches.push(A::Scratch::default());
+        }
+        let mut lent = std::mem::take(scratches);
+        let spare = lent.split_off(shard.len());
+        let tasks: Vec<(usize, Rng, FaultPlan, A::Scratch)> = shard
+            .iter()
+            .zip(plans)
+            .zip(lent)
+            .map(|((&ci, &plan), scratch)| {
+                let key = client_stream_key(algo.stream_tag(), round as u64, ci, attempt);
+                (ci, env.rng.fork(key), plan, scratch)
+            })
+            .collect();
+        // fan the shard across the worker threads; collection is the
+        // shard barrier
+        let pairs = scoped_parallel_map(
+            env.workers,
+            tasks,
+            |_slot, (ci, mut crng, plan, mut scratch)| {
+                let out = algo.client_step(
+                    prep, broadcast, round as u32, ci, &mut crng, &plan, &mut scratch,
+                );
+                (out, scratch)
+            },
+        );
+        // recover the scratches in slot order
+        let mut outs = Vec::with_capacity(shard.len());
+        for (out, scratch) in pairs {
+            outs.push(out);
+            scratches.push(scratch);
+        }
+        scratches.extend(spare);
+        outs
+    }
+}
+
+/// Coordinator-side membership phase (see the module diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServicePhase {
+    /// Blocking on `accept` until the roster reaches `min_clients`.
+    WaitingForMembers,
+    /// Roster is full but the first round hasn't started yet.
+    Warmup,
+    /// Rounds are running against a fixed roster.
+    Training,
+}
+
+/// One admitted member connection.
+struct Member {
+    stream: TcpStream,
+    peer: SocketAddr,
+}
+
+/// The coordinator's listening socket plus its admitted members — the
+/// membership state machine that [`SocketBackend`] drives between rounds.
+pub struct CoordinatorService {
+    listener: TcpListener,
+    members: Vec<Member>,
+    min_clients: usize,
+    /// The run config shipped to joiners in the `Welcome` frame; workers
+    /// rebuild a bit-identical replica trainer from it.
+    config_json: String,
+    /// Per-connection read deadline (reuses the fault layer's
+    /// `round_deadline` semantics, see [`transport::socket_deadline`]).
+    read_timeout: Duration,
+    phase: ServicePhase,
+}
+
+impl CoordinatorService {
+    /// Bind the serve socket. `min_clients` is clamped to at least 1 —
+    /// a roster floor of zero would assign work to nobody.
+    pub fn bind(addr: &str, min_clients: usize, cfg: &RunConfig) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        Ok(CoordinatorService {
+            listener,
+            members: Vec::new(),
+            min_clients: min_clients.max(1),
+            config_json: cfg.to_json().to_string_pretty(),
+            read_timeout: transport::socket_deadline(cfg.round_deadline),
+            phase: ServicePhase::WaitingForMembers,
+        })
+    }
+
+    pub fn local_addr(&self) -> anyhow::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn num_members(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn phase(&self) -> ServicePhase {
+        self.phase
+    }
+
+    /// Run the join handshake on a fresh connection and admit it:
+    /// `Join{version}` → `Welcome{config}` → `Ready`.
+    fn admit(&mut self, stream: TcpStream, peer: SocketAddr) -> anyhow::Result<()> {
+        stream.set_nonblocking(false)?;
+        transport::configure_stream(&stream, Some(self.read_timeout))?;
+        let mut stream = stream;
+        match Frame::read_from(&mut stream)? {
+            Frame::Join { version } => {
+                anyhow::ensure!(
+                    version == PROTOCOL_VERSION,
+                    "member {peer} speaks protocol v{version}, need v{PROTOCOL_VERSION}"
+                );
+            }
+            other => anyhow::bail!("expected Join from {peer}, got {}", other.name()),
+        }
+        Frame::Welcome { config_json: self.config_json.clone() }.write_to(&mut stream)?;
+        match Frame::read_from(&mut stream)? {
+            Frame::Ready => {}
+            other => anyhow::bail!("expected Ready from {peer}, got {}", other.name()),
+        }
+        log::info!("member joined from {peer} ({} total)", self.members.len() + 1);
+        self.members.push(Member { stream, peer });
+        Ok(())
+    }
+
+    /// Accept every connection already queued on the listener without
+    /// blocking. A failed handshake drops that connection only.
+    fn sweep_joins(&mut self) -> anyhow::Result<()> {
+        self.listener.set_nonblocking(true)?;
+        loop {
+            match self.listener.accept() {
+                Ok((stream, peer)) => {
+                    if let Err(e) = self.admit(stream, peer) {
+                        log::warn!("rejecting join from {peer}: {e:#}");
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    self.listener.set_nonblocking(false)?;
+                    return Err(e.into());
+                }
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        Ok(())
+    }
+
+    /// Reap members that left since the last round: a queued `Leave`
+    /// frame or a closed connection. Anything else queued between rounds
+    /// is a protocol violation and drops the member.
+    fn sweep_leaves(&mut self) {
+        let mut keep = Vec::with_capacity(self.members.len());
+        for mut m in self.members.drain(..) {
+            let mut probe = [0u8; 1];
+            if m.stream.set_nonblocking(true).is_err() {
+                log::warn!("member {} unreachable, dropping", m.peer);
+                continue;
+            }
+            let verdict = match m.stream.peek(&mut probe) {
+                Ok(0) => Err("connection closed".to_string()),
+                Ok(_) => {
+                    // a frame is queued; read it blocking — only Leave is
+                    // legal between rounds
+                    if m.stream.set_nonblocking(false).is_err() {
+                        Err("socket error".to_string())
+                    } else {
+                        match Frame::read_from(&mut m.stream) {
+                            Ok(Frame::Leave) => Err("left".to_string()),
+                            Ok(other) => Err(format!(
+                                "unexpected {} between rounds",
+                                other.name()
+                            )),
+                            Err(e) => Err(format!("read error: {e:#}")),
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(()),
+                Err(e) => Err(format!("socket error: {e}")),
+            };
+            match verdict {
+                Ok(()) if m.stream.set_nonblocking(false).is_ok() => keep.push(m),
+                Ok(()) => log::warn!("member {} unreachable, dropping", m.peer),
+                Err(why) => {
+                    log::info!("member {} departed ({why})", m.peer);
+                }
+            }
+        }
+        self.members = keep;
+    }
+
+    /// Fix the roster for the next round: reap leaves, admit queued
+    /// joins, then block for new members until the floor is met.
+    pub fn ensure_members(&mut self) -> anyhow::Result<()> {
+        self.sweep_leaves();
+        self.sweep_joins()?;
+        while self.members.len() < self.min_clients {
+            self.phase = ServicePhase::WaitingForMembers;
+            log::info!(
+                "waiting for members: {}/{}",
+                self.members.len(),
+                self.min_clients
+            );
+            let (stream, peer) = self.listener.accept()?;
+            if let Err(e) = self.admit(stream, peer) {
+                log::warn!("rejecting join from {peer}: {e:#}");
+            }
+        }
+        if self.phase == ServicePhase::WaitingForMembers {
+            self.phase = ServicePhase::Warmup;
+        }
+        Ok(())
+    }
+
+    /// Send one frame to every member.
+    pub fn send_all(&mut self, frame: &Frame) -> anyhow::Result<()> {
+        for m in &mut self.members {
+            frame
+                .write_to(&mut m.stream)
+                .map_err(|e| anyhow::anyhow!("send {} to {}: {e:#}", frame.name(), m.peer))?;
+        }
+        Ok(())
+    }
+
+    fn send_to(&mut self, idx: usize, frame: &Frame) -> anyhow::Result<()> {
+        let m = &mut self.members[idx];
+        frame
+            .write_to(&mut m.stream)
+            .map_err(|e| anyhow::anyhow!("send {} to {}: {e:#}", frame.name(), m.peer))
+    }
+
+    fn read_from(&mut self, idx: usize) -> anyhow::Result<Frame> {
+        let m = &mut self.members[idx];
+        Frame::read_from(&mut m.stream)
+            .map_err(|e| anyhow::anyhow!("read from {}: {e:#}", m.peer))
+    }
+
+    /// After `RoundEnd`, every member declares its intent for the next
+    /// round: `Ready` to stay, `Leave` to depart. Reading exactly one
+    /// reply per member closes the membership race — a graceful leave is
+    /// always observed here, never discovered later as a dead socket in
+    /// the middle of the next round's state sync. A member that answers
+    /// anything else (or whose connection fails) is dropped.
+    fn collect_round_acks(&mut self) {
+        let mut keep = Vec::with_capacity(self.members.len());
+        for mut m in std::mem::take(&mut self.members) {
+            match Frame::read_from(&mut m.stream) {
+                Ok(Frame::Ready) => keep.push(m),
+                Ok(Frame::Leave) => {
+                    log::info!("member {} left after the round", m.peer);
+                }
+                Ok(other) => log::warn!(
+                    "member {}: unexpected {} after RoundEnd, dropping",
+                    m.peer,
+                    other.name()
+                ),
+                Err(e) => log::warn!("member {} lost after RoundEnd ({e:#})", m.peer),
+            }
+        }
+        self.members = keep;
+    }
+
+    /// Best-effort shutdown: tell every member the run is over.
+    pub fn shutdown(&mut self) {
+        for m in &mut self.members {
+            let _ = Frame::Shutdown.write_to(&mut m.stream);
+        }
+        self.members.clear();
+    }
+}
+
+/// The TCP loopback backend: assignments fan out over member connections
+/// in slot order (slot `i` → member `i mod W`), results stream back over
+/// the same FIFO connections, so reading per slot in order cannot
+/// deadlock (every member's frames arrive in its assignment order).
+pub struct SocketBackend {
+    service: CoordinatorService,
+    /// Round whose state/broadcast the members already hold; re-synced
+    /// once per round (not per shard or attempt).
+    synced_round: Option<usize>,
+}
+
+impl SocketBackend {
+    pub fn new(service: CoordinatorService) -> Self {
+        SocketBackend { service, synced_round: None }
+    }
+
+    pub fn service(&self) -> &CoordinatorService {
+        &self.service
+    }
+
+    fn run_shard_inner<A: RoundAlgorithm>(
+        &mut self,
+        algo: &A,
+        prep: &A::Prep,
+        broadcast: &Message,
+        round: usize,
+        attempt: u32,
+        shard: &[usize],
+        plans: &[FaultPlan],
+    ) -> anyhow::Result<Vec<anyhow::Result<ClientOutput<A::Payload>>>> {
+        debug_assert_eq!(shard.len(), plans.len(), "one plan per shard client");
+        if shard.is_empty() {
+            return Ok(Vec::new());
+        }
+        // fix the roster and ship the round's state + broadcast once per
+        // round; later shards and resampled attempts reuse them (the
+        // broadcast can't change between attempts)
+        if self.synced_round != Some(round) {
+            self.service.ensure_members()?;
+            self.service.phase = ServicePhase::Training;
+            let tensors = algo.round_state(prep);
+            self.service
+                .send_all(&Frame::RoundState { round: round as u32, tensors })?;
+            self.service.send_all(&Frame::Broadcast {
+                round: round as u32,
+                message: broadcast.encode(round as u32, 0),
+            })?;
+            self.synced_round = Some(round);
+        }
+        let w = self.service.num_members();
+        anyhow::ensure!(w > 0, "no members to run round {round} on");
+        // write every assignment first, then collect results in slot
+        // order: per-connection FIFO makes this deadlock-free
+        for (slot, (&ci, &plan)) in shard.iter().zip(plans).enumerate() {
+            self.service.send_to(
+                slot % w,
+                &Frame::StepAssign {
+                    round: round as u32,
+                    attempt,
+                    client: ci as u64,
+                    plan,
+                },
+            )?;
+        }
+        let mut outs = Vec::with_capacity(shard.len());
+        for (slot, &ci) in shard.iter().enumerate() {
+            match self.read_from(slot % w)? {
+                Frame::StepResult(r) => {
+                    anyhow::ensure!(
+                        r.client == ci as u64,
+                        "member answered client {} for assigned client {ci}",
+                        r.client
+                    );
+                    // the worker metered its own transfers; replay them
+                    // into the coordinator's meter so per-round deltas,
+                    // cumulative totals, and the engine's meter-vs-partials
+                    // assertion match the in-process run exactly
+                    algo.env().net.absorb(&r.bytes);
+                    let payload = match r.payload {
+                        Some(wire) => Some(algo.payload_from_wire(wire)?),
+                        None => None,
+                    };
+                    outs.push(Ok(ClientOutput {
+                        weight: r.weight,
+                        loss: r.loss,
+                        metric_sums: r.metric_sums,
+                        quant_rel_err: r.quant_rel_err,
+                        surrogate_loss: r.surrogate_loss,
+                        payload,
+                        bytes: r.bytes,
+                        dropped: r.dropped,
+                        delay_seconds: r.delay_seconds,
+                    }));
+                }
+                Frame::StepError { client, error } => {
+                    anyhow::bail!("remote client {client} failed: {error}")
+                }
+                other => anyhow::bail!(
+                    "expected StepResult for client {ci}, got {}",
+                    other.name()
+                ),
+            }
+        }
+        Ok(outs)
+    }
+
+    fn read_from(&mut self, idx: usize) -> anyhow::Result<Frame> {
+        self.service.read_from(idx)
+    }
+}
+
+impl<A: RoundAlgorithm> ClientBackend<A> for SocketBackend {
+    fn run_shard(
+        &mut self,
+        algo: &A,
+        prep: &A::Prep,
+        broadcast: &Message,
+        round: usize,
+        attempt: u32,
+        shard: &[usize],
+        plans: &[FaultPlan],
+        _scratches: &mut Vec<A::Scratch>,
+    ) -> Vec<anyhow::Result<ClientOutput<A::Payload>>> {
+        match self.run_shard_inner(algo, prep, broadcast, round, attempt, shard, plans) {
+            Ok(outs) => outs,
+            // a transport-level failure aborts the round (the engine's
+            // `?` in Aggregate surfaces it); the byte meter still closes
+            Err(e) => vec![Err(e)],
+        }
+    }
+
+    fn round_complete(&mut self, round: usize) -> anyhow::Result<()> {
+        self.service.send_all(&Frame::RoundEnd { round: round as u32 })?;
+        self.service.collect_round_acks();
+        Ok(())
+    }
+}
+
+impl Drop for SocketBackend {
+    fn drop(&mut self) {
+        self.service.shutdown();
+    }
+}

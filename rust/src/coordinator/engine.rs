@@ -11,8 +11,10 @@
 //! ```
 //!
 //! [`RoundEngine`] owns everything the algorithms share — cohort sampling,
-//! fault-plan drawing, the [`crate::util::pool::scoped_parallel_map`]
-//! fan-out, survivor/drop reduction in cohort-slot order, resample
+//! fault-plan drawing, the per-shard fan-out (delegated to a
+//! [`crate::coordinator::backend::ClientBackend`]: in-process worker
+//! threads by default, TCP loopback members in socket deployments),
+//! survivor/drop reduction in cohort-slot order, resample
 //! decisions, byte and simulated-time accumulation, degraded commits, and
 //! [`RoundRecord`] assembly — so that FedLite, SplitFed, and FedAvg run
 //! the *same* round protocol and only the payloads differ (the
@@ -57,11 +59,11 @@ use crate::comm::message::Message;
 use crate::comm::StarNetwork;
 use crate::config::RunConfig;
 use crate::coordinator::aggregator::{ScalarAggregator, SurvivorSet};
+use crate::coordinator::backend::{ClientBackend, InProcessBackend};
 use crate::coordinator::faults::{DropCounts, DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::sampler::ClientSampler;
 use crate::metrics::{RoundRecord, RunLog, TaskMetric};
 use crate::util::logging::{CsvWriter, JsonlWriter};
-use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
 /// The phases of one federated round.
@@ -349,6 +351,53 @@ pub trait RoundAlgorithm: Sync {
 
     /// Emit the periodic progress log line for a committed record.
     fn log_round(&self, rec: &RoundRecord);
+
+    // -- remote-execution hooks ------------------------------------------
+    //
+    // Socket deployments run `client_step` on worker processes holding a
+    // replica trainer. These hooks move the round's mutable state and the
+    // payloads across the wire as flat f32 tensor lists. All have
+    // defaults, so in-process-only algorithms (and the engine's mock
+    // tests) need not implement them.
+
+    /// Per-round mutable state a replica must install before stepping
+    /// (e.g. the split trainer's server-side parameters, which the
+    /// broadcast does not carry). Empty when the broadcast alone fully
+    /// determines `client_step`.
+    fn round_state(&self, _prep: &Self::Prep) -> Vec<Vec<f32>> {
+        Vec::new()
+    }
+
+    /// Install a [`RoundAlgorithm::round_state`] snapshot received over
+    /// the wire (replica side).
+    fn install_round_state(&mut self, state: Vec<Vec<f32>>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.is_empty(),
+            "algorithm carries no round state, got {} tensors",
+            state.len()
+        );
+        Ok(())
+    }
+
+    /// Install the round's decoded broadcast into the replica's own
+    /// parameters (replica side; called before [`RoundAlgorithm::prepare`]
+    /// so the replica's prep is built from the coordinator's parameters).
+    fn install_broadcast(&mut self, _broadcast: &Message) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Flatten a survivor payload into wire tensors (replica side).
+    fn payload_to_wire(&self, _payload: Self::Payload) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::bail!("algorithm has no wire payload codec")
+    }
+
+    /// Rebuild a survivor payload from wire tensors (coordinator side).
+    /// Must be the exact inverse of [`RoundAlgorithm::payload_to_wire`] —
+    /// f32 bits round-trip the wire unchanged, so aggregation over
+    /// remote payloads is bit-identical to in-process.
+    fn payload_from_wire(&self, _wire: Vec<Vec<f32>>) -> anyhow::Result<Self::Payload> {
+        anyhow::bail!("algorithm has no wire payload codec")
+    }
 }
 
 /// Everything one round produced before the commit: the survivor
@@ -378,11 +427,20 @@ pub struct RoundEngine<'a, A: RoundAlgorithm> {
     /// after the round barrier. Grows to the largest cohort seen and then
     /// persists across rounds (the zero-allocation steady state).
     scratches: Vec<A::Scratch>,
+    /// Where client steps execute (in-process threads by default).
+    backend: Box<dyn ClientBackend<A> + 'a>,
 }
 
 impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
     pub fn new(algo: &'a mut A) -> Self {
-        RoundEngine { algo, scratches: Vec::new() }
+        Self::with_backend(algo, Box::new(InProcessBackend))
+    }
+
+    /// Build an engine whose client fan-out runs on the given backend.
+    /// The phase machine, reduction order, and records are backend-
+    /// independent; only the placement of `client_step` changes.
+    pub fn with_backend(algo: &'a mut A, backend: Box<dyn ClientBackend<A> + 'a>) -> Self {
+        RoundEngine { algo, scratches: Vec::new(), backend }
     }
 
     /// Run the configured number of rounds — the trainers' `run` entry
@@ -392,6 +450,9 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
         let mut log = RunLog::default();
         for round in 0..rounds {
             let rec = self.round(round)?;
+            // after the commit: socket backends notify members here,
+            // opening the between-rounds window in which they may leave
+            self.backend.round_complete(round)?;
             if round == 0 || (round + 1) % 10 == 0 {
                 self.algo.log_round(&rec);
             }
@@ -415,7 +476,13 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
         let t0 = Instant::now();
         let prep = self.algo.prepare(round)?;
         self.algo.env().net.begin_round();
-        let outcome = drive(&*self.algo, &prep, round, &mut self.scratches);
+        let outcome = drive(
+            &*self.algo,
+            &prep,
+            round,
+            &mut self.scratches,
+            self.backend.as_mut(),
+        );
         // close the round meter on *every* exit path: an error
         // mid-attempt must still archive this round's delta, or its bytes
         // bleed into the next round's delta and the per-round archive
@@ -475,6 +542,7 @@ fn drive<A: RoundAlgorithm>(
     prep: &A::Prep,
     round: usize,
     scratches: &mut Vec<A::Scratch>,
+    backend: &mut dyn ClientBackend<A>,
 ) -> anyhow::Result<RoundOutcome<A::Accum>> {
     let env = algo.env();
     let shards = env.shards.max(1);
@@ -555,54 +623,33 @@ fn drive<A: RoundAlgorithm>(
                 let mut attempt_sim = 0.0f64;
                 results = Vec::with_capacity(cohort.len());
                 let mut per_client: Vec<(usize, usize, f64)> = Vec::new();
+                let msg = broadcast.as_ref().expect("broadcast built");
                 for g in 0..shards {
                     let (s, e) = shard_bounds(cohort.len(), shards, g);
                     let shard_cohort = &cohort[s..e];
-                    // lend one warm scratch per shard slot (the pool grows
-                    // to the largest shard slice once, then persists across
-                    // shards and rounds)
-                    while scratches.len() < shard_cohort.len() {
-                        scratches.push(A::Scratch::default());
-                    }
-                    let mut lent = std::mem::take(scratches);
-                    let spare = lent.split_off(shard_cohort.len());
-                    let tasks: Vec<(usize, Rng, FaultPlan, A::Scratch)> = shard_cohort
-                        .iter()
-                        .zip(&plans[s..e])
-                        .zip(lent)
-                        .map(|((&ci, &plan), scratch)| {
-                            let key = client_stream_key(
-                                algo.stream_tag(),
-                                round as u64,
-                                ci,
-                                attempt,
-                            );
-                            (ci, env.rng.fork(key), plan, scratch)
-                        })
-                        .collect();
-                    let msg = broadcast.as_ref().expect("broadcast built");
-                    // fan the shard across the worker threads; collection
-                    // is the shard barrier
-                    let pairs = scoped_parallel_map(
-                        env.workers,
-                        tasks,
-                        |_slot, (ci, mut crng, plan, mut scratch)| {
-                            let out = algo.client_step(
-                                prep, msg, round as u32, ci, &mut crng, &plan, &mut scratch,
-                            );
-                            (out, scratch)
-                        },
+                    // the backend owns *where* the steps run (in-process
+                    // worker threads, socket members); it returns the
+                    // shard's outputs in slot order and the engine folds
+                    // them exactly as the unsharded reduction would
+                    let outs = backend.run_shard(
+                        algo,
+                        prep,
+                        msg,
+                        round,
+                        attempt,
+                        shard_cohort,
+                        &plans[s..e],
+                        scratches,
                     );
-                    // recover the scratches (slot order) and fold this
-                    // shard's exact partials: integer counts, a weight-list
-                    // concatenation, u64 byte sums, and an f64 max — all
-                    // order-exact, so the shard merge replays the unsharded
-                    // slot-order reduction bit-for-bit
+                    // fold this shard's exact partials: integer counts, a
+                    // weight-list concatenation, u64 byte sums, and an f64
+                    // max — all order-exact, so the shard merge replays the
+                    // unsharded slot-order reduction bit-for-bit
                     let mut shard_survivors = SurvivorSet::new();
                     let mut shard_drops = DropCounts::default();
                     let mut shard_bytes = RoundBytes::default();
                     per_client.clear();
-                    for (out, scratch) in pairs {
+                    for out in outs {
                         if let Ok(o) = &out {
                             shard_bytes.merge(&o.bytes);
                             per_client.push((
@@ -619,9 +666,7 @@ fn drive<A: RoundAlgorithm>(
                             }
                         }
                         results.push(out);
-                        scratches.push(scratch);
                     }
-                    scratches.extend(spare);
                     // a synchronous round waits for its slowest client, so
                     // the global round time is the max over the shard maxima
                     let shard_sim = env

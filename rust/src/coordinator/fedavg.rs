@@ -359,6 +359,47 @@ impl RoundAlgorithm for FedAvgTrainer {
             rec.uplink_bytes as f64 / 1024.0,
         );
     }
+
+    // -- remote-execution hooks: the FedAvg broadcast carries the whole
+    // model, so there is no extra round state (the default empty
+    // `round_state` applies); installing the broadcast fully syncs a
+    // replica, whose `prepare` then rebuilds the same `global` snapshot.
+
+    fn install_broadcast(&mut self, broadcast: &Message) -> anyhow::Result<()> {
+        let params = match broadcast {
+            Message::ModelBroadcast { params } => params,
+            _ => anyhow::bail!("fedavg broadcast must be a ModelBroadcast"),
+        };
+        let full = self.full_params();
+        anyhow::ensure!(
+            params.len() == full.len(),
+            "broadcast carries {} tensors, model has {}",
+            params.len(),
+            full.len()
+        );
+        let shapes: Vec<Vec<usize>> =
+            full.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        let rebuilt = message::payload_to_tensors(params, &shapes, &full.names);
+        self.split_back(rebuilt);
+        Ok(())
+    }
+
+    fn payload_to_wire(&self, delta: TensorList) -> anyhow::Result<Vec<Vec<f32>>> {
+        Ok(message::tensors_to_payload(&delta))
+    }
+
+    fn payload_from_wire(&self, wire: Vec<Vec<f32>>) -> anyhow::Result<TensorList> {
+        let full = self.full_params();
+        anyhow::ensure!(
+            wire.len() == full.len(),
+            "wire payload carries {} tensors, model has {}",
+            wire.len(),
+            full.len()
+        );
+        let shapes: Vec<Vec<usize>> =
+            full.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        Ok(message::payload_to_tensors(&wire, &shapes, &full.names))
+    }
 }
 
 impl Trainer for FedAvgTrainer {

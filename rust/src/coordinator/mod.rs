@@ -23,8 +23,14 @@
 //!
 //! All model math executes through PJRT artifacts; all transfers go
 //! through the metered [`crate::comm::StarNetwork`].
+//!
+//! *Where* client steps execute is a separate axis: the engine hands each
+//! shard to a [`backend::ClientBackend`] — in-process worker threads by
+//! default, or TCP loopback members ([`backend::SocketBackend`] driving
+//! [`worker`] processes) with identical bits.
 
 pub mod aggregator;
+pub mod backend;
 pub mod checkpoint;
 pub mod client;
 pub mod correction;
@@ -34,6 +40,7 @@ pub mod fedavg;
 pub mod quantize;
 pub mod sampler;
 pub mod split;
+pub mod worker;
 
 use std::sync::Arc;
 

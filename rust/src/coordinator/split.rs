@@ -550,6 +550,70 @@ impl RoundAlgorithm for SplitTrainer {
             rec.quant_error,
         );
     }
+
+    // -- remote-execution hooks: the broadcast carries w_c, so the only
+    // extra round state a replica needs is the server-side w_s (the
+    // server half runs inside `client_step` in split learning).
+
+    fn round_state(&self, _prep: &SplitPrep) -> Vec<Vec<f32>> {
+        message::tensors_to_payload(&self.ws)
+    }
+
+    fn install_round_state(&mut self, state: Vec<Vec<f32>>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.len() == self.ws.len(),
+            "round state carries {} tensors, server model has {}",
+            state.len(),
+            self.ws.len()
+        );
+        let shapes: Vec<Vec<usize>> =
+            self.ws.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        self.ws = message::payload_to_tensors(&state, &shapes, &self.ws.names);
+        Ok(())
+    }
+
+    fn install_broadcast(&mut self, broadcast: &Message) -> anyhow::Result<()> {
+        let params = match broadcast {
+            Message::ModelBroadcast { params } => params,
+            _ => anyhow::bail!("split broadcast must be a ModelBroadcast"),
+        };
+        anyhow::ensure!(
+            params.len() == self.wc.len(),
+            "broadcast carries {} tensors, client model has {}",
+            params.len(),
+            self.wc.len()
+        );
+        let shapes: Vec<Vec<usize>> =
+            self.wc.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        self.wc = message::payload_to_tensors(params, &shapes, &self.wc.names);
+        Ok(())
+    }
+
+    fn payload_to_wire(&self, payload: SplitPayload) -> anyhow::Result<Vec<Vec<f32>>> {
+        let mut wire = message::tensors_to_payload(&payload.wc_grads);
+        wire.extend(message::tensors_to_payload(&payload.ws_grads));
+        Ok(wire)
+    }
+
+    fn payload_from_wire(&self, wire: Vec<Vec<f32>>) -> anyhow::Result<SplitPayload> {
+        anyhow::ensure!(
+            wire.len() == self.wc.len() + self.ws.len(),
+            "wire payload carries {} tensors, split model has {}+{}",
+            wire.len(),
+            self.wc.len(),
+            self.ws.len()
+        );
+        let ws_wire = wire[self.wc.len()..].to_vec();
+        let wc_wire = &wire[..self.wc.len()];
+        let wc_shapes: Vec<Vec<usize>> =
+            self.wc.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        let ws_shapes: Vec<Vec<usize>> =
+            self.ws.tensors.iter().map(|t| t.shape().to_vec()).collect();
+        Ok(SplitPayload {
+            wc_grads: message::payload_to_tensors(wc_wire, &wc_shapes, &self.wc.names),
+            ws_grads: message::payload_to_tensors(&ws_wire, &ws_shapes, &self.ws.names),
+        })
+    }
 }
 
 impl Trainer for SplitTrainer {

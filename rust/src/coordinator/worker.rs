@@ -1,0 +1,165 @@
+//! Replica worker: the `fedlite-client` process behind a
+//! [`crate::coordinator::backend::SocketBackend`].
+//!
+//! A worker connects to a serving coordinator, receives the run config in
+//! the `Welcome` frame, and builds a **full replica trainer** from it —
+//! same seed, same synthetic dataset, same artifact runtime — so its
+//! `client_step` is the very function the in-process backend would have
+//! called. Per round it installs the coordinator's mutable state
+//! (`RoundState`, then the decoded `Broadcast`) before preparing, which
+//! pins the replica's parameters to the coordinator's bit-for-bit; each
+//! `StepAssign` then runs one client with the engine's own
+//! `client_stream_key` fork and the fault plan that traveled with the
+//! assignment. The result frame carries everything [`ClientOutput`]
+//! carries — including the worker-metered [`RoundBytes`], which the
+//! coordinator absorbs into its own meter — so a socket run's records are
+//! byte-identical to the in-process run of the same config.
+//!
+//! [`ClientOutput`]: crate::coordinator::engine::ClientOutput
+//! [`RoundBytes`]: crate::comm::accounting::RoundBytes
+
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use crate::comm::message::Message;
+use crate::comm::transport::{self, Frame, StepResult, PROTOCOL_VERSION};
+use crate::config::{Algorithm, RunConfig};
+use crate::coordinator::engine::{client_stream_key, RoundAlgorithm};
+use crate::coordinator::fedavg::FedAvgTrainer;
+use crate::coordinator::split::SplitTrainer;
+use crate::coordinator::build_dataset;
+use crate::runtime::Runtime;
+use crate::util::json;
+
+/// Join the coordinator at `connect` and serve client steps until the
+/// run ends. `max_rounds > 0` makes the worker leave gracefully after
+/// that many rounds (exercises the membership churn path; `0` serves
+/// until `Shutdown`).
+pub fn run_worker(connect: &str, max_rounds: usize) -> anyhow::Result<()> {
+    let mut stream = TcpStream::connect(connect)
+        .map_err(|e| anyhow::anyhow!("connect {connect}: {e}"))?;
+    // no read deadline on the worker side: between rounds it simply waits
+    // for the coordinator's next frame
+    transport::configure_stream(&stream, None)?;
+    Frame::Join { version: PROTOCOL_VERSION }.write_to(&mut stream)?;
+    let config_json = match Frame::read_from(&mut stream)? {
+        Frame::Welcome { config_json } => config_json,
+        Frame::Shutdown => return Ok(()),
+        other => anyhow::bail!("expected Welcome, got {}", other.name()),
+    };
+    let parsed =
+        json::parse(&config_json).map_err(|e| anyhow::anyhow!("welcome config: {e}"))?;
+    let mut cfg = RunConfig::from_json(&parsed)?;
+    // replicas never write logs or checkpoints: the coordinator owns the
+    // run's outputs, a worker owns only its compute
+    cfg.out_dir = String::new();
+    cfg.validate()?;
+    log::info!(
+        "joined {connect}: task={} algo={} seed={}",
+        cfg.task,
+        cfg.algorithm.name(),
+        cfg.seed
+    );
+    let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
+    let data = build_dataset(&cfg)?;
+    match cfg.algorithm {
+        Algorithm::FedAvg => {
+            let mut t = FedAvgTrainer::new(cfg, rt, data)?;
+            serve_rounds(&mut t, stream, max_rounds)
+        }
+        Algorithm::FedLite | Algorithm::SplitFed => {
+            let mut t = SplitTrainer::new(cfg, rt, data)?;
+            serve_rounds(&mut t, stream, max_rounds)
+        }
+    }
+}
+
+/// The worker's frame loop: install round state, answer assignments,
+/// leave or shut down when told (or when `max_rounds` is reached).
+fn serve_rounds<A: RoundAlgorithm>(
+    algo: &mut A,
+    mut stream: TcpStream,
+    max_rounds: usize,
+) -> anyhow::Result<()> {
+    Frame::Ready.write_to(&mut stream)?;
+    // the round the replica is synced to: (round, prep, broadcast)
+    let mut current: Option<(u32, A::Prep, Message)> = None;
+    // one warm scratch: a worker runs its assignments serially, so a
+    // single slot reaches the same steady state as the engine's pool
+    let mut scratch = A::Scratch::default();
+    let mut rounds_done = 0usize;
+    loop {
+        match Frame::read_from(&mut stream)? {
+            Frame::RoundState { round: _, tensors } => {
+                algo.install_round_state(tensors)?;
+                current = None;
+            }
+            Frame::Broadcast { round, message } => {
+                let (msg, _, _) = Message::decode(&message)?;
+                algo.install_broadcast(&msg)?;
+                // prepare *after* installing, so the prep snapshots the
+                // coordinator's parameters, not the replica's stale ones
+                let prep = algo.prepare(round as usize)?;
+                current = Some((round, prep, msg));
+            }
+            Frame::StepAssign { round, attempt, client, plan } => {
+                let (cur_round, prep, bmsg) = current
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("StepAssign before Broadcast"))?;
+                anyhow::ensure!(
+                    *cur_round == round,
+                    "assignment for round {round}, replica holds round {cur_round}"
+                );
+                let ci = client as usize;
+                // the engine's own key derivation: pure in
+                // (round, attempt, client), so the remote step's RNG
+                // stream is bit-identical to the in-process one
+                let key =
+                    client_stream_key(algo.stream_tag(), round as u64, ci, attempt);
+                let mut crng = algo.env().rng.fork(key);
+                let reply = algo
+                    .client_step(prep, bmsg, round, ci, &mut crng, &plan, &mut scratch)
+                    .and_then(|out| {
+                        let payload = match out.payload {
+                            Some(p) => Some(algo.payload_to_wire(p)?),
+                            None => None,
+                        };
+                        Ok(Frame::StepResult(StepResult {
+                            client,
+                            weight: out.weight,
+                            loss: out.loss,
+                            metric_sums: out.metric_sums,
+                            quant_rel_err: out.quant_rel_err,
+                            surrogate_loss: out.surrogate_loss,
+                            dropped: out.dropped,
+                            delay_seconds: out.delay_seconds,
+                            bytes: out.bytes,
+                            payload,
+                        }))
+                    })
+                    .unwrap_or_else(|e| Frame::StepError {
+                        client,
+                        error: format!("{e:#}"),
+                    });
+                reply.write_to(&mut stream)?;
+            }
+            Frame::RoundEnd { .. } => {
+                // every member answers the round end: Leave to depart,
+                // Ready to stay — the coordinator blocks on this reply,
+                // which is what makes graceful churn race-free
+                rounds_done += 1;
+                if max_rounds > 0 && rounds_done >= max_rounds {
+                    Frame::Leave.write_to(&mut stream)?;
+                    log::info!("served {rounds_done} rounds; leaving");
+                    return Ok(());
+                }
+                Frame::Ready.write_to(&mut stream)?;
+            }
+            Frame::Shutdown => {
+                log::info!("run complete after {rounds_done} rounds; shutting down");
+                return Ok(());
+            }
+            other => anyhow::bail!("unexpected {} frame", other.name()),
+        }
+    }
+}

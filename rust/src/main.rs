@@ -14,6 +14,90 @@ use fedlite::runtime::Runtime;
 use fedlite::util::cli::{Cli, Command, Flag};
 use fedlite::util::logging;
 
+/// Flags shared by `train` and `serve` (a serve is a train whose client
+/// fan-out runs on socket members instead of in-process threads).
+fn train_flags() -> Vec<Flag> {
+    vec![
+        Flag::opt("task", "femnist", "femnist | so_tag | so_nwp"),
+        Flag::opt(
+            "preset",
+            "",
+            "'' = task default (PJRT artifacts); tiny | small | \
+             stress = built-in native <task>_<preset> variants \
+             (no artifacts needed; stress is femnist-only, at \
+             the paper-scale cut)",
+        ),
+        Flag::opt("algorithm", "fedlite", "fedlite | splitfed | fedavg"),
+        Flag::opt(
+            "workers",
+            "0",
+            "cohort worker threads; 0 = one per core, 1 = serial \
+             (results are bit-identical at any value)",
+        ),
+        Flag::opt(
+            "shards",
+            "1",
+            "independent cohort shards per round, each with its \
+             own fault plans and worker fan-out (results are \
+             bit-identical at any value)",
+        ),
+        Flag::opt("rounds", "100", "number of federated rounds"),
+        Flag::opt("clients", "100", "population size M"),
+        Flag::opt("clients-per-round", "0", "cohort size S (0 = preset)"),
+        Flag::opt("local-steps", "1", "FedAvg local steps H"),
+        Flag::opt("q", "0", "subvectors per activation (0 = preset)"),
+        Flag::opt("l", "0", "centroids per group (0 = preset)"),
+        Flag::opt("r", "1", "groups sharing a codebook"),
+        Flag::opt("kmeans-iters", "0", "Lloyd iterations (0 = preset)"),
+        Flag::opt("lambda", "-1", "gradient-correction strength (-1 = preset)"),
+        Flag::opt("quantizer", "native", "native | pjrt (Pallas artifact)"),
+        Flag::opt("lr", "0", "learning rate override (0 = preset)"),
+        Flag::opt("alpha", "0.3", "Dirichlet non-IID concentration"),
+        Flag::opt(
+            "drop-prob",
+            "0",
+            "per-client probability of mid-round failure \
+             (after fwd / after upload / before grad upload)",
+        ),
+        Flag::opt(
+            "straggler-frac",
+            "0",
+            "fraction of clients that straggle each round",
+        ),
+        Flag::opt(
+            "round-deadline",
+            "0",
+            "simulated round deadline in seconds; stragglers \
+             past it are evicted (0 = no deadline)",
+        ),
+        Flag::opt(
+            "min-survivors",
+            "0",
+            "abort + resample the round when fewer clients \
+             survive (0 = never abort)",
+        ),
+        Flag::opt("seed", "17", "root RNG seed"),
+        Flag::opt("eval-every", "10", "eval period in rounds (0 = never)"),
+        Flag::opt("artifacts", "artifacts", "artifacts directory"),
+        Flag::opt("out-dir", "", "write per-round CSV/JSONL here"),
+        Flag::opt("save", "", "write final model checkpoint here"),
+        Flag::opt(
+            "backend",
+            "inprocess",
+            "inprocess | socket (socket = serve client steps to \
+             fedlite-client processes; records are bit-identical)",
+        ),
+        Flag::opt("listen", "127.0.0.1:7878", "socket backend: listen address"),
+        Flag::opt(
+            "min-clients",
+            "1",
+            "socket backend: block until this many members joined \
+             before each round",
+        ),
+        Flag::opt("log", "info", "log level"),
+    ]
+}
+
 fn cli() -> Cli {
     Cli {
         bin: "fedlite",
@@ -22,70 +106,26 @@ fn cli() -> Cli {
             Command {
                 name: "train",
                 about: "run one federated training job",
+                flags: train_flags(),
+            },
+            Command {
+                name: "serve",
+                about: "run one training job serving client steps over TCP \
+                        (train with --backend socket)",
+                flags: train_flags(),
+            },
+            Command {
+                name: "join",
+                about: "join a serving coordinator as a replica worker \
+                        (standalone binary: fedlite-client)",
                 flags: vec![
-                    Flag::opt("task", "femnist", "femnist | so_tag | so_nwp"),
+                    Flag::opt("connect", "127.0.0.1:7878", "coordinator address"),
                     Flag::opt(
-                        "preset",
-                        "",
-                        "'' = task default (PJRT artifacts); tiny | small | \
-                         stress = built-in native <task>_<preset> variants \
-                         (no artifacts needed; stress is femnist-only, at \
-                         the paper-scale cut)",
-                    ),
-                    Flag::opt("algorithm", "fedlite", "fedlite | splitfed | fedavg"),
-                    Flag::opt(
-                        "workers",
+                        "max-rounds",
                         "0",
-                        "cohort worker threads; 0 = one per core, 1 = serial \
-                         (results are bit-identical at any value)",
+                        "leave gracefully after serving this many rounds \
+                         (0 = serve until shutdown)",
                     ),
-                    Flag::opt(
-                        "shards",
-                        "1",
-                        "independent cohort shards per round, each with its \
-                         own fault plans and worker fan-out (results are \
-                         bit-identical at any value)",
-                    ),
-                    Flag::opt("rounds", "100", "number of federated rounds"),
-                    Flag::opt("clients", "100", "population size M"),
-                    Flag::opt("clients-per-round", "0", "cohort size S (0 = preset)"),
-                    Flag::opt("local-steps", "1", "FedAvg local steps H"),
-                    Flag::opt("q", "0", "subvectors per activation (0 = preset)"),
-                    Flag::opt("l", "0", "centroids per group (0 = preset)"),
-                    Flag::opt("r", "1", "groups sharing a codebook"),
-                    Flag::opt("kmeans-iters", "0", "Lloyd iterations (0 = preset)"),
-                    Flag::opt("lambda", "-1", "gradient-correction strength (-1 = preset)"),
-                    Flag::opt("quantizer", "native", "native | pjrt (Pallas artifact)"),
-                    Flag::opt("lr", "0", "learning rate override (0 = preset)"),
-                    Flag::opt("alpha", "0.3", "Dirichlet non-IID concentration"),
-                    Flag::opt(
-                        "drop-prob",
-                        "0",
-                        "per-client probability of mid-round failure \
-                         (after fwd / after upload / before grad upload)",
-                    ),
-                    Flag::opt(
-                        "straggler-frac",
-                        "0",
-                        "fraction of clients that straggle each round",
-                    ),
-                    Flag::opt(
-                        "round-deadline",
-                        "0",
-                        "simulated round deadline in seconds; stragglers \
-                         past it are evicted (0 = no deadline)",
-                    ),
-                    Flag::opt(
-                        "min-survivors",
-                        "0",
-                        "abort + resample the round when fewer clients \
-                         survive (0 = never abort)",
-                    ),
-                    Flag::opt("seed", "17", "root RNG seed"),
-                    Flag::opt("eval-every", "10", "eval period in rounds (0 = never)"),
-                    Flag::opt("artifacts", "artifacts", "artifacts directory"),
-                    Flag::opt("out-dir", "", "write per-round CSV/JSONL here"),
-                    Flag::opt("save", "", "write final model checkpoint here"),
                     Flag::opt("log", "info", "log level"),
                 ],
             },
@@ -153,7 +193,9 @@ fn main() {
 fn dispatch(cmd: &str, args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     logging::init(args.get("log").unwrap_or("info"));
     match cmd {
-        "train" => cmd_train(args),
+        "train" => cmd_train(args, false),
+        "serve" => cmd_train(args, true),
+        "join" => cmd_join(args),
         "exp" => cmd_exp(args),
         "inspect" => cmd_inspect(args),
         "quantize" => cmd_quantize(args),
@@ -161,7 +203,14 @@ fn dispatch(cmd: &str, args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
     }
 }
 
-fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+fn cmd_join(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
+    fedlite::coordinator::worker::run_worker(
+        args.str("connect")?,
+        args.usize("max-rounds")?,
+    )
+}
+
+fn cmd_train(args: &fedlite::util::cli::Args, force_socket: bool) -> anyhow::Result<()> {
     let task = args.str("task")?;
     let preset = args.get("preset").unwrap_or("");
     let native_preset = matches!(preset, "tiny" | "small" | "stress");
@@ -230,8 +279,16 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
             cfg.drop_prob, cfg.straggler_frac, cfg.round_deadline, cfg.min_survivors
         );
     }
+    let backend = if force_socket { "socket" } else { args.str("backend")? };
     let save = args.get("save").unwrap_or("").to_string();
-    let run_log = if !save.is_empty() && cfg.algorithm != Algorithm::FedAvg {
+    let run_log = if backend == "socket" {
+        if !save.is_empty() {
+            log::warn!("--save is not supported with the socket backend; ignoring");
+        }
+        run_socket(cfg, rt, args.str("listen")?, args.usize("min-clients")?)?
+    } else if backend != "inprocess" {
+        anyhow::bail!("unknown backend '{backend}' (try inprocess or socket)")
+    } else if !save.is_empty() && cfg.algorithm != Algorithm::FedAvg {
         // keep the concrete trainer so the final parameters can be saved
         let data = fedlite::coordinator::build_dataset(&cfg)?;
         let cfg_save = cfg.clone();
@@ -261,6 +318,38 @@ fn cmd_train(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
         );
     }
     Ok(())
+}
+
+/// Serve a training run over TCP: bind, wait for members, then drive the
+/// same round engine with a `SocketBackend`. The phase machine, RNG keys,
+/// and reduction order are untouched, so the records are byte-identical
+/// to the in-process run of the same config (CI diffs the CSVs).
+fn run_socket(
+    cfg: RunConfig,
+    rt: Arc<Runtime>,
+    listen: &str,
+    min_clients: usize,
+) -> anyhow::Result<fedlite::metrics::RunLog> {
+    use fedlite::coordinator::backend::{CoordinatorService, SocketBackend};
+    use fedlite::coordinator::engine::RoundEngine;
+    cfg.validate()?;
+    let service = CoordinatorService::bind(listen, min_clients, &cfg)?;
+    log::info!(
+        "serving on {} (min_clients={})",
+        service.local_addr()?,
+        min_clients.max(1)
+    );
+    let data = fedlite::coordinator::build_dataset(&cfg)?;
+    match cfg.algorithm {
+        Algorithm::FedAvg => {
+            let mut t = fedlite::coordinator::fedavg::FedAvgTrainer::new(cfg, rt, data)?;
+            RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service))).run()
+        }
+        Algorithm::FedLite | Algorithm::SplitFed => {
+            let mut t = fedlite::coordinator::split::SplitTrainer::new(cfg, rt, data)?;
+            RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service))).run()
+        }
+    }
 }
 
 fn cmd_exp(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {

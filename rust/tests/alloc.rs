@@ -1,6 +1,6 @@
 //! Steady-state allocation audit for the client-side hot path.
 //!
-//! A counting global allocator wraps `System`. Three phases, one contract:
+//! A counting global allocator wraps `System`. Four phases, one contract:
 //!
 //! 1. **Quantizer only** (the PR 4 guarantee): after one warm-up call at
 //!    a fixed shape, repeated `quantize_into` calls perform **zero** heap
@@ -19,6 +19,10 @@
 //!    heap allocations — Floyd's sampling never materializes the
 //!    population, so the scratch stays O(cohort) no matter how large the
 //!    id range grows.
+//! 4. **The simulated wire** (the PR 8 guarantee): a warm
+//!    [`fedlite::comm::Link::transfer`] encodes into the link's reused
+//!    scratch buffer, so K steady-state transfers allocate exactly K
+//!    times — only the decoded payload `Vec` each receiver keeps.
 //!
 //! Everything runs at `workers = 1` — exactly what the round engine's
 //! cohort workers use, since the engine already fans out over clients.
@@ -205,9 +209,47 @@ fn million_client_sampling_steady_state() {
     std::hint::black_box(&scratch);
 }
 
+/// Phase 4: the simulated wire (the PR 8 guarantee). A warm
+/// [`Link::transfer`] reuses the link's scratch buffer on the encode
+/// side, so the only steady-state allocation per transfer is the decoded
+/// payload `Vec` handed to the receiver — exactly one per message
+/// (`Reader::f32s` collects through an exact-size iterator).
+fn link_transfer_steady_state() {
+    use std::sync::Arc;
+
+    use fedlite::comm::accounting::{ByteMeter, Direction};
+    use fedlite::comm::channel::{Link, LinkSpec};
+    use fedlite::comm::message::Message;
+
+    let meter = Arc::new(ByteMeter::new());
+    let link = Link::new(
+        LinkSpec::mobile_downlink(),
+        Direction::Downlink,
+        Arc::clone(&meter),
+    );
+    let msg = Message::GradDownload { grad: vec![0.5; 256], b: 1, d: 256 };
+    // warm-up: the encode scratch grows to the message's wire size
+    let (_, n) = link.transfer(&msg, 0, 0).unwrap();
+    assert_eq!(n, msg.wire_len());
+    const K: usize = 8;
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..K {
+        let (back, _) = link.transfer(&msg, 1, i as u32).unwrap();
+        std::hint::black_box(&back);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        K,
+        "a warm transfer must allocate exactly once (the decoded payload \
+         Vec); the encode side reuses the link scratch"
+    );
+}
+
 #[test]
 fn client_hot_paths_steady_state_perform_zero_allocations() {
     quantizer_steady_state();
     client_path_steady_state();
     million_client_sampling_steady_state();
+    link_transfer_steady_state();
 }

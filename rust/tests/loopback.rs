@@ -1,0 +1,181 @@
+//! Loopback socket deployment: bit-parity with the in-process backend.
+//!
+//! The `ClientBackend` seam's acceptance contract: a [`SocketBackend`]
+//! run — real TCP frames on 127.0.0.1 to replica workers running the
+//! very loop inside the `fedlite-client` binary — must produce a round
+//! log **bit-identical** to the in-process run of the same config. The
+//! workers rebuild full replica trainers from the `Welcome` config, so
+//! every float that lands in a record was computed remotely, shipped
+//! back through `StepResult` frames, and folded by the engine in the
+//! same slot order as ever.
+//!
+//! Covered here: both algorithm families (split/FedLite and whole-model
+//! FedAvg), fault injection over the wire (the plans travel with the
+//! assignments), and membership churn (a member leaves gracefully
+//! mid-run while the roster stays at the floor).
+
+use std::sync::Arc;
+use std::thread;
+
+use fedlite::config::{Algorithm, RunConfig};
+use fedlite::coordinator::backend::{CoordinatorService, SocketBackend};
+use fedlite::coordinator::engine::RoundEngine;
+use fedlite::coordinator::fedavg::FedAvgTrainer;
+use fedlite::coordinator::split::SplitTrainer;
+use fedlite::coordinator::worker::run_worker;
+use fedlite::coordinator::{build_dataset, build_trainer, Trainer};
+use fedlite::metrics::RunLog;
+use fedlite::runtime::Runtime;
+
+fn tiny_cfg(algo: Algorithm, seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::tiny("femnist").unwrap();
+    cfg.algorithm = algo;
+    cfg.rounds = 3;
+    cfg.num_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 2;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 1;
+    cfg.workers = 1;
+    cfg.seed = seed;
+    cfg
+}
+
+/// The in-process reference run (the path every golden pins).
+fn in_process_run(cfg: RunConfig) -> RunLog {
+    let rt = Arc::new(Runtime::native());
+    build_trainer(cfg, rt).unwrap().run().unwrap()
+}
+
+/// Serve `cfg` over a loopback socket with one worker thread per entry
+/// in `worker_rounds` (each entry is that worker's `--max-rounds`; 0 =
+/// stay until shutdown). Returns the coordinator's round log.
+fn socket_run(cfg: RunConfig, min_clients: usize, worker_rounds: &[usize]) -> RunLog {
+    let service = CoordinatorService::bind("127.0.0.1:0", min_clients, &cfg).unwrap();
+    let addr = service.local_addr().unwrap().to_string();
+    let handles: Vec<_> = worker_rounds
+        .iter()
+        .map(|&max_rounds| {
+            let addr = addr.clone();
+            thread::spawn(move || run_worker(&addr, max_rounds))
+        })
+        .collect();
+    let rt = Arc::new(Runtime::native());
+    let data = build_dataset(&cfg).unwrap();
+    let log = match cfg.algorithm {
+        Algorithm::FedAvg => {
+            let mut t = FedAvgTrainer::new(cfg, rt, data).unwrap();
+            RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service)))
+                .run()
+                .unwrap()
+        }
+        Algorithm::FedLite | Algorithm::SplitFed => {
+            let mut t = SplitTrainer::new(cfg, rt, data).unwrap();
+            RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service)))
+                .run()
+                .unwrap()
+        }
+    };
+    // the engine (and with it the backend) dropped above, sending
+    // Shutdown: every stay-until-shutdown worker exits cleanly
+    for h in handles {
+        h.join().expect("worker thread panicked").expect("worker failed");
+    }
+    log
+}
+
+/// Everything except wall-clock must match bit for bit.
+fn assert_identical(a: &RunLog, b: &RunLog) {
+    assert_eq!(a.rounds.len(), b.rounds.len());
+    for (x, y) in a.rounds.iter().zip(&b.rounds) {
+        let r = x.round;
+        assert_eq!(x.round, y.round);
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "loss r{r}");
+        assert_eq!(
+            x.train_metric.to_bits(),
+            y.train_metric.to_bits(),
+            "metric r{r}"
+        );
+        assert_eq!(
+            x.quant_error.to_bits(),
+            y.quant_error.to_bits(),
+            "quant_error r{r}"
+        );
+        assert_eq!(x.uplink_bytes, y.uplink_bytes, "uplink r{r}");
+        assert_eq!(x.downlink_bytes, y.downlink_bytes, "downlink r{r}");
+        assert_eq!(x.cumulative_uplink, y.cumulative_uplink, "cumulative r{r}");
+        assert_eq!(
+            x.sim_comm_seconds.to_bits(),
+            y.sim_comm_seconds.to_bits(),
+            "sim time r{r}"
+        );
+        assert_eq!(
+            x.eval_loss.map(f64::to_bits),
+            y.eval_loss.map(f64::to_bits),
+            "eval loss r{r}"
+        );
+        assert_eq!(
+            x.eval_metric.map(f64::to_bits),
+            y.eval_metric.map(f64::to_bits),
+            "eval metric r{r}"
+        );
+        assert_eq!(x.cohort_sampled, y.cohort_sampled, "sampled r{r}");
+        assert_eq!(x.cohort_survived, y.cohort_survived, "survived r{r}");
+        assert_eq!(x.dropped, y.dropped, "drop phases r{r}");
+        assert_eq!(x.attempts, y.attempts, "attempts r{r}");
+        assert_eq!(
+            x.surrogate_loss.to_bits(),
+            y.surrogate_loss.to_bits(),
+            "surrogate loss r{r}"
+        );
+    }
+}
+
+/// The headline contract: socket and in-process runs of the same config
+/// are bit-identical, for the split family and the whole-model baseline.
+#[test]
+fn socket_runs_bit_identical_to_in_process() {
+    for (algo, seed) in [
+        (Algorithm::FedLite, 51u64),
+        (Algorithm::SplitFed, 52),
+        (Algorithm::FedAvg, 53),
+    ] {
+        let reference = in_process_run(tiny_cfg(algo, seed));
+        let socketed = socket_run(tiny_cfg(algo, seed), 2, &[0, 0]);
+        assert_identical(&reference, &socketed);
+        // not vacuous: training really happened over the wire
+        assert!(socketed.rounds.iter().all(|r| r.train_loss.is_finite()));
+        assert!(socketed.rounds.iter().all(|r| r.uplink_bytes > 0));
+    }
+}
+
+/// Fault plans travel with the assignments, so a faulty socket run
+/// (dropout + stragglers + deadline eviction + survivor floor, with
+/// resampling live) keeps bit-parity too.
+#[test]
+fn faulty_socket_run_bit_identical_to_in_process() {
+    let mk = || {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 54);
+        cfg.drop_prob = 0.3;
+        cfg.straggler_frac = 0.5;
+        cfg.round_deadline = 0.05;
+        cfg.min_survivors = 1;
+        cfg
+    };
+    let reference = in_process_run(mk());
+    let socketed = socket_run(mk(), 2, &[0, 0]);
+    assert_identical(&reference, &socketed);
+    let dropped: usize = socketed.rounds.iter().map(|r| r.dropped.total()).sum();
+    assert!(dropped > 0, "fault config injected nothing over the socket");
+}
+
+/// Membership churn: three members serve round 0, one leaves gracefully
+/// (`--max-rounds 1`), and the remaining two — still at the floor —
+/// carry the rest of the run. Membership count only moves the
+/// slot→member mapping, never a bit of the records.
+#[test]
+fn member_leave_between_rounds_keeps_bit_parity() {
+    let reference = in_process_run(tiny_cfg(Algorithm::FedLite, 55));
+    let socketed = socket_run(tiny_cfg(Algorithm::FedLite, 55), 2, &[0, 1, 0]);
+    assert_identical(&reference, &socketed);
+}

@@ -365,9 +365,12 @@ fn prop_compression_ratio_formula_monotonicity() {
 
 #[test]
 fn prop_message_roundtrip_random() {
+    // every wire variant — including empty payloads and packed codewords
+    // saturating the max-L edge — encodes to exactly `wire_len()` bytes
+    // and decodes back to `(itself, round, client)`
     forall("message-roundtrip", |rng| {
         let n = rng.below(200);
-        let msg = match rng.below(4) {
+        let msg = match rng.below(6) {
             0 => Message::ActivationUpload {
                 z: rng.normal_vec(n, 0.0, 1.0), b: n.max(1), d: 1,
             },
@@ -382,13 +385,41 @@ fn prop_message_roundtrip_random() {
                     })
                     .collect(),
             },
-            _ => Message::ModelBroadcast {
+            3 => Message::ModelBroadcast {
                 params: (0..rng.below(5))
                     .map(|_| {
                         let len = rng.below(50);
                         rng.normal_vec(len, 0.0, 1.0)
                     })
                     .collect(),
+            },
+            4 => {
+                // quantized upload with every code at L-1: the widest
+                // codeword `pack` can emit, so each bits_per_code(L)
+                // field is all-ones and any bit lost in framing would
+                // break the equality below
+                let (cfg, b, d, _z) = rand_pq_setup(rng);
+                let ng = cfg.group_size(b);
+                let codes = vec![(cfg.l - 1) as u32; cfg.r * ng];
+                let dsub = d / cfg.q;
+                let codebooks = rng.normal_vec(cfg.r * cfg.l * dsub, 0.0, 1.0);
+                let msg = Message::from_pq(&cfg, b, d, &codebooks, &codes);
+                assert_eq!(
+                    msg.unpack_codes().unwrap(),
+                    codes,
+                    "max-L codewords must survive packing"
+                );
+                msg
+            }
+            _ => match rng.below(3) {
+                // empty payloads: zero-length tensors and zero-tensor
+                // lists are legal frames (a bias-free layer, an empty
+                // sync) and must frame like any other
+                0 => Message::ClientGrads { grads: Vec::new() },
+                1 => Message::ModelBroadcast {
+                    params: vec![Vec::new(); rng.below(3)],
+                },
+                _ => Message::ActivationUpload { z: Vec::new(), b: 0, d: 0 },
             },
         };
         let round = rng.below(1000) as u32;
