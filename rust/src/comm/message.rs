@@ -77,6 +77,28 @@ impl Message {
         }
     }
 
+    /// Coordinator-side codeword validation against the PQ geometry (the
+    /// byzantine defense): the packed stream must be *exactly*
+    /// `packed_len(r·ng, l)` bytes — the wire codec itself only requires
+    /// a lower bound — and every unpacked code must index a real centroid
+    /// (`< 2^bits_per_code(l)`, checked by `unpack`). Honest uploads
+    /// always pass (pure integer checks, no RNG), so running the defense
+    /// unconditionally changes no honest bits. Non-quantized messages
+    /// pass vacuously.
+    pub fn validate_codewords(&self) -> anyhow::Result<()> {
+        if let Message::QuantizedUpload { r, l, ng, packed_codes, .. } = self {
+            let need = packing::packed_len(r * ng, *l);
+            anyhow::ensure!(
+                packed_codes.len() == need,
+                "codeword stream length {} != packed length {need}",
+                packed_codes.len()
+            );
+            self.unpack_codes().map(|_| ())
+        } else {
+            Ok(())
+        }
+    }
+
     fn type_id(&self) -> u8 {
         match self {
             Message::ActivationUpload { .. } => 1,

@@ -37,11 +37,13 @@ use std::time::Duration;
 
 use super::accounting::RoundBytes;
 use super::message::{Reader, Writer};
+use crate::config::ByzantineKind;
 use crate::coordinator::faults::{DropPhase, FaultPlan};
 
 /// Bumped on any frame-layout change; [`Frame::Join`] carries it so a
 /// stale client fails the handshake instead of desyncing mid-round.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: `StepAssign` plans carry a byzantine-kind byte.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Upper bound on a single frame body. Large enough for a stress-preset
 /// model broadcast with room to spare; small enough that a corrupt or
@@ -112,6 +114,8 @@ fn drop_phase_to_u8(p: Option<DropPhase>) -> u8 {
         Some(DropPhase::AfterUpload) => 2,
         Some(DropPhase::BeforeGradUpload) => 3,
         Some(DropPhase::Deadline) => 4,
+        Some(DropPhase::RejectedCodeword) => 5,
+        Some(DropPhase::PeerFailure) => 6,
     }
 }
 
@@ -122,7 +126,32 @@ fn drop_phase_from_u8(v: u8) -> anyhow::Result<Option<DropPhase>> {
         2 => Some(DropPhase::AfterUpload),
         3 => Some(DropPhase::BeforeGradUpload),
         4 => Some(DropPhase::Deadline),
+        5 => Some(DropPhase::RejectedCodeword),
+        6 => Some(DropPhase::PeerFailure),
         t => anyhow::bail!("bad drop-phase tag {t}"),
+    })
+}
+
+fn byz_to_u8(b: Option<ByzantineKind>) -> u8 {
+    match b {
+        None => 0,
+        Some(ByzantineKind::GradScale) => 1,
+        Some(ByzantineKind::SignFlip) => 2,
+        Some(ByzantineKind::LabelFlip) => 3,
+        Some(ByzantineKind::CorruptCodeword) => 4,
+        Some(ByzantineKind::Replay) => 5,
+    }
+}
+
+fn byz_from_u8(v: u8) -> anyhow::Result<Option<ByzantineKind>> {
+    Ok(match v {
+        0 => None,
+        1 => Some(ByzantineKind::GradScale),
+        2 => Some(ByzantineKind::SignFlip),
+        3 => Some(ByzantineKind::LabelFlip),
+        4 => Some(ByzantineKind::CorruptCodeword),
+        5 => Some(ByzantineKind::Replay),
+        t => anyhow::bail!("bad byzantine-kind tag {t}"),
     })
 }
 
@@ -160,6 +189,14 @@ impl Frame {
         }
     }
 
+    /// Serialize the frame body (no length prefix) — the exact buffer
+    /// [`Frame::decode`] consumes; [`Frame::write_to`] adds the length.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
     /// Serialize the frame body (no length prefix) into `out`.
     fn encode_into(&self, out: &mut Vec<u8>) {
         out.clear();
@@ -184,6 +221,7 @@ impl Frame {
                 w.u8(drop_phase_to_u8(plan.drop_at));
                 w.f64(plan.delay_seconds);
                 w.u8(plan.evicted as u8);
+                w.u8(byz_to_u8(plan.byz));
             }
             Frame::StepResult(r) => {
                 w.u64(r.client);
@@ -233,17 +271,26 @@ impl Frame {
                     drop_at != Some(DropPhase::Deadline),
                     "plans never carry Deadline directly"
                 );
+                anyhow::ensure!(
+                    drop_at != Some(DropPhase::RejectedCodeword),
+                    "plans never carry RejectedCodeword (it is a defense outcome)"
+                );
+                anyhow::ensure!(
+                    drop_at != Some(DropPhase::PeerFailure),
+                    "plans never carry PeerFailure (it is a coordinator-side verdict)"
+                );
                 let delay_seconds = r.f64()?;
                 let evicted = match r.u8()? {
                     0 => false,
                     1 => true,
                     t => anyhow::bail!("bad bool tag {t}"),
                 };
+                let byz = byz_from_u8(r.u8()?)?;
                 Frame::StepAssign {
                     round,
                     attempt,
                     client,
-                    plan: FaultPlan { drop_at, delay_seconds, evicted },
+                    plan: FaultPlan { drop_at, delay_seconds, evicted, byz },
                 }
             }
             7 => {
@@ -374,14 +421,23 @@ mod tests {
                 drop_at: Some(DropPhase::AfterUpload),
                 delay_seconds: 1.25,
                 evicted: false,
+                byz: None,
             },
         });
         roundtrip(Frame::StepAssign {
             round: 0,
             attempt: 1,
             client: 0,
-            plan: FaultPlan { drop_at: None, delay_seconds: 7.5, evicted: true },
+            plan: FaultPlan { drop_at: None, delay_seconds: 7.5, evicted: true, byz: None },
         });
+        for kind in ByzantineKind::ALL {
+            roundtrip(Frame::StepAssign {
+                round: 1,
+                attempt: 1,
+                client: 7,
+                plan: FaultPlan { byz: Some(kind), ..FaultPlan::default() },
+            });
+        }
         roundtrip(Frame::StepResult(StepResult {
             client: 12,
             weight: 0.125,
@@ -403,6 +459,19 @@ mod tests {
             surrogate_loss: 0.0,
             dropped: Some(DropPhase::Deadline),
             delay_seconds: 9.75,
+            bytes: RoundBytes::default(),
+            payload: None,
+        }));
+        // a rejected-codeword drop is a legal *result* (defense outcome)
+        roundtrip(Frame::StepResult(StepResult {
+            client: 6,
+            weight: 0.0,
+            loss: 0.0,
+            metric_sums: vec![],
+            quant_rel_err: 0.0,
+            surrogate_loss: 0.0,
+            dropped: Some(DropPhase::RejectedCodeword),
+            delay_seconds: 0.0,
             bytes: RoundBytes::default(),
             payload: None,
         }));
@@ -467,6 +536,36 @@ mod tests {
         Frame::Leave.encode_into(&mut body);
         body.push(0);
         assert!(Frame::decode(&body).is_err());
+        // a plan claiming a defense-only drop phase (RejectedCodeword)
+        let mut body = Vec::new();
+        {
+            let mut w = Writer::new(&mut body);
+            w.u8(6); // StepAssign
+            w.u32(0);
+            w.u32(1);
+            w.u64(3);
+            w.u8(5); // RejectedCodeword
+            w.f64(0.0);
+            w.u8(0);
+            w.u8(0);
+        }
+        let err = Frame::decode(&body).unwrap_err().to_string();
+        assert!(err.contains("RejectedCodeword"), "got: {err}");
+        // a plan with an unknown byzantine-kind tag
+        let mut body = Vec::new();
+        {
+            let mut w = Writer::new(&mut body);
+            w.u8(6); // StepAssign
+            w.u32(0);
+            w.u32(1);
+            w.u64(3);
+            w.u8(0);
+            w.f64(0.0);
+            w.u8(0);
+            w.u8(9); // no such ByzantineKind
+        }
+        let err = Frame::decode(&body).unwrap_err().to_string();
+        assert!(err.contains("byzantine-kind"), "got: {err}");
         // adversarial inner count: RoundState declaring 4G tensors
         let mut body = Vec::new();
         {

@@ -47,6 +47,94 @@ pub enum QuantizerEngine {
     Pjrt,
 }
 
+/// Dishonest-client attack model. The *schedule* (which sampled client
+/// misbehaves, per `(round, attempt, client)` RNG fork) is drawn by
+/// [`crate::coordinator::faults`]; the kind selects what a flagged client
+/// does. See the README "Untrusted clients" threat-model table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ByzantineKind {
+    /// Scale the uploaded update by a large factor (gradient boosting).
+    GradScale,
+    /// Negate the uploaded update (model-poisoning sign flip).
+    SignFlip,
+    /// Train on rotated (poisoned) labels.
+    LabelFlip,
+    /// Corrupt the packed PQ codeword stream (FedLite uploads only; the
+    /// coordinator's codeword validation rejects it).
+    CorruptCodeword,
+    /// Replay the previously synced state: a zero update at full weight
+    /// (free-riding / stale-upload replay).
+    Replay,
+}
+
+impl ByzantineKind {
+    pub const ALL: [ByzantineKind; 5] = [
+        ByzantineKind::GradScale,
+        ByzantineKind::SignFlip,
+        ByzantineKind::LabelFlip,
+        ByzantineKind::CorruptCodeword,
+        ByzantineKind::Replay,
+    ];
+
+    pub fn parse(s: &str) -> anyhow::Result<ByzantineKind> {
+        Ok(match s {
+            "grad_scale" => ByzantineKind::GradScale,
+            "sign_flip" => ByzantineKind::SignFlip,
+            "label_flip" => ByzantineKind::LabelFlip,
+            "corrupt_codeword" => ByzantineKind::CorruptCodeword,
+            "replay" => ByzantineKind::Replay,
+            other => anyhow::bail!(
+                "unknown byzantine kind '{other}' (try grad_scale, sign_flip, \
+                 label_flip, corrupt_codeword, or replay)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ByzantineKind::GradScale => "grad_scale",
+            ByzantineKind::SignFlip => "sign_flip",
+            ByzantineKind::LabelFlip => "label_flip",
+            ByzantineKind::CorruptCodeword => "corrupt_codeword",
+            ByzantineKind::Replay => "replay",
+        }
+    }
+}
+
+/// How survivor updates fold into the round aggregate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregationRule {
+    /// Survivor-weighted mean — the paper's aggregation, and the rule
+    /// every golden fixture pins byte-for-byte.
+    Mean,
+    /// Coordinate-wise trimmed mean over survivor updates (unweighted;
+    /// robust to a bounded fraction of outliers).
+    Trimmed,
+    /// Coordinate-wise median over survivor updates (unweighted).
+    Median,
+}
+
+impl AggregationRule {
+    pub fn parse(s: &str) -> anyhow::Result<AggregationRule> {
+        Ok(match s {
+            "mean" => AggregationRule::Mean,
+            "trimmed" => AggregationRule::Trimmed,
+            "median" => AggregationRule::Median,
+            other => anyhow::bail!(
+                "unknown aggregation rule '{other}' (try mean, trimmed, or median)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggregationRule::Mean => "mean",
+            AggregationRule::Trimmed => "trimmed",
+            AggregationRule::Median => "median",
+        }
+    }
+}
+
 /// Full run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -94,6 +182,19 @@ pub struct RunConfig {
     /// Abort + resample the round when fewer clients survive (bounded by
     /// `coordinator::engine::MAX_SAMPLING_ATTEMPTS`). 0 = never abort.
     pub min_survivors: usize,
+    /// Per-client, per-round probability of acting byzantine (attack
+    /// schedules are `(round, attempt, client)` RNG forks; see
+    /// `coordinator::faults`). 0 = everyone honest, bit-identical to an
+    /// engine without the byzantine layer.
+    pub byzantine_frac: f64,
+    /// Which attack flagged byzantine clients mount.
+    pub byzantine_kind: ByzantineKind,
+    /// L2-norm cap applied to each survivor update before aggregation
+    /// (defense against scaled gradients). 0 = no clipping.
+    pub clip_norm: f64,
+    /// Survivor aggregation rule (`mean` reproduces the historical bits;
+    /// `trimmed`/`median` are the robust defenses).
+    pub aggregation: AggregationRule,
     /// Worker threads for the per-round cohort fan-out (0 = auto:
     /// [`crate::util::pool::ThreadPool::default_size`]). `1` recovers the
     /// serial round loop; results are bit-identical at any value.
@@ -132,6 +233,10 @@ impl Default for RunConfig {
             straggler_frac: 0.0,
             round_deadline: 0.0,
             min_survivors: 0,
+            byzantine_frac: 0.0,
+            byzantine_kind: ByzantineKind::SignFlip,
+            clip_norm: 0.0,
+            aggregation: AggregationRule::Mean,
             workers: 0,
             shards: 1,
         }
@@ -286,6 +391,10 @@ impl RunConfig {
         o.insert("straggler_frac", Value::Num(self.straggler_frac));
         o.insert("round_deadline", Value::Num(self.round_deadline));
         o.insert("min_survivors", Value::from_usize(self.min_survivors));
+        o.insert("byzantine_frac", Value::Num(self.byzantine_frac));
+        o.insert("byzantine_kind", Value::Str(self.byzantine_kind.name().into()));
+        o.insert("clip_norm", Value::Num(self.clip_norm));
+        o.insert("aggregation", Value::Str(self.aggregation.name().into()));
         o.insert("workers", Value::from_usize(self.workers));
         o.insert("shards", Value::from_usize(self.shards));
         Value::Obj(o)
@@ -331,6 +440,13 @@ impl RunConfig {
         c.straggler_frac = get_f("straggler_frac", c.straggler_frac);
         c.round_deadline = get_f("round_deadline", c.round_deadline);
         c.min_survivors = get_us("min_survivors", c.min_survivors);
+        // byzantine/defense knobs default tolerant of pre-PR-9 JSON
+        c.byzantine_frac = get_f("byzantine_frac", c.byzantine_frac);
+        c.byzantine_kind =
+            ByzantineKind::parse(&get_s("byzantine_kind", c.byzantine_kind.name()))?;
+        c.clip_norm = get_f("clip_norm", c.clip_norm);
+        c.aggregation =
+            AggregationRule::parse(&get_s("aggregation", c.aggregation.name()))?;
         c.workers = get_us("workers", c.workers);
         c.shards = get_us("shards", c.shards);
         Ok(c)
@@ -366,6 +482,16 @@ impl RunConfig {
             "min_survivors {} > clients_per_round {}",
             self.min_survivors,
             self.clients_per_round
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.byzantine_frac),
+            "byzantine_frac {} outside [0, 1]",
+            self.byzantine_frac
+        );
+        anyhow::ensure!(
+            self.clip_norm >= 0.0 && self.clip_norm.is_finite(),
+            "clip_norm {} must be finite and >= 0",
+            self.clip_norm
         );
         anyhow::ensure!(self.shards >= 1, "need >= 1 shard");
         Ok(())
@@ -455,6 +581,36 @@ mod tests {
         c.min_survivors = 0;
         c.shards = 0;
         assert!(c.validate().is_err());
+        c.shards = 1;
+        c.byzantine_frac = 1.2;
+        assert!(c.validate().is_err());
+        c.byzantine_frac = 0.5;
+        c.clip_norm = -1.0;
+        assert!(c.validate().is_err());
+        c.clip_norm = f64::NAN;
+        assert!(c.validate().is_err());
+        c.clip_norm = 2.0;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn byzantine_and_aggregation_parse() {
+        for k in ByzantineKind::ALL {
+            assert_eq!(ByzantineKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ByzantineKind::parse("ddos").is_err());
+        for r in [AggregationRule::Mean, AggregationRule::Trimmed, AggregationRule::Median] {
+            assert_eq!(AggregationRule::parse(r.name()).unwrap(), r);
+        }
+        assert!(AggregationRule::parse("krum").is_err());
+        // pre-PR-9 JSON (no byzantine keys) parses to the honest defaults
+        let old = r#"{"task": "femnist", "rounds": 3, "drop_prob": 0.25}"#;
+        let back = RunConfig::from_json(&json::parse(old).unwrap()).unwrap();
+        assert_eq!(back.byzantine_frac, 0.0);
+        assert_eq!(back.byzantine_kind, ByzantineKind::SignFlip);
+        assert_eq!(back.clip_norm, 0.0);
+        assert_eq!(back.aggregation, AggregationRule::Mean);
+        assert_eq!(back.rounds, 3);
     }
 
     #[test]
@@ -470,6 +626,10 @@ mod tests {
         c.straggler_frac = 0.75;
         c.round_deadline = 3.5;
         c.min_survivors = 2;
+        c.byzantine_frac = 0.4;
+        c.byzantine_kind = ByzantineKind::CorruptCodeword;
+        c.clip_norm = 1.5;
+        c.aggregation = AggregationRule::Trimmed;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.rounds, 321);
@@ -479,6 +639,10 @@ mod tests {
         assert!((back.straggler_frac - 0.75).abs() < 1e-12);
         assert!((back.round_deadline - 3.5).abs() < 1e-12);
         assert_eq!(back.min_survivors, 2);
+        assert!((back.byzantine_frac - 0.4).abs() < 1e-12);
+        assert_eq!(back.byzantine_kind, ByzantineKind::CorruptCodeword);
+        assert!((back.clip_norm - 1.5).abs() < 1e-12);
+        assert_eq!(back.aggregation, AggregationRule::Trimmed);
         assert!((back.lambda - 5e-4).abs() < 1e-9);
         assert_eq!(back.algorithm, Algorithm::SplitFed);
         assert_eq!(back.quantizer, QuantizerEngine::Pjrt);

@@ -8,7 +8,19 @@
 //! the renormalization of the `p_i` over survivors. [`SurvivorSet`]
 //! tracks the sampled-vs-survived bookkeeping and exposes the
 //! renormalized weights for assertions and logs.
+//!
+//! With untrusted clients (PR 9), the weighted mean is itself an attack
+//! surface: a single scaled or sign-flipped update moves the mean
+//! arbitrarily far. [`RobustAggregator`] offers the two classic
+//! order-statistic alternatives — coordinate-wise trimmed mean and
+//! coordinate-wise median — behind the same accumulator interface, and
+//! [`UpdateAggregator`] dispatches on the run's
+//! [`AggregationRule`](crate::config::AggregationRule) so trainers stay
+//! rule-agnostic. Robust rules buffer survivor updates in cohort-slot
+//! order (`merge` concatenates in shard order ≡ the unsharded slot
+//! order), so records stay bit-identical at any worker/shard count.
 
+use crate::config::AggregationRule;
 use crate::tensor::TensorList;
 
 /// Online weighted-mean accumulator over tensor lists.
@@ -79,6 +91,174 @@ impl WeightedAggregator {
 impl Default for WeightedAggregator {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Scale one logical update (possibly spanning several tensor lists)
+/// down to the given joint L2-norm bound; returns `true` if anything was
+/// scaled (the `clipped_updates` defense meter). The squared norm
+/// accumulates in f64 in list/tensor/element order — one fixed sequence,
+/// so the clipped bits are identical at any worker/shard count.
+pub fn clip_to_norm(lists: &mut [&mut TensorList], max_norm: f64) -> bool {
+    debug_assert!(max_norm > 0.0, "clipping needs a positive bound");
+    let mut sq = 0.0f64;
+    for l in lists.iter() {
+        for t in &l.tensors {
+            for v in t.data() {
+                sq += (*v as f64) * (*v as f64);
+            }
+        }
+    }
+    let norm = sq.sqrt();
+    if !(norm > max_norm) {
+        return false;
+    }
+    let s = (max_norm / norm) as f32;
+    for l in lists.iter_mut() {
+        l.scale(s);
+    }
+    true
+}
+
+/// Order-statistic aggregation over buffered survivor updates.
+///
+/// Robust rules are *unweighted*: the defense point is that no single
+/// client — whatever its sample count claims — can dominate the
+/// statistic, so `p_i` only gates admission (zero-weight survivors are
+/// excluded, as they are from the weighted mean). Updates are buffered
+/// in the order they are added; every per-coordinate reduction sorts
+/// first, so the result is independent of that order, but the buffer
+/// order is kept deterministic anyway (slot order, shard merges
+/// concatenate) to keep the structure auditable.
+pub struct RobustAggregator {
+    rule: AggregationRule,
+    updates: Vec<TensorList>,
+}
+
+impl RobustAggregator {
+    pub fn new(rule: AggregationRule) -> Self {
+        RobustAggregator { rule, updates: Vec::new() }
+    }
+
+    /// Buffer one survivor's update. Zero-weight contributions carry no
+    /// aggregation mass under any rule and are skipped, which keeps the
+    /// all-zero-mass degraded-commit path identical to the mean's.
+    pub fn add(&mut self, contribution: &TensorList, weight: f64) {
+        assert!(
+            weight >= 0.0 && weight.is_finite(),
+            "negative or non-finite aggregation weight"
+        );
+        if weight == 0.0 {
+            return;
+        }
+        if let Some(first) = self.updates.first() {
+            assert_eq!(
+                first.numel(),
+                contribution.numel(),
+                "robust aggregation needs congruent updates"
+            );
+        }
+        self.updates.push(contribution.clone());
+    }
+
+    pub fn count(&self) -> usize {
+        self.updates.len()
+    }
+
+    /// Append another shard's buffered updates after this one — shard
+    /// partials are filled in slot order and merged in shard order, so
+    /// the concatenation reproduces the unsharded buffer exactly.
+    pub fn merge(&mut self, other: RobustAggregator) {
+        assert_eq!(self.rule, other.rule, "cannot merge across rules");
+        self.updates.extend(other.updates);
+    }
+
+    /// How many values are trimmed from *each* tail for `n` updates: a
+    /// quarter of the cohort per side, capped so at least one value
+    /// always remains. `n < 4` trims nothing (plain unweighted mean).
+    pub fn trim_k(n: usize) -> usize {
+        let k = n / 4;
+        if 2 * k >= n { (n - 1) / 2 } else { k }
+    }
+
+    /// Reduce the buffer coordinate-wise; `None` if nothing was admitted
+    /// (every survivor rejected or zero-weight ⇒ degraded commit, the
+    /// same contract as [`WeightedAggregator::finish`]).
+    pub fn finish(self) -> Option<TensorList> {
+        let first = self.updates.first()?;
+        let n = self.updates.len();
+        let mut out = first.zeros_like();
+        let mut col = vec![0.0f32; n];
+        for t in 0..out.tensors.len() {
+            let dst = out.tensors[t].data_mut();
+            for j in 0..dst.len() {
+                for (i, u) in self.updates.iter().enumerate() {
+                    col[i] = u.tensors[t].data()[j];
+                }
+                // total order on f32 bits: deterministic for every input
+                col.sort_unstable_by(|a, b| a.total_cmp(b));
+                dst[j] = match self.rule {
+                    AggregationRule::Mean => {
+                        unreachable!("mean dispatches to WeightedAggregator")
+                    }
+                    AggregationRule::Trimmed => {
+                        let k = Self::trim_k(n);
+                        let kept = &col[k..n - k];
+                        let sum: f32 = kept.iter().sum();
+                        sum / kept.len() as f32
+                    }
+                    AggregationRule::Median => {
+                        let m = n / 2;
+                        if n % 2 == 1 {
+                            col[m]
+                        } else {
+                            (col[m - 1] + col[m]) * 0.5
+                        }
+                    }
+                };
+            }
+        }
+        Some(out)
+    }
+}
+
+/// The accumulator trainers actually hold: dispatches on the run's
+/// `--aggregation` rule. `Mean` delegates to [`WeightedAggregator`]
+/// bit-for-bit, so honest runs under the default rule reproduce
+/// pre-defense records exactly.
+pub enum UpdateAggregator {
+    Mean(WeightedAggregator),
+    Robust(RobustAggregator),
+}
+
+impl UpdateAggregator {
+    pub fn new(rule: AggregationRule) -> Self {
+        match rule {
+            AggregationRule::Mean => UpdateAggregator::Mean(WeightedAggregator::new()),
+            r => UpdateAggregator::Robust(RobustAggregator::new(r)),
+        }
+    }
+
+    pub fn add(&mut self, contribution: &TensorList, weight: f64) {
+        match self {
+            UpdateAggregator::Mean(a) => a.add(contribution, weight),
+            UpdateAggregator::Robust(a) => a.add(contribution, weight),
+        }
+    }
+
+    pub fn merge(&mut self, other: UpdateAggregator) {
+        match (self, other) {
+            (UpdateAggregator::Mean(a), UpdateAggregator::Mean(b)) => a.merge(b),
+            (UpdateAggregator::Robust(a), UpdateAggregator::Robust(b)) => a.merge(b),
+            _ => panic!("cannot merge aggregators of different rules"),
+        }
+    }
+
+    pub fn finish(self) -> Option<TensorList> {
+        match self {
+            UpdateAggregator::Mean(a) => a.finish(),
+            UpdateAggregator::Robust(a) => a.finish(),
+        }
     }
 }
 
@@ -368,6 +548,120 @@ mod tests {
                 .map(|((v, _), p)| v[j] as f64 * p)
                 .sum();
             assert!((out.tensors[0].data()[j] as f64 - manual).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn clip_to_norm_scales_only_over_bound() {
+        // ‖(3, 4)‖ = 5 > 2.5 → scaled by exactly 0.5
+        let mut a = tl(&[3.0, 4.0]);
+        assert!(clip_to_norm(&mut [&mut a], 2.5));
+        assert_eq!(a.tensors[0].data(), &[1.5, 2.0]);
+        // already inside the bound: untouched, not counted
+        let mut b = tl(&[0.3, 0.4]);
+        assert!(!clip_to_norm(&mut [&mut b], 2.5));
+        assert_eq!(b.tensors[0].data(), &[0.3, 0.4]);
+        // the bound is joint across lists
+        let (mut c, mut d) = (tl(&[3.0]), tl(&[4.0]));
+        assert!(clip_to_norm(&mut [&mut c, &mut d], 2.5));
+        assert_eq!(c.tensors[0].data(), &[1.5]);
+        assert_eq!(d.tensors[0].data(), &[2.0]);
+    }
+
+    #[test]
+    fn trim_k_schedule() {
+        // n < 4 trims nothing; n/4 per side otherwise; never empties
+        for (n, k) in [(1, 0), (2, 0), (3, 0), (4, 1), (7, 1), (8, 2), (12, 3)] {
+            assert_eq!(RobustAggregator::trim_k(n), k, "n = {n}");
+            assert!(n - 2 * RobustAggregator::trim_k(n) >= 1);
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_discards_outliers() {
+        let mut agg = RobustAggregator::new(AggregationRule::Trimmed);
+        // one byzantine scaled update among four honest-ish ones
+        for v in [1.0f32, 2.0, 3.0, 1000.0] {
+            agg.add(&tl(&[v]), 1.0);
+        }
+        // k = 1 per side: keep {2.0, 3.0} -> 2.5
+        assert_eq!(agg.finish().unwrap().tensors[0].data(), &[2.5]);
+    }
+
+    #[test]
+    fn median_odd_and_even() {
+        let mut odd = RobustAggregator::new(AggregationRule::Median);
+        for v in [5.0f32, -100.0, 1.0] {
+            odd.add(&tl(&[v]), 1.0);
+        }
+        assert_eq!(odd.finish().unwrap().tensors[0].data(), &[1.0]);
+        let mut even = RobustAggregator::new(AggregationRule::Median);
+        for v in [4.0f32, 1.0, 2.0, 1000.0] {
+            even.add(&tl(&[v]), 1.0);
+        }
+        assert_eq!(even.finish().unwrap().tensors[0].data(), &[3.0]);
+    }
+
+    #[test]
+    fn robust_rules_ignore_weights() {
+        // a huge claimed weight must not move the median
+        let mut agg = RobustAggregator::new(AggregationRule::Median);
+        agg.add(&tl(&[0.0]), 1.0);
+        agg.add(&tl(&[1.0]), 1.0);
+        agg.add(&tl(&[1000.0]), 1e9);
+        assert_eq!(agg.finish().unwrap().tensors[0].data(), &[1.0]);
+    }
+
+    #[test]
+    fn robust_empty_and_zero_mass_finish_none() {
+        // satellite: a defense rejecting every survivor must surface the
+        // same degraded-commit signal as the zero-mass weighted mean
+        assert!(RobustAggregator::new(AggregationRule::Median).finish().is_none());
+        let mut agg = RobustAggregator::new(AggregationRule::Trimmed);
+        agg.add(&tl(&[7.0]), 0.0);
+        assert_eq!(agg.count(), 0);
+        assert!(agg.finish().is_none());
+    }
+
+    #[test]
+    fn robust_merge_equals_sequential_adds() {
+        let parts: [&[f32]; 5] = [&[1.0, -2.0], &[3.0, 0.5], &[-9.0, 4.0], &[2.0, 2.0], &[0.0, 1.0]];
+        for rule in [AggregationRule::Trimmed, AggregationRule::Median] {
+            let mut seq = RobustAggregator::new(rule);
+            for v in parts {
+                seq.add(&tl(v), 1.0);
+            }
+            let mut left = RobustAggregator::new(rule);
+            let mut right = RobustAggregator::new(rule);
+            for v in &parts[..2] {
+                left.add(&tl(v), 1.0);
+            }
+            for v in &parts[2..] {
+                right.add(&tl(v), 1.0);
+            }
+            left.merge(right);
+            assert_eq!(
+                seq.finish().unwrap().tensors[0].data(),
+                left.finish().unwrap().tensors[0].data(),
+                "{}", rule.name()
+            );
+        }
+    }
+
+    #[test]
+    fn update_aggregator_mean_delegates_bit_exactly() {
+        let parts: [(&[f32], f64); 3] =
+            [(&[1.0, 2.0], 0.25), (&[3.0, -4.0], 0.5), (&[0.5, 8.0], 0.25)];
+        let mut plain = WeightedAggregator::new();
+        let mut dispatched = UpdateAggregator::new(AggregationRule::Mean);
+        for (v, w) in parts {
+            plain.add(&tl(v), w);
+            dispatched.add(&tl(v), w);
+        }
+        let a = plain.finish().unwrap();
+        let b = dispatched.finish().unwrap();
+        for (x, y) in a.tensors[0].data().iter().zip(b.tensors[0].data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

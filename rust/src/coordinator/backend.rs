@@ -20,7 +20,11 @@
 //!   Fault plans travel with the assignments and all RNG keys stay pure
 //!   in `(round, attempt, client)`, so a socket run's records are
 //!   byte-identical to the in-process run of the same config (CI diffs
-//!   them).
+//!   them). A member that misbehaves mid-shard (malformed frame, wrong
+//!   client, undecodable payload, dead socket) is reaped rather than
+//!   trusted to abort the round: its slots become
+//!   [`DropPhase::PeerFailure`] drops and training continues on the
+//!   surviving roster.
 //!
 //! Membership is a small state machine on the coordinator side:
 //!
@@ -41,11 +45,12 @@
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::Duration;
 
+use crate::comm::accounting::RoundBytes;
 use crate::comm::message::Message;
 use crate::comm::transport::{self, Frame, PROTOCOL_VERSION};
 use crate::config::RunConfig;
 use crate::coordinator::engine::{client_stream_key, ClientOutput, RoundAlgorithm};
-use crate::coordinator::faults::FaultPlan;
+use crate::coordinator::faults::{DropPhase, FaultPlan};
 use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
@@ -362,6 +367,23 @@ impl CoordinatorService {
         self.members = keep;
     }
 
+    /// Drop the members flagged `true` in `dead` (parallel to the member
+    /// list): their connections are severed and they leave the roster.
+    /// Called after a shard completes so slot→member assignment stays
+    /// fixed for the shard's whole duration.
+    fn reap(&mut self, dead: &[bool]) {
+        debug_assert_eq!(dead.len(), self.members.len());
+        let mut idx = 0usize;
+        self.members.retain(|m| {
+            let keep = !dead[idx];
+            if !keep {
+                log::warn!("reaping member {} after mid-round failure", m.peer);
+            }
+            idx += 1;
+            keep
+        });
+    }
+
     /// Best-effort shutdown: tell every member the run is over.
     pub fn shutdown(&mut self) {
         for m in &mut self.members {
@@ -423,36 +445,76 @@ impl SocketBackend {
         let w = self.service.num_members();
         anyhow::ensure!(w > 0, "no members to run round {round} on");
         // write every assignment first, then collect results in slot
-        // order: per-connection FIFO makes this deadlock-free
+        // order: per-connection FIFO makes this deadlock-free. A member
+        // that misbehaves mid-shard — malformed frame, wrong client,
+        // undecodable payload, dead socket — is marked dead: its slots
+        // become `PeerFailure` drops (metered through `DropCounts` like
+        // any other drop, zero bytes both in the meter and the partial,
+        // so the engine's meter-vs-partials assertion still holds) and
+        // the connection is reaped after the shard. A byzantine socket
+        // peer therefore cannot abort the coordinator's round.
+        let mut dead = vec![false; w];
         for (slot, (&ci, &plan)) in shard.iter().zip(plans).enumerate() {
-            self.service.send_to(
-                slot % w,
-                &Frame::StepAssign {
-                    round: round as u32,
-                    attempt,
-                    client: ci as u64,
-                    plan,
-                },
-            )?;
+            let m = slot % w;
+            if dead[m] {
+                continue;
+            }
+            let assign = Frame::StepAssign {
+                round: round as u32,
+                attempt,
+                client: ci as u64,
+                plan,
+            };
+            if let Err(e) = self.service.send_to(m, &assign) {
+                log::warn!("assign for client {ci} failed, marking member dead: {e:#}");
+                dead[m] = true;
+            }
         }
+        let failed = || {
+            Ok(ClientOutput::failed(
+                DropPhase::PeerFailure,
+                0.0,
+                RoundBytes::default(),
+                0.0,
+            ))
+        };
         let mut outs = Vec::with_capacity(shard.len());
         for (slot, &ci) in shard.iter().enumerate() {
-            match self.read_from(slot % w)? {
-                Frame::StepResult(r) => {
-                    anyhow::ensure!(
-                        r.client == ci as u64,
-                        "member answered client {} for assigned client {ci}",
-                        r.client
-                    );
+            let m = slot % w;
+            if dead[m] {
+                outs.push(failed());
+                continue;
+            }
+            match self.read_from(m) {
+                Ok(Frame::StepResult(r)) => {
+                    if r.client != ci as u64 {
+                        log::warn!(
+                            "member answered client {} for assigned client {ci}, \
+                             marking dead",
+                            r.client
+                        );
+                        dead[m] = true;
+                        outs.push(failed());
+                        continue;
+                    }
+                    let payload = match r.payload.map(|p| algo.payload_from_wire(p)) {
+                        Some(Ok(p)) => Some(p),
+                        Some(Err(e)) => {
+                            log::warn!(
+                                "undecodable payload from client {ci}'s member, \
+                                 marking dead: {e:#}"
+                            );
+                            dead[m] = true;
+                            outs.push(failed());
+                            continue;
+                        }
+                        None => None,
+                    };
                     // the worker metered its own transfers; replay them
                     // into the coordinator's meter so per-round deltas,
                     // cumulative totals, and the engine's meter-vs-partials
                     // assertion match the in-process run exactly
                     algo.env().net.absorb(&r.bytes);
-                    let payload = match r.payload {
-                        Some(wire) => Some(algo.payload_from_wire(wire)?),
-                        None => None,
-                    };
                     outs.push(Ok(ClientOutput {
                         weight: r.weight,
                         loss: r.loss,
@@ -465,15 +527,31 @@ impl SocketBackend {
                         delay_seconds: r.delay_seconds,
                     }));
                 }
-                Frame::StepError { client, error } => {
-                    anyhow::bail!("remote client {client} failed: {error}")
+                Ok(Frame::StepError { client, error }) => {
+                    // the worker failed this step but the frame protocol
+                    // is intact (exactly one reply per assignment), so
+                    // the member stays; only the client drops
+                    log::warn!("remote client {client} failed, metering as a drop: {error}");
+                    outs.push(failed());
                 }
-                other => anyhow::bail!(
-                    "expected StepResult for client {ci}, got {}",
-                    other.name()
-                ),
+                Ok(other) => {
+                    log::warn!(
+                        "expected StepResult for client {ci}, got {}; marking member dead",
+                        other.name()
+                    );
+                    dead[m] = true;
+                    outs.push(failed());
+                }
+                Err(e) => {
+                    log::warn!(
+                        "read for client {ci} failed, marking member dead: {e:#}"
+                    );
+                    dead[m] = true;
+                    outs.push(failed());
+                }
             }
         }
+        self.service.reap(&dead);
         Ok(outs)
     }
 

@@ -248,6 +248,11 @@ pub struct RoundEnv<'a> {
     pub batch_examples: f64,
     /// Number of raw metric sums each surviving client reports.
     pub nmetrics: usize,
+    /// L2-norm bound applied to survivor payloads before aggregation
+    /// (`--clip-norm`; 0 disables). Clipping runs in the Aggregate
+    /// phase's flat slot-order loop via [`RoundAlgorithm::clip_payload`],
+    /// so it is bit-identical at any worker/shard count.
+    pub clip_norm: f64,
     /// Cohort fan-out width (resolved `--workers`).
     pub workers: usize,
     /// Independent cohort shards per round (`--shards`, >= 1). The cohort
@@ -331,6 +336,15 @@ pub trait RoundAlgorithm: Sync {
     /// Fold one survivor's payload into the attempt's accumulator. Called
     /// in cohort-slot order with the client's aggregation weight.
     fn accumulate(&self, acc: &mut Self::Accum, payload: Self::Payload, weight: f64);
+
+    /// Scale the payload down to the given L2-norm bound if it exceeds
+    /// it; returns `true` when anything was scaled (the defense meter).
+    /// Called by the engine only when `--clip-norm` is set, in the same
+    /// flat slot-order loop as [`RoundAlgorithm::accumulate`]. Default:
+    /// no-op, for algorithms without a clippable payload (mock tests).
+    fn clip_payload(&self, _payload: &mut Self::Payload, _max_norm: f64) -> bool {
+        false
+    }
 
     /// Apply the committed round: step the optimizers on the survivor
     /// aggregate. `survivors` is `None` for a degraded commit (nobody
@@ -417,6 +431,10 @@ struct RoundOutcome<Acc> {
     sim_seconds: f64,
     cohort_sampled: usize,
     attempts: u32,
+    /// Committed-attempt cohort members whose plan carried an attack.
+    byzantine_sampled: usize,
+    /// Survivor payloads the clip-norm defense scaled down.
+    clipped_updates: usize,
 }
 
 /// The generic round engine: drives [`RoundAlgorithm`] hooks through the
@@ -515,6 +533,9 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
             sim_comm_seconds: outcome.sim_seconds,
             cohort_sampled: outcome.cohort_sampled,
             cohort_survived: survived,
+            byzantine_sampled: outcome.byzantine_sampled,
+            rejected_codewords: outcome.drops.rejected_codeword,
+            clipped_updates: outcome.clipped_updates,
             dropped: outcome.drops,
             attempts: outcome.attempts,
             surrogate_loss: outcome.surr_agg.mean(),
@@ -565,6 +586,7 @@ fn drive<A: RoundAlgorithm>(
     let mut examples = 0.0f64;
     let mut survivors = SurvivorSet::new();
     let mut drops = DropCounts::default();
+    let mut clipped_updates = 0usize;
 
     loop {
         match driver.phase() {
@@ -693,6 +715,7 @@ fn drive<A: RoundAlgorithm>(
                 surr_agg = ScalarAggregator::new();
                 metric_sums = vec![0.0f64; env.nmetrics];
                 examples = 0.0;
+                clipped_updates = 0;
                 for result in std::mem::take(&mut results) {
                     let out = result?;
                     if out.dropped.is_none() {
@@ -707,8 +730,16 @@ fn drive<A: RoundAlgorithm>(
                             *s += out.metric_sums[k];
                         }
                         examples += env.batch_examples;
-                        let payload =
+                        let mut payload =
                             out.payload.expect("surviving client carries a payload");
+                        // the clip defense runs in the same flat slot-order
+                        // loop as the accumulation, so the clipped bits are
+                        // worker/shard-count independent like everything else
+                        if env.clip_norm > 0.0
+                            && algo.clip_payload(&mut payload, env.clip_norm)
+                        {
+                            clipped_updates += 1;
+                        }
                         algo.accumulate(&mut accum, payload, out.weight);
                         qerr_agg.add(out.quant_rel_err, 1.0);
                         surr_agg.add(out.surrogate_loss, out.weight);
@@ -751,6 +782,10 @@ fn drive<A: RoundAlgorithm>(
         sim_seconds,
         cohort_sampled: cohort.len(),
         attempts: driver.attempt(),
+        // `plans` still holds the committed attempt's draws — the same
+        // scope as `cohort_sampled`
+        byzantine_sampled: plans.iter().filter(|p| p.byz.is_some()).count(),
+        clipped_updates,
     })
 }
 
@@ -858,12 +893,7 @@ mod tests {
     const COHORT: usize = 4;
 
     fn clean_faults() -> FaultConfig {
-        FaultConfig {
-            drop_prob: 0.0,
-            straggler_frac: 0.0,
-            round_deadline: 0.0,
-            min_survivors: 0,
-        }
+        FaultConfig::default()
     }
 
     /// Minimal algorithm: every client downloads the broadcast (metered),
@@ -927,6 +957,7 @@ mod tests {
                 metric: TaskMetric::Accuracy,
                 batch_examples: 1.0,
                 nmetrics: 0,
+                clip_norm: 0.0,
                 workers: 1,
                 shards: self.shards,
                 rounds: 1,
@@ -1061,9 +1092,8 @@ mod tests {
     fn max_attempts_one_commits_degraded_without_resampling() {
         let faults = FaultConfig {
             drop_prob: 1.0,
-            straggler_frac: 0.0,
-            round_deadline: 0.0,
             min_survivors: 1,
+            ..FaultConfig::default()
         };
         let mut m = MockAlgo::new(faults, 1);
         let rec = RoundEngine::new(&mut m).round(0).unwrap();
@@ -1079,10 +1109,8 @@ mod tests {
     #[test]
     fn floor_above_cohort_exhausts_budget_then_commits_survivors() {
         let faults = FaultConfig {
-            drop_prob: 0.0,
-            straggler_frac: 0.0,
-            round_deadline: 0.0,
             min_survivors: COHORT + 1,
+            ..FaultConfig::default()
         };
         let mut m = MockAlgo::new(faults, 4);
         let rec = RoundEngine::new(&mut m).round(0).unwrap();
@@ -1120,6 +1148,7 @@ mod tests {
             straggler_frac: 0.5,
             round_deadline: 0.05,
             min_survivors: 1,
+            ..FaultConfig::default()
         };
         let run = |shards: usize| {
             let mut m = MockAlgo::new(faults, 4);

@@ -19,17 +19,33 @@
 //!   fresh fault schedules) without advancing the optimizer; see
 //!   [`crate::coordinator::engine::RoundDriver::resample`].
 //!
+//! * **Byzantine clients** (`byzantine_frac` + `byzantine_kind`): the
+//!   draws above model *honest* failures; this models dishonest ones. A
+//!   flagged client mounts the configured [`ByzantineKind`] attack —
+//!   scaled/sign-flipped gradients, label-flip poisoning, corrupt
+//!   codeword streams, replayed (stale, zero-delta) uploads — applied
+//!   inside the trainers' `client_step`, so socket replica workers
+//!   misbehave identically to in-process threads (the plan rides
+//!   `StepAssign`). Defenses live server-side: codeword validation
+//!   (rejects become [`DropPhase::RejectedCodeword`] drops), `--clip-norm`
+//!   update clipping, and trimmed/median aggregation
+//!   ([`crate::coordinator::aggregator::UpdateAggregator`]).
+//!
 //! Every draw comes from an [`Rng`] stream forked from a pure
 //! `(round, attempt, client)` key — never wall-clock, never thread
 //! identity — so fault schedules are bit-identical at any `--workers`
 //! count, and a clean config (`drop_prob = straggler_frac = 0`) draws
-//! nothing at all and reproduces historical logs exactly.
+//! nothing at all and reproduces historical logs exactly. Byzantine
+//! draws come from their *own* fork key ([`byzantine_key`]), so
+//! `--byzantine-frac 0` perturbs no existing stream and reproduces
+//! today's bits.
 //!
 //! FedAvg note: FedAvg has no activation upload, so its only mid-round
 //! failure surface is "died before the delta upload"; the split-specific
 //! drop phases collapse to [`DropPhase::BeforeGradUpload`] there.
 
-use crate::config::RunConfig;
+use crate::config::{ByzantineKind, RunConfig};
+use crate::data::Array;
 use crate::util::rng::Rng;
 
 /// Where in the round a client stopped participating.
@@ -43,6 +59,14 @@ pub enum DropPhase {
     BeforeGradUpload,
     /// Evicted: finished, but past the round deadline (straggler).
     Deadline,
+    /// Rejected: the upload's packed codeword stream failed validation
+    /// against the PQ geometry (wrong length or out-of-range codes). The
+    /// bytes crossed the (metered) wire; the contribution is discarded.
+    RejectedCodeword,
+    /// Reaped: the socket member serving this slot failed mid-round
+    /// (malformed frame, `StepError`, dead connection). Coordinator-side
+    /// only — never planned, never crosses the wire in a worker's reply.
+    PeerFailure,
 }
 
 impl DropPhase {
@@ -52,6 +76,8 @@ impl DropPhase {
             DropPhase::AfterUpload => "after_upload",
             DropPhase::BeforeGradUpload => "before_grad_upload",
             DropPhase::Deadline => "deadline",
+            DropPhase::RejectedCodeword => "rejected_codeword",
+            DropPhase::PeerFailure => "peer_failure",
         }
     }
 }
@@ -69,6 +95,10 @@ pub struct FaultPlan {
     /// with `drop_at` — a client that died mid-round never reaches the
     /// deadline.
     pub evicted: bool,
+    /// The attack this client mounts, if flagged byzantine. Orthogonal
+    /// to the honest-failure draws above: a byzantine client can also
+    /// drop or straggle.
+    pub byz: Option<ByzantineKind>,
 }
 
 impl FaultPlan {
@@ -86,8 +116,36 @@ impl FaultPlan {
 /// in the simulated round time) from `[0, this)` seconds.
 const DEFAULT_DELAY_CAP: f64 = 10.0;
 
-/// Round-level fault injection settings (see module docs for semantics).
+/// Scale factor a [`ByzantineKind::GradScale`] client multiplies its
+/// uploaded update by (gradient-boosting attack).
+pub const GRAD_SCALE: f32 = 10.0;
+
+/// Byzantine client-model settings (who attacks, and how).
 #[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ByzantineConfig {
+    /// Per-client, per-round probability of acting byzantine.
+    pub frac: f64,
+    /// The attack flagged clients mount.
+    pub kind: ByzantineKind,
+}
+
+impl Default for ByzantineConfig {
+    fn default() -> Self {
+        ByzantineConfig { frac: 0.0, kind: ByzantineKind::SignFlip }
+    }
+}
+
+impl ByzantineConfig {
+    /// Whether any byzantine draw happens at all. When false,
+    /// [`FaultConfig::plan`] skips the byzantine fork entirely, so
+    /// `--byzantine-frac 0` reproduces historical logs bit-for-bit.
+    pub fn enabled(&self) -> bool {
+        self.frac > 0.0
+    }
+}
+
+/// Round-level fault injection settings (see module docs for semantics).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct FaultConfig {
     /// Per-client, per-round probability of mid-round dropout.
     pub drop_prob: f64,
@@ -97,6 +155,8 @@ pub struct FaultConfig {
     pub round_deadline: f64,
     /// Abort + resample when fewer clients survive; 0 disables.
     pub min_survivors: usize,
+    /// Dishonest-client model (drawn from its own fork key).
+    pub byzantine: ByzantineConfig,
 }
 
 impl FaultConfig {
@@ -106,12 +166,15 @@ impl FaultConfig {
             straggler_frac: cfg.straggler_frac,
             round_deadline: cfg.round_deadline,
             min_survivors: cfg.min_survivors,
+            byzantine: ByzantineConfig { frac: cfg.byzantine_frac, kind: cfg.byzantine_kind },
         }
     }
 
-    /// Whether any per-client fault draw happens at all. When false,
-    /// [`FaultConfig::plan`] returns the default plan without touching
+    /// Whether any per-client honest-fault draw happens at all. When
+    /// false, [`FaultConfig::plan`] skips the fault fork without touching
     /// any RNG, so clean runs stay bit-identical to historical logs.
+    /// (Byzantine draws are gated separately by
+    /// [`ByzantineConfig::enabled`].)
     pub fn enabled(&self) -> bool {
         self.drop_prob > 0.0 || self.straggler_frac > 0.0
     }
@@ -121,28 +184,35 @@ impl FaultConfig {
     /// never advances the parent, so planning perturbs nothing else.
     pub fn plan(&self, root: &Rng, round: u64, attempt: u32, client: usize) -> FaultPlan {
         let mut plan = FaultPlan::default();
-        if !self.enabled() {
-            return plan;
+        if self.enabled() {
+            let mut rng = root.fork(fault_key(round, attempt, client));
+            if self.drop_prob > 0.0 && rng.bernoulli(self.drop_prob) {
+                plan.drop_at = Some(match rng.below(3) {
+                    0 => DropPhase::AfterFwd,
+                    1 => DropPhase::AfterUpload,
+                    _ => DropPhase::BeforeGradUpload,
+                });
+            }
+            if self.straggler_frac > 0.0 && rng.bernoulli(self.straggler_frac) {
+                // with a deadline, expected half of stragglers land past it
+                let cap = if self.round_deadline > 0.0 {
+                    2.0 * self.round_deadline
+                } else {
+                    DEFAULT_DELAY_CAP
+                };
+                plan.delay_seconds = rng.uniform_in(0.0, cap);
+                plan.evicted = plan.drop_at.is_none()
+                    && self.round_deadline > 0.0
+                    && plan.delay_seconds > self.round_deadline;
+            }
         }
-        let mut rng = root.fork(fault_key(round, attempt, client));
-        if self.drop_prob > 0.0 && rng.bernoulli(self.drop_prob) {
-            plan.drop_at = Some(match rng.below(3) {
-                0 => DropPhase::AfterFwd,
-                1 => DropPhase::AfterUpload,
-                _ => DropPhase::BeforeGradUpload,
-            });
-        }
-        if self.straggler_frac > 0.0 && rng.bernoulli(self.straggler_frac) {
-            // with a deadline, expected half of stragglers land past it
-            let cap = if self.round_deadline > 0.0 {
-                2.0 * self.round_deadline
-            } else {
-                DEFAULT_DELAY_CAP
-            };
-            plan.delay_seconds = rng.uniform_in(0.0, cap);
-            plan.evicted = plan.drop_at.is_none()
-                && self.round_deadline > 0.0
-                && plan.delay_seconds > self.round_deadline;
+        // the byzantine draw uses its own fork so adding (or zeroing) it
+        // perturbs no honest-fault stream
+        if self.byzantine.enabled() {
+            let mut rng = root.fork(byzantine_key(round, attempt, client));
+            if rng.bernoulli(self.byzantine.frac) {
+                plan.byz = Some(self.byzantine.kind);
+            }
         }
         plan
     }
@@ -174,6 +244,49 @@ pub fn fault_key(round: u64, attempt: u32, client: usize) -> u64 {
     (round << 20) ^ ((attempt as u64) << 44) ^ (client as u64) ^ 0xFA17
 }
 
+/// Fork key for a client's byzantine draw. Distinct tag from
+/// [`fault_key`] and every client work stream, so the byzantine layer is
+/// an independent RNG dimension: enabling it leaves honest-fault and
+/// batch streams untouched.
+pub fn byzantine_key(round: u64, attempt: u32, client: usize) -> u64 {
+    (round << 20) ^ ((attempt as u64) << 44) ^ (client as u64) ^ 0xB12A
+}
+
+/// Fork tag for attacker-chosen payload bytes (the corrupt-codeword
+/// stream), forked off the client's *work* stream inside `client_step`.
+/// Forking never advances the parent, so the honest batch draws of other
+/// clients — and of this client in non-byzantine runs — are untouched.
+pub const BYZ_PAYLOAD_TAG: u64 = 0xB12A_C0DE;
+
+/// The label-flip poisoning attack: rotate each example's label to its
+/// neighbor (`y_i ← y_{i+1}`, wrapping). A pure permutation stays inside
+/// the task's valid label space for every representation — class ids,
+/// multi-hot rows, token-id rows — because whole per-example label rows
+/// (`numel / batch` values) move together. Deterministic, draws no RNG.
+pub fn poison_labels(y: &mut Array, batch: usize) {
+    let n = y.numel();
+    if batch <= 1 || n == 0 || n % batch != 0 {
+        return;
+    }
+    let row = n / batch;
+    match y {
+        Array::F32 { data, .. } => data.rotate_left(row),
+        Array::I32 { data, .. } => data.rotate_left(row),
+    }
+}
+
+/// The corrupt-codeword attack: replace a packed codeword stream with
+/// attacker-chosen bytes and append one extra byte. The extra byte makes
+/// the exact-length defense check reject deterministically even for
+/// presets where every bit pattern decodes to a valid code (e.g. L = 4,
+/// where 2-bit codes fill the byte exactly).
+pub fn corrupt_codewords(packed: &mut Vec<u8>, rng: &mut Rng) {
+    for b in packed.iter_mut() {
+        *b = rng.below(256) as u8;
+    }
+    packed.push(rng.below(256) as u8);
+}
+
 /// Per-phase drop tally for one committed round (the `dropped_at_phase`
 /// column of the round logs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -182,6 +295,8 @@ pub struct DropCounts {
     pub after_upload: usize,
     pub before_grad_upload: usize,
     pub deadline: usize,
+    pub rejected_codeword: usize,
+    pub peer_failure: usize,
 }
 
 impl DropCounts {
@@ -191,11 +306,18 @@ impl DropCounts {
             DropPhase::AfterUpload => self.after_upload += 1,
             DropPhase::BeforeGradUpload => self.before_grad_upload += 1,
             DropPhase::Deadline => self.deadline += 1,
+            DropPhase::RejectedCodeword => self.rejected_codeword += 1,
+            DropPhase::PeerFailure => self.peer_failure += 1,
         }
     }
 
     pub fn total(&self) -> usize {
-        self.after_fwd + self.after_upload + self.before_grad_upload + self.deadline
+        self.after_fwd
+            + self.after_upload
+            + self.before_grad_upload
+            + self.deadline
+            + self.rejected_codeword
+            + self.peer_failure
     }
 
     /// Fold another tally into this one (integer sums — exact in any
@@ -205,6 +327,8 @@ impl DropCounts {
         self.after_upload += other.after_upload;
         self.before_grad_upload += other.before_grad_upload;
         self.deadline += other.deadline;
+        self.rejected_codeword += other.rejected_codeword;
+        self.peer_failure += other.peer_failure;
     }
 
     /// Compact log form: `"after_fwd:1;deadline:2"`; empty when nothing
@@ -216,6 +340,8 @@ impl DropCounts {
             (self.after_upload, "after_upload"),
             (self.before_grad_upload, "before_grad_upload"),
             (self.deadline, "deadline"),
+            (self.rejected_codeword, "rejected_codeword"),
+            (self.peer_failure, "peer_failure"),
         ] {
             if n > 0 {
                 parts.push(format!("{name}:{n}"));
@@ -235,16 +361,71 @@ mod tests {
             straggler_frac: 0.5,
             round_deadline: 2.0,
             min_survivors: 1,
+            ..FaultConfig::default()
         }
     }
 
     #[test]
     fn disabled_config_draws_nothing() {
-        let fc = FaultConfig { drop_prob: 0.0, straggler_frac: 0.0, round_deadline: 5.0, min_survivors: 3 };
+        let fc = FaultConfig {
+            round_deadline: 5.0,
+            min_survivors: 3,
+            ..FaultConfig::default()
+        };
         assert!(!fc.enabled());
+        assert!(!fc.byzantine.enabled());
         let root = Rng::new(1);
         for c in 0..50 {
             assert_eq!(fc.plan(&root, 0, 1, c), FaultPlan::default());
+        }
+    }
+
+    #[test]
+    fn byzantine_draws_are_independent_of_fault_draws() {
+        // honest-fault plans must be byte-identical with and without the
+        // byzantine layer enabled (separate fork keys)
+        let honest = faulty();
+        let byz = FaultConfig {
+            byzantine: ByzantineConfig { frac: 0.5, kind: ByzantineKind::GradScale },
+            ..honest
+        };
+        let root = Rng::new(7);
+        let (mut flagged, n) = (0, 2000);
+        for c in 0..n {
+            let a = honest.plan(&root, 2, 1, c);
+            let b = byz.plan(&root, 2, 1, c);
+            assert_eq!((a.drop_at, a.delay_seconds, a.evicted), (b.drop_at, b.delay_seconds, b.evicted));
+            assert_eq!(a.byz, None);
+            if let Some(k) = b.byz {
+                assert_eq!(k, ByzantineKind::GradScale);
+                flagged += 1;
+            }
+        }
+        let frac = flagged as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.05, "byzantine rate {frac}");
+        // deterministic per key, fresh per attempt
+        assert_eq!(byz.plan(&root, 2, 1, 3), byz.plan(&root, 2, 1, 3));
+        assert_ne!(byzantine_key(2, 1, 3), byzantine_key(2, 2, 3));
+        assert_ne!(byzantine_key(2, 1, 3), fault_key(2, 1, 3));
+    }
+
+    #[test]
+    fn byzantine_only_config_draws_byzantine_only() {
+        // a pure byzantine config (no honest-fault knobs) must flag
+        // clients without ever drawing drop/straggler state
+        let fc = FaultConfig {
+            byzantine: ByzantineConfig { frac: 1.0, kind: ByzantineKind::Replay },
+            ..FaultConfig::default()
+        };
+        assert!(!fc.enabled());
+        assert!(fc.byzantine.enabled());
+        let root = Rng::new(3);
+        for c in 0..50 {
+            let p = fc.plan(&root, 0, 1, c);
+            assert_eq!(p.byz, Some(ByzantineKind::Replay));
+            assert_eq!(p.drop_at, None);
+            assert_eq!(p.delay_seconds, 0.0);
+            assert!(!p.evicted);
         }
     }
 
@@ -299,7 +480,7 @@ mod tests {
 
     #[test]
     fn all_drop_phases_reachable() {
-        let fc = FaultConfig { drop_prob: 1.0, straggler_frac: 0.0, round_deadline: 0.0, min_survivors: 0 };
+        let fc = FaultConfig { drop_prob: 1.0, ..FaultConfig::default() };
         let root = Rng::new(2);
         let mut counts = DropCounts::default();
         for c in 0..300 {
@@ -310,6 +491,31 @@ mod tests {
         assert!(counts.before_grad_upload > 0);
         assert_eq!(counts.deadline, 0);
         assert_eq!(counts.total(), 300);
+    }
+
+    #[test]
+    fn poison_labels_rotates_whole_rows() {
+        let mut y = Array::i32(&[4], vec![1, 2, 3, 4]);
+        poison_labels(&mut y, 4);
+        assert_eq!(y.as_i32().unwrap(), &[2, 3, 4, 1]);
+        // multi-hot rows move as units
+        let mut y = Array::f32(&[2, 3], vec![1.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+        poison_labels(&mut y, 2);
+        assert_eq!(y.as_f32().unwrap(), &[0.0, 1.0, 1.0, 1.0, 0.0, 0.0]);
+        // a batch of one has no neighbor to steal a label from
+        let mut y = Array::i32(&[1], vec![9]);
+        poison_labels(&mut y, 1);
+        assert_eq!(y.as_i32().unwrap(), &[9]);
+    }
+
+    #[test]
+    fn corrupt_codewords_is_deterministic_and_overlong() {
+        let mut packed = vec![0u8; 8];
+        corrupt_codewords(&mut packed, &mut Rng::new(5));
+        assert_eq!(packed.len(), 9, "extra byte forces length rejection");
+        let mut again = vec![0u8; 8];
+        corrupt_codewords(&mut again, &mut Rng::new(5));
+        assert_eq!(packed, again, "same stream, same corruption");
     }
 
     #[test]

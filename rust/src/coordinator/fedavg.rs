@@ -22,13 +22,13 @@ use std::sync::Arc;
 use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
-use crate::config::RunConfig;
-use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
+use crate::config::{ByzantineKind, RunConfig};
+use crate::coordinator::aggregator::{clip_to_norm, ScalarAggregator, UpdateAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
 use crate::coordinator::engine::{
     open_logs, ClientOutput, RoundAlgorithm, RoundEngine, RoundEnv, MAX_SAMPLING_ATTEMPTS,
 };
-use crate::coordinator::faults::{DropPhase, FaultConfig, FaultPlan};
+use crate::coordinator::faults::{self, DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::sampler::ClientSampler;
 use crate::coordinator::split::{arrays_to_tensors, scalar};
 use crate::coordinator::Trainer;
@@ -161,7 +161,7 @@ impl RoundAlgorithm for FedAvgTrainer {
     type Prep = FedAvgPrep;
     /// Wire-decoded model delta (global − local after H steps).
     type Payload = TensorList;
-    type Accum = WeightedAggregator;
+    type Accum = UpdateAggregator;
     type Scratch = FedAvgScratch;
 
     fn stream_tag(&self) -> u64 {
@@ -177,6 +177,7 @@ impl RoundAlgorithm for FedAvgTrainer {
             metric: self.metric,
             batch_examples: self.spec.batch as f64,
             nmetrics: self.spec.metrics.len(),
+            clip_norm: self.cfg.clip_norm,
             workers: self.cfg.resolved_workers(),
             shards: self.cfg.shards,
             rounds: self.cfg.rounds,
@@ -244,7 +245,11 @@ impl RoundAlgorithm for FedAvgTrainer {
         let mut loss = 0.0f64;
         let mut metric_sums = vec![0.0f64; nmetrics];
         for step in 0..self.cfg.local_steps {
-            let batch = self.data.train_batch(ci, self.spec.batch, crng);
+            let mut batch = self.data.train_batch(ci, self.spec.batch, crng);
+            if plan.byz == Some(ByzantineKind::LabelFlip) {
+                // every local step trains on rotated labels (no RNG drawn)
+                faults::poison_labels(&mut batch.y, self.spec.batch);
+            }
             let masks = draw_masks(
                 &[&prep.grad_meta],
                 self.cfg.dropout_client,
@@ -280,6 +285,16 @@ impl RoundAlgorithm for FedAvgTrainer {
         // upload model delta (uplink |w|)
         let mut delta = prep.global.clone();
         delta.axpy(-1.0, &local); // delta = global - local = lr * sum grads
+        // byzantine payload attacks, applied before the wire upload so
+        // socket replicas ship the same poisoned bits; sizes unchanged.
+        // CorruptCodeword has no codeword channel here — FedAvg ships raw
+        // deltas — so flagged clients behave honestly under it.
+        match plan.byz {
+            Some(ByzantineKind::GradScale) => delta.scale(faults::GRAD_SCALE),
+            Some(ByzantineKind::SignFlip) => delta.scale(-1.0),
+            Some(ByzantineKind::Replay) => delta.scale(0.0),
+            _ => {}
+        }
         let up_msg = Message::ClientGrads { grads: message::tensors_to_payload(&delta) };
         let (decoded, n) = self.net.upload(ci, round, &up_msg)?;
         up += n;
@@ -314,18 +329,22 @@ impl RoundAlgorithm for FedAvgTrainer {
         })
     }
 
-    fn new_accum(&self) -> WeightedAggregator {
-        WeightedAggregator::new()
+    fn new_accum(&self) -> UpdateAggregator {
+        UpdateAggregator::new(self.cfg.aggregation)
     }
 
-    fn accumulate(&self, acc: &mut WeightedAggregator, delta: TensorList, weight: f64) {
+    fn accumulate(&self, acc: &mut UpdateAggregator, delta: TensorList, weight: f64) {
         acc.add(&delta, weight);
+    }
+
+    fn clip_payload(&self, delta: &mut TensorList, max_norm: f64) -> bool {
+        clip_to_norm(&mut [delta], max_norm)
     }
 
     fn commit(
         &mut self,
         prep: FedAvgPrep,
-        survivors: Option<WeightedAggregator>,
+        survivors: Option<UpdateAggregator>,
         round: usize,
     ) -> anyhow::Result<()> {
         // pseudo-gradient step: w <- w - 1.0 * mean(delta); skipped on a

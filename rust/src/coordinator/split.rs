@@ -41,14 +41,14 @@ use std::sync::Arc;
 use crate::comm::accounting::RoundBytes;
 use crate::comm::message::{self, Message};
 use crate::comm::StarNetwork;
-use crate::config::{Algorithm, RunConfig};
-use crate::coordinator::aggregator::{ScalarAggregator, WeightedAggregator};
+use crate::config::{Algorithm, ByzantineKind, RunConfig};
+use crate::coordinator::aggregator::{clip_to_norm, ScalarAggregator, UpdateAggregator};
 use crate::coordinator::client::{assemble, draw_masks, InputSources};
 use crate::coordinator::correction;
 use crate::coordinator::engine::{
     open_logs, ClientOutput, RoundAlgorithm, RoundEngine, RoundEnv, MAX_SAMPLING_ATTEMPTS,
 };
-use crate::coordinator::faults::{DropPhase, FaultConfig, FaultPlan};
+use crate::coordinator::faults::{self, DropPhase, FaultConfig, FaultPlan};
 use crate::coordinator::quantize::QuantizeBackend;
 use crate::coordinator::sampler::ClientSampler;
 use crate::coordinator::Trainer;
@@ -100,11 +100,12 @@ pub struct SplitPayload {
     pub ws_grads: TensorList,
 }
 
-/// The split trainer's survivor accumulator: one weighted aggregate per
-/// model side.
+/// The split trainer's survivor accumulator: one aggregate per model
+/// side, dispatching on the run's `--aggregation` rule (the default mean
+/// delegates to the weighted aggregator bit-for-bit).
 pub struct SplitAccum {
-    ws_agg: WeightedAggregator,
-    wc_agg: WeightedAggregator,
+    ws_agg: UpdateAggregator,
+    wc_agg: UpdateAggregator,
 }
 
 /// Per-cohort-slot reusable buffers for the split client step: the
@@ -221,6 +222,7 @@ impl RoundAlgorithm for SplitTrainer {
             metric: self.metric,
             batch_examples: self.spec.batch as f64,
             nmetrics: self.spec.metrics.len(),
+            clip_norm: self.cfg.clip_norm,
             workers: self.cfg.resolved_workers(),
             shards: self.cfg.shards,
             rounds: self.cfg.rounds,
@@ -272,7 +274,12 @@ impl RoundAlgorithm for SplitTrainer {
         down_msgs += 1;
 
         // 1. client forward
-        let batch = self.data.train_batch(ci, self.spec.batch, crng);
+        let mut batch = self.data.train_batch(ci, self.spec.batch, crng);
+        if plan.byz == Some(ByzantineKind::LabelFlip) {
+            // poisoned labels feed the whole pipeline from here on; the
+            // rotation draws no RNG, so honest clients are unperturbed
+            faults::poison_labels(&mut batch.y, self.spec.batch);
+        }
         let masks = draw_masks(
             &[&prep.fwd, &prep.step, &prep.bwd],
             self.cfg.dropout_client,
@@ -314,10 +321,33 @@ impl RoundAlgorithm for SplitTrainer {
             Some(qz) => {
                 qz.quantize_into(&z, act_b, crng, &mut scratch.quant, &mut scratch.pq)?;
                 let out = &mut scratch.pq;
-                let msg = Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
+                let mut msg = Message::from_pq(&qz.config, act_b, d, &out.codebooks, &out.codes);
+                if plan.byz == Some(ByzantineKind::CorruptCodeword) {
+                    if let Message::QuantizedUpload { packed_codes, .. } = &mut msg {
+                        // attacker bytes come from a dedicated fork of the
+                        // client work stream — deterministic, and honest
+                        // draws never see it (fork never advances crng)
+                        let mut brng = crng.fork(faults::BYZ_PAYLOAD_TAG);
+                        faults::corrupt_codewords(packed_codes, &mut brng);
+                    }
+                }
                 let (decoded, n) = self.net.upload(ci, round, &msg)?;
                 up_bytes += n;
                 up_msgs += 1;
+                // always-on server-side defense: validate the decoded
+                // stream against the PQ geometry before anything derived
+                // from it trains the server. Honest uploads always pass
+                // (pure integer checks); a corrupt stream drops the
+                // client here — its bytes stay metered, they crossed the
+                // wire — instead of aborting the round.
+                if decoded.validate_codewords().is_err() {
+                    return Ok(ClientOutput::failed(
+                        DropPhase::RejectedCodeword,
+                        weight,
+                        RoundBytes::client(up_bytes, down_bytes, up_msgs, down_msgs),
+                        plan.delay_seconds,
+                    ));
+                }
                 let cbs = match &decoded {
                     Message::QuantizedUpload { codebooks, .. } => codebooks,
                     _ => anyhow::bail!("wrong upload variant"),
@@ -450,13 +480,35 @@ impl RoundAlgorithm for SplitTrainer {
             &assemble(&prep.bwd, &src)?,
             &mut scratch.engine,
         )?;
-        let wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
+        let mut wc_grads = arrays_to_tensors(&bwd[..bwd.len() - 1], &self.wc)?;
         // hand the z~ buffer back to the slot scratch so the next round's
         // quantize reuses it instead of allocating
         if self.quantizer.is_some() {
             if let Array::F32 { data, .. } = z_tilde {
                 scratch.pq.z_tilde = data;
             }
+        }
+
+        // byzantine payload attacks, applied before the wire upload so
+        // socket replicas ship the same poisoned bits as the in-process
+        // fan-out. Sizes are unchanged — the byte meters look honest.
+        // Replay free-rides by shipping a null update (the effect of
+        // replaying stale state against an unchanged aggregate).
+        let mut ws_grads = ws_grads;
+        match plan.byz {
+            Some(ByzantineKind::GradScale) => {
+                wc_grads.scale(faults::GRAD_SCALE);
+                ws_grads.scale(faults::GRAD_SCALE);
+            }
+            Some(ByzantineKind::SignFlip) => {
+                wc_grads.scale(-1.0);
+                ws_grads.scale(-1.0);
+            }
+            Some(ByzantineKind::Replay) => {
+                wc_grads.scale(0.0);
+                ws_grads.scale(0.0);
+            }
+            _ => {}
         }
 
         // 6. client-side grad sync (uplink)
@@ -499,9 +551,15 @@ impl RoundAlgorithm for SplitTrainer {
 
     fn new_accum(&self) -> SplitAccum {
         SplitAccum {
-            ws_agg: WeightedAggregator::new(),
-            wc_agg: WeightedAggregator::new(),
+            ws_agg: UpdateAggregator::new(self.cfg.aggregation),
+            wc_agg: UpdateAggregator::new(self.cfg.aggregation),
         }
+    }
+
+    fn clip_payload(&self, payload: &mut SplitPayload, max_norm: f64) -> bool {
+        // one joint bound over both model sides: a scaled update is
+        // scaled everywhere or nowhere
+        clip_to_norm(&mut [&mut payload.wc_grads, &mut payload.ws_grads], max_norm)
     }
 
     fn accumulate(&self, acc: &mut SplitAccum, payload: SplitPayload, weight: f64) {

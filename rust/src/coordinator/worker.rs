@@ -10,7 +10,9 @@
 //! pins the replica's parameters to the coordinator's bit-for-bit; each
 //! `StepAssign` then runs one client with the engine's own
 //! `client_stream_key` fork and the fault plan that traveled with the
-//! assignment. The result frame carries everything [`ClientOutput`]
+//! assignment — including its byzantine-kind marker, so an adversarial
+//! client misbehaves identically whether it runs in-process or on a
+//! replica. The result frame carries everything [`ClientOutput`]
 //! carries — including the worker-metered [`RoundBytes`], which the
 //! coordinator absorbs into its own meter — so a socket run's records are
 //! byte-identical to the in-process run of the same config.

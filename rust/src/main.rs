@@ -6,7 +6,9 @@
 
 use std::sync::Arc;
 
-use fedlite::config::{Algorithm, QuantizerEngine, RunConfig};
+use fedlite::config::{
+    AggregationRule, Algorithm, ByzantineKind, QuantizerEngine, RunConfig,
+};
 use fedlite::coordinator::{build_trainer, Trainer};
 use fedlite::experiments::{fig3, fig4, fig5, fig6, table1};
 use fedlite::quantizer::pq::PqConfig;
@@ -75,6 +77,29 @@ fn train_flags() -> Vec<Flag> {
             "0",
             "abort + resample the round when fewer clients \
              survive (0 = never abort)",
+        ),
+        Flag::opt(
+            "byzantine-frac",
+            "0",
+            "per-client probability of byzantine behavior each round \
+             (0 = all honest)",
+        ),
+        Flag::opt(
+            "byzantine-kind",
+            "sign_flip",
+            "attack model: grad_scale | sign_flip | label_flip | \
+             corrupt_codeword | replay",
+        ),
+        Flag::opt(
+            "clip-norm",
+            "0",
+            "L2-clip each surviving update to this norm before \
+             aggregation (0 = no clipping)",
+        ),
+        Flag::opt(
+            "aggregation",
+            "mean",
+            "server aggregation rule: mean | trimmed | median",
         ),
         Flag::opt("seed", "17", "root RNG seed"),
         Flag::opt("eval-every", "10", "eval period in rounds (0 = never)"),
@@ -257,6 +282,10 @@ fn cmd_train(args: &fedlite::util::cli::Args, force_socket: bool) -> anyhow::Res
     cfg.straggler_frac = args.prob("straggler-frac")?;
     cfg.round_deadline = args.f64("round-deadline")?;
     cfg.min_survivors = args.usize("min-survivors")?;
+    cfg.byzantine_frac = args.prob("byzantine-frac")?;
+    cfg.byzantine_kind = ByzantineKind::parse(args.str("byzantine-kind")?)?;
+    cfg.clip_norm = args.f64("clip-norm")?;
+    cfg.aggregation = AggregationRule::parse(args.str("aggregation")?)?;
     cfg.seed = args.u64("seed")?;
     cfg.eval_every = args.usize("eval-every")?;
     // the native presets always run on the built-in native engine
@@ -277,6 +306,17 @@ fn cmd_train(args: &fedlite::util::cli::Args, force_socket: bool) -> anyhow::Res
         log::info!(
             "faults: drop_prob={} straggler_frac={} round_deadline={}s min_survivors={}",
             cfg.drop_prob, cfg.straggler_frac, cfg.round_deadline, cfg.min_survivors
+        );
+    }
+    if cfg.byzantine_frac > 0.0 || cfg.clip_norm > 0.0
+        || cfg.aggregation != AggregationRule::Mean
+    {
+        log::info!(
+            "threat model: byzantine_frac={} kind={} clip_norm={} aggregation={}",
+            cfg.byzantine_frac,
+            cfg.byzantine_kind.name(),
+            cfg.clip_norm,
+            cfg.aggregation.name()
         );
     }
     let backend = if force_socket { "socket" } else { args.str("backend")? };

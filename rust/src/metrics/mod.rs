@@ -84,6 +84,17 @@ pub struct RoundRecord {
     /// `⟨g, z⟩ + (λ/2)‖z − z̃‖²`, across surviving split clients.
     /// 0 for fedavg (no cut, nothing to correct) and unquantized runs.
     pub surrogate_loss: f64,
+    /// Clients in the committed attempt's cohort whose fault plan carried
+    /// a byzantine kind (ground truth from the attack schedule, not a
+    /// detector output).
+    pub byzantine_sampled: usize,
+    /// Uploads the codeword-validation defense rejected this round
+    /// (mirrors `dropped.rejected_codeword`, surfaced as its own column
+    /// so the defense is grep-able without parsing the phase summary).
+    pub rejected_codewords: usize,
+    /// Survivor updates whose L2 norm exceeded `--clip-norm` and were
+    /// scaled down before aggregation.
+    pub clipped_updates: usize,
 }
 
 impl RoundRecord {
@@ -92,11 +103,12 @@ impl RoundRecord {
     /// against in CI (the cross-trainer schema diff): split and fedavg
     /// logs must carry identical columns and cohort bookkeeping or the
     /// paper's communication comparison is apples-to-oranges.
-    pub const CSV_COLUMNS: [&'static str; 16] = [
+    pub const CSV_COLUMNS: [&'static str; 19] = [
         "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
         "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
         "wall_seconds", "sim_comm_seconds", "cohort_sampled", "cohort_survived",
         "dropped_at_phase", "round_attempts", "surrogate_loss",
+        "byzantine_sampled", "rejected_codewords", "clipped_updates",
     ];
 
     /// Render this record as one CSV row in [`RoundRecord::CSV_COLUMNS`]
@@ -121,6 +133,9 @@ impl RoundRecord {
             self.dropped.summary(),
             self.attempts.to_string(),
             format!("{:.6}", self.surrogate_loss),
+            self.byzantine_sampled.to_string(),
+            self.rejected_codewords.to_string(),
+            self.clipped_updates.to_string(),
         ]
     }
 
@@ -146,6 +161,9 @@ impl RoundRecord {
         o.insert("dropped_at_phase", Value::Str(self.dropped.summary()));
         o.insert("round_attempts", Value::from_usize(self.attempts as usize));
         o.insert("surrogate_loss", Value::Num(self.surrogate_loss));
+        o.insert("byzantine_sampled", Value::from_usize(self.byzantine_sampled));
+        o.insert("rejected_codewords", Value::from_usize(self.rejected_codewords));
+        o.insert("clipped_updates", Value::from_usize(self.clipped_updates));
         Value::Obj(o)
     }
 }
@@ -297,6 +315,9 @@ mod tests {
             uplink_bytes: 42,
             attempts: 3,
             surrogate_loss: 0.125,
+            byzantine_sampled: 2,
+            rejected_codewords: 1,
+            clipped_updates: 4,
             ..Default::default()
         };
         let row = r.csv_row();
@@ -308,12 +329,16 @@ mod tests {
         assert_eq!(row[6], "42");
         assert_eq!(row[14], "3");
         assert_eq!(row[15], "0.125000");
+        assert_eq!(row[16], "2");
+        assert_eq!(row[17], "1");
+        assert_eq!(row[18], "4");
         // the schema itself is load-bearing for the CI cross-trainer diff
         assert_eq!(RoundRecord::CSV_COLUMNS[9], "wall_seconds");
         assert_eq!(RoundRecord::CSV_COLUMNS[13], "dropped_at_phase");
-        // surrogate_loss was appended LAST so fixtures blessed on the old
-        // 15-column schema can be compared by header projection
+        // schema growth is append-only so fixtures blessed on older,
+        // shorter schemas can be compared by header projection
         assert_eq!(RoundRecord::CSV_COLUMNS[15], "surrogate_loss");
+        assert_eq!(RoundRecord::CSV_COLUMNS[18], "clipped_updates");
     }
 
     #[test]

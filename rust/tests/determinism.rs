@@ -26,7 +26,7 @@
 
 use std::sync::Arc;
 
-use fedlite::config::{Algorithm, RunConfig};
+use fedlite::config::{AggregationRule, Algorithm, ByzantineKind, RunConfig};
 use fedlite::coordinator::{build_trainer, Trainer};
 use fedlite::metrics::RunLog;
 use fedlite::runtime::Runtime;
@@ -122,6 +122,9 @@ fn assert_identical(a: &RunLog, b: &RunLog) {
             y.surrogate_loss.to_bits(),
             "surrogate loss r{r}"
         );
+        assert_eq!(x.byzantine_sampled, y.byzantine_sampled, "byz r{r}");
+        assert_eq!(x.rejected_codewords, y.rejected_codewords, "rejects r{r}");
+        assert_eq!(x.clipped_updates, y.clipped_updates, "clips r{r}");
     }
 }
 
@@ -268,6 +271,79 @@ fn lambda_zero_is_bitwise_uncorrected_at_any_worker_count() {
         serial.rounds.last().unwrap().train_loss.to_bits(),
         corrected.rounds.last().unwrap().train_loss.to_bits(),
         "λ > 0 must steer the client gradients"
+    );
+}
+
+/// One adversarial run with the full defense stack on: half the cohort
+/// attacks with `kind`, every survivor is norm-clipped, and survivors
+/// fold through `rule`.
+fn run_byzantine(
+    algo: Algorithm,
+    workers: usize,
+    shards: usize,
+    seed: u64,
+    kind: ByzantineKind,
+    rule: AggregationRule,
+) -> RunLog {
+    let mut cfg = base_cfg(algo, workers, seed);
+    cfg.shards = shards;
+    cfg.byzantine_frac = 0.5;
+    cfg.byzantine_kind = kind;
+    cfg.clip_norm = 0.5;
+    cfg.aggregation = rule;
+    run_cfg(cfg)
+}
+
+/// Byzantine schedules, payload corruption, clipping, and the robust
+/// aggregation rules must all be worker- and shard-count invariant: the
+/// attack draws come from pure `(round, attempt, client)` forks, clipping
+/// runs in the engine's flat slot loop, and the robust aggregators buffer
+/// survivors in slot order so shard merge is concatenation. Each attack
+/// kind runs under a rotating rule so trimmed and median both get
+/// invariance coverage.
+#[test]
+fn byzantine_records_invariant_to_worker_and_shard_count() {
+    let rules = [
+        AggregationRule::Mean,
+        AggregationRule::Trimmed,
+        AggregationRule::Median,
+    ];
+    let mut total_byz = 0usize;
+    for (i, &kind) in ByzantineKind::ALL.iter().enumerate() {
+        let rule = rules[i % rules.len()];
+        let seed = 50 + i as u64;
+        let serial = run_byzantine(Algorithm::FedLite, 1, 1, seed, kind, rule);
+        assert_identical(
+            &serial,
+            &run_byzantine(Algorithm::FedLite, 4, 1, seed, kind, rule),
+        );
+        assert_identical(
+            &serial,
+            &run_byzantine(Algorithm::FedLite, 2, 4, seed, kind, rule),
+        );
+        total_byz += serial.rounds.iter().map(|r| r.byzantine_sampled).sum::<usize>();
+    }
+    assert!(total_byz > 0, "p=0.5 over 5 kinds × 12 draws must flag someone");
+    // FedAvg rides the same engine hooks; one kind suffices to pin its
+    // clip + robust-rule path to the same invariance bar
+    let serial = run_byzantine(
+        Algorithm::FedAvg,
+        1,
+        1,
+        60,
+        ByzantineKind::SignFlip,
+        AggregationRule::Trimmed,
+    );
+    assert_identical(
+        &serial,
+        &run_byzantine(
+            Algorithm::FedAvg,
+            2,
+            4,
+            60,
+            ByzantineKind::SignFlip,
+            AggregationRule::Trimmed,
+        ),
     );
 }
 

@@ -15,7 +15,7 @@
 use std::sync::Arc;
 
 use fedlite::comm::message::Message;
-use fedlite::config::{Algorithm, RunConfig};
+use fedlite::config::{AggregationRule, Algorithm, ByzantineKind, RunConfig};
 use fedlite::coordinator::aggregator::SurvivorSet;
 use fedlite::coordinator::engine::MAX_SAMPLING_ATTEMPTS;
 use fedlite::coordinator::split::SplitTrainer;
@@ -65,6 +65,9 @@ fn assert_identical(a: &RunLog, b: &RunLog) {
         assert_eq!(x.cohort_survived, y.cohort_survived, "survived r{r}");
         assert_eq!(x.dropped, y.dropped, "drops r{r}");
         assert_eq!(x.attempts, y.attempts, "attempts r{r}");
+        assert_eq!(x.byzantine_sampled, y.byzantine_sampled, "byz r{r}");
+        assert_eq!(x.rejected_codewords, y.rejected_codewords, "rejects r{r}");
+        assert_eq!(x.clipped_updates, y.clipped_updates, "clips r{r}");
     }
 }
 
@@ -84,6 +87,12 @@ fn clean_config_is_bit_identical_to_baseline() {
         clean.straggler_frac = 0.0;
         clean.round_deadline = 25.0;
         clean.min_survivors = 1;
+        // a configured attack kind with frac 0 must also be a no-op: the
+        // byzantine fork is never drawn, honest bits are untouched
+        clean.byzantine_frac = 0.0;
+        clean.byzantine_kind = ByzantineKind::CorruptCodeword;
+        clean.clip_norm = 0.0;
+        clean.aggregation = AggregationRule::Mean;
         assert_identical(&baseline, &run(clean));
 
         for rec in &baseline.rounds {
@@ -340,4 +349,142 @@ fn min_survivors_resamples_until_floor_met() {
         found_resample,
         "no seed in 0..16 both resampled and met the floor on every round"
     );
+}
+
+/// (e) An all-byzantine corrupt-codeword cohort completes the run: every
+/// upload fails codeword validation, the clients are metered as
+/// `rejected_codeword` drops, and the optimizer never moves — the attack
+/// degrades the round, it does not abort it.
+#[test]
+fn corrupt_codewords_are_rejected_and_metered_as_drops() {
+    let mut cfg = tiny_cfg(Algorithm::FedLite, 7);
+    cfg.byzantine_frac = 1.0;
+    cfg.byzantine_kind = ByzantineKind::CorruptCodeword;
+    let cfg_fresh = cfg.clone();
+    let rt = Arc::new(Runtime::native());
+    let data = build_dataset(&cfg).unwrap();
+    let mut trainer = SplitTrainer::new(cfg, Arc::clone(&rt), data).unwrap();
+    let log = Trainer::run(&mut trainer).unwrap();
+    for rec in &log.rounds {
+        assert_eq!(rec.cohort_sampled, 4);
+        assert_eq!(rec.byzantine_sampled, 4, "frac 1.0 flags everyone");
+        assert_eq!(rec.cohort_survived, 0, "no corrupt upload survives");
+        assert_eq!(rec.dropped.rejected_codeword, 4, "r{}", rec.round);
+        assert_eq!(rec.rejected_codewords, 4, "telemetry mirrors the tally");
+        assert_eq!(
+            rec.cohort_survived + rec.dropped.total(),
+            rec.cohort_sampled,
+            "rejects stay inside the cohort arithmetic"
+        );
+        // the corrupt bytes really crossed the (metered) wire
+        assert!(rec.uplink_bytes > 0, "r{}", rec.round);
+    }
+    // nobody survived, so the parameters are exactly the initial ones
+    let fresh = SplitTrainer::new(
+        cfg_fresh.clone(),
+        rt,
+        build_dataset(&cfg_fresh).unwrap(),
+    )
+    .unwrap();
+    let (wc_run, ws_run) = trainer.params();
+    let (wc_new, ws_new) = fresh.params();
+    for (a, b) in wc_run.tensors.iter().zip(&wc_new.tensors) {
+        assert_eq!(a.data(), b.data(), "client params must not move");
+    }
+    for (a, b) in ws_run.tensors.iter().zip(&ws_new.tensors) {
+        assert_eq!(a.data(), b.data(), "server params must not move");
+    }
+}
+
+/// (f) Norm clipping meters every over-bound survivor: under a
+/// gradient-scaling attack with a tight clip bound, `clipped_updates`
+/// counts the whole surviving cohort and the attack telemetry matches the
+/// planned fraction's draws.
+#[test]
+fn clipping_meters_scaled_updates() {
+    for algo in [Algorithm::FedLite, Algorithm::FedAvg] {
+        let mut cfg = tiny_cfg(algo, 13);
+        cfg.byzantine_frac = 0.5;
+        cfg.byzantine_kind = ByzantineKind::GradScale;
+        cfg.clip_norm = 1e-4; // far below any real update norm
+        let log = run(cfg);
+        let mut saw_byz = false;
+        for rec in &log.rounds {
+            assert_eq!(rec.cohort_survived, 4, "attacks don't drop clients");
+            assert_eq!(
+                rec.clipped_updates, 4,
+                "every survivor exceeds a 1e-4 bound"
+            );
+            saw_byz |= rec.byzantine_sampled > 0;
+        }
+        assert!(saw_byz, "p=0.5 over 12 draws flags someone");
+    }
+}
+
+/// (g) Robust aggregation changes the committed bits under attack: with
+/// sign-flipping clients in the cohort, the trimmed and median rules both
+/// diverge from the plain mean by the final round (the defense actually
+/// engaged), while all three runs keep the same cohort bookkeeping.
+#[test]
+fn robust_rules_diverge_from_mean_under_attack() {
+    let mk = |rule: AggregationRule| {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 19);
+        cfg.byzantine_frac = 0.5;
+        cfg.byzantine_kind = ByzantineKind::SignFlip;
+        cfg.aggregation = rule;
+        run(cfg)
+    };
+    let mean = mk(AggregationRule::Mean);
+    let trimmed = mk(AggregationRule::Trimmed);
+    let median = mk(AggregationRule::Median);
+    // round 0 trains from identical params, so its loss is rule-agnostic
+    let r0 = mean.rounds[0].train_loss.to_bits();
+    assert_eq!(r0, trimmed.rounds[0].train_loss.to_bits());
+    assert_eq!(r0, median.rounds[0].train_loss.to_bits());
+    // by the last round the aggregation rule has steered the parameters
+    let last = mean.rounds.len() - 1;
+    assert_ne!(
+        mean.rounds[last].train_loss.to_bits(),
+        trimmed.rounds[last].train_loss.to_bits(),
+        "trimmed mean must not equal the weighted mean under attack"
+    );
+    assert_ne!(
+        mean.rounds[last].train_loss.to_bits(),
+        median.rounds[last].train_loss.to_bits(),
+        "median must not equal the weighted mean under attack"
+    );
+    for log in [&mean, &trimmed, &median] {
+        for rec in &log.rounds {
+            assert_eq!(rec.cohort_survived + rec.dropped.total(), rec.cohort_sampled);
+        }
+    }
+}
+
+/// (h) Faults and attacks compose: random drops plus corrupt-codeword
+/// clients plus the full defense stack keep every record's cohort
+/// arithmetic exact, and the run still completes.
+#[test]
+fn faults_and_byzantine_compose_consistently() {
+    let mut cfg = tiny_cfg(Algorithm::FedLite, 23);
+    cfg.drop_prob = 0.3;
+    cfg.byzantine_frac = 0.5;
+    cfg.byzantine_kind = ByzantineKind::CorruptCodeword;
+    cfg.clip_norm = 1.0;
+    cfg.aggregation = AggregationRule::Trimmed;
+    cfg.rounds = 4;
+    let log = run(cfg);
+    assert_eq!(log.rounds.len(), 4);
+    let mut any_reject = false;
+    for rec in &log.rounds {
+        assert_eq!(
+            rec.cohort_survived + rec.dropped.total(),
+            rec.cohort_sampled,
+            "r{}: every sampled client is survivor or dropped",
+            rec.round
+        );
+        assert_eq!(rec.rejected_codewords, rec.dropped.rejected_codeword);
+        assert!(rec.clipped_updates <= rec.cohort_survived);
+        any_reject |= rec.rejected_codewords > 0;
+    }
+    assert!(any_reject, "p=0.5 corruption over 16 draws must reject someone");
 }

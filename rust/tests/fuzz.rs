@@ -1,0 +1,180 @@
+//! Adversarial-bytes fuzz tests for every decoder a byzantine peer can
+//! reach: `quantizer::packing::unpack`, `Message::decode`, and
+//! `Frame::decode`.
+//!
+//! Deterministic (seeded `util::rng::Rng`, no wall-clock) so failures
+//! reproduce. The contract under test is narrow but absolute: random,
+//! truncated, or bit-flipped input must **never panic** — each call
+//! returns `Err` or a structurally valid value (codes in range, correct
+//! counts). Allocation hardening (length fields capped against the bytes
+//! actually present) is what keeps a hostile length prefix from becoming
+//! a memory bomb; these tests drive exactly that surface.
+
+use fedlite::comm::message::Message;
+use fedlite::comm::transport::Frame;
+use fedlite::quantizer::packing;
+use fedlite::util::rng::Rng;
+
+fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.below(256) as u8).collect()
+}
+
+/// Flip one random bit of `bytes` (no-op on empty input).
+fn flip_one_bit(rng: &mut Rng, bytes: &mut [u8]) {
+    if bytes.is_empty() {
+        return;
+    }
+    let i = rng.below(bytes.len());
+    bytes[i] ^= 1 << rng.below(8);
+}
+
+/// `unpack` on arbitrary byte soup: every outcome is `Err` or exactly
+/// `n` codes, each `< l` — out-of-range codes never escape the decoder.
+#[test]
+fn unpack_survives_random_streams() {
+    let mut rng = Rng::new(0xF0221);
+    for _ in 0..2000 {
+        let l = 1 + rng.below(300);
+        let n = rng.below(200);
+        let len = rng.below(2 * packing::packed_len(n.max(1), l) + 2);
+        let bytes = random_bytes(&mut rng, len);
+        match packing::unpack(&bytes, n, l) {
+            Ok(codes) => {
+                assert_eq!(codes.len(), n);
+                assert!(codes.iter().all(|&c| (c as usize) < l), "code out of range");
+            }
+            Err(_) => {}
+        }
+    }
+}
+
+/// Truncating or bit-flipping a *valid* packed stream keeps the same
+/// contract: truncation below the needed length must error, and a
+/// bit-flip may change codes but never yields one `>= l` (for power-of-
+/// two-strict `l` the flipped value can exceed the cluster count — the
+/// decoder must reject it, which is the codeword-validation defense).
+#[test]
+fn unpack_survives_truncation_and_bit_flips() {
+    let mut rng = Rng::new(0xF0222);
+    for _ in 0..500 {
+        let l = 1 + rng.below(40);
+        let n = 1 + rng.below(120);
+        let codes: Vec<u32> = (0..n).map(|_| rng.below(l) as u32).collect();
+        let packed = packing::pack(&codes, l);
+        assert_eq!(packing::unpack(&packed, n, l).unwrap(), codes);
+
+        // every truncation below the exact packed length errors
+        let cut = rng.below(packed.len());
+        assert!(
+            packing::unpack(&packed[..cut], n, l).is_err(),
+            "truncated stream (len {cut} < {}) must not decode",
+            packed.len()
+        );
+
+        // a single bit-flip stays in contract
+        let mut flipped = packed.clone();
+        flip_one_bit(&mut rng, &mut flipped);
+        if let Ok(codes) = packing::unpack(&flipped, n, l) {
+            assert_eq!(codes.len(), n);
+            assert!(codes.iter().all(|&c| (c as usize) < l));
+        }
+    }
+}
+
+/// A few valid messages of every variant, for mutation fuzzing.
+fn sample_messages(rng: &mut Rng) -> Vec<Message> {
+    let floats = |rng: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.uniform_in(-2.0, 2.0) as f32).collect()
+    };
+    let l = 1 + rng.below(16);
+    let ncodes = 1 + rng.below(64);
+    let codes: Vec<u32> = (0..ncodes).map(|_| rng.below(l) as u32).collect();
+    vec![
+        Message::ActivationUpload { z: floats(rng, 24), b: 4, d: 6 },
+        Message::QuantizedUpload {
+            q: 2,
+            r: 1,
+            l,
+            b: 4,
+            d: 6,
+            codebooks: floats(rng, l * 3),
+            packed_codes: packing::pack(&codes, l),
+            ng: ncodes,
+        },
+        Message::GradDownload { grad: floats(rng, 24), b: 4, d: 6 },
+        Message::ClientGrads { grads: vec![floats(rng, 5), floats(rng, 9)] },
+        Message::ModelBroadcast { params: vec![floats(rng, 5), floats(rng, 9)] },
+    ]
+}
+
+/// `Message::decode` on random soup, truncations, and bit-flips of valid
+/// encodes: never a panic, never a bloated allocation — `Err` or a
+/// message whose own validators (`validate_codewords`, `unpack_codes`)
+/// also return without panicking.
+#[test]
+fn message_decode_survives_adversarial_bytes() {
+    let mut rng = Rng::new(0xF0223);
+    // pure random soup (wrong magic kills most instantly; that's fine —
+    // the point is that nothing panics or over-allocates)
+    for _ in 0..2000 {
+        let bytes = random_bytes(&mut rng, rng.below(200));
+        let _ = Message::decode(&bytes);
+    }
+    for round in 0..100u32 {
+        for msg in sample_messages(&mut rng) {
+            let wire = msg.encode(round, round % 7);
+            assert_eq!(wire.len(), msg.wire_len(), "wire_len must be exact");
+            let (back, r, c) = Message::decode(&wire).unwrap();
+            assert_eq!((back, r, c), (msg.clone(), round, round % 7));
+
+            // every strict prefix fails (the header alone is 13 bytes)
+            let cut = rng.below(wire.len());
+            assert!(Message::decode(&wire[..cut]).is_err(), "prefix len {cut}");
+
+            // a bit-flip decodes to Err or to a message whose validators
+            // hold up; either way nothing panics downstream
+            let mut flipped = wire.clone();
+            flip_one_bit(&mut rng, &mut flipped);
+            if let Ok((m, _, _)) = Message::decode(&flipped) {
+                let _ = m.validate_codewords();
+                let _ = m.unpack_codes();
+            }
+        }
+    }
+}
+
+/// `Frame::decode` (the socket framing a byzantine member controls
+/// outright) on random soup and mutations of valid frames.
+#[test]
+fn frame_decode_survives_adversarial_bytes() {
+    let mut rng = Rng::new(0xF0224);
+    for _ in 0..2000 {
+        let bytes = random_bytes(&mut rng, rng.below(200));
+        let _ = Frame::decode(&bytes);
+    }
+    let frames = vec![
+        Frame::Join { version: 2 },
+        Frame::Welcome { config_json: "{\"task\":\"femnist\"}".to_string() },
+        Frame::Ready,
+        Frame::RoundState { round: 3, tensors: vec![vec![1.0, -2.0], vec![0.5]] },
+        Frame::Broadcast { round: 3, message: vec![1, 2, 3, 4] },
+        Frame::RoundEnd { round: 3 },
+        Frame::Leave,
+        Frame::Shutdown,
+    ];
+    for frame in &frames {
+        let body = frame.encode();
+        assert_eq!(&Frame::decode(&body).unwrap(), frame);
+        for _ in 0..50 {
+            let cut = rng.below(body.len() + 1);
+            if cut < body.len() {
+                // prefixes may decode only if the frame has trailing
+                // variable sections; they must never panic
+                let _ = Frame::decode(&body[..cut]);
+            }
+            let mut flipped = body.clone();
+            flip_one_bit(&mut rng, &mut flipped);
+            let _ = Frame::decode(&flipped);
+        }
+    }
+}

@@ -14,10 +14,13 @@
 //! assignments), and membership churn (a member leaves gracefully
 //! mid-run while the roster stays at the floor).
 
+use std::io::Write;
+use std::net::TcpStream;
 use std::sync::Arc;
 use std::thread;
 
-use fedlite::config::{Algorithm, RunConfig};
+use fedlite::comm::transport::{Frame, PROTOCOL_VERSION};
+use fedlite::config::{AggregationRule, Algorithm, ByzantineKind, RunConfig};
 use fedlite::coordinator::backend::{CoordinatorService, SocketBackend};
 use fedlite::coordinator::engine::RoundEngine;
 use fedlite::coordinator::fedavg::FedAvgTrainer;
@@ -128,6 +131,9 @@ fn assert_identical(a: &RunLog, b: &RunLog) {
             y.surrogate_loss.to_bits(),
             "surrogate loss r{r}"
         );
+        assert_eq!(x.byzantine_sampled, y.byzantine_sampled, "byz r{r}");
+        assert_eq!(x.rejected_codewords, y.rejected_codewords, "rejects r{r}");
+        assert_eq!(x.clipped_updates, y.clipped_updates, "clips r{r}");
     }
 }
 
@@ -178,4 +184,109 @@ fn member_leave_between_rounds_keeps_bit_parity() {
     let reference = in_process_run(tiny_cfg(Algorithm::FedLite, 55));
     let socketed = socket_run(tiny_cfg(Algorithm::FedLite, 55), 2, &[0, 1, 0]);
     assert_identical(&reference, &socketed);
+}
+
+/// Byzantine plans ride the `StepAssign` frames, so replicas misbehave
+/// identically to in-process clients: an adversarial run with the full
+/// defense stack (corrupting clients + codeword validation + clipping +
+/// trimmed aggregation) keeps bit-parity over the socket.
+#[test]
+fn byzantine_socket_run_bit_identical_to_in_process() {
+    let mk = |kind: ByzantineKind| {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 56);
+        cfg.byzantine_frac = 0.5;
+        cfg.byzantine_kind = kind;
+        cfg.clip_norm = 0.5;
+        cfg.aggregation = AggregationRule::Trimmed;
+        cfg
+    };
+    for kind in [ByzantineKind::SignFlip, ByzantineKind::CorruptCodeword] {
+        let reference = in_process_run(mk(kind));
+        let socketed = socket_run(mk(kind), 2, &[0, 0]);
+        assert_identical(&reference, &socketed);
+        let byz: usize = socketed.rounds.iter().map(|r| r.byzantine_sampled).sum();
+        assert!(byz > 0, "{kind:?}: p=0.5 over 12 draws must flag someone");
+    }
+}
+
+/// A member that completes the join handshake honestly, then answers its
+/// first assignment with an undecodable frame. The coordinator must reap
+/// it, not trust it with the round.
+fn run_evil_member(addr: &str) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    Frame::Join { version: PROTOCOL_VERSION }.write_to(&mut stream).unwrap();
+    match Frame::read_from(&mut stream).unwrap() {
+        Frame::Welcome { .. } => {}
+        other => panic!("expected Welcome, got {}", other.name()),
+    }
+    Frame::Ready.write_to(&mut stream).unwrap();
+    loop {
+        match Frame::read_from(&mut stream) {
+            Ok(Frame::StepAssign { .. }) => {
+                // a length-prefixed body that fails Frame::decode
+                // (unknown tag 0xFF): malformed, not just unexpected
+                stream.write_all(&1u32.to_le_bytes()).unwrap();
+                stream.write_all(&[0xFF]).unwrap();
+                stream.flush().unwrap();
+                return; // closing the socket; the coordinator reaps us
+            }
+            Ok(Frame::Shutdown) => return,
+            Ok(_) => continue, // RoundState / Broadcast / RoundEnd
+            Err(_) => return,  // already reaped
+        }
+    }
+}
+
+/// A byzantine socket peer must not be a coordinator DoS: a member that
+/// answers an assignment with a malformed frame costs only its own slots
+/// — metered as `peer_failure` drops — and is reaped, while the honest
+/// members carry the run to completion.
+#[test]
+fn malformed_member_frame_drops_its_clients_not_the_round() {
+    let cfg = tiny_cfg(Algorithm::FedLite, 57);
+    let service = CoordinatorService::bind("127.0.0.1:0", 2, &cfg).unwrap();
+    let addr = service.local_addr().unwrap().to_string();
+    let honest: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || run_worker(&addr, 0))
+        })
+        .collect();
+    let evil = {
+        let addr = addr.clone();
+        thread::spawn(move || run_evil_member(&addr))
+    };
+    let rt = Arc::new(Runtime::native());
+    let data = build_dataset(&cfg).unwrap();
+    let mut t = SplitTrainer::new(cfg, rt, data).unwrap();
+    let log = RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service)))
+        .run()
+        .expect("a malformed member frame must not abort the run");
+    for h in honest {
+        h.join().expect("worker thread panicked").expect("worker failed");
+    }
+    evil.join().expect("evil member panicked");
+    assert_eq!(log.rounds.len(), 3, "every round committed");
+    let mut reaped = 0usize;
+    for rec in &log.rounds {
+        assert_eq!(
+            rec.cohort_survived + rec.dropped.total(),
+            rec.cohort_sampled,
+            "r{}: reaped slots stay inside the cohort arithmetic",
+            rec.round
+        );
+        reaped += rec.dropped.peer_failure;
+    }
+    assert!(
+        reaped > 0,
+        "the evil member must have been assigned (and failed) some slot"
+    );
+    // the evil member is reaped the round it first misbehaves, so the
+    // honest members carry every other round with a full cohort
+    assert!(
+        log.rounds
+            .iter()
+            .any(|r| r.cohort_survived == 4 && r.dropped.total() == 0),
+        "some round must run entirely on honest members"
+    );
 }
