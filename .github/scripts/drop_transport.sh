@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Strip wall_seconds plus the transport telemetry columns
+# (reassigned_steps, quarantined_members) from a round-log CSV by header
+# name. This is everything a chaos/straggler/kill socket run is allowed
+# to change versus the clean in-process reference — every other byte is
+# pinned by the reassignment bit-parity contract.
+set -euo pipefail
+awk -F, 'NR==1 { for (i=1; i<=NF; i++)
+           if ($i=="wall_seconds" || $i=="reassigned_steps" || $i=="quarantined_members")
+             skip[i]=1 }
+         { out=""; for (i=1; i<=NF; i++) if (!(i in skip))
+             out = out (out=="" ? "" : ",") $i; print out }' "$1"

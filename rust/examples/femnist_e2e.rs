@@ -85,7 +85,7 @@ fn main() -> anyhow::Result<()> {
 
     // checkpoint the final model
     let (wc, ws) = trainer.params();
-    checkpoint::save("results/e2e/femnist_final.ckpt", wc, ws, Some(&cfg_save))?;
+    checkpoint::save("results/e2e/femnist_final.ckpt", wc, ws, Some(&cfg_save), rounds)?;
 
     // loss-curve digest for EXPERIMENTS.md
     println!("\n-- loss curve (every {} rounds) --", (rounds / 10).max(1));

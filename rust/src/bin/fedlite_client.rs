@@ -3,9 +3,13 @@
 //! Connects to a `fedlite serve` coordinator, rebuilds the run from the
 //! `Welcome` config, and serves client steps over the socket until the
 //! run ends (or `--max-rounds` rounds have been served, after which it
-//! leaves gracefully between rounds). See
+//! leaves gracefully between rounds). A dropped session triggers a
+//! bounded exponential-backoff reconnect (`--reconnect-tries`,
+//! `--backoff-ms`); every round re-syncs the replica's state, so a
+//! rejoined worker is bit-identical to one that never left. See
 //! `fedlite::coordinator::worker` for the protocol.
 
+use fedlite::coordinator::worker::WorkerOptions;
 use fedlite::util::logging;
 
 const USAGE: &str = "\
@@ -13,18 +17,28 @@ fedlite-client — replica worker for a `fedlite serve` coordinator
 
 USAGE:
     fedlite-client [--connect <addr>] [--max-rounds <n>] [--log <level>]
+                   [--reconnect-tries <n>] [--backoff-ms <ms>]
+                   [--straggle-ms <ms>]
 
 FLAGS:
-    --connect <addr>    coordinator address [default: 127.0.0.1:7878]
-    --max-rounds <n>    leave after serving n rounds; 0 = serve until the
-                        coordinator shuts the run down [default: 0]
-    --log <level>       log level [default: info]
-    --help              print this help
+    --connect <addr>       coordinator address [default: 127.0.0.1:7878]
+    --max-rounds <n>       leave after serving n rounds; 0 = serve until the
+                           coordinator shuts the run down [default: 0]
+    --reconnect-tries <n>  consecutive failed connects tolerated before
+                           giving up (budget refills after each successful
+                           handshake) [default: 5]
+    --backoff-ms <ms>      base reconnect delay; doubles per consecutive
+                           failure, capped at 10s [default: 100]
+    --straggle-ms <ms>     debug: sleep this long before every reply,
+                           making this worker a deterministic straggler
+                           [default: 0]
+    --log <level>          log level [default: info]
+    --help                 print this help
 ";
 
 fn main() {
     let mut connect = String::from("127.0.0.1:7878");
-    let mut max_rounds = 0usize;
+    let mut opts = WorkerOptions::default();
     let mut level = String::from("info");
     let mut args = std::env::args().skip(1);
     while let Some(a) = args.next() {
@@ -32,13 +46,23 @@ fn main() {
             args.next()
                 .ok_or_else(|| format!("{flag} needs a value"))
         };
+        fn parsed<T: std::str::FromStr>(flag: &str, v: String) -> Result<T, String> {
+            v.parse().map_err(|_| format!("{flag}: bad value '{v}'"))
+        }
         let r = match a.as_str() {
             "--connect" => val("--connect").map(|v| connect = v),
-            "--max-rounds" => val("--max-rounds").and_then(|v| {
-                v.parse()
-                    .map(|n| max_rounds = n)
-                    .map_err(|_| format!("--max-rounds: bad count '{v}'"))
-            }),
+            "--max-rounds" => val("--max-rounds")
+                .and_then(|v| parsed("--max-rounds", v))
+                .map(|n| opts.max_rounds = n),
+            "--reconnect-tries" => val("--reconnect-tries")
+                .and_then(|v| parsed("--reconnect-tries", v))
+                .map(|n| opts.reconnect_tries = n),
+            "--backoff-ms" => val("--backoff-ms")
+                .and_then(|v| parsed("--backoff-ms", v))
+                .map(|n| opts.backoff_ms = n),
+            "--straggle-ms" => val("--straggle-ms")
+                .and_then(|v| parsed("--straggle-ms", v))
+                .map(|n| opts.straggle_ms = n),
             "--log" => val("--log").map(|v| level = v),
             "--help" | "-h" => {
                 print!("{USAGE}");
@@ -52,7 +76,7 @@ fn main() {
         }
     }
     logging::init(&level);
-    if let Err(e) = fedlite::coordinator::worker::run_worker(&connect, max_rounds) {
+    if let Err(e) = fedlite::coordinator::worker::run_worker(&connect, opts) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }

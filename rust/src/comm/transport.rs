@@ -377,18 +377,25 @@ pub fn configure_stream(
 /// `round_deadline` knob so one setting governs both simulated eviction
 /// and real socket timeouts. Simulated deadlines are routinely
 /// sub-second — far shorter than real process scheduling on a loaded CI
-/// box — so the real timeout is floored at [`MIN_SOCKET_DEADLINE`];
-/// with no deadline configured it falls back to
-/// [`DEFAULT_SOCKET_DEADLINE`] (a liveness backstop, not a latency SLA).
-pub fn socket_deadline(round_deadline: f64) -> Duration {
-    if round_deadline > 0.0 {
-        Duration::from_secs_f64(round_deadline.max(MIN_SOCKET_DEADLINE))
+/// box — so the real timeout is floored at `floor` seconds
+/// (`--socket-deadline-floor`, default [`MIN_SOCKET_DEADLINE`]); with no
+/// deadline configured it falls back to [`DEFAULT_SOCKET_DEADLINE`] (a
+/// liveness backstop, not a latency SLA), still honoring a larger floor.
+/// Non-positive/non-finite floors degrade to [`MIN_SOCKET_DEADLINE`].
+pub fn socket_deadline(round_deadline: f64, floor: f64) -> Duration {
+    let floor = if floor > 0.0 && floor.is_finite() {
+        floor
     } else {
-        Duration::from_secs_f64(DEFAULT_SOCKET_DEADLINE)
+        MIN_SOCKET_DEADLINE
+    };
+    if round_deadline > 0.0 {
+        Duration::from_secs_f64(round_deadline.max(floor))
+    } else {
+        Duration::from_secs_f64(DEFAULT_SOCKET_DEADLINE.max(floor))
     }
 }
 
-/// Floor for real-socket read deadlines (seconds).
+/// Default floor for real-socket read deadlines (seconds).
 pub const MIN_SOCKET_DEADLINE: f64 = 30.0;
 
 /// Read deadline when no `round_deadline` is configured (seconds).
@@ -581,9 +588,37 @@ mod tests {
     #[test]
     fn socket_deadline_reuses_fault_semantics() {
         // configured deadlines pass through, floored for real sockets
-        assert_eq!(socket_deadline(120.0), Duration::from_secs_f64(120.0));
-        assert_eq!(socket_deadline(0.5), Duration::from_secs_f64(MIN_SOCKET_DEADLINE));
+        assert_eq!(
+            socket_deadline(120.0, MIN_SOCKET_DEADLINE),
+            Duration::from_secs_f64(120.0)
+        );
+        assert_eq!(
+            socket_deadline(0.5, MIN_SOCKET_DEADLINE),
+            Duration::from_secs_f64(MIN_SOCKET_DEADLINE)
+        );
         // unconfigured: liveness backstop only
-        assert_eq!(socket_deadline(0.0), Duration::from_secs_f64(DEFAULT_SOCKET_DEADLINE));
+        assert_eq!(
+            socket_deadline(0.0, MIN_SOCKET_DEADLINE),
+            Duration::from_secs_f64(DEFAULT_SOCKET_DEADLINE)
+        );
+    }
+
+    #[test]
+    fn socket_deadline_floor_is_configurable() {
+        // a lowered floor lets sub-second deadlines hit real sockets
+        // (the induced-timeout tests depend on this)
+        assert_eq!(socket_deadline(0.05, 0.2), Duration::from_secs_f64(0.2));
+        assert_eq!(socket_deadline(0.5, 0.2), Duration::from_secs_f64(0.5));
+        // a raised floor wins even over the unconfigured backstop
+        assert_eq!(socket_deadline(0.0, 900.0), Duration::from_secs_f64(900.0));
+        // degenerate floors degrade to the historical clamp
+        assert_eq!(
+            socket_deadline(0.5, 0.0),
+            Duration::from_secs_f64(MIN_SOCKET_DEADLINE)
+        );
+        assert_eq!(
+            socket_deadline(0.5, f64::NAN),
+            Duration::from_secs_f64(MIN_SOCKET_DEADLINE)
+        );
     }
 }

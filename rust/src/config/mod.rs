@@ -203,6 +203,27 @@ pub struct RunConfig {
     /// draws its own fault plans and runs its own worker fan-out; shard
     /// partials merge exactly, so results are bit-identical at any value.
     pub shards: usize,
+    /// Transport chaos (socket backend only): per-frame probability that
+    /// a coordinator→member `StepAssign` frame is lost in flight. Lost
+    /// assignments are reassigned, so round records are unchanged.
+    /// Schedules fork off `(round, member, frame)` keys; 0 draws nothing.
+    pub chaos_drop: f64,
+    /// Transport chaos: upper bound (milliseconds) on a uniform artificial
+    /// delay each member sleeps before sending a `StepResult`. 0 = off.
+    pub chaos_delay_ms: f64,
+    /// Transport chaos: per-reply probability that a member truncates its
+    /// `StepResult` frame mid-write and drops the connection (the
+    /// coordinator reaps it as a peer failure and reassigns its slots).
+    pub chaos_truncate: f64,
+    /// Real-time floor (seconds) on the socket backend's per-slot
+    /// deadline: a member that holds an outstanding `StepAssign` longer
+    /// than `max(round_deadline, floor)` without progress is quarantined
+    /// and its slots are reassigned. Default 30 preserves the historical
+    /// `MIN_SOCKET_DEADLINE` clamp; tests lower it to induce timeouts.
+    pub socket_deadline_floor: f64,
+    /// Save a `--save` checkpoint every N completed rounds (0 = only at
+    /// end of run). Resumable via `fedlite train --resume <path>`.
+    pub checkpoint_every: usize,
 }
 
 impl Default for RunConfig {
@@ -239,6 +260,11 @@ impl Default for RunConfig {
             aggregation: AggregationRule::Mean,
             workers: 0,
             shards: 1,
+            chaos_drop: 0.0,
+            chaos_delay_ms: 0.0,
+            chaos_truncate: 0.0,
+            socket_deadline_floor: 30.0,
+            checkpoint_every: 0,
         }
     }
 }
@@ -397,6 +423,14 @@ impl RunConfig {
         o.insert("aggregation", Value::Str(self.aggregation.name().into()));
         o.insert("workers", Value::from_usize(self.workers));
         o.insert("shards", Value::from_usize(self.shards));
+        o.insert("chaos_drop", Value::Num(self.chaos_drop));
+        o.insert("chaos_delay_ms", Value::Num(self.chaos_delay_ms));
+        o.insert("chaos_truncate", Value::Num(self.chaos_truncate));
+        o.insert(
+            "socket_deadline_floor",
+            Value::Num(self.socket_deadline_floor),
+        );
+        o.insert("checkpoint_every", Value::from_usize(self.checkpoint_every));
         Value::Obj(o)
     }
 
@@ -449,6 +483,14 @@ impl RunConfig {
             AggregationRule::parse(&get_s("aggregation", c.aggregation.name()))?;
         c.workers = get_us("workers", c.workers);
         c.shards = get_us("shards", c.shards);
+        // transport chaos / deadline-floor / checkpoint knobs default
+        // tolerant of pre-PR-10 JSON
+        c.chaos_drop = get_f("chaos_drop", c.chaos_drop);
+        c.chaos_delay_ms = get_f("chaos_delay_ms", c.chaos_delay_ms);
+        c.chaos_truncate = get_f("chaos_truncate", c.chaos_truncate);
+        c.socket_deadline_floor =
+            get_f("socket_deadline_floor", c.socket_deadline_floor);
+        c.checkpoint_every = get_us("checkpoint_every", c.checkpoint_every);
         Ok(c)
     }
 
@@ -494,6 +536,26 @@ impl RunConfig {
             self.clip_norm
         );
         anyhow::ensure!(self.shards >= 1, "need >= 1 shard");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.chaos_drop),
+            "chaos_drop {} outside [0, 1]",
+            self.chaos_drop
+        );
+        anyhow::ensure!(
+            self.chaos_delay_ms >= 0.0 && self.chaos_delay_ms.is_finite(),
+            "chaos_delay_ms {} must be finite and >= 0",
+            self.chaos_delay_ms
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.chaos_truncate),
+            "chaos_truncate {} outside [0, 1]",
+            self.chaos_truncate
+        );
+        anyhow::ensure!(
+            self.socket_deadline_floor > 0.0 && self.socket_deadline_floor.is_finite(),
+            "socket_deadline_floor {} must be finite and > 0",
+            self.socket_deadline_floor
+        );
         Ok(())
     }
 }
@@ -594,6 +656,38 @@ mod tests {
     }
 
     #[test]
+    fn chaos_and_deadline_floor_validation() {
+        let mut c = RunConfig::default();
+        c.chaos_drop = 0.05;
+        c.chaos_delay_ms = 50.0;
+        c.chaos_truncate = 0.1;
+        assert!(c.validate().is_ok());
+        c.chaos_drop = 1.5;
+        assert!(c.validate().is_err());
+        c.chaos_drop = 0.0;
+        c.chaos_delay_ms = -1.0;
+        assert!(c.validate().is_err());
+        c.chaos_delay_ms = f64::INFINITY;
+        assert!(c.validate().is_err());
+        c.chaos_delay_ms = 0.0;
+        c.chaos_truncate = -0.1;
+        assert!(c.validate().is_err());
+        c.chaos_truncate = 0.0;
+        c.socket_deadline_floor = 0.0;
+        assert!(c.validate().is_err());
+        c.socket_deadline_floor = 0.2;
+        assert!(c.validate().is_ok());
+        // pre-PR-10 JSON (no chaos keys) parses to the quiet defaults
+        let old = r#"{"task": "femnist", "rounds": 3, "drop_prob": 0.25}"#;
+        let back = RunConfig::from_json(&json::parse(old).unwrap()).unwrap();
+        assert_eq!(back.chaos_drop, 0.0);
+        assert_eq!(back.chaos_delay_ms, 0.0);
+        assert_eq!(back.chaos_truncate, 0.0);
+        assert_eq!(back.socket_deadline_floor, 30.0);
+        assert_eq!(back.checkpoint_every, 0);
+    }
+
+    #[test]
     fn byzantine_and_aggregation_parse() {
         for k in ByzantineKind::ALL {
             assert_eq!(ByzantineKind::parse(k.name()).unwrap(), k);
@@ -630,6 +724,11 @@ mod tests {
         c.byzantine_kind = ByzantineKind::CorruptCodeword;
         c.clip_norm = 1.5;
         c.aggregation = AggregationRule::Trimmed;
+        c.chaos_drop = 0.05;
+        c.chaos_delay_ms = 50.0;
+        c.chaos_truncate = 0.02;
+        c.socket_deadline_floor = 2.5;
+        c.checkpoint_every = 7;
         let j = c.to_json();
         let back = RunConfig::from_json(&j).unwrap();
         assert_eq!(back.rounds, 321);
@@ -643,6 +742,11 @@ mod tests {
         assert_eq!(back.byzantine_kind, ByzantineKind::CorruptCodeword);
         assert!((back.clip_norm - 1.5).abs() < 1e-12);
         assert_eq!(back.aggregation, AggregationRule::Trimmed);
+        assert!((back.chaos_drop - 0.05).abs() < 1e-12);
+        assert!((back.chaos_delay_ms - 50.0).abs() < 1e-12);
+        assert!((back.chaos_truncate - 0.02).abs() < 1e-12);
+        assert!((back.socket_deadline_floor - 2.5).abs() < 1e-12);
+        assert_eq!(back.checkpoint_every, 7);
         assert!((back.lambda - 5e-4).abs() < 1e-9);
         assert_eq!(back.algorithm, Algorithm::SplitFed);
         assert_eq!(back.quantizer, QuantizerEngine::Pjrt);

@@ -20,11 +20,24 @@
 //!   Fault plans travel with the assignments and all RNG keys stay pure
 //!   in `(round, attempt, client)`, so a socket run's records are
 //!   byte-identical to the in-process run of the same config (CI diffs
-//!   them). A member that misbehaves mid-shard (malformed frame, wrong
-//!   client, undecodable payload, dead socket) is reaped rather than
-//!   trusted to abort the round: its slots become
-//!   [`DropPhase::PeerFailure`] drops and training continues on the
-//!   surviving roster.
+//!   them). Collection is a poll/deadline loop, not a blocking read in
+//!   slot order: each member's oldest outstanding slot carries a
+//!   real-time deadline (`max(round_deadline, --socket-deadline-floor)`),
+//!   and because a slot's `StepResult` is a pure function of
+//!   `(round, attempt, client)` + plan, a straggling or failed member's
+//!   unfinished slots are speculatively *reassigned* to healthy members
+//!   and produce byte-identical results. A straggler past its deadline
+//!   is quarantined (a strike on its health score, connection severed);
+//!   a member that dies mid-shard — malformed frame, wrong client,
+//!   undecodable payload, dead socket — is reaped as a peer failure.
+//!   Either way the worker's reconnect/backoff loop may rejoin between
+//!   rounds. Slots degrade to [`DropPhase::PeerFailure`] drops only when
+//!   no healthy member remains (a degraded commit, never a deadlock or
+//!   round abort). A deterministic transport-chaos layer (`--chaos-*`,
+//!   keyed per `(round, member, frame)` off the fault module's
+//!   [`crate::coordinator::faults::chaos_key`]) can lose assignments in
+//!   flight to drive all of this in tests without changing one recorded
+//!   bit.
 //!
 //! Membership is a small state machine on the coordinator side:
 //!
@@ -42,15 +55,18 @@
 //! synchronously; the nonblocking sweep before each round additionally
 //! reaps crashed connections and pre-first-round leaves.
 
+use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::time::Duration;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::comm::accounting::RoundBytes;
 use crate::comm::message::Message;
 use crate::comm::transport::{self, Frame, PROTOCOL_VERSION};
 use crate::config::RunConfig;
 use crate::coordinator::engine::{client_stream_key, ClientOutput, RoundAlgorithm};
-use crate::coordinator::faults::{DropPhase, FaultPlan};
+use crate::coordinator::faults::{ChaosConfig, DropPhase, FaultPlan};
 use crate::util::pool::scoped_parallel_map;
 use crate::util::rng::Rng;
 
@@ -83,6 +99,57 @@ pub trait ClientBackend<A: RoundAlgorithm> {
     /// do anything.
     fn round_complete(&mut self, _round: usize) -> anyhow::Result<()> {
         Ok(())
+    }
+
+    /// Drain the transport-robustness telemetry accumulated since the
+    /// last call; the engine folds it into the round record
+    /// (`reassigned_steps` / `quarantined_members` columns). In-process
+    /// backends have no transport, so the default is all-zero.
+    fn take_telemetry(&mut self) -> BackendTelemetry {
+        BackendTelemetry::default()
+    }
+}
+
+/// One round's transport-robustness tally, drained by the engine via
+/// [`ClientBackend::take_telemetry`]. Transport bookkeeping only — a
+/// reassigned slot re-executes the same pure `(round, attempt, client)`
+/// work, so no other record column moves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BackendTelemetry {
+    /// `StepAssign`s re-sent to another member after a chaos loss,
+    /// straggler timeout, or peer failure.
+    pub reassigned_steps: usize,
+    /// Members quarantined (straggler past the slot deadline) or reaped
+    /// (dead socket / protocol violation) mid-round.
+    pub quarantined_members: usize,
+}
+
+/// Cumulative transport counters for a whole socket run. Shared out as
+/// an [`Arc`] via [`SocketBackend::stats`] before the backend is boxed
+/// into the engine, so tests and operators can assert on reassignment,
+/// quarantine, and peer-failure behavior after the run.
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    reassigned_steps: AtomicUsize,
+    quarantined_members: AtomicUsize,
+    peer_failures: AtomicUsize,
+}
+
+impl TransportStats {
+    /// Total `StepAssign`s re-sent to a different member.
+    pub fn reassigned_steps(&self) -> usize {
+        self.reassigned_steps.load(Ordering::Relaxed)
+    }
+
+    /// Total members quarantined or reaped mid-round.
+    pub fn quarantined_members(&self) -> usize {
+        self.quarantined_members.load(Ordering::Relaxed)
+    }
+
+    /// Members reaped for hard failures (dead socket, malformed frame,
+    /// wrong client, undecodable payload) — the `peer_failure` meter.
+    pub fn peer_failures(&self) -> usize {
+        self.peer_failures.load(Ordering::Relaxed)
     }
 }
 
@@ -157,10 +224,16 @@ pub enum ServicePhase {
     Training,
 }
 
-/// One admitted member connection.
+/// One admitted member connection, with its health score: `completed`
+/// counts steps served this session, `strikes` counts straggler
+/// timeouts. Any strike or hard failure removes the member (FIFO frame
+/// order cannot be trusted past an abandoned assignment); health resets
+/// on rejoin, so quarantine is an eviction, not a ban.
 struct Member {
     stream: TcpStream,
     peer: SocketAddr,
+    completed: u64,
+    strikes: u32,
 }
 
 /// The coordinator's listening socket plus its admitted members — the
@@ -172,9 +245,18 @@ pub struct CoordinatorService {
     /// The run config shipped to joiners in the `Welcome` frame; workers
     /// rebuild a bit-identical replica trainer from it.
     config_json: String,
-    /// Per-connection read deadline (reuses the fault layer's
-    /// `round_deadline` semantics, see [`transport::socket_deadline`]).
+    /// Per-connection read deadline and the poll loop's per-slot
+    /// deadline (reuses the fault layer's `round_deadline` semantics
+    /// floored by `--socket-deadline-floor`, see
+    /// [`transport::socket_deadline`]).
     read_timeout: Duration,
+    /// Deterministic transport-chaos knobs (`--chaos-*`), shipped to
+    /// members inside `config_json` so both link ends draw the same
+    /// schedules.
+    chaos: ChaosConfig,
+    /// Root for per-frame chaos forks (`chaos_key(round, member, frame)`);
+    /// never advanced, so chaos draws stay pure in their keys.
+    chaos_root: Rng,
     phase: ServicePhase,
 }
 
@@ -189,7 +271,12 @@ impl CoordinatorService {
             members: Vec::new(),
             min_clients: min_clients.max(1),
             config_json: cfg.to_json().to_string_pretty(),
-            read_timeout: transport::socket_deadline(cfg.round_deadline),
+            read_timeout: transport::socket_deadline(
+                cfg.round_deadline,
+                cfg.socket_deadline_floor,
+            ),
+            chaos: ChaosConfig::from_run(cfg),
+            chaos_root: Rng::new(cfg.seed),
             phase: ServicePhase::WaitingForMembers,
         })
     }
@@ -227,7 +314,7 @@ impl CoordinatorService {
             other => anyhow::bail!("expected Ready from {peer}, got {}", other.name()),
         }
         log::info!("member joined from {peer} ({} total)", self.members.len() + 1);
-        self.members.push(Member { stream, peer });
+        self.members.push(Member { stream, peer, completed: 0, strikes: 0 });
         Ok(())
     }
 
@@ -336,12 +423,6 @@ impl CoordinatorService {
             .map_err(|e| anyhow::anyhow!("send {} to {}: {e:#}", frame.name(), m.peer))
     }
 
-    fn read_from(&mut self, idx: usize) -> anyhow::Result<Frame> {
-        let m = &mut self.members[idx];
-        Frame::read_from(&mut m.stream)
-            .map_err(|e| anyhow::anyhow!("read from {}: {e:#}", m.peer))
-    }
-
     /// After `RoundEnd`, every member declares its intent for the next
     /// round: `Ready` to stay, `Leave` to depart. Reading exactly one
     /// reply per member closes the membership race — a graceful leave is
@@ -393,24 +474,54 @@ impl CoordinatorService {
     }
 }
 
+/// Cap on chaos-driven redeliveries per slot: past this many simulated
+/// in-flight losses the assignment is force-delivered, so even
+/// `--chaos-drop 1.0` degrades deterministically instead of livelocking
+/// the dispatch loop.
+const MAX_CHAOS_REDELIVERIES: u32 = 8;
+
+/// Idle sleep between poll sweeps when no member has a frame queued and
+/// nothing is pending dispatch. Small enough to keep loopback latency
+/// negligible, large enough not to spin a core.
+const POLL_QUANTUM: Duration = Duration::from_millis(2);
+
 /// The TCP loopback backend: assignments fan out over member connections
-/// in slot order (slot `i` → member `i mod W`), results stream back over
-/// the same FIFO connections, so reading per slot in order cannot
-/// deadlock (every member's frames arrive in its assignment order).
+/// (initial layout slot `i` → member `i mod W`), results stream back
+/// over the same FIFO connections, and collection is a poll/deadline
+/// loop: a member's oldest outstanding slot must make progress within
+/// the read deadline or the member is quarantined and its slots are
+/// speculatively reassigned to healthy members. Because each slot is a
+/// pure function of `(round, attempt, client)` + plan, the reassigned
+/// execution is byte-identical to the one the straggler abandoned.
 pub struct SocketBackend {
     service: CoordinatorService,
     /// Round whose state/broadcast the members already hold; re-synced
     /// once per round (not per shard or attempt).
     synced_round: Option<usize>,
+    /// Cumulative run-level counters, shared with tests/operators.
+    stats: Arc<TransportStats>,
+    /// Since-last-drain tally the engine folds into the round record.
+    telemetry: BackendTelemetry,
 }
 
 impl SocketBackend {
     pub fn new(service: CoordinatorService) -> Self {
-        SocketBackend { service, synced_round: None }
+        SocketBackend {
+            service,
+            synced_round: None,
+            stats: Arc::new(TransportStats::default()),
+            telemetry: BackendTelemetry::default(),
+        }
     }
 
     pub fn service(&self) -> &CoordinatorService {
         &self.service
+    }
+
+    /// Clone the shared counter handle. Grab this before boxing the
+    /// backend into the engine; the run mutates the same atomics.
+    pub fn stats(&self) -> Arc<TransportStats> {
+        Arc::clone(&self.stats)
     }
 
     fn run_shard_inner<A: RoundAlgorithm>(
@@ -429,46 +540,34 @@ impl SocketBackend {
         }
         // fix the roster and ship the round's state + broadcast once per
         // round; later shards and resampled attempts reuse them (the
-        // broadcast can't change between attempts)
+        // broadcast can't change between attempts). Sync is per-member
+        // best-effort: a member that dies here is reaped as a peer
+        // failure instead of aborting the round for everyone else.
         if self.synced_round != Some(round) {
             self.service.ensure_members()?;
             self.service.phase = ServicePhase::Training;
-            let tensors = algo.round_state(prep);
-            self.service
-                .send_all(&Frame::RoundState { round: round as u32, tensors })?;
-            self.service.send_all(&Frame::Broadcast {
+            let state =
+                Frame::RoundState { round: round as u32, tensors: algo.round_state(prep) };
+            let bcast = Frame::Broadcast {
                 round: round as u32,
                 message: broadcast.encode(round as u32, 0),
-            })?;
-            self.synced_round = Some(round);
-        }
-        let w = self.service.num_members();
-        anyhow::ensure!(w > 0, "no members to run round {round} on");
-        // write every assignment first, then collect results in slot
-        // order: per-connection FIFO makes this deadlock-free. A member
-        // that misbehaves mid-shard — malformed frame, wrong client,
-        // undecodable payload, dead socket — is marked dead: its slots
-        // become `PeerFailure` drops (metered through `DropCounts` like
-        // any other drop, zero bytes both in the meter and the partial,
-        // so the engine's meter-vs-partials assertion still holds) and
-        // the connection is reaped after the shard. A byzantine socket
-        // peer therefore cannot abort the coordinator's round.
-        let mut dead = vec![false; w];
-        for (slot, (&ci, &plan)) in shard.iter().zip(plans).enumerate() {
-            let m = slot % w;
-            if dead[m] {
-                continue;
-            }
-            let assign = Frame::StepAssign {
-                round: round as u32,
-                attempt,
-                client: ci as u64,
-                plan,
             };
-            if let Err(e) = self.service.send_to(m, &assign) {
-                log::warn!("assign for client {ci} failed, marking member dead: {e:#}");
-                dead[m] = true;
+            let mut dead = vec![false; self.service.num_members()];
+            for m in 0..self.service.num_members() {
+                let mut sync = self.service.send_to(m, &state);
+                if sync.is_ok() {
+                    sync = self.service.send_to(m, &bcast);
+                }
+                if let Err(e) = sync {
+                    log::warn!("round-state sync failed, reaping member: {e:#}");
+                    dead[m] = true;
+                    self.telemetry.quarantined_members += 1;
+                    self.stats.quarantined_members.fetch_add(1, Ordering::Relaxed);
+                    self.stats.peer_failures.fetch_add(1, Ordering::Relaxed);
+                }
             }
+            self.service.reap(&dead);
+            self.synced_round = Some(round);
         }
         let failed = || {
             Ok(ClientOutput::failed(
@@ -478,85 +577,351 @@ impl SocketBackend {
                 0.0,
             ))
         };
-        let mut outs = Vec::with_capacity(shard.len());
-        for (slot, &ci) in shard.iter().enumerate() {
-            let m = slot % w;
-            if dead[m] {
-                outs.push(failed());
-                continue;
+        let w = self.service.num_members();
+        if w == 0 {
+            // every member died during sync: commit a degraded round
+            // (all slots peer-failure drops) rather than deadlock; the
+            // next round's `ensure_members` blocks for rejoins
+            log::warn!("no healthy members for round {round}; degraded commit");
+            return Ok(shard.iter().map(|_| failed()).collect());
+        }
+
+        // Evict a member mid-shard: sever it from the dispatch rotation
+        // and requeue its outstanding slots for reassignment. `hard`
+        // marks protocol/socket failures (metered as peer failures) as
+        // opposed to straggler quarantines. Either way the frames FIFO
+        // can no longer be trusted, so the connection is reaped after
+        // the shard; the worker's reconnect loop may rejoin later.
+        fn evict(
+            m: usize,
+            hard: bool,
+            why: &str,
+            peer: SocketAddr,
+            queues: &mut [VecDeque<usize>],
+            pending: &mut VecDeque<usize>,
+            gone: &mut [bool],
+            stats: &TransportStats,
+            telemetry: &mut BackendTelemetry,
+        ) {
+            log::warn!("evicting member {peer} mid-shard ({why})");
+            gone[m] = true;
+            while let Some(slot) = queues[m].pop_front() {
+                pending.push_back(slot);
             }
-            match self.read_from(m) {
-                Ok(Frame::StepResult(r)) => {
-                    if r.client != ci as u64 {
-                        log::warn!(
-                            "member answered client {} for assigned client {ci}, \
-                             marking dead",
-                            r.client
-                        );
-                        dead[m] = true;
-                        outs.push(failed());
-                        continue;
-                    }
-                    let payload = match r.payload.map(|p| algo.payload_from_wire(p)) {
-                        Some(Ok(p)) => Some(p),
-                        Some(Err(e)) => {
-                            log::warn!(
-                                "undecodable payload from client {ci}'s member, \
-                                 marking dead: {e:#}"
-                            );
-                            dead[m] = true;
-                            outs.push(failed());
-                            continue;
-                        }
-                        None => None,
-                    };
-                    // the worker metered its own transfers; replay them
-                    // into the coordinator's meter so per-round deltas,
-                    // cumulative totals, and the engine's meter-vs-partials
-                    // assertion match the in-process run exactly
-                    algo.env().net.absorb(&r.bytes);
-                    outs.push(Ok(ClientOutput {
-                        weight: r.weight,
-                        loss: r.loss,
-                        metric_sums: r.metric_sums,
-                        quant_rel_err: r.quant_rel_err,
-                        surrogate_loss: r.surrogate_loss,
-                        payload,
-                        bytes: r.bytes,
-                        dropped: r.dropped,
-                        delay_seconds: r.delay_seconds,
-                    }));
-                }
-                Ok(Frame::StepError { client, error }) => {
-                    // the worker failed this step but the frame protocol
-                    // is intact (exactly one reply per assignment), so
-                    // the member stays; only the client drops
-                    log::warn!("remote client {client} failed, metering as a drop: {error}");
-                    outs.push(failed());
-                }
-                Ok(other) => {
-                    log::warn!(
-                        "expected StepResult for client {ci}, got {}; marking member dead",
-                        other.name()
-                    );
-                    dead[m] = true;
-                    outs.push(failed());
-                }
-                Err(e) => {
-                    log::warn!(
-                        "read for client {ci} failed, marking member dead: {e:#}"
-                    );
-                    dead[m] = true;
-                    outs.push(failed());
-                }
+            telemetry.quarantined_members += 1;
+            stats.quarantined_members.fetch_add(1, Ordering::Relaxed);
+            if hard {
+                stats.peer_failures.fetch_add(1, Ordering::Relaxed);
             }
         }
-        self.service.reap(&dead);
-        Ok(outs)
-    }
 
-    fn read_from(&mut self, idx: usize) -> anyhow::Result<Frame> {
-        self.service.read_from(idx)
+        enum Polled {
+            /// No frame queued on the connection.
+            Idle,
+            /// Connection unusable (closed, reset, unreadable frame).
+            Dead(String),
+            /// One whole frame read.
+            Got(Frame),
+        }
+
+        let deadline = self.service.read_timeout;
+        let mut outs: Vec<Option<anyhow::Result<ClientOutput<A::Payload>>>> =
+            (0..shard.len()).map(|_| None).collect();
+        let mut pending: VecDeque<usize> = (0..shard.len()).collect();
+        let mut queues: Vec<VecDeque<usize>> = (0..w).map(|_| VecDeque::new()).collect();
+        let mut gone = vec![false; w];
+        // per-slot delivery counters: `sent` drives the reassignment
+        // meter (any dispatch after the first is a redelivery, whether
+        // the first was chaos-eaten or abandoned by an evicted member),
+        // `chaos_losses` bounds the chaos retry tail
+        let mut sent = vec![0u32; shard.len()];
+        let mut chaos_losses = vec![0u32; shard.len()];
+        // per-member chaos frame counters for `chaos_key(round, m, frame)`
+        let mut frames = vec![0u64; w];
+        let mut last_progress: Vec<Instant> = vec![Instant::now(); w];
+        let mut cursor = 0usize;
+
+        loop {
+            // ---- dispatch every pending assignment ----
+            'dispatch: while let Some(slot) = pending.pop_front() {
+                let mut target = None;
+                for _ in 0..w {
+                    let c = cursor % w;
+                    cursor += 1;
+                    if !gone[c] {
+                        target = Some(c);
+                        break;
+                    }
+                }
+                let Some(m) = target else {
+                    // no healthy member remains: degraded commit for
+                    // this slot, never a deadlock or round abort
+                    outs[slot] = Some(failed());
+                    continue 'dispatch;
+                };
+                if sent[slot] > 0 {
+                    self.telemetry.reassigned_steps += 1;
+                    self.stats.reassigned_steps.fetch_add(1, Ordering::Relaxed);
+                }
+                let cf = self.service.chaos.frame(
+                    &self.service.chaos_root,
+                    round as u64,
+                    m as u64,
+                    frames[m],
+                );
+                frames[m] += 1;
+                if cf.drop && chaos_losses[slot] < MAX_CHAOS_REDELIVERIES {
+                    // deterministic chaos ate the assignment in flight;
+                    // requeue for redelivery (counted above once a
+                    // prior send exists)
+                    chaos_losses[slot] += 1;
+                    sent[slot] += 1;
+                    pending.push_back(slot);
+                    continue 'dispatch;
+                }
+                let assign = Frame::StepAssign {
+                    round: round as u32,
+                    attempt,
+                    client: shard[slot] as u64,
+                    plan: plans[slot],
+                };
+                match self.service.send_to(m, &assign) {
+                    Ok(()) => {
+                        sent[slot] += 1;
+                        if queues[m].is_empty() {
+                            last_progress[m] = Instant::now();
+                        }
+                        queues[m].push_back(slot);
+                    }
+                    Err(e) => {
+                        let peer = self.service.members[m].peer;
+                        evict(
+                            m,
+                            true,
+                            &format!("assign failed: {e:#}"),
+                            peer,
+                            &mut queues,
+                            &mut pending,
+                            &mut gone,
+                            &self.stats,
+                            &mut self.telemetry,
+                        );
+                        pending.push_back(slot);
+                    }
+                }
+            }
+            if outs.iter().all(|o| o.is_some()) {
+                break;
+            }
+
+            // ---- poll every member with outstanding work ----
+            let mut progressed = false;
+            for m in 0..w {
+                if gone[m] || queues[m].is_empty() {
+                    continue;
+                }
+                let polled = {
+                    let stream = &mut self.service.members[m].stream;
+                    let mut probe = [0u8; 1];
+                    if stream.set_nonblocking(true).is_err() {
+                        Polled::Dead("socket error".to_string())
+                    } else {
+                        match stream.peek(&mut probe) {
+                            Ok(0) => Polled::Dead("connection closed".to_string()),
+                            Ok(_) => {
+                                if stream.set_nonblocking(false).is_err() {
+                                    Polled::Dead("socket error".to_string())
+                                } else {
+                                    // the blocking read still carries the
+                                    // connection's read deadline, so a
+                                    // half-written frame cannot wedge the
+                                    // loop
+                                    match Frame::read_from(stream) {
+                                        Ok(f) => Polled::Got(f),
+                                        Err(e) => {
+                                            Polled::Dead(format!("read error: {e:#}"))
+                                        }
+                                    }
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                                let _ = stream.set_nonblocking(false);
+                                Polled::Idle
+                            }
+                            Err(e) => Polled::Dead(format!("socket error: {e}")),
+                        }
+                    }
+                };
+                let peer = self.service.members[m].peer;
+                match polled {
+                    Polled::Idle => {
+                        if last_progress[m].elapsed() > deadline {
+                            progressed = true;
+                            let member = &mut self.service.members[m];
+                            member.strikes += 1;
+                            let why = format!(
+                                "straggler: no reply in {:.1}s with {} slots \
+                                 outstanding (strike {}, {} steps served)",
+                                deadline.as_secs_f64(),
+                                queues[m].len(),
+                                member.strikes,
+                                member.completed,
+                            );
+                            evict(
+                                m,
+                                false,
+                                &why,
+                                peer,
+                                &mut queues,
+                                &mut pending,
+                                &mut gone,
+                                &self.stats,
+                                &mut self.telemetry,
+                            );
+                        }
+                    }
+                    Polled::Dead(why) => {
+                        progressed = true;
+                        evict(
+                            m,
+                            true,
+                            &why,
+                            peer,
+                            &mut queues,
+                            &mut pending,
+                            &mut gone,
+                            &self.stats,
+                            &mut self.telemetry,
+                        );
+                    }
+                    Polled::Got(frame) => {
+                        progressed = true;
+                        match frame {
+                            Frame::StepResult(r) => {
+                                let &slot =
+                                    queues[m].front().expect("polled member has a queue");
+                                let ci = shard[slot];
+                                if r.client != ci as u64 {
+                                    evict(
+                                        m,
+                                        true,
+                                        &format!(
+                                            "answered client {} for assigned client {ci}",
+                                            r.client
+                                        ),
+                                        peer,
+                                        &mut queues,
+                                        &mut pending,
+                                        &mut gone,
+                                        &self.stats,
+                                        &mut self.telemetry,
+                                    );
+                                    continue;
+                                }
+                                let payload =
+                                    match r.payload.map(|p| algo.payload_from_wire(p)) {
+                                        Some(Ok(p)) => Some(p),
+                                        Some(Err(e)) => {
+                                            evict(
+                                                m,
+                                                true,
+                                                &format!(
+                                                    "undecodable payload for client \
+                                                     {ci}: {e:#}"
+                                                ),
+                                                peer,
+                                                &mut queues,
+                                                &mut pending,
+                                                &mut gone,
+                                                &self.stats,
+                                                &mut self.telemetry,
+                                            );
+                                            continue;
+                                        }
+                                        None => None,
+                                    };
+                                queues[m].pop_front();
+                                // the worker metered its own transfers;
+                                // replay them into the coordinator's meter
+                                // exactly once per resolved slot (an
+                                // evicted member's abandoned work is never
+                                // read), so per-round deltas and the
+                                // engine's meter-vs-partials assertion
+                                // match the in-process run exactly
+                                algo.env().net.absorb(&r.bytes);
+                                outs[slot] = Some(Ok(ClientOutput {
+                                    weight: r.weight,
+                                    loss: r.loss,
+                                    metric_sums: r.metric_sums,
+                                    quant_rel_err: r.quant_rel_err,
+                                    surrogate_loss: r.surrogate_loss,
+                                    payload,
+                                    bytes: r.bytes,
+                                    dropped: r.dropped,
+                                    delay_seconds: r.delay_seconds,
+                                }));
+                                last_progress[m] = Instant::now();
+                                self.service.members[m].completed += 1;
+                            }
+                            Frame::StepError { client, error } => {
+                                let &slot =
+                                    queues[m].front().expect("polled member has a queue");
+                                if client != shard[slot] as u64 {
+                                    evict(
+                                        m,
+                                        true,
+                                        &format!(
+                                            "StepError for client {client}, expected {}",
+                                            shard[slot]
+                                        ),
+                                        peer,
+                                        &mut queues,
+                                        &mut pending,
+                                        &mut gone,
+                                        &self.stats,
+                                        &mut self.telemetry,
+                                    );
+                                    continue;
+                                }
+                                // the worker failed this step but the
+                                // frame protocol is intact (exactly one
+                                // reply per assignment), so the member
+                                // stays; only the client drops
+                                log::warn!(
+                                    "remote client {client} failed, metering as a drop: \
+                                     {error}"
+                                );
+                                queues[m].pop_front();
+                                outs[slot] = Some(failed());
+                                last_progress[m] = Instant::now();
+                            }
+                            other => {
+                                evict(
+                                    m,
+                                    true,
+                                    &format!("unexpected {} mid-shard", other.name()),
+                                    peer,
+                                    &mut queues,
+                                    &mut pending,
+                                    &mut gone,
+                                    &self.stats,
+                                    &mut self.telemetry,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            if !progressed && pending.is_empty() {
+                std::thread::sleep(POLL_QUANTUM);
+            }
+        }
+        self.service.reap(&gone);
+        let outs = outs
+            .into_iter()
+            .map(|o| o.expect("every shard slot resolved"))
+            .collect();
+        Ok(outs)
     }
 }
 
@@ -581,9 +946,23 @@ impl<A: RoundAlgorithm> ClientBackend<A> for SocketBackend {
     }
 
     fn round_complete(&mut self, round: usize) -> anyhow::Result<()> {
-        self.service.send_all(&Frame::RoundEnd { round: round as u32 })?;
+        // per-member best-effort: a member that died since the shard
+        // barrier is reaped here instead of aborting the committed round
+        let end = Frame::RoundEnd { round: round as u32 };
+        let mut dead = vec![false; self.service.num_members()];
+        for m in 0..self.service.num_members() {
+            if let Err(e) = self.service.send_to(m, &end) {
+                log::warn!("RoundEnd send failed, reaping member: {e:#}");
+                dead[m] = true;
+            }
+        }
+        self.service.reap(&dead);
         self.service.collect_round_acks();
         Ok(())
+    }
+
+    fn take_telemetry(&mut self) -> BackendTelemetry {
+        std::mem::take(&mut self.telemetry)
     }
 }
 

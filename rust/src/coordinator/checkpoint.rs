@@ -1,9 +1,12 @@
 //! Binary checkpoints for model parameters + JSON config sidecar.
 //!
 //! Format: `FLCK` magic, version u32, tensor count u32, then per tensor:
-//! name (u32 len + utf8), rank u32, dims u32..., f32 data (LE). The
-//! config sidecar (`<path>.config.json`) lets a run resume with the exact
-//! settings that produced the checkpoint.
+//! name (u32 len + utf8), rank u32, dims u32..., f32 data (LE). Version
+//! 2 appends a `completed_rounds` u64 trailer so `--resume` knows which
+//! round the run should continue from; version-1 files (no trailer)
+//! still load and resume from round 0. The config sidecar
+//! (`<path>.config.json`) lets a run resume with the exact settings
+//! that produced the checkpoint.
 
 use std::fs::{self, File};
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -14,14 +17,16 @@ use crate::tensor::{Tensor, TensorList};
 use crate::util::json;
 
 const MAGIC: &[u8; 4] = b"FLCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
-/// Save client+server parameter lists.
+/// Save client+server parameter lists plus the number of rounds already
+/// committed (`0` for a final checkpoint nobody will resume).
 pub fn save(
     path: impl AsRef<Path>,
     wc: &TensorList,
     ws: &TensorList,
     cfg: Option<&RunConfig>,
+    completed_rounds: usize,
 ) -> anyhow::Result<()> {
     let path = path.as_ref();
     if let Some(dir) = path.parent() {
@@ -45,6 +50,7 @@ pub fn save(
             }
         }
     }
+    w.write_all(&(completed_rounds as u64).to_le_bytes())?;
     w.flush()?;
     if let Some(cfg) = cfg {
         fs::write(
@@ -55,13 +61,26 @@ pub fn save(
     Ok(())
 }
 
-/// Load client+server parameter lists.
+/// Load client+server parameter lists (progress trailer discarded).
 pub fn load(path: impl AsRef<Path>) -> anyhow::Result<(TensorList, TensorList)> {
+    let (wc, ws, _) = load_resume(path)?;
+    Ok((wc, ws))
+}
+
+/// Load client+server parameter lists plus the `completed_rounds`
+/// trailer (`0` for version-1 checkpoints, which predate it).
+pub fn load_resume(
+    path: impl AsRef<Path>,
+) -> anyhow::Result<(TensorList, TensorList, usize)> {
     let mut r = BufReader::new(File::open(path.as_ref())?);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     anyhow::ensure!(&magic == MAGIC, "not a fedlite checkpoint");
-    anyhow::ensure!(read_u32(&mut r)? == VERSION, "unsupported version");
+    let version = read_u32(&mut r)?;
+    anyhow::ensure!(
+        (1..=VERSION).contains(&version),
+        "unsupported checkpoint version {version}"
+    );
     let mut sides = Vec::new();
     for label in ["client", "server"] {
         let n = read_u32(&mut r)? as usize;
@@ -95,7 +114,14 @@ pub fn load(path: impl AsRef<Path>) -> anyhow::Result<(TensorList, TensorList)> 
     }
     let server = sides.pop().unwrap();
     let client = sides.pop().unwrap();
-    Ok((client, server))
+    let completed_rounds = if version >= 2 {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        u64::from_le_bytes(b) as usize
+    } else {
+        0
+    };
+    Ok((client, server, completed_rounds))
 }
 
 /// Load the config sidecar if present.
@@ -143,7 +169,7 @@ mod tests {
     fn roundtrip_exact() {
         let (wc, ws) = sample_params();
         let p = tmp("a.ckpt");
-        save(&p, &wc, &ws, None).unwrap();
+        save(&p, &wc, &ws, None, 0).unwrap();
         let (wc2, ws2) = load(&p).unwrap();
         assert_eq!(wc2.names, wc.names);
         for (a, b) in wc2.tensors.iter().zip(&wc.tensors) {
@@ -159,10 +185,30 @@ mod tests {
         let p = tmp("b.ckpt");
         let mut cfg = RunConfig::preset("femnist").unwrap();
         cfg.rounds = 77;
-        save(&p, &wc, &ws, Some(&cfg)).unwrap();
+        save(&p, &wc, &ws, Some(&cfg), 0).unwrap();
         let back = load_config(&p).unwrap().unwrap();
         assert_eq!(back.rounds, 77);
         assert_eq!(back.task, "femnist");
+    }
+
+    #[test]
+    fn progress_trailer_roundtrips_and_v1_reads_as_zero() {
+        let (wc, ws) = sample_params();
+        let p = tmp("d.ckpt");
+        save(&p, &wc, &ws, None, 42).unwrap();
+        let (_, _, done) = load_resume(&p).unwrap();
+        assert_eq!(done, 42);
+
+        // a version-1 checkpoint is the same stream without the trailer;
+        // rewrite the header version and strip the last 8 bytes
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[4..8].copy_from_slice(&1u32.to_le_bytes());
+        bytes.truncate(bytes.len() - 8);
+        let p1 = tmp("d1.ckpt");
+        std::fs::write(&p1, bytes).unwrap();
+        let (wc1, _, done1) = load_resume(&p1).unwrap();
+        assert_eq!(done1, 0, "v1 checkpoints predate the trailer");
+        assert_eq!(wc1.names, wc.names);
     }
 
     #[test]

@@ -464,9 +464,28 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
     /// Run the configured number of rounds — the trainers' `run` entry
     /// point (logging, CSV/JSONL writing, and flushing included).
     pub fn run(&mut self) -> anyhow::Result<RunLog> {
+        self.run_hooked(0, 0, |_, _| Ok(()))
+    }
+
+    /// Run rounds `start_round..rounds`, invoking `on_checkpoint(algo,
+    /// completed_rounds)` after every `checkpoint_every`-th committed
+    /// round (absolute cadence: rounds 0-indexed, fires when
+    /// `(round + 1) % checkpoint_every == 0`; 0 disables). `start_round`
+    /// supports `--resume`: round `r`'s bits depend only on `(r,
+    /// attempt, client)` keys and the restored parameters, never on how
+    /// many rounds this process already ran, so a resumed suffix is
+    /// bit-identical to the same rounds of an uninterrupted run. Writers
+    /// are flushed before each checkpoint so the on-disk logs never
+    /// trail the snapshot.
+    pub fn run_hooked(
+        &mut self,
+        start_round: usize,
+        checkpoint_every: usize,
+        mut on_checkpoint: impl FnMut(&mut A, usize) -> anyhow::Result<()>,
+    ) -> anyhow::Result<RunLog> {
         let rounds = self.algo.env().rounds;
         let mut log = RunLog::default();
-        for round in 0..rounds {
+        for round in start_round..rounds {
             let rec = self.round(round)?;
             // after the commit: socket backends notify members here,
             // opening the between-rounds window in which they may leave
@@ -477,6 +496,16 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
             let (csv, jsonl) = self.algo.writers();
             write_round(csv, jsonl, &rec)?;
             log.push(rec);
+            if checkpoint_every > 0 && (round + 1) % checkpoint_every == 0 {
+                let (csv, jsonl) = self.algo.writers();
+                if let Some(c) = csv {
+                    c.flush()?;
+                }
+                if let Some(j) = jsonl {
+                    j.flush()?;
+                }
+                on_checkpoint(self.algo, round + 1)?;
+            }
         }
         let (csv, jsonl) = self.algo.writers();
         if let Some(c) = csv {
@@ -521,6 +550,9 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
         self.algo.commit(prep, committed, round)?;
 
         let metric = self.algo.env().metric;
+        // drain the backend's transport tally for this round (slot
+        // reassignments, quarantined members) — always zero in-process
+        let telemetry = self.backend.take_telemetry();
         let mut rec = RoundRecord {
             round,
             train_loss: outcome.loss_agg.mean(),
@@ -539,6 +571,8 @@ impl<'a, A: RoundAlgorithm> RoundEngine<'a, A> {
             dropped: outcome.drops,
             attempts: outcome.attempts,
             surrogate_loss: outcome.surr_agg.mean(),
+            reassigned_steps: telemetry.reassigned_steps,
+            quarantined_members: telemetry.quarantined_members,
             ..Default::default()
         };
         let (eval_every, eval_batches) = {

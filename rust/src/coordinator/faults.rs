@@ -244,6 +244,85 @@ pub fn fault_key(round: u64, attempt: u32, client: usize) -> u64 {
     (round << 20) ^ ((attempt as u64) << 44) ^ (client as u64) ^ 0xFA17
 }
 
+/// Transport chaos settings for the socket deployment mode (see
+/// `coordinator::backend`). The faults above perturb *computation*
+/// (which clients fail, straggle, or attack — all of it changes the
+/// round records); chaos perturbs only the *transport* between the
+/// coordinator and its members. Lost assignments are reassigned,
+/// truncated replies get their member reaped and the slot re-executed
+/// elsewhere, and delays just slow delivery — every `StepResult` is a
+/// pure function of `(round, attempt, client)` + plan, so round records
+/// stay byte-identical to a chaos-free run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChaosConfig {
+    /// Per-frame probability a coordinator→member `StepAssign` is lost.
+    pub drop: f64,
+    /// Upper bound (ms) on the uniform delay a member sleeps before
+    /// sending each `StepResult`.
+    pub delay_ms: f64,
+    /// Per-reply probability a member truncates its `StepResult`
+    /// mid-frame and drops the connection.
+    pub truncate: f64,
+}
+
+/// One frame's chaos decision, drawn from the [`chaos_key`] fork.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ChaosFrame {
+    pub drop: bool,
+    /// Artificial delay in milliseconds (0 when `delay_ms` is off).
+    pub delay_ms: f64,
+    pub truncate: bool,
+}
+
+impl ChaosConfig {
+    pub fn from_run(cfg: &RunConfig) -> ChaosConfig {
+        ChaosConfig {
+            drop: cfg.chaos_drop,
+            delay_ms: cfg.chaos_delay_ms,
+            truncate: cfg.chaos_truncate,
+        }
+    }
+
+    /// Whether any chaos draw happens at all. When false, [`Self::frame`]
+    /// forks nothing, so `--chaos-* 0` is a provable no-op: no RNG
+    /// stream is touched and the transport behaves exactly as before.
+    pub fn enabled(&self) -> bool {
+        self.drop > 0.0 || self.delay_ms > 0.0 || self.truncate > 0.0
+    }
+
+    /// Deterministic chaos decision for one frame. `entity` is the
+    /// coordinator's member index on the send side and the slot's client
+    /// id on the member side; `frame` is the sender's per-entity frame
+    /// counter. Each knob gates its own draw, so enabling one never
+    /// shifts another's stream.
+    pub fn frame(&self, root: &Rng, round: u64, entity: u64, frame: u64) -> ChaosFrame {
+        let mut out = ChaosFrame::default();
+        if !self.enabled() {
+            return out;
+        }
+        let mut rng = root.fork(chaos_key(round, entity, frame));
+        if self.drop > 0.0 {
+            out.drop = rng.bernoulli(self.drop);
+        }
+        if self.delay_ms > 0.0 {
+            out.delay_ms = rng.uniform_in(0.0, self.delay_ms);
+        }
+        if self.truncate > 0.0 {
+            out.truncate = rng.bernoulli(self.truncate);
+        }
+        out
+    }
+}
+
+/// Fork key for one transport frame's chaos decision. Same shape as
+/// [`fault_key`]/[`byzantine_key`] with the frame counter in the
+/// attempt's position and its own `0xCA05` tag, so chaos is an
+/// independent RNG dimension: enabling it perturbs no fault, byzantine,
+/// or client work stream.
+pub fn chaos_key(round: u64, entity: u64, frame: u64) -> u64 {
+    (round << 20) ^ (frame << 44) ^ entity ^ 0xCA05
+}
+
 /// Fork key for a client's byzantine draw. Distinct tag from
 /// [`fault_key`] and every client work stream, so the byzantine layer is
 /// an independent RNG dimension: enabling it leaves honest-fault and
@@ -527,6 +606,47 @@ mod tests {
         assert_eq!(batch.len(), cohort.len());
         for (slot, &ci) in cohort.iter().enumerate() {
             assert_eq!(batch[slot], fc.plan(&root, 2, 1, ci), "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn chaos_disabled_draws_nothing_and_keys_are_distinct() {
+        let chaos = ChaosConfig::default();
+        assert!(!chaos.enabled());
+        let root = Rng::new(6);
+        for f in 0..50 {
+            assert_eq!(chaos.frame(&root, 1, 0, f), ChaosFrame::default());
+        }
+        // the chaos dimension never collides with fault/byzantine keys
+        assert_ne!(chaos_key(2, 3, 1), fault_key(2, 1, 3));
+        assert_ne!(chaos_key(2, 3, 1), byzantine_key(2, 1, 3));
+        assert_ne!(chaos_key(2, 3, 1), chaos_key(2, 3, 2), "fresh per frame");
+        assert_ne!(chaos_key(2, 3, 1), chaos_key(2, 4, 1), "fresh per entity");
+    }
+
+    #[test]
+    fn chaos_rates_and_determinism() {
+        let chaos = ChaosConfig { drop: 0.25, delay_ms: 40.0, truncate: 0.1 };
+        assert!(chaos.enabled());
+        let root = Rng::new(8);
+        let (mut drops, mut truncs, n) = (0, 0, 4000);
+        for f in 0..n {
+            let c = chaos.frame(&root, 3, 1, f);
+            assert_eq!(c, chaos.frame(&root, 3, 1, f), "same key, same chaos");
+            assert!((0.0..40.0).contains(&c.delay_ms));
+            drops += c.drop as usize;
+            truncs += c.truncate as usize;
+        }
+        let frac = |k: usize| k as f64 / n as f64;
+        assert!((frac(drops) - 0.25).abs() < 0.05, "drop rate {}", frac(drops));
+        assert!((frac(truncs) - 0.1).abs() < 0.05, "truncate rate {}", frac(truncs));
+        // enabling the delay knob must not shift the drop stream
+        let drop_only = ChaosConfig { drop: 0.25, ..ChaosConfig::default() };
+        for f in 0..200 {
+            assert_eq!(
+                drop_only.frame(&root, 3, 1, f).drop,
+                chaos.frame(&root, 3, 1, f).drop
+            );
         }
     }
 

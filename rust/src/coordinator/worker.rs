@@ -17,27 +17,119 @@
 //! coordinator absorbs into its own meter — so a socket run's records are
 //! byte-identical to the in-process run of the same config.
 //!
+//! Sessions are wrapped in a bounded exponential-backoff reconnect loop:
+//! a connection lost mid-run (coordinator quarantined us as a straggler,
+//! transport chaos severed the link, the network hiccuped) triggers a
+//! fresh join rather than worker death. Every round re-syncs the full
+//! mutable state (`RoundState` + `Broadcast`), so a rejoining replica is
+//! bit-identical to one that never left. The retry budget refills after
+//! every successful handshake, so a long-lived worker that rejoins many
+//! times over a run never exhausts it; only *consecutive* failed
+//! connects do.
+//!
+//! The worker also honors the run's `--chaos-*` knobs (shipped in the
+//! `Welcome` config): each reply frame draws `(delay, truncate)` from a
+//! fork keyed `chaos_key(round, client, frame)` off the run seed —
+//! deterministic, never from wall clock — and a truncated reply really
+//! writes a partial frame and severs the connection, exercising the
+//! coordinator's reap + reassignment path end to end.
+//!
 //! [`ClientOutput`]: crate::coordinator::engine::ClientOutput
 //! [`RoundBytes`]: crate::comm::accounting::RoundBytes
 
+use std::io::Write;
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::comm::message::Message;
 use crate::comm::transport::{self, Frame, StepResult, PROTOCOL_VERSION};
 use crate::config::{Algorithm, RunConfig};
+use crate::coordinator::build_dataset;
 use crate::coordinator::engine::{client_stream_key, RoundAlgorithm};
+use crate::coordinator::faults::ChaosConfig;
 use crate::coordinator::fedavg::FedAvgTrainer;
 use crate::coordinator::split::SplitTrainer;
-use crate::coordinator::build_dataset;
 use crate::runtime::Runtime;
 use crate::util::json;
+use crate::util::rng::Rng;
+
+/// Ceiling on the exponential reconnect backoff.
+const MAX_BACKOFF_MS: u64 = 10_000;
+
+/// How a worker joins and serves a coordinator.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOptions {
+    /// Leave gracefully after serving this many rounds in one session
+    /// (exercises the membership churn path; `0` serves until
+    /// `Shutdown`).
+    pub max_rounds: usize,
+    /// Consecutive failed connects (or dropped sessions) tolerated
+    /// before giving up. The budget refills after every successful
+    /// handshake.
+    pub reconnect_tries: u32,
+    /// Base reconnect delay; doubles per consecutive failure, capped at
+    /// [`MAX_BACKOFF_MS`].
+    pub backoff_ms: u64,
+    /// Debug knob: sleep this long before every reply, making this
+    /// worker a deterministic straggler (drives the coordinator's
+    /// deadline → quarantine → reassignment path in CI). `0` disables.
+    pub straggle_ms: u64,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        WorkerOptions {
+            max_rounds: 0,
+            reconnect_tries: 5,
+            backoff_ms: 100,
+            straggle_ms: 0,
+        }
+    }
+}
 
 /// Join the coordinator at `connect` and serve client steps until the
-/// run ends. `max_rounds > 0` makes the worker leave gracefully after
-/// that many rounds (exercises the membership churn path; `0` serves
-/// until `Shutdown`).
-pub fn run_worker(connect: &str, max_rounds: usize) -> anyhow::Result<()> {
+/// run ends, reconnecting with bounded exponential backoff when the
+/// session drops (see the module docs).
+pub fn run_worker(connect: &str, opts: WorkerOptions) -> anyhow::Result<()> {
+    let base = opts.backoff_ms.max(1);
+    let mut tries_left = opts.reconnect_tries;
+    let mut backoff = base;
+    loop {
+        let mut joined = false;
+        match serve_session(connect, &opts, &mut joined) {
+            Ok(()) => return Ok(()),
+            Err(e) => {
+                if joined {
+                    // the handshake succeeded, so this was a live session
+                    // dropping (quarantine, chaos, coordinator restart):
+                    // refill the retry budget before counting the failure
+                    tries_left = opts.reconnect_tries;
+                    backoff = base;
+                }
+                if tries_left == 0 {
+                    return Err(e);
+                }
+                tries_left -= 1;
+                log::warn!(
+                    "session with {connect} ended ({e:#}); reconnecting in {backoff} ms \
+                     ({tries_left} tries left)"
+                );
+                std::thread::sleep(Duration::from_millis(backoff));
+                backoff = (backoff * 2).min(MAX_BACKOFF_MS);
+            }
+        }
+    }
+}
+
+/// One connect → join → serve session. Sets `joined` once the handshake
+/// completes, so the caller can distinguish "coordinator unreachable"
+/// from "live session dropped".
+fn serve_session(
+    connect: &str,
+    opts: &WorkerOptions,
+    joined: &mut bool,
+) -> anyhow::Result<()> {
     let mut stream = TcpStream::connect(connect)
         .map_err(|e| anyhow::anyhow!("connect {connect}: {e}"))?;
     // no read deadline on the worker side: between rounds it simply waits
@@ -49,6 +141,7 @@ pub fn run_worker(connect: &str, max_rounds: usize) -> anyhow::Result<()> {
         Frame::Shutdown => return Ok(()),
         other => anyhow::bail!("expected Welcome, got {}", other.name()),
     };
+    *joined = true;
     let parsed =
         json::parse(&config_json).map_err(|e| anyhow::anyhow!("welcome config: {e}"))?;
     let mut cfg = RunConfig::from_json(&parsed)?;
@@ -62,17 +155,79 @@ pub fn run_worker(connect: &str, max_rounds: usize) -> anyhow::Result<()> {
         cfg.algorithm.name(),
         cfg.seed
     );
+    // the chaos knobs travel in the Welcome config, so both link ends
+    // draw from the same deterministic schedule space
+    let chaos = Chaos {
+        cfg: ChaosConfig::from_run(&cfg),
+        root: Rng::new(cfg.seed),
+        straggle_ms: opts.straggle_ms,
+        frame: 0,
+    };
     let rt = Arc::new(Runtime::open(&cfg.artifacts_dir)?);
     let data = build_dataset(&cfg)?;
     match cfg.algorithm {
         Algorithm::FedAvg => {
             let mut t = FedAvgTrainer::new(cfg, rt, data)?;
-            serve_rounds(&mut t, stream, max_rounds)
+            serve_rounds(&mut t, stream, opts.max_rounds, chaos)
         }
         Algorithm::FedLite | Algorithm::SplitFed => {
             let mut t = SplitTrainer::new(cfg, rt, data)?;
-            serve_rounds(&mut t, stream, max_rounds)
+            serve_rounds(&mut t, stream, opts.max_rounds, chaos)
         }
+    }
+}
+
+/// The worker's reply-side fault injection: deterministic chaos draws
+/// plus the straggle debug knob.
+struct Chaos {
+    cfg: ChaosConfig,
+    /// Root for per-reply forks; never advanced (`fork` discipline).
+    root: Rng,
+    straggle_ms: u64,
+    /// Session-scoped reply counter, the `frame` chaos-key component. A
+    /// reassigned slot is answered by a different member at a different
+    /// counter, so its chaos draw is independent of the one that doomed
+    /// the original delivery — redeliveries converge instead of
+    /// re-drawing the same fate forever.
+    frame: u64,
+}
+
+impl Chaos {
+    /// Apply the configured faults around sending `reply`. Returns
+    /// `Err` after a truncation (the connection is gone); the caller's
+    /// session ends and the reconnect loop takes over.
+    fn send(
+        &mut self,
+        stream: &mut TcpStream,
+        round: u32,
+        client: u64,
+        reply: &Frame,
+    ) -> anyhow::Result<()> {
+        if self.straggle_ms > 0 {
+            std::thread::sleep(Duration::from_millis(self.straggle_ms));
+        }
+        if self.cfg.enabled() {
+            let cf = self.cfg.frame(&self.root, round as u64, client, self.frame);
+            self.frame += 1;
+            if cf.delay_ms > 0.0 {
+                std::thread::sleep(Duration::from_secs_f64(cf.delay_ms / 1000.0));
+            }
+            if cf.truncate {
+                // write a real half-frame, then sever the link: the
+                // coordinator's poll loop sees a short read, reaps this
+                // member as a peer failure, and reassigns the slot
+                let body = reply.encode();
+                let half = (body.len() / 2).max(1);
+                stream.write_all(&(body.len() as u32).to_le_bytes())?;
+                stream.write_all(&body[..half])?;
+                stream.flush()?;
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                anyhow::bail!(
+                    "chaos: truncated reply for client {client} mid-frame (round {round})"
+                );
+            }
+        }
+        reply.write_to(stream)
     }
 }
 
@@ -82,6 +237,7 @@ fn serve_rounds<A: RoundAlgorithm>(
     algo: &mut A,
     mut stream: TcpStream,
     max_rounds: usize,
+    mut chaos: Chaos,
 ) -> anyhow::Result<()> {
     Frame::Ready.write_to(&mut stream)?;
     // the round the replica is synced to: (round, prep, broadcast)
@@ -143,7 +299,7 @@ fn serve_rounds<A: RoundAlgorithm>(
                         client,
                         error: format!("{e:#}"),
                     });
-                reply.write_to(&mut stream)?;
+                chaos.send(&mut stream, round, client, &reply)?;
             }
             Frame::RoundEnd { .. } => {
                 // every member answers the round end: Leave to depart,

@@ -107,6 +107,20 @@ fn train_flags() -> Vec<Flag> {
         Flag::opt("out-dir", "", "write per-round CSV/JSONL here"),
         Flag::opt("save", "", "write final model checkpoint here"),
         Flag::opt(
+            "checkpoint-every",
+            "0",
+            "also write the --save checkpoint every N committed rounds \
+             (0 = only at the end); a later --resume continues \
+             bit-identically",
+        ),
+        Flag::opt(
+            "resume",
+            "",
+            "resume a split-family run from a checkpoint written with \
+             --save (continues at its recorded round, bit-identical to \
+             the uninterrupted run)",
+        ),
+        Flag::opt(
             "backend",
             "inprocess",
             "inprocess | socket (socket = serve client steps to \
@@ -118,6 +132,33 @@ fn train_flags() -> Vec<Flag> {
             "1",
             "socket backend: block until this many members joined \
              before each round",
+        ),
+        Flag::opt(
+            "socket-deadline-floor",
+            "30",
+            "socket backend: floor in seconds under the per-slot \
+             progress deadline max(--round-deadline, floor); lower it \
+             to quarantine stragglers faster",
+        ),
+        Flag::opt(
+            "chaos-drop",
+            "0",
+            "socket chaos: probability a StepAssign is lost in flight \
+             (deterministic per (round, member, frame); the lost slot \
+             is redelivered as a reassignment)",
+        ),
+        Flag::opt(
+            "chaos-delay-ms",
+            "0",
+            "socket chaos: workers delay each reply by a deterministic \
+             uniform(0, this) milliseconds",
+        ),
+        Flag::opt(
+            "chaos-truncate",
+            "0",
+            "socket chaos: probability a worker truncates a reply \
+             mid-frame and severs its connection (it reconnects with \
+             backoff; the slot is reassigned)",
         ),
         Flag::opt("log", "info", "log level"),
     ]
@@ -150,6 +191,25 @@ fn cli() -> Cli {
                         "0",
                         "leave gracefully after serving this many rounds \
                          (0 = serve until shutdown)",
+                    ),
+                    Flag::opt(
+                        "reconnect-tries",
+                        "5",
+                        "consecutive failed connects tolerated before \
+                         giving up (budget refills after each successful \
+                         handshake)",
+                    ),
+                    Flag::opt(
+                        "backoff-ms",
+                        "100",
+                        "base reconnect delay; doubles per consecutive \
+                         failure, capped at 10s",
+                    ),
+                    Flag::opt(
+                        "straggle-ms",
+                        "0",
+                        "debug: sleep this long before every reply, making \
+                         this worker a deterministic straggler",
                     ),
                     Flag::opt("log", "info", "log level"),
                 ],
@@ -229,10 +289,13 @@ fn dispatch(cmd: &str, args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
 }
 
 fn cmd_join(args: &fedlite::util::cli::Args) -> anyhow::Result<()> {
-    fedlite::coordinator::worker::run_worker(
-        args.str("connect")?,
-        args.usize("max-rounds")?,
-    )
+    let opts = fedlite::coordinator::worker::WorkerOptions {
+        max_rounds: args.usize("max-rounds")?,
+        reconnect_tries: args.usize("reconnect-tries")? as u32,
+        backoff_ms: args.u64("backoff-ms")?,
+        straggle_ms: args.u64("straggle-ms")?,
+    };
+    fedlite::coordinator::worker::run_worker(args.str("connect")?, opts)
 }
 
 fn cmd_train(args: &fedlite::util::cli::Args, force_socket: bool) -> anyhow::Result<()> {
@@ -288,6 +351,11 @@ fn cmd_train(args: &fedlite::util::cli::Args, force_socket: bool) -> anyhow::Res
     cfg.aggregation = AggregationRule::parse(args.str("aggregation")?)?;
     cfg.seed = args.u64("seed")?;
     cfg.eval_every = args.usize("eval-every")?;
+    cfg.chaos_drop = args.prob("chaos-drop")?;
+    cfg.chaos_delay_ms = args.f64("chaos-delay-ms")?;
+    cfg.chaos_truncate = args.prob("chaos-truncate")?;
+    cfg.socket_deadline_floor = args.f64("socket-deadline-floor")?;
+    cfg.checkpoint_every = args.usize("checkpoint-every")?;
     // the native presets always run on the built-in native engine
     if !native_preset {
         cfg.artifacts_dir = args.str("artifacts")?.to_string();
@@ -321,27 +389,54 @@ fn cmd_train(args: &fedlite::util::cli::Args, force_socket: bool) -> anyhow::Res
     }
     let backend = if force_socket { "socket" } else { args.str("backend")? };
     let save = args.get("save").unwrap_or("").to_string();
+    let resume = args.get("resume").unwrap_or("").to_string();
     let run_log = if backend == "socket" {
-        if !save.is_empty() {
-            log::warn!("--save is not supported with the socket backend; ignoring");
+        if !save.is_empty() || !resume.is_empty() {
+            log::warn!("--save/--resume are not supported with the socket backend; ignoring");
         }
         run_socket(cfg, rt, args.str("listen")?, args.usize("min-clients")?)?
     } else if backend != "inprocess" {
         anyhow::bail!("unknown backend '{backend}' (try inprocess or socket)")
-    } else if !save.is_empty() && cfg.algorithm != Algorithm::FedAvg {
-        // keep the concrete trainer so the final parameters can be saved
+    } else if (!save.is_empty() || !resume.is_empty()) && cfg.algorithm != Algorithm::FedAvg
+    {
+        use fedlite::coordinator::checkpoint;
+        use fedlite::coordinator::engine::RoundEngine;
+        // keep the concrete trainer so parameters can be restored/saved
         let data = fedlite::coordinator::build_dataset(&cfg)?;
+        let checkpoint_every = cfg.checkpoint_every;
         let cfg_save = cfg.clone();
         let mut trainer =
             fedlite::coordinator::split::SplitTrainer::new(cfg, rt, data)?;
-        let log = fedlite::coordinator::Trainer::run(&mut trainer)?;
+        let mut start_round = 0usize;
+        if !resume.is_empty() {
+            let (wc, ws, done) = checkpoint::load_resume(&resume)?;
+            trainer.set_params(wc, ws);
+            start_round = done;
+            log::info!("resuming from {resume}: {done} rounds already committed");
+        }
+        // periodic checkpoints land on the --save path, falling back to
+        // overwriting the resumed file; round r's bits depend only on
+        // (r, attempt, client) keys and the restored parameters, so the
+        // continued run is bit-identical to the uninterrupted one
+        let ckpt_path = if save.is_empty() { resume.clone() } else { save.clone() };
+        let log = RoundEngine::new(&mut trainer).run_hooked(
+            start_round,
+            checkpoint_every,
+            |t, done| {
+                let (wc, ws) = t.params();
+                checkpoint::save(&ckpt_path, wc, ws, Some(&cfg_save), done)
+            },
+        )?;
         let (wc, ws) = trainer.params();
-        fedlite::coordinator::checkpoint::save(&save, wc, ws, Some(&cfg_save))?;
-        println!("checkpoint written to {save}");
+        checkpoint::save(&ckpt_path, wc, ws, Some(&cfg_save), cfg_save.rounds)?;
+        println!("checkpoint written to {ckpt_path}");
         log
     } else {
-        if !save.is_empty() {
-            log::warn!("--save is only supported for split algorithms; ignoring");
+        if !save.is_empty() || !resume.is_empty() {
+            log::warn!("--save/--resume are only supported for split algorithms; ignoring");
+        }
+        if cfg.checkpoint_every > 0 {
+            log::warn!("--checkpoint-every needs --save or --resume; ignoring");
         }
         let mut trainer = build_trainer(cfg, rt)?;
         trainer.run()?

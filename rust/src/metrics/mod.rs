@@ -95,6 +95,16 @@ pub struct RoundRecord {
     /// Survivor updates whose L2 norm exceeded `--clip-norm` and were
     /// scaled down before aggregation.
     pub clipped_updates: usize,
+    /// Socket backend only: `StepAssign`s re-sent to a different member
+    /// after a transport loss, straggler timeout, or peer failure.
+    /// Transport telemetry, not computation — reassigned slots re-execute
+    /// the same `(round, attempt, client)` work and every other column is
+    /// unchanged. Always 0 in-process.
+    pub reassigned_steps: usize,
+    /// Socket backend only: members quarantined or reaped this round
+    /// (straggler past the per-slot deadline, dead connection, protocol
+    /// violation). Always 0 in-process.
+    pub quarantined_members: usize,
 }
 
 impl RoundRecord {
@@ -103,12 +113,13 @@ impl RoundRecord {
     /// against in CI (the cross-trainer schema diff): split and fedavg
     /// logs must carry identical columns and cohort bookkeeping or the
     /// paper's communication comparison is apples-to-oranges.
-    pub const CSV_COLUMNS: [&'static str; 19] = [
+    pub const CSV_COLUMNS: [&'static str; 21] = [
         "round", "train_loss", "train_metric", "eval_loss", "eval_metric",
         "quant_error", "uplink_bytes", "downlink_bytes", "cumulative_uplink",
         "wall_seconds", "sim_comm_seconds", "cohort_sampled", "cohort_survived",
         "dropped_at_phase", "round_attempts", "surrogate_loss",
         "byzantine_sampled", "rejected_codewords", "clipped_updates",
+        "reassigned_steps", "quarantined_members",
     ];
 
     /// Render this record as one CSV row in [`RoundRecord::CSV_COLUMNS`]
@@ -136,6 +147,8 @@ impl RoundRecord {
             self.byzantine_sampled.to_string(),
             self.rejected_codewords.to_string(),
             self.clipped_updates.to_string(),
+            self.reassigned_steps.to_string(),
+            self.quarantined_members.to_string(),
         ]
     }
 
@@ -164,6 +177,11 @@ impl RoundRecord {
         o.insert("byzantine_sampled", Value::from_usize(self.byzantine_sampled));
         o.insert("rejected_codewords", Value::from_usize(self.rejected_codewords));
         o.insert("clipped_updates", Value::from_usize(self.clipped_updates));
+        o.insert("reassigned_steps", Value::from_usize(self.reassigned_steps));
+        o.insert(
+            "quarantined_members",
+            Value::from_usize(self.quarantined_members),
+        );
         Value::Obj(o)
     }
 }
@@ -318,6 +336,8 @@ mod tests {
             byzantine_sampled: 2,
             rejected_codewords: 1,
             clipped_updates: 4,
+            reassigned_steps: 5,
+            quarantined_members: 1,
             ..Default::default()
         };
         let row = r.csv_row();
@@ -332,6 +352,8 @@ mod tests {
         assert_eq!(row[16], "2");
         assert_eq!(row[17], "1");
         assert_eq!(row[18], "4");
+        assert_eq!(row[19], "5");
+        assert_eq!(row[20], "1");
         // the schema itself is load-bearing for the CI cross-trainer diff
         assert_eq!(RoundRecord::CSV_COLUMNS[9], "wall_seconds");
         assert_eq!(RoundRecord::CSV_COLUMNS[13], "dropped_at_phase");
@@ -339,6 +361,8 @@ mod tests {
         // shorter schemas can be compared by header projection
         assert_eq!(RoundRecord::CSV_COLUMNS[15], "surrogate_loss");
         assert_eq!(RoundRecord::CSV_COLUMNS[18], "clipped_updates");
+        assert_eq!(RoundRecord::CSV_COLUMNS[19], "reassigned_steps");
+        assert_eq!(RoundRecord::CSV_COLUMNS[20], "quarantined_members");
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Adversarial-bytes fuzz tests for every decoder a byzantine peer can
 //! reach: `quantizer::packing::unpack`, `Message::decode`, and
-//! `Frame::decode`.
+//! `Frame::decode` — plus live-socket fault injection against a real
+//! coordinator (truncated frames, hostile length prefixes, protocol
+//! violations mid-session).
 //!
 //! Deterministic (seeded `util::rng::Rng`, no wall-clock) so failures
 //! reproduce. The contract under test is narrow but absolute: random,
@@ -8,11 +10,27 @@
 //! returns `Err` or a structurally valid value (codes in range, correct
 //! counts). Allocation hardening (length fields capped against the bytes
 //! actually present) is what keeps a hostile length prefix from becoming
-//! a memory bomb; these tests drive exactly that surface.
+//! a memory bomb; these tests drive exactly that surface. The live
+//! scenarios extend the contract one level up: a member feeding the
+//! coordinator poison is reaped as a peer failure and its slots are
+//! reassigned — the round completes on the survivors, bit-for-bit.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::thread;
 
 use fedlite::comm::message::Message;
-use fedlite::comm::transport::Frame;
+use fedlite::comm::transport::{Frame, PROTOCOL_VERSION};
+use fedlite::config::{Algorithm, RunConfig};
+use fedlite::coordinator::backend::{CoordinatorService, SocketBackend};
+use fedlite::coordinator::build_dataset;
+use fedlite::coordinator::engine::RoundEngine;
+use fedlite::coordinator::split::SplitTrainer;
+use fedlite::coordinator::worker::{run_worker, WorkerOptions};
+use fedlite::metrics::RunLog;
 use fedlite::quantizer::packing;
+use fedlite::runtime::Runtime;
 use fedlite::util::rng::Rng;
 
 fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
@@ -177,4 +195,122 @@ fn frame_decode_survives_adversarial_bytes() {
             let _ = Frame::decode(&flipped);
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Live-socket fault injection: a real coordinator, two honest replica
+// workers, and one saboteur member that poisons the stream the moment it
+// is trusted with an assignment.
+// ---------------------------------------------------------------------
+
+fn live_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::tiny("femnist").unwrap();
+    cfg.algorithm = Algorithm::FedLite;
+    cfg.rounds = 3;
+    cfg.num_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 2;
+    cfg.eval_every = 0;
+    cfg.workers = 1;
+    cfg.seed = seed;
+    cfg
+}
+
+/// Join honestly, wait for the first `StepAssign`, then hand the stream
+/// to the sabotage and hang up.
+fn run_saboteur(addr: &str, sabotage: impl FnOnce(&mut TcpStream)) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    Frame::Join { version: PROTOCOL_VERSION }.write_to(&mut stream).unwrap();
+    match Frame::read_from(&mut stream).unwrap() {
+        Frame::Welcome { .. } => {}
+        other => panic!("expected Welcome, got {}", other.name()),
+    }
+    Frame::Ready.write_to(&mut stream).unwrap();
+    loop {
+        match Frame::read_from(&mut stream) {
+            Ok(Frame::StepAssign { .. }) => {
+                sabotage(&mut stream);
+                return; // drop the stream: saboteurs don't linger
+            }
+            Ok(Frame::Shutdown) => return,
+            Ok(_) => continue, // RoundState / Broadcast / RoundEnd
+            Err(_) => return,  // already reaped
+        }
+    }
+}
+
+/// The poison-pill contract at the transport level: whatever the
+/// sabotage writes, the run commits all three rounds at full cohort
+/// (the saboteur's slots are reassigned to the honest members), the
+/// saboteur is metered as a hard peer failure, and nothing panics.
+fn assert_saboteur_contained(seed: u64, sabotage: impl FnOnce(&mut TcpStream) + Send + 'static) {
+    let cfg = live_cfg(seed);
+    let service = CoordinatorService::bind("127.0.0.1:0", 2, &cfg).unwrap();
+    let addr = service.local_addr().unwrap().to_string();
+    let honest: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            thread::spawn(move || run_worker(&addr, WorkerOptions::default()))
+        })
+        .collect();
+    let saboteur = {
+        let addr = addr.clone();
+        thread::spawn(move || run_saboteur(&addr, sabotage))
+    };
+    let backend = SocketBackend::new(service);
+    let stats = backend.stats();
+    let rt = Arc::new(Runtime::native());
+    let data = build_dataset(&cfg).unwrap();
+    let mut t = SplitTrainer::new(cfg, rt, data).unwrap();
+    let log: RunLog = RoundEngine::with_backend(&mut t, Box::new(backend))
+        .run()
+        .expect("a poisoned stream must not abort the run");
+    for h in honest {
+        h.join().expect("worker thread panicked").expect("worker failed");
+    }
+    saboteur.join().expect("saboteur panicked");
+    assert_eq!(log.rounds.len(), 3, "every round committed");
+    for rec in &log.rounds {
+        assert_eq!(
+            rec.cohort_survived, rec.cohort_sampled,
+            "r{}: reassignment carried the saboteur's slots",
+            rec.round
+        );
+        assert_eq!(rec.dropped.total(), 0, "r{}", rec.round);
+        assert!(rec.train_loss.is_finite(), "r{}", rec.round);
+    }
+    assert!(stats.peer_failures() > 0, "the saboteur was metered as a hard failure");
+    assert!(stats.reassigned_steps() > 0, "its slots were re-dispatched");
+}
+
+/// A frame that declares 64 body bytes, delivers 10, then closes: the
+/// short read reaps the member mid-frame.
+#[test]
+fn live_truncated_frame_is_contained() {
+    assert_saboteur_contained(0xF0301, |stream| {
+        stream.write_all(&64u32.to_le_bytes()).unwrap();
+        stream.write_all(&[0xAB; 10]).unwrap();
+        stream.flush().unwrap();
+    });
+}
+
+/// A hostile `u32::MAX` length prefix: the coordinator must reject it at
+/// the cap — erroring, not allocating 4 GiB — and reap the member.
+#[test]
+fn live_oversized_length_prefix_is_contained() {
+    assert_saboteur_contained(0xF0302, |stream| {
+        stream.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        stream.write_all(&[0x01; 16]).unwrap();
+        stream.flush().unwrap();
+    });
+}
+
+/// A protocol violation mid-session: a well-formed `Join` frame (with a
+/// bogus version, no less) where a `StepResult` belongs. Valid framing,
+/// invalid conversation — the member is reaped all the same.
+#[test]
+fn live_protocol_violation_mid_session_is_contained() {
+    assert_saboteur_contained(0xF0303, |stream| {
+        Frame::Join { version: 99 }.write_to(stream).unwrap();
+    });
 }

@@ -11,8 +11,13 @@
 //!
 //! Covered here: both algorithm families (split/FedLite and whole-model
 //! FedAvg), fault injection over the wire (the plans travel with the
-//! assignments), and membership churn (a member leaves gracefully
-//! mid-run while the roster stays at the floor).
+//! assignments), membership churn, and the transport-robustness layer:
+//! slots abandoned by malformed, killed, or straggling members are
+//! **reassigned** to healthy members with unchanged bits (every slot is
+//! a pure function of its `(round, attempt, client)` key), stragglers
+//! are quarantined and re-admitted, and deterministic chaos
+//! (drop/delay/truncate) never moves a model bit — only the two
+//! append-only transport columns and wall clock.
 
 use std::io::Write;
 use std::net::TcpStream;
@@ -21,11 +26,11 @@ use std::thread;
 
 use fedlite::comm::transport::{Frame, PROTOCOL_VERSION};
 use fedlite::config::{AggregationRule, Algorithm, ByzantineKind, RunConfig};
-use fedlite::coordinator::backend::{CoordinatorService, SocketBackend};
+use fedlite::coordinator::backend::{CoordinatorService, SocketBackend, TransportStats};
 use fedlite::coordinator::engine::RoundEngine;
 use fedlite::coordinator::fedavg::FedAvgTrainer;
 use fedlite::coordinator::split::SplitTrainer;
-use fedlite::coordinator::worker::run_worker;
+use fedlite::coordinator::worker::{run_worker, WorkerOptions};
 use fedlite::coordinator::{build_dataset, build_trainer, Trainer};
 use fedlite::metrics::RunLog;
 use fedlite::runtime::Runtime;
@@ -50,44 +55,61 @@ fn in_process_run(cfg: RunConfig) -> RunLog {
     build_trainer(cfg, rt).unwrap().run().unwrap()
 }
 
-/// Serve `cfg` over a loopback socket with one worker thread per entry
-/// in `worker_rounds` (each entry is that worker's `--max-rounds`; 0 =
-/// stay until shutdown). Returns the coordinator's round log.
-fn socket_run(cfg: RunConfig, min_clients: usize, worker_rounds: &[usize]) -> RunLog {
-    let service = CoordinatorService::bind("127.0.0.1:0", min_clients, &cfg).unwrap();
-    let addr = service.local_addr().unwrap().to_string();
-    let handles: Vec<_> = worker_rounds
-        .iter()
-        .map(|&max_rounds| {
-            let addr = addr.clone();
-            thread::spawn(move || run_worker(&addr, max_rounds))
-        })
-        .collect();
+/// A worker that serves `max_rounds` rounds then leaves (0 = stay until
+/// shutdown), with everything else at the binary's defaults.
+fn w(max_rounds: usize) -> WorkerOptions {
+    WorkerOptions { max_rounds, ..WorkerOptions::default() }
+}
+
+fn spawn_worker(addr: &str, opts: WorkerOptions) -> thread::JoinHandle<anyhow::Result<()>> {
+    let addr = addr.to_string();
+    thread::spawn(move || run_worker(&addr, opts))
+}
+
+/// Drive `cfg` through a `RoundEngine` over `service`, returning the log
+/// plus the backend's cumulative transport counters.
+fn engine_run(cfg: RunConfig, service: CoordinatorService) -> (RunLog, Arc<TransportStats>) {
+    let backend = SocketBackend::new(service);
+    let stats = backend.stats();
     let rt = Arc::new(Runtime::native());
     let data = build_dataset(&cfg).unwrap();
     let log = match cfg.algorithm {
         Algorithm::FedAvg => {
             let mut t = FedAvgTrainer::new(cfg, rt, data).unwrap();
-            RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service)))
-                .run()
-                .unwrap()
+            RoundEngine::with_backend(&mut t, Box::new(backend)).run().unwrap()
         }
         Algorithm::FedLite | Algorithm::SplitFed => {
             let mut t = SplitTrainer::new(cfg, rt, data).unwrap();
-            RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service)))
-                .run()
-                .unwrap()
+            RoundEngine::with_backend(&mut t, Box::new(backend)).run().unwrap()
         }
     };
+    (log, stats)
+}
+
+/// Serve `cfg` over a loopback socket with one worker thread per entry
+/// in `workers`. Every worker must exit cleanly (use bespoke threads for
+/// members that are *supposed* to die).
+fn socket_run(
+    cfg: RunConfig,
+    min_clients: usize,
+    workers: &[WorkerOptions],
+) -> (RunLog, Arc<TransportStats>) {
+    let service = CoordinatorService::bind("127.0.0.1:0", min_clients, &cfg).unwrap();
+    let addr = service.local_addr().unwrap().to_string();
+    let handles: Vec<_> = workers.iter().map(|&o| spawn_worker(&addr, o)).collect();
+    let out = engine_run(cfg, service);
     // the engine (and with it the backend) dropped above, sending
     // Shutdown: every stay-until-shutdown worker exits cleanly
     for h in handles {
         h.join().expect("worker thread panicked").expect("worker failed");
     }
-    log
+    out
 }
 
-/// Everything except wall-clock must match bit for bit.
+/// Everything except wall-clock and the transport telemetry columns must
+/// match bit for bit. (`reassigned_steps`/`quarantined_members` describe
+/// the transport's behavior, not the model's — they are asserted
+/// per-test, zero for clean runs and nonzero for survived failures.)
 fn assert_identical(a: &RunLog, b: &RunLog) {
     assert_eq!(a.rounds.len(), b.rounds.len());
     for (x, y) in a.rounds.iter().zip(&b.rounds) {
@@ -139,6 +161,8 @@ fn assert_identical(a: &RunLog, b: &RunLog) {
 
 /// The headline contract: socket and in-process runs of the same config
 /// are bit-identical, for the split family and the whole-model baseline.
+/// With chaos off and every member healthy, the robustness layer must
+/// also be a provable no-op: zero reassignments, zero quarantines.
 #[test]
 fn socket_runs_bit_identical_to_in_process() {
     for (algo, seed) in [
@@ -147,11 +171,20 @@ fn socket_runs_bit_identical_to_in_process() {
         (Algorithm::FedAvg, 53),
     ] {
         let reference = in_process_run(tiny_cfg(algo, seed));
-        let socketed = socket_run(tiny_cfg(algo, seed), 2, &[0, 0]);
+        let (socketed, stats) = socket_run(tiny_cfg(algo, seed), 2, &[w(0), w(0)]);
         assert_identical(&reference, &socketed);
         // not vacuous: training really happened over the wire
         assert!(socketed.rounds.iter().all(|r| r.train_loss.is_finite()));
         assert!(socketed.rounds.iter().all(|r| r.uplink_bytes > 0));
+        // the no-op proof: a healthy chaos-free run never touches the
+        // robustness machinery
+        assert_eq!(stats.reassigned_steps(), 0, "{algo:?}");
+        assert_eq!(stats.quarantined_members(), 0, "{algo:?}");
+        assert_eq!(stats.peer_failures(), 0, "{algo:?}");
+        assert!(socketed
+            .rounds
+            .iter()
+            .all(|r| r.reassigned_steps == 0 && r.quarantined_members == 0));
     }
 }
 
@@ -169,7 +202,7 @@ fn faulty_socket_run_bit_identical_to_in_process() {
         cfg
     };
     let reference = in_process_run(mk());
-    let socketed = socket_run(mk(), 2, &[0, 0]);
+    let (socketed, _) = socket_run(mk(), 2, &[w(0), w(0)]);
     assert_identical(&reference, &socketed);
     let dropped: usize = socketed.rounds.iter().map(|r| r.dropped.total()).sum();
     assert!(dropped > 0, "fault config injected nothing over the socket");
@@ -182,7 +215,7 @@ fn faulty_socket_run_bit_identical_to_in_process() {
 #[test]
 fn member_leave_between_rounds_keeps_bit_parity() {
     let reference = in_process_run(tiny_cfg(Algorithm::FedLite, 55));
-    let socketed = socket_run(tiny_cfg(Algorithm::FedLite, 55), 2, &[0, 1, 0]);
+    let (socketed, _) = socket_run(tiny_cfg(Algorithm::FedLite, 55), 2, &[w(0), w(1), w(0)]);
     assert_identical(&reference, &socketed);
 }
 
@@ -202,7 +235,7 @@ fn byzantine_socket_run_bit_identical_to_in_process() {
     };
     for kind in [ByzantineKind::SignFlip, ByzantineKind::CorruptCodeword] {
         let reference = in_process_run(mk(kind));
-        let socketed = socket_run(mk(kind), 2, &[0, 0]);
+        let (socketed, _) = socket_run(mk(kind), 2, &[w(0), w(0)]);
         assert_identical(&reference, &socketed);
         let byz: usize = socketed.rounds.iter().map(|r| r.byzantine_sampled).sum();
         assert!(byz > 0, "{kind:?}: p=0.5 over 12 draws must flag someone");
@@ -211,7 +244,7 @@ fn byzantine_socket_run_bit_identical_to_in_process() {
 
 /// A member that completes the join handshake honestly, then answers its
 /// first assignment with an undecodable frame. The coordinator must reap
-/// it, not trust it with the round.
+/// it and reassign its slots, not trust it with the round.
 fn run_evil_member(addr: &str) {
     let mut stream = TcpStream::connect(addr).unwrap();
     Frame::Join { version: PROTOCOL_VERSION }.write_to(&mut stream).unwrap();
@@ -237,56 +270,259 @@ fn run_evil_member(addr: &str) {
     }
 }
 
-/// A byzantine socket peer must not be a coordinator DoS: a member that
-/// answers an assignment with a malformed frame costs only its own slots
-/// — metered as `peer_failure` drops — and is reaped, while the honest
-/// members carry the run to completion.
-#[test]
-fn malformed_member_frame_drops_its_clients_not_the_round() {
-    let cfg = tiny_cfg(Algorithm::FedLite, 57);
-    let service = CoordinatorService::bind("127.0.0.1:0", 2, &cfg).unwrap();
+/// A member that joins honestly, then vanishes (`kill -9` morally) the
+/// moment it is trusted with an assignment: no reply, no goodbye, just a
+/// dead socket mid-`StepAssign`.
+fn run_vanishing_member(addr: &str) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    Frame::Join { version: PROTOCOL_VERSION }.write_to(&mut stream).unwrap();
+    match Frame::read_from(&mut stream).unwrap() {
+        Frame::Welcome { .. } => {}
+        other => panic!("expected Welcome, got {}", other.name()),
+    }
+    Frame::Ready.write_to(&mut stream).unwrap();
+    loop {
+        match Frame::read_from(&mut stream) {
+            Ok(Frame::StepAssign { .. }) => return, // drop the socket cold
+            Ok(Frame::Shutdown) => return,
+            Ok(_) => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Bind + engine-run `cfg` against a mix of clean workers and bespoke
+/// member threads; bespoke threads may die by design, so only panics
+/// propagate from them.
+fn socket_run_with(
+    cfg: RunConfig,
+    min_clients: usize,
+    workers: &[WorkerOptions],
+    bespoke: impl FnOnce(&str) -> Vec<thread::JoinHandle<()>>,
+) -> (RunLog, Arc<TransportStats>) {
+    let service = CoordinatorService::bind("127.0.0.1:0", min_clients, &cfg).unwrap();
     let addr = service.local_addr().unwrap().to_string();
-    let honest: Vec<_> = (0..2)
-        .map(|_| {
-            let addr = addr.clone();
-            thread::spawn(move || run_worker(&addr, 0))
-        })
-        .collect();
-    let evil = {
-        let addr = addr.clone();
-        thread::spawn(move || run_evil_member(&addr))
-    };
-    let rt = Arc::new(Runtime::native());
-    let data = build_dataset(&cfg).unwrap();
-    let mut t = SplitTrainer::new(cfg, rt, data).unwrap();
-    let log = RoundEngine::with_backend(&mut t, Box::new(SocketBackend::new(service)))
-        .run()
-        .expect("a malformed member frame must not abort the run");
-    for h in honest {
-        h.join().expect("worker thread panicked").expect("worker failed");
+    let handles: Vec<_> = workers.iter().map(|&o| spawn_worker(&addr, o)).collect();
+    let extra = bespoke(&addr);
+    let out = engine_run(cfg, service);
+    for h in handles {
+        // a worker wired to die (straggle + no retries) exits with Err;
+        // correctness is asserted on the log and counters, not here
+        let _ = h.join().expect("worker thread panicked");
     }
-    evil.join().expect("evil member panicked");
-    assert_eq!(log.rounds.len(), 3, "every round committed");
-    let mut reaped = 0usize;
-    for rec in &log.rounds {
-        assert_eq!(
-            rec.cohort_survived + rec.dropped.total(),
-            rec.cohort_sampled,
-            "r{}: reaped slots stay inside the cohort arithmetic",
-            rec.round
-        );
-        reaped += rec.dropped.peer_failure;
+    for h in extra {
+        h.join().expect("bespoke member panicked");
     }
-    assert!(
-        reaped > 0,
-        "the evil member must have been assigned (and failed) some slot"
+    out
+}
+
+/// Reassignment headline: a byzantine socket peer must not cost the run
+/// a single bit. Its abandoned slots are re-dispatched to the honest
+/// members — same `(round, attempt, client)` keys, same results — so the
+/// log matches the clean in-process reference exactly, with the incident
+/// visible only in the transport columns.
+#[test]
+fn malformed_member_frame_reassigns_its_slots_with_bit_parity() {
+    let reference = in_process_run(tiny_cfg(Algorithm::FedLite, 57));
+    let (log, stats) = socket_run_with(
+        tiny_cfg(Algorithm::FedLite, 57),
+        2,
+        &[w(0), w(0)],
+        |addr| {
+            let addr = addr.to_string();
+            vec![thread::spawn(move || run_evil_member(&addr))]
+        },
     );
-    // the evil member is reaped the round it first misbehaves, so the
-    // honest members carry every other round with a full cohort
+    assert_identical(&reference, &log);
+    assert!(stats.peer_failures() > 0, "the malformed frame is a hard failure");
+    assert!(stats.quarantined_members() > 0, "the evil member was evicted");
+    assert!(stats.reassigned_steps() > 0, "its slots were re-dispatched");
+    // the per-round telemetry columns carry the same story as the
+    // cumulative counters
+    let reassigned: usize = log.rounds.iter().map(|r| r.reassigned_steps).sum();
+    let quarantined: usize = log.rounds.iter().map(|r| r.quarantined_members).sum();
+    assert_eq!(reassigned, stats.reassigned_steps());
+    assert_eq!(quarantined, stats.quarantined_members());
+}
+
+/// Same contract for a member that dies *silently* holding assignments
+/// (the `kill -9` shape): the dead socket is detected, the member is
+/// reaped as a peer failure, and its slots land on the survivors with
+/// unchanged bits.
+#[test]
+fn killed_member_mid_assignment_reassigns_with_bit_parity() {
+    let reference = in_process_run(tiny_cfg(Algorithm::FedLite, 58));
+    let (log, stats) = socket_run_with(
+        tiny_cfg(Algorithm::FedLite, 58),
+        2,
+        &[w(0), w(0)],
+        |addr| {
+            let addr = addr.to_string();
+            vec![thread::spawn(move || run_vanishing_member(&addr))]
+        },
+    );
+    assert_identical(&reference, &log);
+    assert!(stats.peer_failures() > 0, "a silent death is a hard failure");
+    assert!(stats.reassigned_steps() > 0, "abandoned slots were re-dispatched");
+}
+
+/// A straggling member (every reply delayed far past the deadline) is
+/// quarantined — a *soft* eviction, not a peer failure — and its slots
+/// are speculatively reassigned to the healthy members, keeping full bit
+/// parity with the clean run.
+#[test]
+fn straggler_is_quarantined_and_its_slots_reassigned() {
+    let mk = || {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 59);
+        // the deadline knob also floors the real socket timeout, so this
+        // makes quarantine trip in ~1s of wall clock — wide enough that a
+        // loaded CI box never quarantines an *honest* member by accident
+        cfg.round_deadline = 1.0;
+        cfg.socket_deadline_floor = 1.0;
+        cfg
+    };
+    let reference = in_process_run(mk());
+    let straggler = WorkerOptions {
+        straggle_ms: 3_000,
+        reconnect_tries: 0, // stay gone once quarantined
+        ..WorkerOptions::default()
+    };
+    let (log, stats) = socket_run_with(mk(), 2, &[w(0), w(0), straggler], |_| Vec::new());
+    assert_identical(&reference, &log);
+    assert_eq!(stats.quarantined_members(), 1, "exactly one straggler, once");
+    assert_eq!(stats.peer_failures(), 0, "a timeout is a soft eviction");
+    assert!(stats.reassigned_steps() > 0, "its slots moved to healthy members");
+}
+
+/// Quarantine is an eviction, not a death sentence: with the roster
+/// floor above the healthy-member count, the run *waits* for the
+/// quarantined straggler to reconnect (the worker's backoff loop), then
+/// re-admits and re-quarantines it — twice over two rounds — while the
+/// healthy members keep every bit in place.
+#[test]
+fn quarantined_member_rejoins_and_is_requarantined() {
+    let mk = || {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 60);
+        cfg.rounds = 2;
+        cfg.round_deadline = 1.0;
+        cfg.socket_deadline_floor = 1.0;
+        cfg
+    };
+    let reference = in_process_run(mk());
+    let straggler = WorkerOptions {
+        straggle_ms: 2_500,
+        reconnect_tries: 5,
+        backoff_ms: 50,
+        ..WorkerOptions::default()
+    };
+    // floor 3 = 2 healthy + the straggler: round 1 cannot start until
+    // the quarantined member has rejoined
+    let (log, stats) = socket_run_with(mk(), 3, &[w(0), w(0), straggler], |_| Vec::new());
+    assert_identical(&reference, &log);
+    assert_eq!(
+        stats.quarantined_members(),
+        2,
+        "quarantined in round 0, re-admitted, quarantined again in round 1"
+    );
+    assert_eq!(stats.peer_failures(), 0);
+    assert!(stats.reassigned_steps() >= 2);
+}
+
+/// Losing *every* member mid-round must commit a fully degraded round
+/// (all slots metered as peer-failure drops), never deadlock the engine.
+#[test]
+fn all_members_quarantined_commits_degraded_round() {
+    let mut cfg = tiny_cfg(Algorithm::FedLite, 61);
+    cfg.rounds = 1;
+    cfg.round_deadline = 0.5;
+    cfg.socket_deadline_floor = 0.5;
+    let sole = WorkerOptions {
+        straggle_ms: 2_000,
+        reconnect_tries: 0,
+        ..WorkerOptions::default()
+    };
+    let (log, stats) = socket_run_with(cfg, 1, &[sole], |_| Vec::new());
+    assert_eq!(log.rounds.len(), 1, "the degraded round still committed");
+    let rec = &log.rounds[0];
+    assert_eq!(rec.cohort_survived, 0);
+    assert_eq!(rec.dropped.peer_failure, rec.cohort_sampled);
+    assert_eq!(rec.quarantined_members, 1);
+    assert_eq!(rec.reassigned_steps, 0, "nobody was left to reassign to");
+    assert_eq!(stats.peer_failures(), 0, "a timeout stays soft even when fatal");
+}
+
+/// Reassignment composes with the byzantine layer: the corruption plan
+/// rides the `StepAssign` frame, so a slot re-dispatched after its first
+/// member vanished misbehaves (and is defended against) identically.
+#[test]
+fn byzantine_run_with_killed_member_keeps_bit_parity() {
+    let mk = || {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 62);
+        cfg.byzantine_frac = 0.5;
+        cfg.byzantine_kind = ByzantineKind::SignFlip;
+        cfg.clip_norm = 0.5;
+        cfg.aggregation = AggregationRule::Trimmed;
+        cfg
+    };
+    let reference = in_process_run(mk());
+    let (log, stats) = socket_run_with(mk(), 2, &[w(0), w(0)], |addr| {
+        let addr = addr.to_string();
+        vec![thread::spawn(move || run_vanishing_member(&addr))]
+    });
+    assert_identical(&reference, &log);
+    assert!(stats.reassigned_steps() > 0);
+    let byz: usize = log.rounds.iter().map(|r| r.byzantine_sampled).sum();
+    assert!(byz > 0, "the byzantine plan survived the reassignment");
+}
+
+/// Deterministic transport chaos — coordinator-side assignment drops
+/// plus worker-side reply delays — exercises redelivery on every round
+/// yet never moves a model bit: the config is identical, so the
+/// in-process reference (which ignores the chaos knobs) pins the bits.
+#[test]
+fn chaos_drop_and_delay_keep_bit_parity() {
+    let mk = || {
+        let mut cfg = tiny_cfg(Algorithm::FedLite, 63);
+        cfg.chaos_drop = 0.6;
+        cfg.chaos_delay_ms = 20.0;
+        cfg
+    };
+    let reference = in_process_run(mk());
+    let (log, stats) = socket_run(mk(), 2, &[w(0), w(0)]);
+    assert_identical(&reference, &log);
     assert!(
-        log.rounds
-            .iter()
-            .any(|r| r.cohort_survived == 4 && r.dropped.total() == 0),
-        "some round must run entirely on honest members"
+        stats.reassigned_steps() > 0,
+        "p=0.6 across ≥12 assignment deliveries must eat at least one"
+    );
+    assert_eq!(stats.quarantined_members(), 0, "chaos below the deadline is survivable");
+    assert_eq!(stats.peer_failures(), 0);
+}
+
+/// Worker-side truncation chaos at p=1.0: every session dies mid-frame
+/// on its first reply. With a single member the rounds degrade (soft
+/// slots, hard member), the worker's backoff loop reconnects between
+/// rounds, and the run still commits every round — the pathological
+/// worst case is loud, bounded, and deadlock-free.
+#[test]
+fn full_truncate_chaos_degrades_rounds_and_reconnects() {
+    let mut cfg = tiny_cfg(Algorithm::FedLite, 64);
+    cfg.rounds = 2;
+    cfg.chaos_truncate = 1.0;
+    let sole = WorkerOptions {
+        reconnect_tries: 3,
+        backoff_ms: 50,
+        ..WorkerOptions::default()
+    };
+    let (log, stats) = socket_run_with(cfg, 1, &[sole], |_| Vec::new());
+    assert_eq!(log.rounds.len(), 2, "both degraded rounds committed");
+    for rec in &log.rounds {
+        assert_eq!(rec.cohort_survived, 0, "r{}", rec.round);
+        assert_eq!(rec.dropped.peer_failure, rec.cohort_sampled, "r{}", rec.round);
+        assert_eq!(rec.quarantined_members, 1, "r{}", rec.round);
+    }
+    assert_eq!(
+        stats.peer_failures(),
+        2,
+        "one hard eviction per round: truncation severs the link"
     );
 }

@@ -1,0 +1,126 @@
+//! Checkpoint/resume: a run interrupted at a checkpoint and resumed in a
+//! fresh process continues **bit-identically** to the uninterrupted run.
+//!
+//! This is the same purity argument as worker/shard invariance: round
+//! `r`'s bits are a function of `(r, attempt, client)` RNG keys and the
+//! parameters entering the round — never of how many rounds this process
+//! already executed — and split-family optimizers are stateless (plain
+//! SGD), so restoring `(wc, ws)` restores everything round `r` reads.
+//! `cumulative_uplink` is the one deliberately process-scoped column
+//! (the byte meter restarts with the process) and is excluded.
+
+use std::sync::Arc;
+
+use fedlite::config::{Algorithm, RunConfig};
+use fedlite::coordinator::checkpoint;
+use fedlite::coordinator::engine::RoundEngine;
+use fedlite::coordinator::split::SplitTrainer;
+use fedlite::coordinator::build_dataset;
+use fedlite::metrics::RoundRecord;
+use fedlite::runtime::Runtime;
+
+fn cfg(rounds: usize) -> RunConfig {
+    let mut cfg = RunConfig::tiny("femnist").unwrap();
+    cfg.algorithm = Algorithm::FedLite;
+    cfg.rounds = rounds;
+    cfg.num_clients = 8;
+    cfg.clients_per_round = 4;
+    cfg.local_steps = 2;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 1;
+    cfg.workers = 1;
+    cfg.seed = 91;
+    cfg
+}
+
+fn trainer(cfg: RunConfig) -> SplitTrainer {
+    let rt = Arc::new(Runtime::native());
+    let data = build_dataset(&cfg).unwrap();
+    SplitTrainer::new(cfg, rt, data).unwrap()
+}
+
+/// Everything model-dependent must match bit for bit; `wall_seconds`
+/// (real time) and `cumulative_uplink` (process-scoped meter) may not.
+fn assert_same_round(x: &RoundRecord, y: &RoundRecord) {
+    let r = x.round;
+    assert_eq!(x.round, y.round);
+    assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "loss r{r}");
+    assert_eq!(
+        x.train_metric.to_bits(),
+        y.train_metric.to_bits(),
+        "metric r{r}"
+    );
+    assert_eq!(
+        x.quant_error.to_bits(),
+        y.quant_error.to_bits(),
+        "quant_error r{r}"
+    );
+    assert_eq!(x.uplink_bytes, y.uplink_bytes, "uplink r{r}");
+    assert_eq!(x.downlink_bytes, y.downlink_bytes, "downlink r{r}");
+    assert_eq!(
+        x.sim_comm_seconds.to_bits(),
+        y.sim_comm_seconds.to_bits(),
+        "sim time r{r}"
+    );
+    assert_eq!(
+        x.eval_loss.map(f64::to_bits),
+        y.eval_loss.map(f64::to_bits),
+        "eval loss r{r}"
+    );
+    assert_eq!(
+        x.eval_metric.map(f64::to_bits),
+        y.eval_metric.map(f64::to_bits),
+        "eval metric r{r}"
+    );
+    assert_eq!(x.cohort_sampled, y.cohort_sampled, "sampled r{r}");
+    assert_eq!(x.cohort_survived, y.cohort_survived, "survived r{r}");
+    assert_eq!(x.dropped, y.dropped, "drops r{r}");
+    assert_eq!(x.attempts, y.attempts, "attempts r{r}");
+    assert_eq!(
+        x.surrogate_loss.to_bits(),
+        y.surrogate_loss.to_bits(),
+        "surrogate r{r}"
+    );
+}
+
+#[test]
+fn resumed_run_bit_identical_to_uninterrupted() {
+    let total = 4usize;
+    // the uninterrupted reference
+    let mut a = trainer(cfg(total));
+    let full = RoundEngine::new(&mut a).run().unwrap();
+    assert_eq!(full.rounds.len(), total);
+
+    // the interrupted run: 2 rounds, checkpointing through the engine's
+    // periodic hook (fires at round 2 = this run's end)
+    let ckpt = std::env::temp_dir()
+        .join(format!("fedlite-resume-{}.ckpt", std::process::id()));
+    let half_cfg = cfg(2);
+    let mut b = trainer(half_cfg.clone());
+    let head = RoundEngine::new(&mut b)
+        .run_hooked(0, 2, |t, done| {
+            let (wc, ws) = t.params();
+            checkpoint::save(&ckpt, wc, ws, Some(&half_cfg), done)
+        })
+        .unwrap();
+    assert_eq!(head.rounds.len(), 2);
+
+    // resume rounds 2..4 in a fresh trainer (a fresh process, morally)
+    let (wc, ws, done) = checkpoint::load_resume(&ckpt).unwrap();
+    assert_eq!(done, 2, "the hook recorded its progress in the trailer");
+    let mut c = trainer(cfg(total));
+    c.set_params(wc, ws);
+    let tail = RoundEngine::new(&mut c)
+        .run_hooked(done, 0, |_, _| Ok(()))
+        .unwrap();
+    assert_eq!(tail.rounds.len(), total - done, "resume starts after round {done}");
+
+    for (x, y) in full.rounds[..done].iter().zip(&head.rounds) {
+        assert_same_round(x, y);
+    }
+    for (x, y) in full.rounds[done..].iter().zip(&tail.rounds) {
+        assert_same_round(x, y);
+    }
+    // not vacuous: the model really moved before the checkpoint
+    assert!(full.rounds[1].train_loss.to_bits() != full.rounds[3].train_loss.to_bits());
+}
